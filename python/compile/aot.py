@@ -1,0 +1,103 @@
+"""AOT-lower every ScaleSFL entry point to HLO text for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.txt`` with the
+static dimensions the Rust coordinator needs (parsed by rust/src/runtime/).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def entry_points():
+    """(name, fn, example-arg specs) for every lowered executable."""
+    P, K, BE = model.P_PAD, model.K, model.B_EVAL
+    D = model.INPUT_DIM
+    eps = [
+        ("init_params", model.init_params, (i32(),)),
+        ("eval_step", model.eval_step, (f32(P), f32(BE, D), i32(BE))),
+        ("fedavg_agg", model.fedavg_agg, (f32(K, P), f32(K))),
+        ("pairwise_dist", model.pairwise_dist, (f32(K, P),)),
+        ("cosine_sim", model.cosine_sim, (f32(K, P),)),
+        ("clip_updates", model.clip_updates, (f32(K, P), f32())),
+    ]
+    for b in model.TRAIN_BATCH_SIZES:
+        eps.append((f"train_step_b{b}", model.train_step, (f32(P), f32(b, D), i32(b), f32())))
+    eps.append(
+        (
+            "dp_train_step_b32",
+            model.dp_train_step,
+            (f32(P), f32(32, D), i32(32), f32(), i32(), f32(), f32()),
+        )
+    )
+    return eps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated subset of entry points")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    names = []
+    for name, fn, specs in entry_points():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        names.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = [
+        f"P={model.P}",
+        f"P_PAD={model.P_PAD}",
+        f"K={model.K}",
+        f"B_EVAL={model.B_EVAL}",
+        f"B_EVAL_BLOCK={model.B_EVAL_BLOCK}",
+        f"INPUT_DIM={model.INPUT_DIM}",
+        f"NUM_CLASSES={model.NUM_CLASSES}",
+        "HIDDEN=" + ",".join(str(h) for h in model.HIDDEN),
+        "TRAIN_BATCH_SIZES=" + ",".join(str(b) for b in model.TRAIN_BATCH_SIZES),
+        "ARTIFACTS=" + ",".join(names),
+    ]
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest ({len(names)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

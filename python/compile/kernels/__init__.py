@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for ScaleSFL.
+
+All kernels run with ``interpret=True`` so the emitted HLO contains only
+portable ops executable by the CPU PJRT client the Rust coordinator uses
+(real-TPU lowering would emit Mosaic custom-calls the CPU plugin rejects).
+
+Kernel inventory (see DESIGN.md §3):
+
+- :mod:`fedavg_agg` — weighted aggregation of stacked flat updates (Eq. 6-7).
+- :mod:`gram`       — tiled Gram-matrix accumulation powering the Multi-Krum
+  pairwise distances, FoolsGold cosine similarities, and norm-constraint
+  clipping used by the endorsement defence policies.
+- :mod:`dense`      — fused dense+bias+ReLU tile used by the endorsement-time
+  model evaluation forward pass (the paper's measured bottleneck).
+- :mod:`axpy`       — elementwise SGD parameter update over flat params.
+"""
+
+from . import axpy, dense, fedavg_agg, gram, ref  # noqa: F401

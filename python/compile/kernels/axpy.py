@@ -1,0 +1,47 @@
+"""Pallas kernel: elementwise SGD parameter update p - lr * g.
+
+Applied to the flat f32[P] parameter vector each local minibatch step; tiled
+into lane-aligned BLOCK_P chunks so the HBM->VMEM->HBM stream is the only
+memory traffic (the update itself is a fused multiply-add on the VPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 65536
+
+
+def _axpy_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def axpy(p: jnp.ndarray, g: jnp.ndarray, lr, block_p: int = BLOCK_P) -> jnp.ndarray:
+    """SGD update over flat params: p - lr * g.  f32[P] -> f32[P]."""
+    (n,) = p.shape
+    block_p = min(block_p, _round_up(n, 128))
+    n_pad = _round_up(n, block_p)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    if n_pad != n:
+        p = jnp.pad(p, (0, n_pad - n))
+        g = jnp.pad(g, (0, n_pad - n))
+    out = pl.pallas_call(
+        _axpy_kernel,
+        grid=(n_pad // block_p,),
+        in_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(p, g, lr_arr)
+    return out[:n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,54 @@
+"""Pallas kernel: weighted aggregation of stacked flat model updates.
+
+This is the shard/global aggregation hot-spot (paper Eq. 6-7): given K client
+updates flattened to f32[K, P] and normalised weights |D_k|/|D| f32[K],
+produce the aggregated flat update f32[P].
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the flat parameter axis is tiled
+into lane-aligned blocks of ``BLOCK_P`` (multiple of 128) streamed HBM->VMEM
+via BlockSpec; K=8 rides the sublane dimension so each grid step is one
+(8, BLOCK_P) VMEM tile and a (1,8)x(8,BLOCK_P) matvec on the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 131072
+
+
+def _agg_kernel(x_ref, w_ref, o_ref):
+    # (K,) . (K, BLOCK_P) -> (BLOCK_P,) weighted sum of client rows.
+    o_ref[...] = jnp.dot(w_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def fedavg_agg(stack: jnp.ndarray, weights: jnp.ndarray, block_p: int = BLOCK_P) -> jnp.ndarray:
+    """Aggregate K stacked flat updates with the given weights.
+
+    stack: f32[K, P] (P need not be block-aligned; padded internally),
+    weights: f32[K] -> f32[P].
+    """
+    k, p = stack.shape
+    block_p = min(block_p, _round_up(p, 128))
+    p_pad = _round_up(p, block_p)
+    if p_pad != p:
+        stack = jnp.pad(stack, ((0, 0), (0, p_pad - p)))
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(p_pad // block_p,),
+        in_specs=[
+            pl.BlockSpec((k, block_p), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p_pad,), jnp.float32),
+        interpret=True,
+    )(stack, weights)
+    return out[:p]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,78 @@
+"""Pallas kernel: tiled Gram-matrix accumulation over stacked flat updates.
+
+G[i, j] = <u_i, u_j> for K flattened client updates f32[K, P].  One kernel
+powers three endorsement-policy primitives (DESIGN.md §3):
+
+- Multi-Krum pairwise squared distances  D = diag+diag^T-2G
+- FoolsGold cosine similarities          S = G / (||u_i|| ||u_j||)
+- norm-constraint clipping               ||u_k||^2 = G[k, k]
+
+TPU mapping: the P axis is tiled into lane-aligned BLOCK_P chunks; each grid
+step loads one (K, BLOCK_P) VMEM tile and accumulates an (K, K) MXU outer
+product into the output block, which stays resident across the whole grid
+(index_map pins it to (0, 0)).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 131072
+
+
+def _gram_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]
+    o_ref[...] += jnp.dot(xb, xb.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def gram(stack: jnp.ndarray, block_p: int = BLOCK_P) -> jnp.ndarray:
+    """Gram matrix of K stacked flat updates.  f32[K, P] -> f32[K, K]."""
+    k, p = stack.shape
+    block_p = min(block_p, _round_up(p, 128))
+    p_pad = _round_up(p, block_p)
+    if p_pad != p:
+        stack = jnp.pad(stack, ((0, 0), (0, p_pad - p)))
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(p_pad // block_p,),
+        in_specs=[pl.BlockSpec((k, block_p), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=True,
+    )(stack)
+
+
+def pairwise_dist(stack: jnp.ndarray) -> jnp.ndarray:
+    """Squared-L2 distance matrix (Multi-Krum).  f32[K, P] -> f32[K, K]."""
+    g = gram(stack)
+    sq = jnp.diagonal(g)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)
+
+
+def cosine_sim(stack: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Cosine-similarity matrix (FoolsGold).  f32[K, P] -> f32[K, K]."""
+    g = gram(stack)
+    n = jnp.sqrt(jnp.maximum(jnp.diagonal(g), 0.0))
+    return g / (n[:, None] * n[None, :] + eps)
+
+
+def clip_updates(stack: jnp.ndarray, max_norm) -> tuple:
+    """Norm-constraint defence over stacked updates.
+
+    Returns (clipped f32[K, P], norms f32[K]); rows whose L2 norm exceeds
+    ``max_norm`` are scaled down to it.
+    """
+    norms = jnp.sqrt(jnp.maximum(jnp.diagonal(gram(stack)), 0.0))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+    return stack * scale[:, None], norms
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps in
+``python/tests``) assert each Pallas kernel matches its oracle to
+``assert_allclose`` tolerance across shapes and inputs.
+"""
+
+import jax.numpy as jnp
+
+
+def fedavg_agg(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted aggregation of K stacked flat updates.
+
+    stack: f32[K, P], weights: f32[K] -> f32[P]  (Eq. 6-7 of the paper;
+    weights are |D_k|/|D| shares normalised by the caller).
+    """
+    return jnp.einsum("k,kp->p", weights, stack)
+
+
+def gram(stack: jnp.ndarray) -> jnp.ndarray:
+    """Gram matrix G[i, j] = <stack[i], stack[j]>.  f32[K, P] -> f32[K, K]."""
+    return stack @ stack.T
+
+
+def pairwise_dist(stack: jnp.ndarray) -> jnp.ndarray:
+    """Squared-L2 distance matrix (Multi-Krum).  f32[K, P] -> f32[K, K]."""
+    g = gram(stack)
+    sq = jnp.diagonal(g)
+    d = sq[:, None] + sq[None, :] - 2.0 * g
+    return jnp.maximum(d, 0.0)
+
+
+def cosine_sim(stack: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Cosine-similarity matrix (FoolsGold).  f32[K, P] -> f32[K, K]."""
+    g = gram(stack)
+    n = jnp.sqrt(jnp.maximum(jnp.diagonal(g), 0.0))
+    return g / (n[:, None] * n[None, :] + eps)
+
+
+def row_norms(stack: jnp.ndarray) -> jnp.ndarray:
+    """L2 norm of each stacked update.  f32[K, P] -> f32[K]."""
+    return jnp.sqrt(jnp.sum(stack * stack, axis=1))
+
+
+def clip_updates(stack: jnp.ndarray, max_norm) -> tuple:
+    """Norm-constraint defence: scale rows with ||row|| > max_norm down to it.
+
+    Returns (clipped f32[K, P], norms f32[K]).
+    """
+    norms = row_norms(stack)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+    return stack * scale[:, None], norms
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool) -> jnp.ndarray:
+    """Fused dense layer: relu?(x @ w + b).  f32[B,I] x f32[I,O] -> f32[B,O]."""
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def axpy(p: jnp.ndarray, g: jnp.ndarray, lr) -> jnp.ndarray:
+    """SGD update p - lr * g over flat parameter vectors.  f32[P] -> f32[P]."""
+    return p - lr * g

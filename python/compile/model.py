@@ -1,0 +1,159 @@
+"""Layer-2 JAX model for ScaleSFL: the FL workload's compute graph.
+
+An MLP classifier (784 -> 256 -> 128 -> 10, ~235k params) standing in for the
+paper's MNIST CNN (DESIGN.md §2 substitutions).  Parameters cross the
+Rust <-> HLO boundary as ONE flat f32[P_PAD] vector so the coordinator treats
+models opaquely (hash, store, aggregate) exactly like the paper's off-chain
+model blobs.
+
+Entry points lowered by aot.py (all shapes static):
+
+- init_params(seed)                                  -> (params,)
+- train_step(params, x, y, lr)                       -> (params', loss)
+- dp_train_step(params, x, y, lr, seed, clip, nm)    -> (params', loss)
+- eval_step(params, x, y)                            -> (loss_sum, correct)
+- fedavg_agg / pairwise_dist / cosine_sim / clip_updates over f32[K, P_PAD]
+
+The forward pass used by eval_step runs through the Pallas ``dense`` kernel
+(the endorsement bottleneck); train_step's update runs through the Pallas
+``axpy`` kernel.  Gradients use jax.grad over the pure-jnp forward (Pallas
+interpret-mode calls are kept out of the differentiated path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import axpy as k_axpy
+from .kernels import dense as k_dense
+from .kernels import fedavg_agg as k_agg
+from .kernels import gram as k_gram
+
+# Architecture: input -> hidden ... -> classes.  Matches the paper's MNIST
+# scale (B in {10, 20, 32}, eta_k = 1e-2).
+INPUT_DIM = 784
+HIDDEN = (256, 128)
+NUM_CLASSES = 10
+LAYERS = tuple(zip((INPUT_DIM,) + HIDDEN, HIDDEN + (NUM_CLASSES,)))
+
+P = sum(i * o + o for i, o in LAYERS)  # exact parameter count
+P_PAD = (P + 1023) // 1024 * 1024  # lane-aligned flat vector seen by Rust
+
+K = 8  # stacked updates per aggregation/defence call (committee size)
+B_EVAL = 256  # endorsement evaluation batch
+B_EVAL_BLOCK = 2048  # fused multi-batch endorsement evaluation (perf path)
+TRAIN_BATCH_SIZES = (10, 20, 32)  # paper's B in {10, 20} + DP default 32
+
+
+def unflatten(flat: jnp.ndarray):
+    """Split the flat (padded) parameter vector into [(W, b)] per layer."""
+    params, off = [], 0
+    for i, o in LAYERS:
+        w = flat[off : off + i * o].reshape(i, o)
+        off += i * o
+        b = flat[off : off + o]
+        off += o
+        params.append((w, b))
+    return params
+
+
+def flatten(params) -> jnp.ndarray:
+    """Inverse of unflatten; re-pads to P_PAD with zeros."""
+    parts = []
+    for w, b in params:
+        parts.append(w.reshape(-1))
+        parts.append(b)
+    flat = jnp.concatenate(parts)
+    return jnp.pad(flat, (0, P_PAD - P))
+
+
+def forward(flat: jnp.ndarray, x: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """MLP logits.  use_pallas routes each layer through the L1 dense kernel."""
+    params = unflatten(flat)
+    h = x
+    for li, (w, b) in enumerate(params):
+        relu = li < len(params) - 1
+        if use_pallas:
+            h = k_dense.dense(h, w, b, relu=relu)
+        else:
+            h = h @ w + b[None, :]
+            if relu:
+                h = jnp.maximum(h, 0.0)
+    return h
+
+
+def _ce_loss(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy over the batch (paper Eq. 2)."""
+    logits = forward(flat, x, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+
+def init_params(seed: jnp.ndarray) -> tuple:
+    """He-initialised parameters from an int32 seed.  -> (f32[P_PAD],)"""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    params = []
+    for i, o in LAYERS:
+        key, wk = jax.random.split(key)
+        w = jax.random.normal(wk, (i, o), jnp.float32) * jnp.sqrt(2.0 / i)
+        params.append((w, jnp.zeros((o,), jnp.float32)))
+    return (flatten(params),)
+
+
+def train_step(flat, x, y, lr) -> tuple:
+    """One local SGD minibatch step (paper Eq. 3).  -> (params', loss)."""
+    loss, g = jax.value_and_grad(_ce_loss)(flat, x, y)
+    return k_axpy.axpy(flat, g, lr), loss
+
+
+def dp_train_step(flat, x, y, lr, seed, clip, noise_mult) -> tuple:
+    """DP-SGD minibatch step: clip the batch gradient to ``clip`` and add
+    Gaussian noise scaled by ``noise_mult * clip / B``.
+
+    Batch-level clipping approximates Opacus' per-sample clipping at equal
+    noise calibration (documented substitution, DESIGN.md §2); the paper's
+    settings are (eps, delta) = (5, 1e-5), noise 0.4, clip 1.2.
+    """
+    loss, g = jax.value_and_grad(_ce_loss)(flat, x, y)
+    gnorm = jnp.sqrt(jnp.sum(g * g))
+    g = g * jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    noise = jax.random.normal(key, g.shape, jnp.float32)
+    g = g + noise * (noise_mult * clip / x.shape[0])
+    # Keep the padding region exactly zero so flat vectors stay canonical.
+    mask = (jnp.arange(P_PAD) < P).astype(jnp.float32)
+    return k_axpy.axpy(flat, g * mask, lr), loss
+
+
+def eval_step(flat, x, y) -> tuple:
+    """Endorsement-time evaluation on one batch -> (loss_sum, correct_count).
+
+    Runs the Pallas dense kernel forward — this is the per-transaction cost
+    the paper's throughput figures are bottlenecked on.
+    """
+    logits = forward(flat, x, use_pallas=True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    y32 = y[:, None].astype(jnp.int32)
+    loss_sum = -jnp.sum(jnp.take_along_axis(logp, y32, axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1).astype(jnp.int32) == y.astype(jnp.int32)).astype(jnp.int32))
+    return loss_sum, correct
+
+
+def fedavg_agg(stack, weights) -> tuple:
+    """Weighted FedAvg aggregation over K stacked updates (Eq. 6-7)."""
+    return (k_agg.fedavg_agg(stack, weights),)
+
+
+def pairwise_dist(stack) -> tuple:
+    """Multi-Krum squared-distance matrix over K stacked updates."""
+    return (k_gram.pairwise_dist(stack),)
+
+
+def cosine_sim(stack) -> tuple:
+    """FoolsGold cosine-similarity matrix over K stacked updates."""
+    return (k_gram.cosine_sim(stack),)
+
+
+def clip_updates(stack, max_norm) -> tuple:
+    """Norm-constraint clipping -> (clipped stack, per-row norms)."""
+    clipped, norms = k_gram.clip_updates(stack, max_norm)
+    return clipped, norms

@@ -1,0 +1,170 @@
+"""Pallas kernels vs pure-jnp oracles (the core L1 correctness signal).
+
+Fixed-case assertions plus hypothesis sweeps over shapes and value scales.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import axpy, dense, fedavg_agg, gram, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _stack(k, p, scale=1.0):
+    return jnp.asarray(RNG.normal(size=(k, p)) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------- fedavg_agg
+
+
+@pytest.mark.parametrize("k,p", [(8, 1024), (8, 5000), (4, 235520), (2, 128), (8, 1)])
+def test_fedavg_agg_matches_ref(k, p):
+    s, w = _stack(k, p), jnp.asarray(RNG.random(k), jnp.float32)
+    np.testing.assert_allclose(
+        fedavg_agg.fedavg_agg(s, w), ref.fedavg_agg(s, w), rtol=2e-5, atol=1e-4
+    )
+
+
+def test_fedavg_agg_identity_weight():
+    """Weight vector e_i returns exactly row i."""
+    s = _stack(8, 4096)
+    for i in range(8):
+        w = jnp.zeros(8, jnp.float32).at[i].set(1.0)
+        np.testing.assert_allclose(fedavg_agg.fedavg_agg(s, w), s[i], rtol=1e-6, atol=1e-6)
+
+
+def test_fedavg_agg_uniform_weights_is_mean():
+    s = _stack(8, 3000)
+    w = jnp.full(8, 1.0 / 8.0, jnp.float32)
+    np.testing.assert_allclose(fedavg_agg.fedavg_agg(s, w), jnp.mean(s, 0), rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    p=st.integers(1, 4096),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    block=st.sampled_from([128, 512, 2048]),
+)
+def test_fedavg_agg_hypothesis(k, p, scale, block):
+    s, w = _stack(k, p, scale), jnp.asarray(RNG.random(k), jnp.float32)
+    got = fedavg_agg.fedavg_agg(s, w, block_p=block)
+    np.testing.assert_allclose(got, ref.fedavg_agg(s, w), rtol=3e-5, atol=1e-4 * scale)
+
+
+# ---------------------------------------------------------------------- gram
+
+
+@pytest.mark.parametrize("k,p", [(8, 1024), (8, 235520), (3, 77), (1, 128)])
+def test_gram_matches_ref(k, p):
+    s = _stack(k, p)
+    np.testing.assert_allclose(gram.gram(s), ref.gram(s), rtol=2e-5, atol=1e-2)
+
+
+def test_pairwise_dist_properties():
+    s = _stack(8, 8192)
+    d = np.asarray(gram.pairwise_dist(s))
+    np.testing.assert_allclose(d, ref.pairwise_dist(s), rtol=2e-4, atol=1e-2)
+    np.testing.assert_allclose(d, d.T, atol=1e-3)  # symmetric
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-2)  # zero diagonal
+    assert (d >= -1e-3).all()  # non-negative
+
+
+def test_cosine_sim_properties():
+    s = _stack(8, 8192)
+    c = np.asarray(gram.cosine_sim(s))
+    np.testing.assert_allclose(c, ref.cosine_sim(s), rtol=2e-5, atol=1e-4)
+    np.testing.assert_allclose(np.diag(c), 1.0, atol=1e-4)
+    assert (np.abs(c) <= 1.0 + 1e-4).all()
+
+
+def test_cosine_sim_detects_identical_rows():
+    """Two identical (Sybil) updates have cosine similarity 1."""
+    s = np.array(_stack(8, 2048), copy=True)
+    s[3] = s[5]
+    c = np.asarray(gram.cosine_sim(jnp.asarray(s)))
+    assert c[3, 5] > 0.9999
+
+
+def test_clip_updates():
+    s = _stack(8, 4096, scale=3.0)
+    clipped, norms = gram.clip_updates(s, 10.0)
+    cr, nr = ref.clip_updates(s, 10.0)
+    np.testing.assert_allclose(clipped, cr, rtol=2e-5, atol=1e-4)
+    np.testing.assert_allclose(norms, nr, rtol=2e-5, atol=1e-4)
+    out_norms = np.linalg.norm(np.asarray(clipped), axis=1)
+    assert (out_norms <= 10.0 + 1e-3).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 8), p=st.integers(1, 3000))
+def test_gram_hypothesis(k, p):
+    s = _stack(k, p)
+    np.testing.assert_allclose(gram.gram(s), ref.gram(s), rtol=3e-5, atol=1e-2)
+
+
+# --------------------------------------------------------------------- dense
+
+
+@pytest.mark.parametrize(
+    "b,i,o,relu",
+    [(256, 784, 256, True), (256, 256, 128, True), (256, 128, 10, False), (1, 1, 1, True), (7, 50, 3, False)],
+)
+def test_dense_matches_ref(b, i, o, relu):
+    x = jnp.asarray(RNG.normal(size=(b, i)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(i, o)), jnp.float32)
+    bias = jnp.asarray(RNG.normal(size=(o,)), jnp.float32)
+    np.testing.assert_allclose(
+        dense.dense(x, w, bias, relu=relu), ref.dense(x, w, bias, relu), rtol=2e-5, atol=1e-3
+    )
+
+
+def test_dense_relu_nonnegative():
+    x = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(32, 16)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(16,)), jnp.float32)
+    assert (np.asarray(dense.dense(x, w, b, relu=True)) >= 0.0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    i=st.integers(1, 200),
+    o=st.integers(1, 200),
+    relu=st.booleans(),
+)
+def test_dense_hypothesis(b, i, o, relu):
+    x = jnp.asarray(RNG.normal(size=(b, i)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(i, o)), jnp.float32)
+    bias = jnp.asarray(RNG.normal(size=(o,)), jnp.float32)
+    np.testing.assert_allclose(
+        dense.dense(x, w, bias, relu=relu), ref.dense(x, w, bias, relu), rtol=3e-5, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------- axpy
+
+
+@pytest.mark.parametrize("n", [1, 128, 4096, 235520, 5000])
+def test_axpy_matches_ref(n):
+    p = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    np.testing.assert_allclose(axpy.axpy(p, g, 0.01), ref.axpy(p, g, 0.01), rtol=1e-6, atol=1e-6)
+
+
+def test_axpy_zero_lr_is_identity():
+    p = jnp.asarray(RNG.normal(size=(9999,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(9999,)), jnp.float32)
+    np.testing.assert_allclose(axpy.axpy(p, g, 0.0), p, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 10000), lr=st.floats(0.0, 1.0))
+def test_axpy_hypothesis(n, lr):
+    p = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    np.testing.assert_allclose(axpy.axpy(p, g, lr), ref.axpy(p, g, lr), rtol=1e-5, atol=1e-6)

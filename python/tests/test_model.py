@@ -1,0 +1,136 @@
+"""L2 model correctness: shapes, training signal, DP behaviour, round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+RNG = np.random.default_rng(7)
+
+
+def _batch(b):
+    x = jnp.asarray(RNG.normal(size=(b, model.INPUT_DIM)), jnp.float32)
+    y = jnp.asarray(RNG.integers(0, model.NUM_CLASSES, size=(b,)), jnp.int32)
+    return x, y
+
+
+def _synthetic_task(b, seed=0):
+    """Linearly separable toy task so a few SGD steps measurably reduce loss."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(model.NUM_CLASSES, model.INPUT_DIM)).astype(np.float32)
+    y = rng.integers(0, model.NUM_CLASSES, size=(b,))
+    x = protos[y] + 0.1 * rng.normal(size=(b, model.INPUT_DIM)).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+def test_param_counts():
+    assert model.P == sum(i * o + o for i, o in model.LAYERS)
+    assert model.P_PAD % 1024 == 0 and model.P_PAD >= model.P
+
+
+def test_init_params_shape_and_padding():
+    (flat,) = model.init_params(jnp.int32(42))
+    assert flat.shape == (model.P_PAD,)
+    assert np.all(np.asarray(flat[model.P :]) == 0.0)  # padding is canonical zero
+
+
+def test_init_params_deterministic_and_seed_sensitive():
+    (a,) = model.init_params(jnp.int32(1))
+    (b,) = model.init_params(jnp.int32(1))
+    (c,) = model.init_params(jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+def test_flatten_unflatten_roundtrip():
+    (flat,) = model.init_params(jnp.int32(3))
+    again = model.flatten(model.unflatten(flat))
+    np.testing.assert_allclose(np.asarray(again), np.asarray(flat), atol=0)
+
+
+@pytest.mark.parametrize("b", model.TRAIN_BATCH_SIZES)
+def test_train_step_shapes(b):
+    (flat,) = model.init_params(jnp.int32(0))
+    x, y = _batch(b)
+    new, loss = model.train_step(flat, x, y, jnp.float32(1e-2))
+    assert new.shape == (model.P_PAD,)
+    assert np.isfinite(float(loss))
+    assert np.all(np.asarray(new[model.P :]) == 0.0)  # padding untouched
+
+
+def test_training_reduces_loss():
+    (flat,) = model.init_params(jnp.int32(0))
+    x, y = _synthetic_task(32)
+    first = None
+    for _ in range(30):
+        flat, loss = model.train_step(flat, x, y, jnp.float32(5e-2))
+        first = first if first is not None else float(loss)
+    assert float(loss) < 0.5 * first
+
+
+def test_eval_step_counts():
+    (flat,) = model.init_params(jnp.int32(0))
+    x, y = _batch(model.B_EVAL)
+    loss_sum, correct = model.eval_step(flat, x, y)
+    assert 0 <= int(correct) <= model.B_EVAL
+    assert float(loss_sum) > 0.0
+
+
+def test_eval_step_perfect_model():
+    """A model trained to memorise a tiny task scores > random on eval."""
+    (flat,) = model.init_params(jnp.int32(0))
+    x, y = _synthetic_task(model.B_EVAL)
+    for _ in range(60):
+        flat, _ = model.train_step(flat, x[:32], y[:32], jnp.float32(5e-2))
+    _, correct = model.eval_step(flat, x, y)
+    assert int(correct) > model.B_EVAL // 2
+
+
+def test_eval_pallas_forward_matches_jnp():
+    (flat,) = model.init_params(jnp.int32(9))
+    x, _ = _batch(64)
+    np.testing.assert_allclose(
+        model.forward(flat, x, use_pallas=True),
+        model.forward(flat, x, use_pallas=False),
+        rtol=2e-5,
+        atol=1e-3,
+    )
+
+
+def test_dp_train_step_noise_and_clip():
+    (flat,) = model.init_params(jnp.int32(0))
+    x, y = _batch(32)
+    a, _ = model.dp_train_step(flat, x, y, jnp.float32(1e-2), jnp.int32(1), jnp.float32(1.2), jnp.float32(0.4))
+    b, _ = model.dp_train_step(flat, x, y, jnp.float32(1e-2), jnp.int32(2), jnp.float32(1.2), jnp.float32(0.4))
+    assert not np.allclose(np.asarray(a), np.asarray(b))  # seed changes noise
+    assert np.all(np.asarray(a[model.P :]) == 0.0)  # padding stays zero
+    # zero noise reduces to clipped SGD: effective update norm <= lr * clip
+    c, _ = model.dp_train_step(flat, x, y, jnp.float32(1e-2), jnp.int32(1), jnp.float32(1.2), jnp.float32(0.0))
+    delta = np.linalg.norm(np.asarray(c - flat))
+    assert delta <= 1e-2 * 1.2 + 1e-5
+
+
+def test_aggregation_entry_points():
+    stack = jnp.asarray(RNG.normal(size=(model.K, model.P_PAD)), jnp.float32)
+    w = jnp.full((model.K,), 1.0 / model.K, jnp.float32)
+    (agg,) = model.fedavg_agg(stack, w)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(jnp.mean(stack, 0)), rtol=2e-5, atol=1e-4)
+    (d,) = model.pairwise_dist(stack)
+    (s,) = model.cosine_sim(stack)
+    assert d.shape == (model.K, model.K) and s.shape == (model.K, model.K)
+    clipped, norms = model.clip_updates(stack, jnp.float32(1.0))
+    assert clipped.shape == stack.shape and norms.shape == (model.K,)
+
+
+def test_grad_matches_finite_difference():
+    """Spot-check jax.grad against central differences on a few coordinates."""
+    (flat,) = model.init_params(jnp.int32(5))
+    x, y = _batch(10)
+    g = jax.grad(model._ce_loss)(flat, x, y)
+    eps = 1e-3
+    for idx in [0, 1000, model.P - 1]:
+        e = jnp.zeros_like(flat).at[idx].set(eps)
+        num = (model._ce_loss(flat + e, x, y) - model._ce_loss(flat - e, x, y)) / (2 * eps)
+        np.testing.assert_allclose(float(g[idx]), float(num), rtol=5e-2, atol=1e-4)

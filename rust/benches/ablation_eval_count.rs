@@ -1,0 +1,54 @@
+//! §3.2 claim verification: sharding reduces endorsement computations from
+//! C x P_E (flat) to C x P_E / S^2 per shard and C x P_E / S globally.
+//!
+//! Two measurements:
+//! 1. the closed-form counts across S = 1..8 (the paper's formula), and
+//! 2. the *measured* evaluation-invocation counter from a real ScaleSFL
+//!    round, confirming the workflow performs exactly C/S x P_E/S
+//!    endorsement evaluations per shard.
+
+use scalesfl::caliper::figures::ablation_eval_count;
+use scalesfl::fl::client::TrainConfig;
+use scalesfl::sim::{Partition, ScaleSfl, SimConfig};
+
+fn main() {
+    println!("# Ablation — endorsement computations per round (C=64 clients, P_E=8 endorsers)");
+    println!("{:<8} {:>12} {:>16} {:>14}", "shards", "flat CxPE", "per-shard", "global");
+    for s in [1usize, 2, 4, 8] {
+        let (flat, per_shard, global) = ablation_eval_count(64, 8, s);
+        println!("{:<8} {:>12} {:>16} {:>14}", s, flat, per_shard, global);
+    }
+
+    let Some(ops) = scalesfl::runtime::shared_ops() else {
+        eprintln!("artifacts not built — skipping measured section");
+        return;
+    };
+    println!("\n# Measured: evaluation invocations in one real round");
+    println!("{:<8} {:>10} {:>12} {:>16}", "shards", "clients", "endorsers", "measured evals");
+    for shards in [1usize, 2, 4] {
+        let cfg = SimConfig {
+            shards,
+            peers_per_shard: 2,
+            clients_per_shard: 8 / shards,
+            samples_per_client: 40,
+            eval_samples: 16,
+            test_samples: 64,
+            train: TrainConfig { batch: 10, epochs: 1, lr: 0.05, dp: None },
+            partition: Partition::Iid,
+            verify_aggregate: false,
+            seed: 7,
+            ..Default::default()
+        };
+        let mut net = ScaleSfl::build(cfg, ops.clone()).expect("build");
+        net.eval_invocations = 0;
+        net.run_round().expect("round");
+        println!(
+            "{:<8} {:>10} {:>12} {:>16}",
+            shards,
+            8,
+            2 * shards,
+            net.eval_invocations
+        );
+    }
+    println!("# expected: measured = (C/S) x P_E per shard x S shards; decreases per shard as S grows");
+}

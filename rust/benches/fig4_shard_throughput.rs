@@ -1,0 +1,37 @@
+//! Fig. 4 reproduction: #shards vs system throughput (TPS).
+//!
+//! Paper result: throughput scales linearly with the number of shards
+//! (each shard's committee evaluates its own transactions in parallel).
+//! DES with service times calibrated from live PJRT endorsement evals.
+//!
+//! Run: `cargo bench --bench fig4_shard_throughput` (SCALESFL_FULL=1 for
+//! paper-scale workloads).
+
+use scalesfl::caliper::figures;
+
+fn main() {
+    let quick = !figures::full_requested();
+    let Some(env) = figures::env(quick) else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    println!(
+        "# Fig 4 — #shards vs throughput (calibrated eval_s = {:.4}s over {} samples)",
+        env.base.eval_s, env.cal.samples
+    );
+    let rows = figures::fig4(&env);
+    println!("{:<8} {:>12} {:>12} {:>10}", "shards", "tput(TPS)", "sent(TPS)", "fail");
+    let t1 = rows[0].1.throughput;
+    for (shards, r) in &rows {
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>10}   (x{:.2} vs 1 shard)",
+            shards,
+            r.throughput,
+            r.send_tps,
+            r.failed,
+            r.throughput / t1
+        );
+    }
+    let t8 = rows.last().unwrap().1.throughput;
+    println!("# linear-scaling check: 8-shard/1-shard throughput ratio = {:.2} (paper: ~8)", t8 / t1);
+}

@@ -1,0 +1,31 @@
+//! Fig. 5 reproduction: sent TPS vs observed throughput and average
+//! latency — the saturation knee per shard count.
+//!
+//! Paper result: throughput tracks sent TPS until the shard capacity, then
+//! plateaus while average latency spikes; more shards move the knee right.
+
+use scalesfl::caliper::figures;
+
+fn main() {
+    let quick = !figures::full_requested();
+    let Some(env) = figures::env(quick) else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    println!("# Fig 5 — sent TPS vs throughput & avg latency (calibrated eval_s = {:.4}s)", env.base.eval_s);
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>8}",
+        "shards", "sent(TPS)", "tput(TPS)", "avgLat(s)", "fail"
+    );
+    for (shards, sent, r) in figures::fig5(&env) {
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>14.3} {:>8}",
+            shards,
+            sent,
+            r.throughput,
+            r.avg_latency(),
+            r.failed
+        );
+    }
+    println!("# expected shape: tput == sent below the knee, then flat; latency jumps at the knee");
+}

@@ -1,0 +1,33 @@
+//! Figs. 6 + 7 reproduction: usage surge — transaction count vs average
+//! latency + failure count (Fig 6) and vs throughput (Fig 7), at a sent TPS
+//! just above the maximum, 30 s timeout.
+//!
+//! Paper result: once the queue outgrows what 30 s of capacity can absorb,
+//! latency climbs toward ~16 s (mean of timeout-bound and service-bound
+//! requests), failures appear, and observed throughput *decreases*.
+
+use scalesfl::caliper::figures;
+
+fn main() {
+    let quick = !figures::full_requested();
+    let Some(env) = figures::env(quick) else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    println!("# Figs 6+7 — surge behaviour (2 shards, sent = 1.3x capacity, 30s timeout)");
+    println!(
+        "{:<8} {:>14} {:>10} {:>12} {:>12}",
+        "txs", "avgLat(s)", "fail", "tput(TPS)", "p95Lat(s)"
+    );
+    for (txs, r) in figures::fig6_7(&env) {
+        println!(
+            "{:<8} {:>14.3} {:>10} {:>12.3} {:>12.3}",
+            txs,
+            r.avg_latency(),
+            r.failed,
+            r.throughput,
+            r.latency.quantile(0.95)
+        );
+    }
+    println!("# expected shape: latency and failures rise with tx count; throughput degrades");
+}

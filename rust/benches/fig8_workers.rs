@@ -1,0 +1,33 @@
+//! Fig. 8 reproduction: #caliper workers vs throughput + average latency
+//! (200 txs, sent TPS at the observed maximum).
+//!
+//! Paper result: noisy but generally *downward* throughput trend with more
+//! workers (single-threaded endorsement workers are the bottleneck; extra
+//! load generators only add queueing), and latency trends upward; shard
+//! count groups the latency curves.
+
+use scalesfl::caliper::figures;
+
+fn main() {
+    let quick = !figures::full_requested();
+    let Some(env) = figures::env(quick) else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    println!("# Fig 8 — caliper workers vs throughput & latency");
+    println!(
+        "{:<8} {:<8} {:>12} {:>14} {:>8}",
+        "shards", "workers", "tput(TPS)", "avgLat(s)", "fail"
+    );
+    for (shards, workers, r) in figures::fig8(&env) {
+        println!(
+            "{:<8} {:<8} {:>12.3} {:>14.3} {:>8}",
+            shards,
+            workers,
+            r.throughput,
+            r.avg_latency(),
+            r.failed
+        );
+    }
+    println!("# expected shape: no capacity gain from workers; latency up; shard count dominates");
+}

@@ -1,0 +1,299 @@
+//! Micro-benchmarks of the substrate hot paths (hand-rolled harness;
+//! criterion is unavailable in the offline vendor set).
+//!
+//! Covers: Raft ordering throughput, PBFT ordering throughput, MVCC
+//! validate+commit, merkle root, endorsement-policy verification, envelope
+//! codec, and the PJRT executables (eval / train / aggregate / distance) —
+//! plus a real-vs-DES cross-check on a small fabric deployment.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scalesfl::caliper::des::{run_des, DesConfig};
+use scalesfl::caliper::real::run_real;
+use scalesfl::caliper::Workload;
+use scalesfl::consensus::pbft::{Pbft, PbftConfig};
+use scalesfl::consensus::raft::{Raft, RaftConfig};
+use scalesfl::consensus::ConsensusNode;
+use scalesfl::crypto::msp::{CertificateAuthority, MemberId};
+use scalesfl::crypto::{merkle, sha256};
+use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+use scalesfl::fabric::endorsement::EndorsementPolicy;
+use scalesfl::fabric::orderer::{OrdererConfig, OrderingService};
+use scalesfl::fabric::peer::Peer;
+use scalesfl::fabric::Gateway;
+use scalesfl::ledger::state::{Version, WorldState};
+use scalesfl::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet};
+use scalesfl::network::simnet::SimNet;
+use scalesfl::util::prng::Prng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warm-up.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let (value, unit) = if per >= 1.0 {
+        (per, "s")
+    } else if per >= 1e-3 {
+        (per * 1e3, "ms")
+    } else {
+        (per * 1e6, "us")
+    };
+    println!("{name:<44} {value:>10.3} {unit}/iter   ({iters} iters)");
+    per
+}
+
+fn bench_raft_ordering() {
+    // 3-node raft over the simnet; measure committed entries per second.
+    let mut rng = Prng::new(1);
+    let mut nodes: Vec<Raft> =
+        (0..3).map(|i| Raft::new(i, 3, RaftConfig::default(), rng.fork(i as u64))).collect();
+    let mut net = SimNet::new(0.0005, 0.001, 0.0, rng.fork(99));
+    // settle election
+    let mut now = 0.0;
+    let drive = |nodes: &mut Vec<Raft>, net: &mut SimNet<_>, now: &mut f64, until: f64| {
+        while *now < until {
+            *now += 0.005;
+            for i in 0..nodes.len() {
+                for (to, m) in nodes[i].tick(*now) {
+                    net.send(i, to, m, *now);
+                }
+            }
+            for (f, t, m) in net.deliver_until(*now) {
+                for (to, out) in nodes[t].handle(f, m, *now) {
+                    net.send(t, to, out, *now);
+                }
+            }
+        }
+    };
+    drive(&mut nodes, &mut net, &mut now, 2.0);
+    let leader = nodes.iter().position(|n| n.is_leader()).expect("leader");
+    let t0 = Instant::now();
+    let entries = 5_000usize;
+    for i in 0..entries {
+        nodes[leader].propose(vec![(i % 256) as u8; 64], now).unwrap();
+        if i % 64 == 0 {
+            let target = now + 0.05;
+            drive(&mut nodes, &mut net, &mut now, target);
+        }
+    }
+    let target = now + 1.0;
+    drive(&mut nodes, &mut net, &mut now, target);
+    let committed = nodes[leader].take_committed().len();
+    println!(
+        "{:<44} {:>10.0} entries/s  (committed {committed}/{entries}, wall {:.2}s)",
+        "raft 3-node ordering throughput",
+        committed as f64 / t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn bench_pbft_ordering() {
+    let mut nodes: Vec<Pbft> = (0..4).map(|i| Pbft::new(i, 4, PbftConfig::default())).collect();
+    let mut rng = Prng::new(2);
+    let mut net = SimNet::new(0.0005, 0.001, 0.0, rng.fork(1));
+    let mut now = 0.0;
+    let entries = 2_000usize;
+    let t0 = Instant::now();
+    for i in 0..entries {
+        nodes[0].propose(vec![(i % 256) as u8; 64], now).unwrap();
+        for (to, m) in nodes[0].take_outbound() {
+            net.send(0, to, m, now);
+        }
+        if i % 32 == 0 {
+            let until = now + 0.05;
+            while now < until {
+                now += 0.005;
+                for (f, t, m) in net.deliver_until(now) {
+                    for (to, out) in nodes[t].handle(f, m, now) {
+                        net.send(t, to, out, now);
+                    }
+                }
+            }
+        }
+    }
+    let until = now + 1.0;
+    while now < until {
+        now += 0.005;
+        for (f, t, m) in net.deliver_until(now) {
+            for (to, out) in nodes[t].handle(f, m, now) {
+                net.send(t, to, out, now);
+            }
+        }
+    }
+    let committed = nodes[1].take_committed().len();
+    println!(
+        "{:<44} {:>10.0} entries/s  (committed {committed}/{entries}, wall {:.2}s)",
+        "pbft 4-replica ordering throughput",
+        committed as f64 / t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+struct PutCc;
+impl Chaincode for PutCc {
+    fn name(&self) -> &str {
+        "kv"
+    }
+    fn invoke(&self, ctx: &mut TxContext<'_>, _f: &str, args: &[String]) -> Result<Vec<u8>, String> {
+        ctx.put(&args[0], b"v".to_vec());
+        Ok(vec![])
+    }
+}
+
+fn bench_real_vs_des() {
+    // Small real fabric deployment with a cheap chaincode: compare the real
+    // harness against the DES parameterised with the measured service time.
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(3);
+    let peers: Vec<Arc<Peer>> = (0..2)
+        .map(|i| {
+            let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+            Peer::new(cred, ca.clone())
+        })
+        .collect();
+    let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+    for p in &peers {
+        p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+        p.install_chaincode("ch", Arc::new(PutCc)).unwrap();
+    }
+    let orderer = OrderingService::start(
+        OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
+        peers.clone(),
+        5,
+    );
+    let gw = Arc::new(Gateway::new(peers, orderer));
+    let wl = Workload { txs: 120, send_tps: 400.0, workers: 4, timeout_s: 10.0 };
+    let real = run_real("real/kv", &wl, &[gw], |i| Proposal {
+        channel: "ch".into(),
+        chaincode: "kv".into(),
+        function: "Put".into(),
+        args: vec![format!("k{i}")],
+        creator: MemberId::new("client"),
+        nonce: i as u64,
+    });
+    println!("{}", real.row());
+    let des_cfg = DesConfig {
+        shards: 1,
+        endorsers_per_shard: 2,
+        quorum: 2,
+        eval_s: 0.0002, // cheap chaincode
+        order_s: 0.012,
+        batch_timeout_s: 0.01,
+        worker_overhead_s: 0.0005,
+        ..Default::default()
+    };
+    let des = run_des(&des_cfg, &wl, 77);
+    println!("{}", des.row());
+    println!(
+        "# real-vs-DES cross-check: tput {:.1} vs {:.1} TPS, avgLat {:.3}s vs {:.3}s",
+        real.throughput,
+        des.throughput,
+        real.avg_latency(),
+        des.avg_latency()
+    );
+}
+
+fn main() {
+    println!("# micro benches — substrate hot paths\n");
+    bench_raft_ordering();
+    bench_pbft_ordering();
+
+    // MVCC validate + commit.
+    let mut state = WorldState::new();
+    let mut n = 0u64;
+    bench("mvcc validate+apply (1 read, 1 write)", 200_000, || {
+        let rw = RwSet {
+            reads: vec![(format!("k{}", n % 512), None)],
+            writes: vec![(format!("k{}", n % 512), Some(vec![0u8; 32]))],
+        };
+        let _ = state.mvcc_valid(&rw);
+        state.apply(&rw, Version { block: n, tx: 0 });
+        n += 1;
+    });
+
+    // Merkle root of a 100-tx block.
+    let leaves: Vec<_> = (0..100).map(|i: u64| sha256(&i.to_le_bytes())).collect();
+    bench("merkle root (100 txs)", 20_000, || {
+        let _ = merkle::root(&leaves);
+    });
+
+    // Endorsement policy verification (3 HMAC signatures).
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(9);
+    let creds: Vec<_> =
+        (0..3).map(|i| ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng)).collect();
+    let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+    let policy = EndorsementPolicy::MajorityOf(members);
+    let tx_id = sha256(b"tx");
+    let rw = RwSet { reads: vec![], writes: vec![("k".into(), Some(vec![0u8; 64]))] };
+    let payload = endorsement_payload(&tx_id, &rw.digest());
+    let ends: Vec<Endorsement> = creds
+        .iter()
+        .map(|c| Endorsement { endorser: c.member.clone(), signature: c.sign(&payload) })
+        .collect();
+    bench("endorsement policy check (3 sigs)", 100_000, || {
+        assert!(policy.satisfied(&tx_id, &rw, &ends, &ca));
+    });
+
+    // Envelope codec.
+    let env = Envelope {
+        proposal: Proposal {
+            channel: "shard0".into(),
+            chaincode: "models".into(),
+            function: "CreateModelUpdate".into(),
+            args: vec!["1".into(), "client1".into(), "ab".repeat(32), "sim://x".into(), "100".into()],
+            creator: MemberId::new("client"),
+            nonce: 1,
+        },
+        rw_set: rw.clone(),
+        endorsements: ends.clone(),
+    };
+    bench("envelope encode+decode", 100_000, || {
+        let mut w = scalesfl::ledger::codec::Writer::new();
+        scalesfl::fabric::wire::encode_envelope(&env, &mut w);
+        let buf = w.finish();
+        let mut r = scalesfl::ledger::codec::Reader::new(&buf);
+        let _ = scalesfl::fabric::wire::decode_envelope(&mut r).unwrap();
+    });
+
+    bench_real_vs_des();
+
+    // PJRT executables.
+    let Some(ops) = scalesfl::runtime::shared_ops() else {
+        eprintln!("\nartifacts not built — skipping PJRT benches");
+        return;
+    };
+    println!("\n# PJRT executables (P_PAD = {}, K = {})", ops.p_pad(), ops.k());
+    let params = ops.init_params(0).unwrap();
+    let dim = ops.input_dim();
+    let mut prng = Prng::new(11);
+    let x: Vec<f32> = (0..32 * dim).map(|_| prng.normal() as f32).collect();
+    let y: Vec<i32> = (0..32).map(|_| prng.below(10) as i32).collect();
+    let mut p = params.clone();
+    bench("train_step (b=32)", 50, || {
+        let (next, _) = ops.train_step(p.clone(), &x, &y, 0.01).unwrap();
+        p = next;
+    });
+    let ex: Vec<f32> = (0..2048 * dim).map(|_| prng.normal() as f32).collect();
+    let ey: Vec<i32> = (0..2048).map(|_| prng.below(10) as i32).collect();
+    bench("endorsement eval (2048 samples)", 10, || {
+        let _ = ops.evaluate(&params, &ex, &ey).unwrap();
+    });
+    let refs: Vec<&Vec<f32>> = (0..ops.k()).map(|_| &params).collect();
+    let w = vec![1.0f64; ops.k()];
+    bench("fedavg_agg (K=8 stacked)", 30, || {
+        let _ = ops.fedavg_agg(&refs, &w).unwrap();
+    });
+    bench("pairwise_dist (K=8)", 30, || {
+        let _ = ops.pairwise_dist(&refs).unwrap();
+    });
+    bench("cosine_sim (K=8)", 30, || {
+        let _ = ops.cosine_sim(&refs).unwrap();
+    });
+    let (execs, mean_s) = ops.runtime().stats();
+    println!("\n# runtime totals: {execs} executions, mean service {:.3} ms", mean_s * 1e3);
+}

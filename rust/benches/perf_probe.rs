@@ -1,0 +1,29 @@
+//! Focused PJRT perf probe used by the §Perf optimization loop.
+use std::time::Instant;
+use scalesfl::util::prng::Prng;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    f();
+    let t = Instant::now();
+    for _ in 0..iters { f(); }
+    println!("{name:<36} {:>10.3} ms/iter", t.elapsed().as_secs_f64() / iters as f64 * 1e3);
+}
+
+fn main() {
+    let ops = scalesfl::runtime::shared_ops().expect("artifacts");
+    let params = ops.init_params(0).unwrap();
+    let dim = ops.input_dim();
+    let mut prng = Prng::new(11);
+    let x: Vec<f32> = (0..32 * dim).map(|_| prng.normal() as f32).collect();
+    let y: Vec<i32> = (0..32).map(|_| prng.below(10) as i32).collect();
+    let mut p = params.clone();
+    time("train_step (b=32)", 50, || { let (n, _) = ops.train_step(p.clone(), &x, &y, 0.01).unwrap(); p = n; });
+    let ex: Vec<f32> = (0..2048 * dim).map(|_| prng.normal() as f32).collect();
+    let ey: Vec<i32> = (0..2048).map(|_| prng.below(10) as i32).collect();
+    time("eval (2048 samples)", 10, || { ops.evaluate(&params, &ex, &ey).unwrap(); });
+    let refs: Vec<&Vec<f32>> = (0..ops.k()).map(|_| &params).collect();
+    let w = vec![1.0f64; ops.k()];
+    time("fedavg_agg (K=8)", 30, || { ops.fedavg_agg(&refs, &w).unwrap(); });
+    time("pairwise_dist (K=8)", 30, || { ops.pairwise_dist(&refs).unwrap(); });
+    time("cosine_sim (K=8)", 30, || { ops.cosine_sim(&refs).unwrap(); });
+}

@@ -1,0 +1,263 @@
+//! Regeneration of every figure and table in the paper's evaluation
+//! (DESIGN.md §4 experiment index). Shared by `benches/` and the CLI's
+//! `figures` subcommand.
+//!
+//! Figures 4-8 run the calibrated DES (service times measured from live
+//! PJRT executions at startup); Figure 9 / Table 2 run real federated
+//! training through the full blockchain pipeline.
+//!
+//! `quick=true` shrinks workloads for CI; set `SCALESFL_FULL=1` (or
+//! quick=false) for paper-scale runs.
+
+use anyhow::Result;
+
+use crate::fl::client::TrainConfig;
+use crate::runtime::ops::{Calibration, ModelOps};
+use crate::sim::{
+    fedavg_baseline, FedAvgConfig, Partition, ScaleSfl, SimConfig,
+};
+
+use super::des::{global_capacity, run_des, DesConfig};
+use super::report::Report;
+use super::Workload;
+
+/// Calibrated environment shared by the DES figures.
+pub struct FigureEnv {
+    pub ops: ModelOps,
+    pub cal: Calibration,
+    pub base: DesConfig,
+    pub quick: bool,
+}
+
+/// Is a full (paper-scale) run requested?
+pub fn full_requested() -> bool {
+    std::env::var("SCALESFL_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Build the calibrated environment (None when artifacts are missing).
+///
+/// The paper evaluates each update against the full MNIST test split
+/// (10 000 samples); quick mode calibrates on 2 000 and scales.
+pub fn env(quick: bool) -> Option<FigureEnv> {
+    let ops = crate::runtime::shared_ops()?;
+    let samples = if quick { 2_000 } else { 10_000 };
+    let reps = if quick { 2 } else { 5 };
+    let cal = ops.calibrate(samples, reps).ok()?;
+    // Scale quick calibration up to the paper's 10k-sample endorsement cost.
+    let eval_s = if quick { cal.eval_s * (10_000.0 / samples as f64) } else { cal.eval_s };
+    let base = DesConfig {
+        shards: 1,
+        endorsers_per_shard: 8, // paper: 8 peers, P = P_E
+        quorum: 5,              // majority of 8
+        eval_s,
+        eval_jitter: 0.08,
+        net_hop_s: 0.002,
+        order_s: 0.015,
+        batch_size: 10,
+        batch_timeout_s: 0.5,
+        validate_s: 0.0005,
+        worker_overhead_s: 0.01,
+        ..Default::default()
+    };
+    Some(FigureEnv { ops, cal, base, quick })
+}
+
+/// Fig. 4 — #shards vs system throughput at saturation (200 txs, 2 workers,
+/// sent TPS just above each configuration's capacity).
+pub fn fig4(env: &FigureEnv) -> Vec<(usize, Report)> {
+    let txs = if env.quick { 120 } else { 200 };
+    (1..=8)
+        .map(|shards| {
+            let cfg = DesConfig { shards, ..env.base };
+            let cap = global_capacity(&cfg);
+            let wl = Workload { txs, send_tps: cap * 1.15, workers: 2, timeout_s: 30.0 };
+            let mut r = run_des(&cfg, &wl, 4_000 + shards as u64);
+            r.name = format!("fig4/shards={shards}");
+            (shards, r)
+        })
+        .collect()
+}
+
+/// Fig. 5 — sent TPS vs observed TPS + avg latency, per shard count
+/// (200 txs, 2 workers, sent TPS stepped by 3 from 3).
+pub fn fig5(env: &FigureEnv) -> Vec<(usize, f64, Report)> {
+    let txs = if env.quick { 100 } else { 200 };
+    let shard_counts: &[usize] = if env.quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let cfg = DesConfig { shards, ..env.base };
+        let cap = global_capacity(&cfg);
+        // Paper steps sent TPS in increments of 3 TPS; our capacity differs,
+        // so step in fractions of capacity covering the same knee shape.
+        let steps = if env.quick { 4 } else { 8 };
+        for i in 1..=steps {
+            let tps = cap * (0.3 + 0.25 * i as f64);
+            let wl = Workload { txs, send_tps: tps, workers: 2, timeout_s: 30.0 };
+            let mut r = run_des(&cfg, &wl, 5_000 + shards as u64 * 100 + i as u64);
+            r.name = format!("fig5/shards={shards}/sent={tps:.2}");
+            rows.push((shards, tps, r));
+        }
+    }
+    rows
+}
+
+/// Figs. 6+7 — surge: tx count vs latency, failures, and throughput at a
+/// sent TPS just above max (2 workers, 30 s timeout).
+pub fn fig6_7(env: &FigureEnv) -> Vec<(usize, Report)> {
+    let cfg = DesConfig { shards: 2, ..env.base };
+    let cap = global_capacity(&cfg);
+    let counts: &[usize] =
+        if env.quick { &[50, 200, 600, 1400] } else { &[50, 100, 200, 400, 800, 1600, 3200] };
+    counts
+        .iter()
+        .map(|&txs| {
+            let wl = Workload { txs, send_tps: cap * 1.3, workers: 2, timeout_s: 30.0 };
+            let mut r = run_des(&cfg, &wl, 6_000 + txs as u64);
+            r.name = format!("fig6_7/txs={txs}");
+            (txs, r)
+        })
+        .collect()
+}
+
+/// Fig. 8 — #caliper workers vs throughput + latency (200 txs, sent TPS at
+/// the max observed in Fig. 5).
+pub fn fig8(env: &FigureEnv) -> Vec<(usize, usize, Report)> {
+    let txs = if env.quick { 100 } else { 200 };
+    let shard_counts: &[usize] = if env.quick { &[2] } else { &[1, 2, 4, 8] };
+    let workers: &[usize] =
+        if env.quick { &[1, 4, 8] } else { &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10] };
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let cfg = DesConfig { shards, ..env.base };
+        let cap = global_capacity(&cfg);
+        for &w in workers {
+            let wl = Workload { txs, send_tps: cap, workers: w, timeout_s: 30.0 };
+            let mut r = run_des(&cfg, &wl, 8_000 + shards as u64 * 100 + w as u64);
+            r.name = format!("fig8/shards={shards}/workers={w}");
+            rows.push((shards, w, r));
+        }
+    }
+    rows
+}
+
+/// §3.2 ablation — endorsement computations per round: flat C x P_E vs
+/// sharded C x P_E / S^2 per shard (C x P_E / S globally).
+pub fn ablation_eval_count(clients: usize, endorsers: usize, shards: usize) -> (u64, u64, u64) {
+    let flat = (clients * endorsers) as u64;
+    let per_shard = ((clients / shards) * (endorsers / shards)) as u64;
+    let global = per_shard as u64 * shards as u64;
+    (flat, per_shard, global)
+}
+
+/// One Fig. 9 / Table 2 cell: ScaleSFL + FedAvg curves for a (B, E) pair.
+pub struct ModelPerfCell {
+    pub batch: usize,
+    pub epochs: usize,
+    /// (round, train_loss, test_accuracy) per global epoch.
+    pub scalesfl: Vec<(u64, f64, f64)>,
+    pub fedavg: Vec<(u64, f64, f64)>,
+}
+
+impl ModelPerfCell {
+    pub fn best_scalesfl(&self) -> f64 {
+        self.scalesfl.iter().map(|r| r.2).fold(0.0, f64::max)
+    }
+
+    pub fn best_fedavg(&self) -> f64 {
+        self.fedavg.iter().map(|r| r.2).fold(0.0, f64::max)
+    }
+}
+
+/// Fig. 9 + Table 2 — training loss / test accuracy of ScaleSFL (S shards x
+/// K clients each) vs flat FedAvg (S*K clients), non-IID split,
+/// eta = 1e-2 (paper), over the B x E grid.
+pub fn fig9_table2(ops: &ModelOps, quick: bool) -> Result<Vec<ModelPerfCell>> {
+    // Paper: 8 shards x 8 clients, B in {10, 20}, E in {1, 5, 15}, 15 global
+    // epochs. Quick mode shrinks everything but keeps the comparison shape.
+    let (shards, clients_per_shard, rounds) = if quick { (2, 4, 3) } else { (8, 8, 15) };
+    let grid: Vec<(usize, usize)> = if quick {
+        vec![(10, 1), (10, 5)]
+    } else {
+        vec![(10, 1), (10, 5), (10, 15), (20, 1), (20, 5), (20, 15)]
+    };
+    let samples_per_client = if quick { 60 } else { 100 };
+    let test_samples = if quick { 256 } else { 1024 };
+
+    let mut cells = Vec::new();
+    for (batch, epochs) in grid {
+        let train = TrainConfig { batch, epochs, lr: 1e-2, dp: None };
+        let sim_cfg = SimConfig {
+            shards,
+            peers_per_shard: 2,
+            clients_per_shard,
+            train,
+            partition: Partition::Dirichlet { alpha: 0.5 },
+            samples_per_client,
+            eval_samples: 32,
+            test_samples,
+            verify_aggregate: false, // honest-clients comparison (paper §4.3)
+            seed: 42,
+            ..Default::default()
+        };
+        let mut net = ScaleSfl::build(sim_cfg, ops.clone())?;
+        let mut scalesfl = Vec::new();
+        for _ in 0..rounds {
+            let rep = net.run_round()?;
+            scalesfl.push((rep.round, rep.mean_train_loss, rep.global_eval.accuracy));
+        }
+        let fed_cfg = FedAvgConfig {
+            clients: shards * clients_per_shard,
+            train,
+            partition: Partition::Dirichlet { alpha: 0.5 },
+            samples_per_client,
+            test_samples,
+            seed: 42,
+        };
+        let fedavg = fedavg_baseline(&fed_cfg, ops, rounds as u64)?
+            .into_iter()
+            .map(|r| (r.round, r.mean_train_loss, r.global_eval.accuracy))
+            .collect();
+        cells.push(ModelPerfCell { batch, epochs, scalesfl, fedavg });
+    }
+    Ok(cells)
+}
+
+/// Print Table 2 from the computed cells.
+pub fn print_table2(cells: &[ModelPerfCell]) {
+    println!("\nTable 2: best accuracy by minibatch size (B) and local epochs (E)");
+    println!("{:<4} {:<4} {:>18} {:>20}", "B", "E", "FedAvg (Accuracy)", "ScaleSFL (Accuracy)");
+    for c in cells {
+        println!(
+            "{:<4} {:<4} {:>18.4} {:>20.4}",
+            c.batch,
+            c.epochs,
+            c.best_fedavg(),
+            c.best_scalesfl()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_matches_paper_formula() {
+        // Paper's example: C = 64 clients, P_E = 8 endorsers, S = 8 shards:
+        // per shard C*P_E/S^2 = 8, global C*P_E/S = 64 (vs flat 512).
+        let (flat, per_shard, global) = ablation_eval_count(64, 8, 8);
+        assert_eq!(flat, 512);
+        assert_eq!(per_shard, 8);
+        assert_eq!(global, 64);
+    }
+
+    #[test]
+    fn fig4_scales_linearly() {
+        let Some(env) = env(true) else { return };
+        let rows = fig4(&env);
+        assert_eq!(rows.len(), 8);
+        let t1 = rows[0].1.throughput;
+        let t8 = rows[7].1.throughput;
+        assert!(t8 > 5.0 * t1, "1 shard {t1:.2} TPS, 8 shards {t8:.2} TPS");
+    }
+}

@@ -1,0 +1,40 @@
+//! Hyperledger-Caliper-style benchmark harness (paper §4.1).
+//!
+//! Workloads are defined by (#transactions, target send TPS, #workers,
+//! timeout); the harness reports sent/observed TPS, latency distribution,
+//! and failure counts — the exact quantities Figs. 4-8 plot.
+//!
+//! Two execution backends:
+//! - [`real`]: wall-clock workers driving the actual fabric pipeline with
+//!   real PJRT endorsement evaluations (bounded by host cores — this image
+//!   has one).
+//! - [`des`]: a discrete-event simulation of the same pipeline whose service
+//!   times are *calibrated from real PJRT runs* (DESIGN.md §3b), used to
+//!   regenerate the paper's multi-core figures on a 1-core host.
+
+pub mod des;
+pub mod figures;
+pub mod real;
+pub mod report;
+
+pub use des::{run_des, DesConfig, DesWorkload};
+pub use report::Report;
+
+/// Workload shape shared by both backends.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Total transactions to send.
+    pub txs: usize,
+    /// Target aggregate send rate (TPS).
+    pub send_tps: f64,
+    /// Caliper worker processes generating load.
+    pub workers: usize,
+    /// Transaction timeout in seconds (paper: 30).
+    pub timeout_s: f64,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload { txs: 200, send_tps: 10.0, workers: 2, timeout_s: 30.0 }
+    }
+}

@@ -1,0 +1,136 @@
+//! Wall-clock Caliper backend: worker threads drive the real fabric
+//! pipeline (real PJRT endorsement evaluations) at a target send rate.
+//!
+//! On this 1-core image the endorsement evaluations serialize, so absolute
+//! numbers undershoot the paper's 8-core testbed; the DES backend
+//! regenerates the figures (DESIGN.md §3b). This path exists to validate
+//! the DES against reality at small scale (see `benches/micro.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::fabric::gateway::{CommitOutcome, Gateway};
+use crate::ledger::tx::Proposal;
+use crate::util::histogram::Histogram;
+
+use super::report::Report;
+use super::Workload;
+
+/// Run a workload against real gateways. `make_proposal(i)` builds the i-th
+/// transaction; `gateways[i % gateways.len()]` submits it (shard
+/// round-robin, as the paper's Caliper config distributes load).
+pub fn run_real(
+    name: &str,
+    wl: &Workload,
+    gateways: &[Arc<Gateway>],
+    make_proposal: impl Fn(usize) -> Proposal + Send + Sync,
+) -> Report {
+    let started = Instant::now();
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(bool, f64)>> = Mutex::new(Vec::with_capacity(wl.txs));
+    let make_proposal = &make_proposal;
+    thread::scope(|s| {
+        for _ in 0..wl.workers.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= wl.txs {
+                    return;
+                }
+                // Fixed-rate pacing: tx i is due at i / send_tps.
+                let due = started + Duration::from_secs_f64(i as f64 / wl.send_tps.max(1e-9));
+                if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                    thread::sleep(wait);
+                }
+                let gw = &gateways[i % gateways.len()];
+                let sent_at = Instant::now();
+                let outcome = gw.submit_and_wait(&make_proposal(i));
+                let latency = sent_at.elapsed().as_secs_f64();
+                let ok = matches!(outcome, CommitOutcome::Committed { code, .. }
+                    if code == crate::ledger::block::ValidationCode::Valid);
+                results.lock().unwrap().push((ok, latency));
+            });
+        }
+    });
+    let duration = started.elapsed().as_secs_f64().max(1e-9);
+    let results = results.into_inner().unwrap();
+    let mut report = Report::new(name);
+    report.sent = wl.txs;
+    let mut hist = Histogram::default();
+    for (ok, lat) in &results {
+        if *ok && *lat <= wl.timeout_s {
+            report.succeeded += 1;
+            hist.record(*lat);
+        } else {
+            report.failed += 1;
+        }
+    }
+    report.send_tps = wl.txs as f64 / duration;
+    report.duration_s = duration;
+    report.throughput = report.succeeded as f64 / duration;
+    report.latency = hist;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::{CertificateAuthority, MemberId};
+    use crate::fabric::chaincode::{Chaincode, TxContext};
+    use crate::fabric::endorsement::EndorsementPolicy;
+    use crate::fabric::orderer::{OrdererConfig, OrderingService};
+    use crate::fabric::peer::Peer;
+    use crate::util::prng::Prng;
+
+    struct FastPut;
+    impl Chaincode for FastPut {
+        fn name(&self) -> &str {
+            "kv"
+        }
+        fn invoke(
+            &self,
+            ctx: &mut TxContext<'_>,
+            _f: &str,
+            args: &[String],
+        ) -> Result<Vec<u8>, String> {
+            ctx.put(&args[0], b"v".to_vec());
+            Ok(vec![])
+        }
+    }
+
+    #[test]
+    fn real_harness_end_to_end() {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(3);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(FastPut)).unwrap();
+        }
+        let orderer = OrderingService::start(
+            OrdererConfig { batch_timeout: Duration::from_millis(5), ..Default::default() },
+            peers.clone(),
+            1,
+        );
+        let gw = Arc::new(Gateway::new(peers.clone(), orderer));
+        let wl = Workload { txs: 40, send_tps: 500.0, workers: 4, timeout_s: 10.0 };
+        let report = run_real("smoke", &wl, &[gw], |i| Proposal {
+            channel: "ch".into(),
+            chaincode: "kv".into(),
+            function: "Put".into(),
+            args: vec![format!("k{i}")],
+            creator: MemberId::new("client"),
+            nonce: i as u64,
+        });
+        assert_eq!(report.succeeded, 40, "{}", report.row());
+        assert_eq!(report.failed, 0);
+        assert!(report.throughput > 5.0);
+    }
+}

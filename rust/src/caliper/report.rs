@@ -1,0 +1,93 @@
+//! Benchmark report: the metrics Caliper prints per workload round.
+
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+/// Aggregated workload result.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    /// Transactions submitted.
+    pub sent: usize,
+    /// Transactions committed valid within the timeout.
+    pub succeeded: usize,
+    /// Failures (endorsement rejections, invalidations, timeouts).
+    pub failed: usize,
+    /// Actual aggregate send rate achieved (TPS).
+    pub send_tps: f64,
+    /// Observed throughput: successes / makespan (TPS).
+    pub throughput: f64,
+    /// Latency stats over *successful* transactions (seconds).
+    pub latency: Histogram,
+    /// Workload makespan in seconds (first send -> last completion).
+    pub duration_s: f64,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report {
+            name: name.to_string(),
+            sent: 0,
+            succeeded: 0,
+            failed: 0,
+            send_tps: 0.0,
+            throughput: 0.0,
+            latency: Histogram::default(),
+            duration_s: 0.0,
+        }
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+
+    /// One table row, Caliper-style.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<28} sent={:<5} ok={:<5} fail={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s",
+            self.name,
+            self.sent,
+            self.succeeded,
+            self.failed,
+            self.send_tps,
+            self.throughput,
+            self.avg_latency(),
+            self.latency.quantile(0.95),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("sent", self.sent)
+            .set("succeeded", self.succeeded)
+            .set("failed", self.failed)
+            .set("send_tps", self.send_tps)
+            .set("throughput", self.throughput)
+            .set("avg_latency_s", self.avg_latency())
+            .set("p95_latency_s", self.latency.quantile(0.95))
+            .set("max_latency_s", self.latency.max())
+            .set("duration_s", self.duration_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_row_and_json() {
+        let mut r = Report::new("fig4/s2");
+        r.sent = 100;
+        r.succeeded = 95;
+        r.failed = 5;
+        r.send_tps = 10.0;
+        r.throughput = 9.5;
+        r.latency.record(0.5);
+        r.duration_s = 10.0;
+        assert!(r.row().contains("fig4/s2"));
+        let j = r.to_json();
+        assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(95.0));
+        assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
+    }
+}

@@ -1,0 +1,264 @@
+//! The mainchain "catalyst" chaincode (paper §4): coordinates shard-level
+//! aggregates into the global model and manages task proposals.
+//!
+//! Functions:
+//! - `ProposeTask(task_id, description, min_clients)` — §3.4.1 task proposal.
+//! - `SubmitShardModel(round, shard, hash, uri, samples)` — a shard
+//!   committee posts its aggregated model; endorsers verify blob + hash.
+//! - `FinalizeGlobal(round, hash, uri, expected_shards)` — endorsers verify
+//!   every shard reported and (deterministically) that the posted global
+//!   equals the sample-weighted FedAvg of the shard models, then pin it.
+
+use crate::crypto::Digest;
+use crate::fabric::chaincode::{Chaincode, TxContext};
+use crate::runtime::ops::ModelOps;
+use crate::storage::ModelStore;
+
+use super::models::ModelMeta;
+
+/// Mainchain contract instance (one per peer; deterministic verification).
+pub struct CatalystChaincode {
+    pub store: ModelStore,
+    pub ops: ModelOps,
+    /// Verify the aggregate numerically during FinalizeGlobal endorsement
+    /// (cost: one K-way aggregation per endorsement).
+    pub verify_aggregate: bool,
+}
+
+impl CatalystChaincode {
+    fn shard_key(round: u64, shard: &str) -> String {
+        format!("shards/{round:08}/{shard}")
+    }
+
+    fn global_key(round: u64) -> String {
+        format!("global/{round:08}")
+    }
+
+    fn submit_shard_model(
+        &self,
+        ctx: &mut TxContext<'_>,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        if args.len() != 5 {
+            return Err("SubmitShardModel expects 5 args".into());
+        }
+        let round: u64 = args[0].parse().map_err(|_| "bad round".to_string())?;
+        let shard = args[1].clone();
+        let hash = args[2].clone();
+        let uri = args[3].clone();
+        let samples: u64 = args[4].parse().map_err(|_| "bad samples".to_string())?;
+        let key = Self::shard_key(round, &shard);
+        if ctx.get(&key).is_some() {
+            return Err(format!("duplicate shard model {key}"));
+        }
+        let digest = Digest::from_hex(&hash).ok_or_else(|| "bad hash hex".to_string())?;
+        let blob = self.store.get_verified(&uri, &digest)?;
+        if blob.len() != self.ops.p_pad() {
+            return Err("shard model has wrong width".into());
+        }
+        let meta = ModelMeta { round, client: shard, hash, uri, samples };
+        ctx.put(&key, meta.encode());
+        Ok(meta.encode())
+    }
+
+    fn finalize_global(
+        &self,
+        ctx: &mut TxContext<'_>,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        if args.len() != 4 {
+            return Err("FinalizeGlobal expects 4 args".into());
+        }
+        let round: u64 = args[0].parse().map_err(|_| "bad round".to_string())?;
+        let hash = args[1].clone();
+        let uri = args[2].clone();
+        let expected: usize = args[3].parse().map_err(|_| "bad shard count".to_string())?;
+        let gkey = Self::global_key(round);
+        if ctx.get(&gkey).is_some() {
+            return Err(format!("round {round} already finalised"));
+        }
+        let shard_metas: Vec<ModelMeta> = ctx
+            .scan(&format!("shards/{round:08}/"))
+            .into_iter()
+            .map(|(_, v)| ModelMeta::decode(&v))
+            .collect::<Result<_, _>>()?;
+        if shard_metas.len() != expected {
+            return Err(format!(
+                "round {round}: {} shard models present, expected {expected}",
+                shard_metas.len()
+            ));
+        }
+        let digest = Digest::from_hex(&hash).ok_or_else(|| "bad hash hex".to_string())?;
+        let posted = self.store.get_verified(&uri, &digest)?;
+        if self.verify_aggregate {
+            // Recompute the sample-weighted FedAvg of shard models (Eq. 7)
+            // and insist the posted global matches bit-for-bit.
+            let blobs: Vec<std::sync::Arc<Vec<f32>>> = shard_metas
+                .iter()
+                .map(|m| {
+                    let d = Digest::from_hex(&m.hash).ok_or("bad shard hash")?;
+                    self.store.get_verified(&m.uri, &d)
+                })
+                .collect::<Result<_, String>>()?;
+            let refs: Vec<&Vec<f32>> = blobs.iter().map(|b| b.as_ref()).collect();
+            let weights: Vec<f64> = shard_metas.iter().map(|m| m.samples as f64).collect();
+            let agg = self
+                .ops
+                .fedavg_agg(&refs, &weights)
+                .map_err(|e| format!("aggregate verify failed: {e}"))?;
+            let agg_hash = crate::crypto::hash_f32(&agg);
+            if agg_hash != digest {
+                // Bit-exactness can differ across FP orders; fall back to a
+                // tolerance check before rejecting.
+                let max_err = agg
+                    .iter()
+                    .zip(posted.iter())
+                    .map(|(&a, &b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                if max_err > 1e-5 {
+                    return Err(format!(
+                        "posted global differs from recomputed FedAvg (max err {max_err})"
+                    ));
+                }
+            }
+        }
+        let samples: u64 = shard_metas.iter().map(|m| m.samples).sum();
+        let meta = ModelMeta { round, client: "global".into(), hash, uri, samples };
+        ctx.put(&gkey, meta.encode());
+        Ok(meta.encode())
+    }
+}
+
+impl Chaincode for CatalystChaincode {
+    fn name(&self) -> &str {
+        "catalyst"
+    }
+
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        function: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        match function {
+            "ProposeTask" => {
+                if args.len() != 3 {
+                    return Err("ProposeTask expects 3 args".into());
+                }
+                let key = format!("tasks/{}", args[0]);
+                if ctx.get(&key).is_some() {
+                    return Err(format!("task {} exists", args[0]));
+                }
+                let mut w = crate::ledger::codec::Writer::new();
+                w.str(&args[1]).str(&args[2]);
+                ctx.put(&key, w.finish());
+                Ok(vec![])
+            }
+            "SubmitShardModel" => self.submit_shard_model(ctx, args),
+            "FinalizeGlobal" => self.finalize_global(ctx, args),
+            other => Err(format!("catalyst: unknown function {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::state::{Version, WorldState};
+    use std::sync::Mutex;
+
+    fn cc() -> Option<(CatalystChaincode, ModelStore)> {
+        let ops = crate::runtime::shared_ops()?;
+        let store = ModelStore::new();
+        Some((CatalystChaincode { store: store.clone(), ops, verify_aggregate: true }, store))
+    }
+
+    fn commit(state: &Mutex<WorldState>, ctx: TxContext<'_>, block: u64) {
+        let rw = ctx.into_rw_set();
+        state.lock().unwrap().apply(&rw, Version { block, tx: 0 });
+    }
+
+    #[test]
+    fn shard_submission_and_finalisation() {
+        let Some((cc, store)) = cc() else { return };
+        let state = Mutex::new(WorldState::new());
+        // Two shards post models.
+        let m0 = vec![1.0f32; cc.ops.p_pad()];
+        let m1 = vec![3.0f32; cc.ops.p_pad()];
+        for (i, (m, n)) in [(m0.clone(), 100u64), (m1.clone(), 300u64)].iter().enumerate() {
+            let (d, uri) = store.put(m.clone());
+            let mut ctx = TxContext::new(&state);
+            cc.invoke(
+                &mut ctx,
+                "SubmitShardModel",
+                &[
+                    "1".into(),
+                    format!("shard{i}"),
+                    d.hex(),
+                    uri,
+                    n.to_string(),
+                ],
+            )
+            .unwrap();
+            commit(&state, ctx, i as u64 + 1);
+        }
+        // Weighted global: (100*1 + 300*3)/400 = 2.5
+        let global = vec![2.5f32; cc.ops.p_pad()];
+        let (gd, guri) = store.put(global);
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(&mut ctx, "FinalizeGlobal", &["1".into(), gd.hex(), guri, "2".into()])
+            .unwrap();
+        commit(&state, ctx, 3);
+        assert!(state.lock().unwrap().get_value("global/00000001").is_some());
+    }
+
+    #[test]
+    fn finalize_rejects_wrong_aggregate_and_missing_shards() {
+        let Some((cc, store)) = cc() else { return };
+        let state = Mutex::new(WorldState::new());
+        let (d, uri) = store.put(vec![1.0f32; cc.ops.p_pad()]);
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(
+            &mut ctx,
+            "SubmitShardModel",
+            &["1".into(), "shard0".into(), d.hex(), uri, "100".into()],
+        )
+        .unwrap();
+        commit(&state, ctx, 1);
+        // Expecting 2 shards but only one posted.
+        let (gd, guri) = store.put(vec![1.0f32; cc.ops.p_pad()]);
+        let mut ctx = TxContext::new(&state);
+        assert!(cc
+            .invoke(
+                &mut ctx,
+                "FinalizeGlobal",
+                &["1".into(), gd.hex(), guri.clone(), "2".into()]
+            )
+            .is_err());
+        // Right count, wrong value.
+        let (bad_d, bad_uri) = store.put(vec![9.0f32; cc.ops.p_pad()]);
+        let mut ctx = TxContext::new(&state);
+        let err = cc
+            .invoke(
+                &mut ctx,
+                "FinalizeGlobal",
+                &["1".into(), bad_d.hex(), bad_uri, "1".into()],
+            )
+            .unwrap_err();
+        assert!(err.contains("differs"), "{err}");
+    }
+
+    #[test]
+    fn task_proposals_deduplicate() {
+        let Some((cc, _store)) = cc() else { return };
+        let state = Mutex::new(WorldState::new());
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(&mut ctx, "ProposeTask", &["t1".into(), "mnist".into(), "64".into()])
+            .unwrap();
+        commit(&state, ctx, 1);
+        let mut ctx = TxContext::new(&state);
+        assert!(cc
+            .invoke(&mut ctx, "ProposeTask", &["t1".into(), "mnist".into(), "64".into()])
+            .is_err());
+    }
+}

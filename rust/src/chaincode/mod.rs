@@ -1,0 +1,15 @@
+//! The two ScaleSFL smart contracts (paper §4):
+//!
+//! - [`models`] — the shard-level "models" chaincode: clients submit model
+//!   update metadata; endorsement fetches the weights from the off-chain
+//!   store, verifies the hash, and applies the pluggable defence policy
+//!   (the model evaluation that dominates transaction cost).
+//! - [`catalyst`] — the mainchain contract: shard committees post
+//!   shard-aggregated models; once every shard reported, the global FedAvg
+//!   result is finalised and pinned for the next round.
+
+pub mod catalyst;
+pub mod models;
+
+pub use catalyst::CatalystChaincode;
+pub use models::{ModelMeta, ModelsChaincode};

@@ -1,0 +1,288 @@
+//! The shard-level "models" chaincode.
+//!
+//! `CreateModelUpdate(round, client, hash, uri, samples)` — endorsing peers:
+//!  1. reject duplicates for (round, client),
+//!  2. fetch the weights from the off-chain store and verify the hash
+//!     (paper §3.4.6 integrity check),
+//!  3. run the pluggable endorsement defence (RONI / norm-bound / none)
+//!     against the peer's local test split,
+//!  4. write `models/{round}/{client}` metadata on success.
+//!
+//! The write set contains only canonical metadata (identical across honest
+//! peers) so endorsements agree byte-for-byte; verdicts that differ per peer
+//! surface as missing endorsements, resolved by the majority policy — the
+//! paper's "the model with more endorsements wins".
+
+use std::sync::Arc;
+
+use crate::defense::endorse::{EndorsementDefense, UpdateContext};
+use crate::fabric::chaincode::{Chaincode, TxContext};
+use crate::fl::datasets::SynthDataset;
+use crate::ledger::codec::{Reader, Writer};
+use crate::runtime::ops::{EvalResult, ModelOps};
+use crate::storage::ModelStore;
+use crate::crypto::Digest;
+
+/// On-ledger model update metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub round: u64,
+    pub client: String,
+    pub hash: String,
+    pub uri: String,
+    /// |D_k| — the FedAvg weight numerator (Eq. 6).
+    pub samples: u64,
+}
+
+impl ModelMeta {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.round).str(&self.client).str(&self.hash).str(&self.uri).u64(self.samples);
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ModelMeta, String> {
+        let mut r = Reader::new(buf);
+        Ok(ModelMeta {
+            round: r.u64()?,
+            client: r.str()?,
+            hash: r.str()?,
+            uri: r.str()?,
+            samples: r.u64()?,
+        })
+    }
+
+    pub fn key(round: u64, client: &str) -> String {
+        format!("models/{round:08}/{client}")
+    }
+}
+
+/// Per-peer instance: the peer's local eval split personalises the defence.
+pub struct ModelsChaincode {
+    pub store: ModelStore,
+    pub ops: ModelOps,
+    pub defense: Arc<dyn EndorsementDefense>,
+    /// This peer's held-out split for RONI-style checks.
+    pub eval_data: SynthDataset,
+}
+
+impl ModelsChaincode {
+    /// Locate the latest finalised global model pinned on this shard chain
+    /// (written by the workflow when a round closes) for baseline checks.
+    fn prev_global(&self, ctx: &mut TxContext<'_>, round: u64) -> Option<Vec<f32>> {
+        if round == 0 {
+            return None;
+        }
+        let raw = ctx.get(&format!("global/{:08}", round - 1))?;
+        let meta = ModelMeta::decode(&raw).ok()?;
+        let digest = Digest::from_hex(&meta.hash)?;
+        self.store.get_verified(&meta.uri, &digest).ok().map(|b| (*b).clone())
+    }
+
+    fn create_model_update(
+        &self,
+        ctx: &mut TxContext<'_>,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        if args.len() != 5 {
+            return Err(format!("CreateModelUpdate expects 5 args, got {}", args.len()));
+        }
+        let round: u64 = args[0].parse().map_err(|_| "bad round".to_string())?;
+        let client = args[1].clone();
+        let hash = args[2].clone();
+        let uri = args[3].clone();
+        let samples: u64 = args[4].parse().map_err(|_| "bad samples".to_string())?;
+
+        let key = ModelMeta::key(round, &client);
+        if ctx.get(&key).is_some() {
+            return Err(format!("duplicate update for {key}"));
+        }
+        let digest = Digest::from_hex(&hash).ok_or_else(|| "bad hash hex".to_string())?;
+        // Step 6: fetch + integrity check.
+        let params = self.store.get_verified(&uri, &digest)?;
+        if params.len() != self.ops.p_pad() {
+            return Err(format!("model has {} weights, expected {}", params.len(), self.ops.p_pad()));
+        }
+        // Steps 7-8: policy evaluation on this peer's local data.
+        let prev_global = self.prev_global(ctx, round);
+        let baseline: Option<EvalResult> = prev_global
+            .as_ref()
+            .and_then(|g| self.ops.evaluate(g, &self.eval_data.x, &self.eval_data.y).ok());
+        let verdict_ctx = UpdateContext {
+            params: &params,
+            round,
+            client: &client,
+            ops: &self.ops,
+            eval_x: &self.eval_data.x,
+            eval_y: &self.eval_data.y,
+            prev_global: prev_global.as_deref(),
+            baseline,
+        };
+        self.defense.verdict(&verdict_ctx)?;
+
+        let meta = ModelMeta { round, client, hash, uri, samples };
+        ctx.put(&key, meta.encode());
+        Ok(meta.encode())
+    }
+}
+
+impl Chaincode for ModelsChaincode {
+    fn name(&self) -> &str {
+        "models"
+    }
+
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        function: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        match function {
+            "CreateModelUpdate" => self.create_model_update(ctx, args),
+            // Pin a finalised global model onto the shard chain so the next
+            // round's endorsers have a baseline (workflow-only function).
+            "PinGlobalModel" => {
+                if args.len() != 4 {
+                    return Err("PinGlobalModel expects 4 args".into());
+                }
+                let round: u64 = args[0].parse().map_err(|_| "bad round".to_string())?;
+                let meta = ModelMeta {
+                    round,
+                    client: "global".into(),
+                    hash: args[1].clone(),
+                    uri: args[2].clone(),
+                    samples: args[3].parse().map_err(|_| "bad samples".to_string())?,
+                };
+                let digest =
+                    Digest::from_hex(&meta.hash).ok_or_else(|| "bad hash hex".to_string())?;
+                self.store.get_verified(&meta.uri, &digest)?;
+                ctx.put(&format!("global/{round:08}"), meta.encode());
+                Ok(vec![])
+            }
+            other => Err(format!("models: unknown function {other}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::defense::endorse::{NoDefense, NormBound};
+    use crate::fl::datasets;
+    use crate::ledger::state::WorldState;
+    use std::sync::Mutex;
+
+    fn chaincode(defense: Arc<dyn EndorsementDefense>) -> Option<(ModelsChaincode, ModelStore)> {
+        let ops = crate::runtime::shared_ops()?;
+        let store = ModelStore::new();
+        let eval_data = datasets::mnist_like(1, 1, 64, ops.input_dim(), 10);
+        Some((ModelsChaincode { store: store.clone(), ops, defense, eval_data }, store))
+    }
+
+    fn args(round: u64, client: &str, hash: &str, uri: &str, samples: u64) -> Vec<String> {
+        vec![round.to_string(), client.into(), hash.into(), uri.into(), samples.to_string()]
+    }
+
+    #[test]
+    fn accepts_valid_update_and_writes_meta() {
+        let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
+        let params = cc.ops.init_params(1).unwrap();
+        let (digest, uri) = store.put(params);
+        let state = Mutex::new(WorldState::new());
+        let mut ctx = TxContext::new(&state);
+        let out = cc
+            .invoke(&mut ctx, "CreateModelUpdate", &args(1, "c0", &digest.hex(), &uri, 100))
+            .unwrap();
+        let meta = ModelMeta::decode(&out).unwrap();
+        assert_eq!(meta.client, "c0");
+        let rw = ctx.into_rw_set();
+        assert_eq!(rw.writes.len(), 1);
+        assert_eq!(rw.writes[0].0, ModelMeta::key(1, "c0"));
+    }
+
+    #[test]
+    fn rejects_hash_mismatch_and_missing_blob() {
+        let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
+        let params = cc.ops.init_params(1).unwrap();
+        let (_d, uri) = store.put(params.clone());
+        let wrong = crate::crypto::hash_f32(&[1.0]);
+        let state = Mutex::new(WorldState::new());
+        let mut ctx = TxContext::new(&state);
+        assert!(cc
+            .invoke(&mut ctx, "CreateModelUpdate", &args(1, "c0", &wrong.hex(), &uri, 1))
+            .is_err());
+        let ghost = format!("sim://{}", wrong.hex());
+        assert!(cc
+            .invoke(&mut ctx, "CreateModelUpdate", &args(1, "c0", &wrong.hex(), &ghost, 1))
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_for_same_round_client() {
+        let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
+        let params = cc.ops.init_params(2).unwrap();
+        let (digest, uri) = store.put(params);
+        let state = Mutex::new(WorldState::new());
+        let a = args(1, "c0", &digest.hex(), &uri, 10);
+        // First submit commits.
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(&mut ctx, "CreateModelUpdate", &a).unwrap();
+        let rw = ctx.into_rw_set();
+        state
+            .lock()
+            .unwrap()
+            .apply(&rw, crate::ledger::state::Version { block: 1, tx: 0 });
+        // Second one is rejected at simulation time.
+        let mut ctx2 = TxContext::new(&state);
+        assert!(cc.invoke(&mut ctx2, "CreateModelUpdate", &a).is_err());
+    }
+
+    #[test]
+    fn norm_bound_defense_blocks_boosted_update() {
+        let Some((cc, store)) = chaincode(Arc::new(NormBound { max_norm: 1.0 })) else { return };
+        let state = Mutex::new(WorldState::new());
+        // Pin round-0 global so the delta check has a baseline.
+        let global = cc.ops.init_params(7).unwrap();
+        let (gd, guri) = store.put(global.clone());
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(&mut ctx, "PinGlobalModel", &["0".into(), gd.hex(), guri, "0".into()])
+            .unwrap();
+        let rw = ctx.into_rw_set();
+        state
+            .lock()
+            .unwrap()
+            .apply(&rw, crate::ledger::state::Version { block: 1, tx: 0 });
+        // A far-away "model" violates the delta bound…
+        let big: Vec<f32> = global.iter().map(|g| g + 1.0).collect();
+        let (digest, uri) = store.put(big);
+        let mut ctx = TxContext::new(&state);
+        let err = cc
+            .invoke(&mut ctx, "CreateModelUpdate", &args(1, "evil", &digest.hex(), &uri, 10))
+            .unwrap_err();
+        assert!(err.contains("norm"), "{err}");
+        // …while a nearby one passes.
+        let mut near = global.clone();
+        near[0] += 0.5;
+        let (nd, nuri) = store.put(near);
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(&mut ctx, "CreateModelUpdate", &args(1, "ok", &nd.hex(), &nuri, 10))
+            .unwrap();
+    }
+
+    #[test]
+    fn pin_global_model_roundtrip() {
+        let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
+        let params = cc.ops.init_params(3).unwrap();
+        let (digest, uri) = store.put(params);
+        let state = Mutex::new(WorldState::new());
+        let mut ctx = TxContext::new(&state);
+        cc.invoke(
+            &mut ctx,
+            "PinGlobalModel",
+            &[0.to_string(), digest.hex(), uri, 800.to_string()],
+        )
+        .unwrap();
+        let rw = ctx.into_rw_set();
+        assert_eq!(rw.writes[0].0, "global/00000000");
+    }
+}

@@ -1,0 +1,52 @@
+//! Consensus substrates for the ordering service.
+//!
+//! The paper runs a Raft orderer for its Fabric test network and calls out
+//! PBFT as the shard-level alternative for byzantine settings (§3.2); both
+//! are implemented here as *sans-io state machines*: they consume
+//! `(time, message)` inputs and emit outbound messages, so the same code is
+//! driven deterministically by the test/DES harness and in real time by the
+//! ordering service threads.
+
+pub mod pbft;
+pub mod raft;
+
+/// Node identifier inside a consensus group.
+pub type NodeId = usize;
+
+/// A consensus-agnostic committed entry: (sequence, payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Committed {
+    pub seq: u64,
+    pub data: Vec<u8>,
+}
+
+/// Common driver-facing surface so the orderer can swap Raft <-> PBFT
+/// (the paper's "pluggable consensus" principle).
+pub trait ConsensusNode {
+    type Msg: Clone + std::fmt::Debug;
+
+    /// Advance timers; returns outbound (dest, msg) pairs.
+    fn tick(&mut self, now: f64) -> Vec<(NodeId, Self::Msg)>;
+    /// Handle an inbound message; returns outbound (dest, msg) pairs.
+    fn handle(&mut self, from: NodeId, msg: Self::Msg, now: f64) -> Vec<(NodeId, Self::Msg)>;
+    /// Submit a payload for ordering (leader/primary only; Err otherwise).
+    fn propose(&mut self, data: Vec<u8>, now: f64) -> Result<(), NotLeader>;
+    /// Drain entries that became committed since the last call.
+    fn take_committed(&mut self) -> Vec<Committed>;
+    /// Drain messages produced inside `propose` (protocols whose proposal
+    /// broadcasts immediately, e.g. PBFT pre-prepare; Raft ships entries on
+    /// the next heartbeat and returns nothing here).
+    fn take_outbound(&mut self) -> Vec<(NodeId, Self::Msg)> {
+        Vec::new()
+    }
+    /// Is this node currently the leader/primary?
+    fn is_leader(&self) -> bool;
+    fn node_id(&self) -> NodeId;
+}
+
+/// Proposal rejected: this node is not the current leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NotLeader {
+    /// Best-known current leader, if any.
+    pub hint: Option<NodeId>,
+}

@@ -1,0 +1,449 @@
+//! PBFT (Castro & Liskov, OSDI '99) as a sans-io state machine.
+//!
+//! The paper (§3.2) proposes PBFT for shards whose threat model includes
+//! byzantine peers, with Raft for smaller/trusted shards; the orderer
+//! accepts either through the `ConsensusNode` trait.
+//!
+//! Implemented: the normal-case three-phase protocol (pre-prepare / prepare
+//! / commit) with n = 3f+1 and quorums of 2f+1, in-order execution, and a
+//! timeout-triggered view change that rotates the primary and re-proposes
+//! unexecuted requests. Checkpointing/garbage collection are out of scope
+//! (logs are bounded by the benchmark horizon).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::{Committed, ConsensusNode, NodeId, NotLeader};
+use crate::crypto::{sha256, Digest};
+
+/// PBFT wire messages.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    PrePrepare { view: u64, seq: u64, digest: Digest, data: Vec<u8> },
+    Prepare { view: u64, seq: u64, digest: Digest },
+    Commit { view: u64, seq: u64, digest: Digest },
+    /// Simplified view change: vote to move to `new_view`, carrying the
+    /// voter's executed-sequence high-water mark and pending requests.
+    ViewChange { new_view: u64, last_exec: u64, pending: Vec<Vec<u8>> },
+    NewView { new_view: u64 },
+}
+
+/// Per-(view, seq) voting state.
+#[derive(Default)]
+struct SlotState {
+    digest: Option<Digest>,
+    data: Option<Vec<u8>>,
+    prepares: HashSet<NodeId>,
+    commits: HashSet<NodeId>,
+    prepared: bool,
+    committed: bool,
+}
+
+/// Timing configuration (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct PbftConfig {
+    /// Progress timeout before a replica votes to change view.
+    pub view_timeout: f64,
+}
+
+impl Default for PbftConfig {
+    fn default() -> Self {
+        PbftConfig { view_timeout: 1.0 }
+    }
+}
+
+/// One PBFT replica.
+pub struct Pbft {
+    id: NodeId,
+    n: usize,
+    f: usize,
+    cfg: PbftConfig,
+
+    view: u64,
+    next_seq: u64,
+    slots: BTreeMap<(u64, u64), SlotState>,
+    /// Executed (delivered) in seq order.
+    executed: Vec<Committed>,
+    exec_upto: u64,
+    drained: usize,
+
+    /// Requests this node has accepted for ordering but not yet executed
+    /// (carried into view changes).
+    pending: Vec<Vec<u8>>,
+    view_votes: HashMap<u64, HashSet<NodeId>>,
+    progress_deadline: f64,
+    /// Messages produced inside `propose` (drained via `take_outbound`).
+    outbound_buffer: Vec<(NodeId, Msg)>,
+}
+
+impl Pbft {
+    pub fn new(id: NodeId, n: usize, cfg: PbftConfig) -> Self {
+        assert!(n >= 1, "need at least one replica");
+        let f = (n - 1) / 3;
+        Pbft {
+            id,
+            n,
+            f,
+            cfg,
+            view: 0,
+            next_seq: 0,
+            slots: BTreeMap::new(),
+            executed: Vec::new(),
+            exec_upto: 0,
+            drained: 0,
+            pending: Vec::new(),
+            view_votes: HashMap::new(),
+            progress_deadline: cfg.view_timeout,
+            outbound_buffer: Vec::new(),
+        }
+    }
+
+    pub fn view(&self) -> u64 {
+        self.view
+    }
+
+    fn primary(&self) -> NodeId {
+        (self.view as usize) % self.n
+    }
+
+    /// 2f+1 matching votes (including one's own).
+    fn quorum(&self) -> usize {
+        2 * self.f + 1
+    }
+
+    fn others(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n).filter(move |p| *p != self.id)
+    }
+
+    fn broadcast(&self, msg: Msg) -> Vec<(NodeId, Msg)> {
+        self.others().map(|p| (p, msg.clone())).collect()
+    }
+
+    fn slot(&mut self, view: u64, seq: u64) -> &mut SlotState {
+        self.slots.entry((view, seq)).or_default()
+    }
+
+    /// Execute committed slots strictly in sequence order.
+    fn try_execute(&mut self) {
+        loop {
+            let seq = self.exec_upto + 1;
+            let Some(slot) = self.slots.get(&(self.view, seq)) else { break };
+            if !slot.committed {
+                break;
+            }
+            let data = slot.data.clone().expect("committed slot has data");
+            self.pending.retain(|p| p != &data);
+            self.executed.push(Committed { seq, data });
+            self.exec_upto = seq;
+        }
+    }
+
+    /// Record a prepare vote; fires the commit phase at quorum.
+    fn on_prepared(&mut self, view: u64, seq: u64, digest: Digest) -> Vec<(NodeId, Msg)> {
+        let q = self.quorum();
+        let my_id = self.id;
+        let slot = self.slot(view, seq);
+        // Own pre-prepare acceptance counts as the primary's prepare.
+        if slot.digest == Some(digest) && !slot.prepared && slot.prepares.len() + 1 >= q {
+            slot.prepared = true;
+            slot.commits.insert(my_id);
+            let mut out = self.broadcast(Msg::Commit { view, seq, digest });
+            out.extend(self.on_committed(view, seq));
+            return out;
+        }
+        Vec::new()
+    }
+
+    /// Record commit votes; executes at quorum.
+    fn on_committed(&mut self, view: u64, seq: u64) -> Vec<(NodeId, Msg)> {
+        let q = self.quorum();
+        let slot = self.slot(view, seq);
+        if slot.prepared && !slot.committed && slot.commits.len() >= q {
+            slot.committed = true;
+            self.try_execute();
+        }
+        Vec::new()
+    }
+
+    fn start_view_change(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        let new_view = self.view + 1;
+        self.progress_deadline = now + self.cfg.view_timeout;
+        let msg = Msg::ViewChange {
+            new_view,
+            last_exec: self.exec_upto,
+            pending: self.pending.clone(),
+        };
+        let mut out = self.broadcast(msg);
+        out.extend(self.record_view_vote(new_view, self.id, now, Vec::new()));
+        out
+    }
+
+    fn record_view_vote(
+        &mut self,
+        new_view: u64,
+        from: NodeId,
+        now: f64,
+        carried: Vec<Vec<u8>>,
+    ) -> Vec<(NodeId, Msg)> {
+        if new_view <= self.view {
+            return Vec::new();
+        }
+        for p in carried {
+            if !self.pending.contains(&p) {
+                self.pending.push(p);
+            }
+        }
+        let votes = self.view_votes.entry(new_view).or_default();
+        votes.insert(from);
+        if votes.len() >= self.quorum() {
+            self.enter_view(new_view, now);
+            if self.primary() == self.id {
+                let mut out = self.broadcast(Msg::NewView { new_view });
+                // Re-propose everything pending under the new view.
+                let pending = std::mem::take(&mut self.pending);
+                for data in pending {
+                    out.extend(self.propose_internal(data, now));
+                }
+                return out;
+            }
+        }
+        Vec::new()
+    }
+
+    fn enter_view(&mut self, view: u64, now: f64) {
+        self.view = view;
+        self.next_seq = self.exec_upto;
+        self.view_votes.retain(|v, _| *v > view);
+        self.progress_deadline = now + self.cfg.view_timeout;
+    }
+
+    fn propose_internal(&mut self, data: Vec<u8>, _now: f64) -> Vec<(NodeId, Msg)> {
+        self.next_seq = self.next_seq.max(self.exec_upto) + 1;
+        let seq = self.next_seq;
+        let digest = sha256(&data);
+        let view = self.view;
+        if !self.pending.contains(&data) {
+            self.pending.push(data.clone());
+        }
+        {
+            let slot = self.slot(view, seq);
+            slot.digest = Some(digest);
+            slot.data = Some(data.clone());
+        }
+        if self.n == 1 {
+            let slot = self.slot(view, seq);
+            slot.prepared = true;
+            slot.committed = true;
+            self.try_execute();
+            return Vec::new();
+        }
+        self.broadcast(Msg::PrePrepare { view, seq, digest, data })
+    }
+}
+
+impl ConsensusNode for Pbft {
+    type Msg = Msg;
+
+    fn tick(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        // View change only fires when there is unexecuted work stalling.
+        if now >= self.progress_deadline {
+            self.progress_deadline = now + self.cfg.view_timeout;
+            if !self.pending.is_empty() && self.n > 1 {
+                return self.start_view_change(now);
+            }
+        }
+        Vec::new()
+    }
+
+    fn handle(&mut self, from: NodeId, msg: Msg, now: f64) -> Vec<(NodeId, Msg)> {
+        match msg {
+            Msg::PrePrepare { view, seq, digest, data } => {
+                if view != self.view || from != self.primary() {
+                    return Vec::new();
+                }
+                if sha256(&data) != digest {
+                    return Vec::new(); // byzantine primary: bad digest
+                }
+                self.progress_deadline = now + self.cfg.view_timeout;
+                let my_id = self.id;
+                {
+                    let slot = self.slot(view, seq);
+                    if slot.digest.is_some() && slot.digest != Some(digest) {
+                        return Vec::new(); // conflicting pre-prepare
+                    }
+                    slot.digest = Some(digest);
+                    slot.data = Some(data.clone());
+                    slot.prepares.insert(my_id);
+                }
+                if !self.pending.contains(&data) {
+                    self.pending.push(data);
+                }
+                let mut out = self.broadcast(Msg::Prepare { view, seq, digest });
+                out.extend(self.on_prepared(view, seq, digest));
+                out
+            }
+            Msg::Prepare { view, seq, digest } => {
+                if view != self.view {
+                    return Vec::new();
+                }
+                {
+                    let slot = self.slot(view, seq);
+                    if slot.digest.is_some() && slot.digest != Some(digest) {
+                        return Vec::new();
+                    }
+                    slot.prepares.insert(from);
+                }
+                self.on_prepared(view, seq, digest)
+            }
+            Msg::Commit { view, seq, digest } => {
+                if view != self.view {
+                    return Vec::new();
+                }
+                {
+                    let slot = self.slot(view, seq);
+                    if slot.digest.is_some() && slot.digest != Some(digest) {
+                        return Vec::new();
+                    }
+                    slot.commits.insert(from);
+                }
+                self.on_committed(view, seq)
+            }
+            Msg::ViewChange { new_view, last_exec: _, pending } => {
+                self.record_view_vote(new_view, from, now, pending)
+            }
+            Msg::NewView { new_view } => {
+                if new_view > self.view {
+                    self.enter_view(new_view, now);
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    fn propose(&mut self, data: Vec<u8>, now: f64) -> Result<(), NotLeader> {
+        if self.primary() != self.id {
+            return Err(NotLeader { hint: Some(self.primary()) });
+        }
+        let _msgs = self.propose_internal(data, now);
+        // Sans-io contract: propose() cannot emit; the orderer drains
+        // outbound via `take_outbound` below.
+        self.outbound_buffer.extend(_msgs);
+        Ok(())
+    }
+
+    fn take_committed(&mut self) -> Vec<Committed> {
+        let out = self.executed[self.drained..].to_vec();
+        self.drained = self.executed.len();
+        out
+    }
+
+    /// Messages produced by `propose` (drained by the driver after each call).
+    fn take_outbound(&mut self) -> Vec<(NodeId, Msg)> {
+        std::mem::take(&mut self.outbound_buffer)
+    }
+
+    fn is_leader(&self) -> bool {
+        self.primary() == self.id
+    }
+
+    fn node_id(&self) -> NodeId {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::simnet::SimNet;
+    use crate::util::prng::Prng;
+
+    fn cluster(n: usize, seed: u64) -> (Vec<Pbft>, SimNet<Msg>) {
+        let nodes = (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
+        let net = SimNet::new(0.001, 0.005, 0.0, Prng::new(seed));
+        (nodes, net)
+    }
+
+    fn run(nodes: &mut Vec<Pbft>, net: &mut SimNet<Msg>, from: f64, until: f64) {
+        let tick = 0.01;
+        let mut now = from;
+        while now < until {
+            now += tick;
+            for i in 0..nodes.len() {
+                for (to, m) in nodes[i].tick(now) {
+                    net.send(i, to, m, now);
+                }
+                for (to, m) in nodes[i].take_outbound() {
+                    net.send(i, to, m, now);
+                }
+            }
+            for (f, t, m) in net.deliver_until(now) {
+                for (to, out) in nodes[t].handle(f, m, now) {
+                    net.send(t, to, out, now);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_replica_executes_immediately() {
+        let (mut nodes, mut net) = cluster(1, 1);
+        nodes[0].propose(b"a".to_vec(), 0.0).unwrap();
+        run(&mut nodes, &mut net, 0.0, 0.1);
+        assert_eq!(nodes[0].take_committed().len(), 1);
+    }
+
+    #[test]
+    fn four_replicas_commit_in_order() {
+        let (mut nodes, mut net) = cluster(4, 2);
+        for i in 0..5u8 {
+            nodes[0].propose(vec![i], 0.0).unwrap();
+        }
+        run(&mut nodes, &mut net, 0.0, 2.0);
+        for (id, n) in nodes.iter_mut().enumerate() {
+            let data: Vec<Vec<u8>> = n.take_committed().into_iter().map(|c| c.data).collect();
+            assert_eq!(data, (0..5u8).map(|i| vec![i]).collect::<Vec<_>>(), "replica {id}");
+        }
+    }
+
+    #[test]
+    fn non_primary_rejects_proposals() {
+        let (mut nodes, _net) = cluster(4, 3);
+        assert_eq!(nodes[1].propose(b"x".to_vec(), 0.0), Err(NotLeader { hint: Some(0) }));
+    }
+
+    #[test]
+    fn view_change_recovers_from_dead_primary() {
+        let (mut nodes, mut net) = cluster(4, 4);
+        // Replica 1 learns of a request but primary 0 is isolated: the
+        // request reaches replicas only as pending (simulate by injecting a
+        // pre-prepare then isolating before prepares land).
+        net.isolate(0);
+        // Clients resubmit to a backup: model by marking pending directly.
+        for n in nodes.iter_mut().skip(1) {
+            n.pending.push(b"req".to_vec());
+        }
+        run(&mut nodes, &mut net, 0.0, 5.0);
+        // New view installed, request executed on the healthy replicas.
+        for (id, n) in nodes.iter_mut().enumerate().skip(1) {
+            assert!(n.view() >= 1, "replica {id} still in view 0");
+            let data: Vec<Vec<u8>> = n.take_committed().into_iter().map(|c| c.data).collect();
+            assert_eq!(data, vec![b"req".to_vec()], "replica {id}");
+        }
+    }
+
+    #[test]
+    fn byzantine_digest_rejected() {
+        let mut replica = Pbft::new(1, 4, PbftConfig::default());
+        let out = replica.handle(
+            0,
+            Msg::PrePrepare {
+                view: 0,
+                seq: 1,
+                digest: sha256(b"other"),
+                data: b"data".to_vec(),
+            },
+            0.0,
+        );
+        assert!(out.is_empty());
+        assert!(replica.take_committed().is_empty());
+    }
+}

@@ -1,0 +1,517 @@
+//! Raft (Ongaro & Ousterhout, USENIX ATC '14) as a sans-io state machine:
+//! leader election, log replication, and commitment — the ordering service
+//! the paper's Fabric test network runs.
+//!
+//! The node never touches a socket or a clock: `tick(now)` fires timers and
+//! `handle(from, msg, now)` processes inputs, both returning outbound
+//! messages. Election timeouts are randomized from the node's own `Prng`.
+
+use std::collections::{HashMap, HashSet};
+
+use super::{Committed, ConsensusNode, NodeId, NotLeader};
+use crate::util::prng::Prng;
+
+pub type Term = u64;
+
+/// A replicated log entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogEntry {
+    pub term: Term,
+    pub data: Vec<u8>,
+}
+
+/// Raft wire messages.
+#[derive(Clone, Debug)]
+pub enum Msg {
+    RequestVote { term: Term, last_log_index: u64, last_log_term: Term },
+    Vote { term: Term, granted: bool },
+    Append { term: Term, prev_index: u64, prev_term: Term, entries: Vec<LogEntry>, leader_commit: u64 },
+    AppendResp { term: Term, success: bool, match_index: u64 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+/// Timing configuration (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct RaftConfig {
+    pub election_timeout_min: f64,
+    pub election_timeout_max: f64,
+    pub heartbeat_interval: f64,
+    /// Max entries shipped per AppendEntries.
+    pub max_batch: usize,
+}
+
+impl Default for RaftConfig {
+    fn default() -> Self {
+        RaftConfig {
+            election_timeout_min: 0.15,
+            election_timeout_max: 0.30,
+            heartbeat_interval: 0.05,
+            max_batch: 64,
+        }
+    }
+}
+
+/// One Raft participant.
+pub struct Raft {
+    id: NodeId,
+    n: usize,
+    cfg: RaftConfig,
+    rng: Prng,
+
+    term: Term,
+    voted_for: Option<NodeId>,
+    /// log[i] has index i+1 (1-based Raft indices; index 0 = empty sentinel).
+    log: Vec<LogEntry>,
+    commit: u64,
+    delivered: u64,
+
+    role: Role,
+    leader_hint: Option<NodeId>,
+    votes: HashSet<NodeId>,
+    next_index: HashMap<NodeId, u64>,
+    match_index: HashMap<NodeId, u64>,
+
+    election_deadline: f64,
+    heartbeat_due: f64,
+}
+
+impl Raft {
+    pub fn new(id: NodeId, n: usize, cfg: RaftConfig, mut rng: Prng) -> Self {
+        assert!(n >= 1 && id < n);
+        let first_deadline = cfg.election_timeout_min
+            + rng.next_f64() * (cfg.election_timeout_max - cfg.election_timeout_min);
+        Raft {
+            id,
+            n,
+            cfg,
+            rng,
+            term: 0,
+            voted_for: None,
+            log: Vec::new(),
+            commit: 0,
+            delivered: 0,
+            role: Role::Follower,
+            leader_hint: None,
+            votes: HashSet::new(),
+            next_index: HashMap::new(),
+            match_index: HashMap::new(),
+            election_deadline: first_deadline,
+            heartbeat_due: 0.0,
+        }
+    }
+
+    pub fn term(&self) -> Term {
+        self.term
+    }
+
+    pub fn log_len(&self) -> u64 {
+        self.log.len() as u64
+    }
+
+    pub fn commit_index(&self) -> u64 {
+        self.commit
+    }
+
+    fn peers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n).filter(move |p| *p != self.id)
+    }
+
+    fn majority(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    fn last_log_term(&self) -> Term {
+        self.log.last().map(|e| e.term).unwrap_or(0)
+    }
+
+    fn reset_election_deadline(&mut self, now: f64) {
+        let span = self.cfg.election_timeout_max - self.cfg.election_timeout_min;
+        self.election_deadline = now + self.cfg.election_timeout_min + self.rng.next_f64() * span;
+    }
+
+    fn become_follower(&mut self, term: Term, now: f64) {
+        self.term = term;
+        self.role = Role::Follower;
+        self.voted_for = None;
+        self.votes.clear();
+        self.reset_election_deadline(now);
+    }
+
+    fn start_election(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        self.term += 1;
+        self.role = Role::Candidate;
+        self.voted_for = Some(self.id);
+        self.votes = HashSet::from([self.id]);
+        self.leader_hint = None;
+        self.reset_election_deadline(now);
+        if self.n == 1 {
+            return self.become_leader(now);
+        }
+        let msg = Msg::RequestVote {
+            term: self.term,
+            last_log_index: self.log_len(),
+            last_log_term: self.last_log_term(),
+        };
+        self.peers().map(|p| (p, msg.clone())).collect()
+    }
+
+    fn become_leader(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        self.role = Role::Leader;
+        self.leader_hint = Some(self.id);
+        let next = self.log_len() + 1;
+        self.next_index = self.peers().map(|p| (p, next)).collect();
+        self.match_index = self.peers().map(|p| (p, 0)).collect();
+        self.heartbeat_due = now; // fire immediately
+        self.broadcast_append(now)
+    }
+
+    fn append_for(&self, peer: NodeId) -> Msg {
+        let next = *self.next_index.get(&peer).unwrap_or(&1);
+        let prev_index = next - 1;
+        let prev_term = if prev_index == 0 { 0 } else { self.log[prev_index as usize - 1].term };
+        let from = prev_index as usize;
+        let to = (from + self.cfg.max_batch).min(self.log.len());
+        Msg::Append {
+            term: self.term,
+            prev_index,
+            prev_term,
+            entries: self.log[from..to].to_vec(),
+            leader_commit: self.commit,
+        }
+    }
+
+    fn broadcast_append(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        self.heartbeat_due = now + self.cfg.heartbeat_interval;
+        let peers: Vec<NodeId> = self.peers().collect();
+        peers.into_iter().map(|p| (p, self.append_for(p))).collect()
+    }
+
+    /// Advance commit to the highest index replicated on a majority within
+    /// the current term (Raft §5.4.2: only current-term entries commit by
+    /// counting).
+    fn advance_commit(&mut self) {
+        if self.role != Role::Leader {
+            return;
+        }
+        for n in ((self.commit + 1)..=self.log_len()).rev() {
+            if self.log[n as usize - 1].term != self.term {
+                continue;
+            }
+            let replicas =
+                1 + self.match_index.values().filter(|&&m| m >= n).count();
+            if replicas >= self.majority() {
+                self.commit = n;
+                break;
+            }
+        }
+        if self.n == 1 {
+            self.commit = self.log_len();
+        }
+    }
+
+    /// Candidate log at least as up-to-date as ours? (Raft §5.4.1)
+    fn log_up_to_date(&self, last_index: u64, last_term: Term) -> bool {
+        let (our_term, our_index) = (self.last_log_term(), self.log_len());
+        last_term > our_term || (last_term == our_term && last_index >= our_index)
+    }
+}
+
+impl ConsensusNode for Raft {
+    type Msg = Msg;
+
+    fn tick(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
+        match self.role {
+            Role::Leader => {
+                if now >= self.heartbeat_due {
+                    self.broadcast_append(now)
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => {
+                if now >= self.election_deadline {
+                    self.start_election(now)
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+
+    fn handle(&mut self, from: NodeId, msg: Msg, now: f64) -> Vec<(NodeId, Msg)> {
+        match msg {
+            Msg::RequestVote { term, last_log_index, last_log_term } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                }
+                let grant = term == self.term
+                    && self.role == Role::Follower
+                    && self.voted_for.is_none_or(|v| v == from)
+                    && self.log_up_to_date(last_log_index, last_log_term);
+                if grant {
+                    self.voted_for = Some(from);
+                    self.reset_election_deadline(now);
+                }
+                vec![(from, Msg::Vote { term: self.term, granted: grant })]
+            }
+            Msg::Vote { term, granted } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                    return Vec::new();
+                }
+                if self.role == Role::Candidate && term == self.term && granted {
+                    self.votes.insert(from);
+                    if self.votes.len() >= self.majority() {
+                        return self.become_leader(now);
+                    }
+                }
+                Vec::new()
+            }
+            Msg::Append { term, prev_index, prev_term, entries, leader_commit } => {
+                if term > self.term || (term == self.term && self.role != Role::Follower) {
+                    self.become_follower(term, now);
+                }
+                if term < self.term {
+                    return vec![(
+                        from,
+                        Msg::AppendResp { term: self.term, success: false, match_index: 0 },
+                    )];
+                }
+                self.leader_hint = Some(from);
+                self.reset_election_deadline(now);
+                // Consistency check on the entry preceding the batch.
+                let prev_ok = prev_index == 0
+                    || (prev_index <= self.log_len()
+                        && self.log[prev_index as usize - 1].term == prev_term);
+                if !prev_ok {
+                    return vec![(
+                        from,
+                        Msg::AppendResp {
+                            term: self.term,
+                            success: false,
+                            match_index: self.log_len().min(prev_index.saturating_sub(1)),
+                        },
+                    )];
+                }
+                // Append, truncating any conflicting suffix.
+                let mut idx = prev_index as usize;
+                for e in entries {
+                    if idx < self.log.len() {
+                        if self.log[idx].term != e.term {
+                            self.log.truncate(idx);
+                            self.log.push(e);
+                        }
+                    } else {
+                        self.log.push(e);
+                    }
+                    idx += 1;
+                }
+                let match_index = idx as u64;
+                if leader_commit > self.commit {
+                    self.commit = leader_commit.min(match_index);
+                }
+                vec![(from, Msg::AppendResp { term: self.term, success: true, match_index })]
+            }
+            Msg::AppendResp { term, success, match_index } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                    return Vec::new();
+                }
+                if self.role != Role::Leader || term != self.term {
+                    return Vec::new();
+                }
+                if success {
+                    let m = self.match_index.entry(from).or_insert(0);
+                    *m = (*m).max(match_index);
+                    self.next_index.insert(from, match_index + 1);
+                    self.advance_commit();
+                    // Ship more immediately if the follower is behind.
+                    if match_index < self.log_len() {
+                        return vec![(from, self.append_for(from))];
+                    }
+                } else {
+                    // Back off next_index; the hint jumps us near the match.
+                    let next = self.next_index.entry(from).or_insert(1);
+                    *next = (match_index + 1).min((*next).saturating_sub(1)).max(1);
+                    return vec![(from, self.append_for(from))];
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    fn propose(&mut self, data: Vec<u8>, _now: f64) -> Result<(), NotLeader> {
+        if self.role != Role::Leader {
+            return Err(NotLeader { hint: self.leader_hint });
+        }
+        self.log.push(LogEntry { term: self.term, data });
+        if self.n == 1 {
+            self.commit = self.log_len();
+        }
+        Ok(())
+    }
+
+    fn take_committed(&mut self) -> Vec<Committed> {
+        let mut out = Vec::new();
+        while self.delivered < self.commit {
+            self.delivered += 1;
+            out.push(Committed {
+                seq: self.delivered,
+                data: self.log[self.delivered as usize - 1].data.clone(),
+            });
+        }
+        out
+    }
+
+    fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+
+    fn node_id(&self) -> NodeId {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::simnet::SimNet;
+    use crate::util::check::check;
+
+    /// Drive a cluster until `pred` or deadline; returns final virtual time.
+    fn run_cluster(
+        nodes: &mut Vec<Raft>,
+        net: &mut SimNet<Msg>,
+        until: f64,
+        mut on_step: impl FnMut(&mut Vec<Raft>, f64),
+    ) {
+        let tick = 0.01;
+        let mut now = 0.0;
+        while now < until {
+            now += tick;
+            for i in 0..nodes.len() {
+                for (to, m) in nodes[i].tick(now) {
+                    net.send(i, to, m, now);
+                }
+            }
+            for (from, to, msg) in net.deliver_until(now) {
+                for (dest, m) in nodes[to].handle(from, msg, now) {
+                    net.send(to, dest, m, now);
+                }
+            }
+            on_step(nodes, now);
+        }
+    }
+
+    fn cluster(n: usize, seed: u64) -> (Vec<Raft>, SimNet<Msg>) {
+        let mut rng = Prng::new(seed);
+        let nodes = (0..n)
+            .map(|i| Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64)))
+            .collect();
+        let net = SimNet::new(0.001, 0.005, 0.0, rng.fork(999));
+        (nodes, net)
+    }
+
+    fn leader_of(nodes: &[Raft]) -> Option<usize> {
+        nodes.iter().position(|n| n.is_leader())
+    }
+
+    #[test]
+    fn single_node_self_commits() {
+        let (mut nodes, mut net) = cluster(1, 1);
+        run_cluster(&mut nodes, &mut net, 1.0, |_, _| {});
+        assert!(nodes[0].is_leader());
+        nodes[0].propose(b"x".to_vec(), 1.0).unwrap();
+        let c = nodes[0].take_committed();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].data, b"x");
+    }
+
+    #[test]
+    fn elects_exactly_one_leader() {
+        let (mut nodes, mut net) = cluster(5, 2);
+        run_cluster(&mut nodes, &mut net, 2.0, |_, _| {});
+        let leaders: Vec<usize> = (0..5).filter(|&i| nodes[i].is_leader()).collect();
+        assert_eq!(leaders.len(), 1, "leaders: {leaders:?}");
+    }
+
+    #[test]
+    fn replicates_and_commits_on_all() {
+        let (mut nodes, mut net) = cluster(3, 3);
+        run_cluster(&mut nodes, &mut net, 1.5, |_, _| {});
+        let l = leader_of(&nodes).expect("leader");
+        for i in 0..10u8 {
+            nodes[l].propose(vec![i], 1.5).unwrap();
+        }
+        run_cluster(&mut nodes, &mut net, 3.0, |_, _| {});
+        for (i, n) in nodes.iter_mut().enumerate() {
+            let data: Vec<Vec<u8>> = n.take_committed().into_iter().map(|c| c.data).collect();
+            assert_eq!(data, (0..10u8).map(|i| vec![i]).collect::<Vec<_>>(), "node {i}");
+        }
+    }
+
+    #[test]
+    fn follower_rejects_propose() {
+        let (mut nodes, mut net) = cluster(3, 4);
+        run_cluster(&mut nodes, &mut net, 1.5, |_, _| {});
+        let l = leader_of(&nodes).unwrap();
+        let f = (0..3).find(|&i| i != l).unwrap();
+        assert!(nodes[f].propose(b"x".to_vec(), 1.5).is_err());
+    }
+
+    #[test]
+    fn survives_leader_crash() {
+        let (mut nodes, mut net) = cluster(5, 5);
+        run_cluster(&mut nodes, &mut net, 2.0, |_, _| {});
+        let l0 = leader_of(&nodes).unwrap();
+        nodes[l0].propose(b"pre".to_vec(), 2.0).unwrap();
+        run_cluster(&mut nodes, &mut net, 3.0, |_, _| {});
+        // Crash the leader (partition it away).
+        net.isolate(l0);
+        run_cluster(&mut nodes, &mut net, 6.0, |_, _| {});
+        let l1 = (0..5).find(|&i| i != l0 && nodes[i].is_leader()).expect("new leader");
+        nodes[l1].propose(b"post".to_vec(), 6.0).unwrap();
+        run_cluster(&mut nodes, &mut net, 8.0, |_, _| {});
+        // All reachable nodes committed both entries in order.
+        for i in (0..5).filter(|&i| i != l0) {
+            let data: Vec<Vec<u8>> =
+                nodes[i].take_committed().into_iter().map(|c| c.data).collect();
+            assert_eq!(data, vec![b"pre".to_vec(), b"post".to_vec()], "node {i}");
+        }
+    }
+
+    #[test]
+    fn property_committed_prefixes_agree() {
+        check("raft-agreement", 6, |rng| {
+            let seed = rng.next_u64();
+            let (mut nodes, mut net) = cluster(3, seed);
+            let mut proposed = 0u8;
+            run_cluster(&mut nodes, &mut net, 6.0, |nodes, now| {
+                if proposed < 20 {
+                    if let Some(l) = nodes.iter().position(|n| n.is_leader()) {
+                        if nodes[l].propose(vec![proposed], now).is_ok() {
+                            proposed += 1;
+                        }
+                    }
+                }
+            });
+            let logs: Vec<Vec<Committed>> =
+                nodes.iter_mut().map(|n| n.take_committed()).collect();
+            // Agreement: any two committed sequences are prefix-compatible.
+            for a in &logs {
+                for b in &logs {
+                    let common = a.len().min(b.len());
+                    assert_eq!(&a[..common], &b[..common]);
+                }
+            }
+            // Liveness under a clean network: everything proposed commits.
+            assert!(logs.iter().any(|l| l.len() == proposed as usize));
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Merkle tree over transaction digests: block data hashes and inclusion
+//! proofs (used by light verification of pinned model updates).
+
+use super::{sha256_pair, Digest};
+
+/// Merkle root of a list of leaf digests. Odd levels duplicate the last node
+/// (Bitcoin-style). Empty input hashes to Digest::ZERO.
+pub fn root(leaves: &[Digest]) -> Digest {
+    if leaves.is_empty() {
+        return Digest::ZERO;
+    }
+    let mut level: Vec<Digest> = leaves.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            let b = if pair.len() == 2 { &pair[1] } else { &pair[0] };
+            next.push(sha256_pair(&pair[0], b));
+        }
+        level = next;
+    }
+    level[0]
+}
+
+/// An inclusion proof: sibling hashes bottom-up with left/right markers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Proof {
+    /// (sibling, sibling_is_left)
+    pub path: Vec<(Digest, bool)>,
+}
+
+/// Build the inclusion proof for `index`.
+pub fn prove(leaves: &[Digest], index: usize) -> Option<Proof> {
+    if index >= leaves.len() {
+        return None;
+    }
+    let mut path = Vec::new();
+    let mut level: Vec<Digest> = leaves.to_vec();
+    let mut idx = index;
+    while level.len() > 1 {
+        let sib = if idx % 2 == 0 {
+            // right sibling (or self-duplicate at the edge)
+            let s = if idx + 1 < level.len() { level[idx + 1] } else { level[idx] };
+            (s, false)
+        } else {
+            (level[idx - 1], true)
+        };
+        path.push(sib);
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            let b = if pair.len() == 2 { &pair[1] } else { &pair[0] };
+            next.push(sha256_pair(&pair[0], b));
+        }
+        level = next;
+        idx /= 2;
+    }
+    Some(Proof { path })
+}
+
+/// Verify an inclusion proof against a root.
+pub fn verify(leaf: &Digest, proof: &Proof, expected_root: &Digest) -> bool {
+    let mut acc = *leaf;
+    for (sib, sib_is_left) in &proof.path {
+        acc = if *sib_is_left { sha256_pair(sib, &acc) } else { sha256_pair(&acc, sib) };
+    }
+    acc == *expected_root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::sha256;
+    use crate::util::check::check;
+
+    fn leaves(n: usize) -> Vec<Digest> {
+        (0..n).map(|i| sha256(format!("tx-{i}").as_bytes())).collect()
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(root(&[]), Digest::ZERO);
+        let l = leaves(1);
+        assert_eq!(root(&l), l[0]);
+    }
+
+    #[test]
+    fn root_changes_with_any_leaf() {
+        let l = leaves(7);
+        let r = root(&l);
+        for i in 0..7 {
+            let mut l2 = l.clone();
+            l2[i] = sha256(b"tampered");
+            assert_ne!(root(&l2), r, "leaf {i}");
+        }
+    }
+
+    #[test]
+    fn proofs_verify_for_all_indices() {
+        for n in [1usize, 2, 3, 4, 5, 8, 13] {
+            let l = leaves(n);
+            let r = root(&l);
+            for i in 0..n {
+                let p = prove(&l, i).unwrap();
+                assert!(verify(&l[i], &p, &r), "n={n} i={i}");
+                // Wrong leaf fails.
+                assert!(!verify(&sha256(b"other"), &p, &r));
+            }
+        }
+    }
+
+    #[test]
+    fn proof_out_of_range() {
+        assert!(prove(&leaves(3), 3).is_none());
+    }
+
+    #[test]
+    fn property_random_trees() {
+        check("merkle-roundtrip", 32, |rng| {
+            let n = rng.range(1, 40);
+            let l: Vec<Digest> =
+                (0..n).map(|_| sha256(&rng.next_u64().to_le_bytes())).collect();
+            let r = root(&l);
+            let i = rng.below(n);
+            let p = prove(&l, i).unwrap();
+            assert!(verify(&l[i], &p, &r));
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Cryptographic primitives for the permissioned ledger: SHA-256 digests,
+//! Merkle trees over transaction hashes, and an HMAC-SHA256 membership
+//! service (MSP analogue).
+//!
+//! Hyperledger Fabric uses x509 certificates + ECDSA; offline we substitute
+//! HMAC-SHA256 identities issued by a certificate-authority analogue that
+//! holds per-member secrets (DESIGN.md §2). Unforgeability against members
+//! without the secret is preserved, which is the property the endorsement
+//! and validation logic relies on.
+
+pub mod merkle;
+pub mod msp;
+
+use sha2::{Digest as _, Sha256};
+
+/// A SHA-256 digest.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub [u8; 32]);
+
+impl Digest {
+    pub const ZERO: Digest = Digest([0u8; 32]);
+
+    pub fn hex(&self) -> String {
+        self.0.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    pub fn short(&self) -> String {
+        self.hex()[..12].to_string()
+    }
+
+    pub fn from_hex(s: &str) -> Option<Digest> {
+        if s.len() != 64 {
+            return None;
+        }
+        let mut out = [0u8; 32];
+        for (i, chunk) in s.as_bytes().chunks(2).enumerate() {
+            let hi = (chunk[0] as char).to_digit(16)?;
+            let lo = (chunk[1] as char).to_digit(16)?;
+            out[i] = (hi * 16 + lo) as u8;
+        }
+        Some(Digest(out))
+    }
+}
+
+impl std::fmt::Debug for Digest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Digest({})", self.short())
+    }
+}
+
+/// SHA-256 of a byte string.
+pub fn sha256(data: &[u8]) -> Digest {
+    let mut h = Sha256::new();
+    h.update(data);
+    Digest(h.finalize().into())
+}
+
+/// SHA-256 over several segments (length-prefixed to avoid ambiguity).
+pub fn sha256_parts(parts: &[&[u8]]) -> Digest {
+    let mut h = Sha256::new();
+    for p in parts {
+        h.update((p.len() as u64).to_le_bytes());
+        h.update(p);
+    }
+    Digest(h.finalize().into())
+}
+
+/// SHA-256 of the concatenation of two digests (Merkle interior node).
+pub fn sha256_pair(a: &Digest, b: &Digest) -> Digest {
+    let mut h = Sha256::new();
+    h.update(a.0);
+    h.update(b.0);
+    Digest(h.finalize().into())
+}
+
+/// Hash an f32 parameter vector (the off-chain model blob identity).
+pub fn hash_f32(data: &[f32]) -> Digest {
+    let mut h = Sha256::new();
+    for v in data {
+        h.update(v.to_le_bytes());
+    }
+    Digest(h.finalize().into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        // SHA-256("abc")
+        assert_eq!(
+            sha256(b"abc").hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let d = sha256(b"hello");
+        assert_eq!(Digest::from_hex(&d.hex()), Some(d));
+        assert_eq!(Digest::from_hex("zz"), None);
+    }
+
+    #[test]
+    fn parts_is_unambiguous() {
+        assert_ne!(sha256_parts(&[b"ab", b"c"]), sha256_parts(&[b"a", b"bc"]));
+    }
+
+    #[test]
+    fn f32_hash_is_stable_and_sensitive() {
+        let a = hash_f32(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, hash_f32(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, hash_f32(&[1.0, 2.0, 3.0001]));
+    }
+}

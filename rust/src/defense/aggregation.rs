@@ -1,0 +1,163 @@
+//! Aggregation-time defences over the round's full update set.
+
+/// Multi-Krum (Blanchard et al., NeurIPS '17).
+///
+/// Given the pairwise squared-distance matrix of `n` updates and an assumed
+/// byzantine count `f`, each update's Krum score is the sum of its distances
+/// to its `n - f - 2` nearest neighbours; the `m = n - f` lowest-scoring
+/// updates are selected for aggregation. Returns selected indices (sorted).
+///
+/// Tolerates up to ~33% adversaries; degrades if Sybils dominate the mean —
+/// exactly the regime FoolsGold targets (compose both, paper §2.3).
+pub fn multi_krum(dist: &[Vec<f64>], f: usize) -> Vec<usize> {
+    let n = dist.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let m = n.saturating_sub(f).max(1);
+    let neigh = n.saturating_sub(f + 2).max(1);
+    let mut scores: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            let mut ds: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| dist[i][j]).collect();
+            ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            (ds.iter().take(neigh).sum::<f64>(), i)
+        })
+        .collect();
+    scores.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut selected: Vec<usize> = scores.into_iter().take(m).map(|(_, i)| i).collect();
+    selected.sort_unstable();
+    selected
+}
+
+/// FoolsGold (Fung et al., 2018), cosine-similarity variant.
+///
+/// Sybils pushing a shared objective submit highly similar updates; honest
+/// non-IID clients do not. Each client's weight is down-scaled by its
+/// maximum pairwise similarity (with the standard re-scaling and logit
+/// sharpening). Returns per-update weights in [0, 1].
+pub fn foolsgold_weights(cos: &[Vec<f64>]) -> Vec<f64> {
+    let n = cos.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![1.0];
+    }
+    // max similarity to any other update
+    let mut maxcs: Vec<f64> = (0..n)
+        .map(|i| {
+            (0..n)
+                .filter(|&j| j != i)
+                .map(|j| cos[i][j])
+                .fold(f64::NEG_INFINITY, f64::max)
+        })
+        .collect();
+    // pardoning: rescale j's similarity when i looks more sybil than j
+    let snapshot = maxcs.clone();
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && snapshot[j] > snapshot[i] && snapshot[j] > 0.0 {
+                maxcs[i] = maxcs[i].max(cos[i][j] * snapshot[i] / snapshot[j]);
+            }
+        }
+    }
+    let mut w: Vec<f64> = maxcs.iter().map(|&m| (1.0 - m).clamp(0.0, 1.0)).collect();
+    // rescale to max 1
+    let wmax = w.iter().cloned().fold(0.0f64, f64::max);
+    if wmax > 0.0 {
+        for v in &mut w {
+            *v /= wmax;
+        }
+    }
+    // logit sharpening
+    for v in &mut w {
+        let x = (*v).clamp(1e-6, 1.0 - 1e-6);
+        *v = (0.5 * (x / (1.0 - x)).ln() + 0.5).clamp(0.0, 1.0);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Distances for n points where `outliers` are far from the cluster.
+    fn dist_matrix(n: usize, outliers: &[usize], rng: &mut Prng) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let far = outliers.contains(&i) || outliers.contains(&j);
+                let base = if far { 100.0 } else { 1.0 };
+                let v = base + rng.next_f64() * 0.1;
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn krum_excludes_outliers() {
+        let mut rng = Prng::new(1);
+        let d = dist_matrix(8, &[2, 5], &mut rng);
+        let sel = multi_krum(&d, 2);
+        assert_eq!(sel.len(), 6);
+        assert!(!sel.contains(&2) && !sel.contains(&5), "selected {sel:?}");
+    }
+
+    #[test]
+    fn krum_all_honest_keeps_n_minus_f() {
+        let mut rng = Prng::new(2);
+        let d = dist_matrix(8, &[], &mut rng);
+        let sel = multi_krum(&d, 2);
+        assert_eq!(sel.len(), 6);
+    }
+
+    #[test]
+    fn krum_small_inputs() {
+        assert!(multi_krum(&[], 0).is_empty());
+        assert_eq!(multi_krum(&[vec![0.0]], 0), vec![0]);
+        let d = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        assert_eq!(multi_krum(&d, 0).len(), 2);
+    }
+
+    /// Cosine matrix with a sybil cluster (identical directions).
+    fn cos_matrix(n: usize, sybils: &[usize]) -> Vec<Vec<f64>> {
+        let mut c = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            c[i][i] = 1.0;
+            for j in (i + 1)..n {
+                let v = if sybils.contains(&i) && sybils.contains(&j) { 0.99 } else { 0.05 };
+                c[i][j] = v;
+                c[j][i] = v;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn foolsgold_downweights_sybils() {
+        let c = cos_matrix(8, &[1, 4, 6]);
+        let w = foolsgold_weights(&c);
+        for s in [1usize, 4, 6] {
+            assert!(w[s] < 0.2, "sybil {s} weight {}", w[s]);
+        }
+        for h in [0usize, 2, 3, 5, 7] {
+            assert!(w[h] > 0.8, "honest {h} weight {}", w[h]);
+        }
+    }
+
+    #[test]
+    fn foolsgold_all_honest_keeps_weights() {
+        let c = cos_matrix(6, &[]);
+        let w = foolsgold_weights(&c);
+        assert!(w.iter().all(|&v| v > 0.8), "{w:?}");
+    }
+
+    #[test]
+    fn foolsgold_edge_sizes() {
+        assert!(foolsgold_weights(&[]).is_empty());
+        assert_eq!(foolsgold_weights(&[vec![1.0]]), vec![1.0]);
+    }
+}

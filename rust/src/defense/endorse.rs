@@ -1,0 +1,203 @@
+//! Endorsement-time defences: a single peer's accept/reject verdict on one
+//! model update, evaluated against the peer's private test split.
+
+use crate::runtime::ops::{EvalResult, ModelOps};
+
+/// What an endorsing peer knows when judging an update (paper §3.4.6).
+pub struct UpdateContext<'a> {
+    /// The fetched + hash-verified update weights.
+    pub params: &'a [f32],
+    pub round: u64,
+    pub client: &'a str,
+    /// The peer's runtime handle.
+    pub ops: &'a ModelOps,
+    /// Peer-local held-out test split (row-major x, labels y).
+    pub eval_x: &'a [f32],
+    pub eval_y: &'a [i32],
+    /// Current global model's weights (previous round), if any.
+    pub prev_global: Option<&'a [f32]>,
+    /// Current global model's score on this peer's split, if computed.
+    pub baseline: Option<EvalResult>,
+}
+
+/// An endorsement-time acceptance policy. `Err(reason)` rejects the update,
+/// failing this peer's endorsement.
+pub trait EndorsementDefense: Send + Sync {
+    fn name(&self) -> &str;
+    fn verdict(&self, ctx: &UpdateContext<'_>) -> Result<(), String>;
+}
+
+/// Accept everything (throughput benchmarking / trusted settings).
+pub struct NoDefense;
+
+impl EndorsementDefense for NoDefense {
+    fn name(&self) -> &str {
+        "none"
+    }
+    fn verdict(&self, _ctx: &UpdateContext<'_>) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// RONI (Reject On Negative Influence, Barreno et al.): evaluate the update
+/// on the peer's local split and reject if accuracy drops more than
+/// `max_degradation` below the current global model's accuracy.
+///
+/// Per the paper this suits IID splits; non-IID shards should prefer the
+/// aggregation-time FoolsGold pass.
+pub struct Roni {
+    pub max_degradation: f64,
+}
+
+impl EndorsementDefense for Roni {
+    fn name(&self) -> &str {
+        "roni"
+    }
+
+    fn verdict(&self, ctx: &UpdateContext<'_>) -> Result<(), String> {
+        let params = ctx.params.to_vec();
+        let result = ctx
+            .ops
+            .evaluate(&params, ctx.eval_x, ctx.eval_y)
+            .map_err(|e| format!("roni eval failed: {e}"))?;
+        if !result.loss.is_finite() {
+            return Err("roni: non-finite loss".into());
+        }
+        if let Some(base) = ctx.baseline {
+            if result.accuracy < base.accuracy - self.max_degradation {
+                return Err(format!(
+                    "roni: accuracy {:.4} below baseline {:.4} - {:.3}",
+                    result.accuracy, base.accuracy, self.max_degradation
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Norm-constraint defence (Kairouz et al. §5): reject updates whose delta
+/// from the current global model exceeds `max_norm` (boosted/scaled attacks).
+pub struct NormBound {
+    pub max_norm: f64,
+}
+
+impl EndorsementDefense for NormBound {
+    fn name(&self) -> &str {
+        "norm-bound"
+    }
+
+    fn verdict(&self, ctx: &UpdateContext<'_>) -> Result<(), String> {
+        // Without a pinned global there is no delta to judge; accept (the
+        // workflow pins the initial model at round 0 so this only happens
+        // in bootstrap/unit settings).
+        let Some(g) = ctx.prev_global else {
+            return Ok(());
+        };
+        let norm = delta_norm(ctx.params, g);
+        if !norm.is_finite() {
+            return Err("norm-bound: non-finite norm".into());
+        }
+        if norm > self.max_norm {
+            return Err(format!("norm-bound: delta norm {norm:.3} > {:.3}", self.max_norm));
+        }
+        Ok(())
+    }
+}
+
+/// Chain several defences; all must accept.
+pub struct AllOf(pub Vec<Box<dyn EndorsementDefense>>);
+
+impl EndorsementDefense for AllOf {
+    fn name(&self) -> &str {
+        "all-of"
+    }
+
+    fn verdict(&self, ctx: &UpdateContext<'_>) -> Result<(), String> {
+        for d in &self.0 {
+            d.verdict(ctx).map_err(|e| format!("{}: {e}", d.name()))?;
+        }
+        Ok(())
+    }
+}
+
+#[allow(dead_code)]
+fn l2(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+fn delta_norm(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_without_runtime<'a>(
+        params: &'a [f32],
+        prev: Option<&'a [f32]>,
+        ops: &'a ModelOps,
+    ) -> UpdateContext<'a> {
+        UpdateContext {
+            params,
+            round: 1,
+            client: "c0",
+            ops,
+            eval_x: &[],
+            eval_y: &[],
+            prev_global: prev,
+            baseline: None,
+        }
+    }
+
+    #[test]
+    fn norm_bound_judges_delta() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let g = vec![0.0f32; ops.p_pad()];
+        let small: Vec<f32> = (0..ops.p_pad()).map(|i| if i == 0 { 0.5 } else { 0.0 }).collect();
+        let big = vec![1.0f32; ops.p_pad()];
+        let d = NormBound { max_norm: 10.0 };
+        assert!(d.verdict(&ctx_without_runtime(&small, Some(&g), &ops)).is_ok());
+        assert!(d.verdict(&ctx_without_runtime(&big, Some(&g), &ops)).is_err());
+    }
+
+    #[test]
+    fn roni_rejects_degraded_model() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        use crate::fl::datasets;
+        let data = datasets::mnist_like(42, 42, 256, ops.input_dim(), 10);
+        // Train a decent model.
+        let mut good = ops.init_params(1).unwrap();
+        for _ in 0..40 {
+            let (next, _) =
+                ops.train_step(good, &data.x[..32 * ops.input_dim()], &data.y[..32], 0.05).unwrap();
+            good = next;
+        }
+        let baseline = ops.evaluate(&good, &data.x, &data.y).unwrap();
+        // A garbage model degrades accuracy.
+        let garbage = ops.init_params(99).unwrap();
+        let roni = Roni { max_degradation: 0.1 };
+        let ctx = UpdateContext {
+            params: &garbage,
+            round: 1,
+            client: "evil",
+            ops: &ops,
+            eval_x: &data.x,
+            eval_y: &data.y,
+            prev_global: Some(&good),
+            baseline: Some(baseline),
+        };
+        assert!(baseline.accuracy > 0.5, "baseline acc {:.3}", baseline.accuracy);
+        assert!(roni.verdict(&ctx).is_err());
+        // The good model itself passes.
+        let ctx_good = UpdateContext { params: &good, ..ctx };
+        assert!(roni.verdict(&ctx_good).is_ok());
+    }
+}

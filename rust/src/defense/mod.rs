@@ -1,0 +1,19 @@
+//! Pluggable model-acceptance defences (paper §2.3, §3.2).
+//!
+//! Two hook points, mirroring the paper's workflow:
+//!
+//! - **Endorsement-time** ([`EndorsementDefense`]): each endorsing peer
+//!   votes on a single model update using its local data — RONI accuracy
+//!   degradation, update-norm constraints. A rejection fails that peer's
+//!   endorsement; the channel policy (majority) decides the transaction.
+//! - **Aggregation-time** ([`aggregation`]): operates on the round's whole
+//!   update set before FedAvg — Multi-Krum selection, FoolsGold similarity
+//!   re-weighting, and PN-sequence lazy-client detection.
+
+pub mod aggregation;
+pub mod endorse;
+pub mod pn;
+
+pub use aggregation::{foolsgold_weights, multi_krum};
+pub use endorse::{EndorsementDefense, NoDefense, NormBound, Roni, UpdateContext};
+pub use pn::{apply_pn, detect_lazy, pn_correlation, pn_sequence};

@@ -1,0 +1,118 @@
+//! PN-sequence lazy-client detection (Ma et al. / BLADE-FL; paper §2.3, §5).
+//!
+//! Each client perturbs its published update with a pseudo-noise sequence
+//! derived from a private seed, publishing the seed after the round closes.
+//! A *lazy* client that copied someone else's published update carries the
+//! victim's PN signature: correlating every update against every revealed
+//! PN sequence exposes the copy.
+
+use crate::util::prng::Prng;
+
+/// Deterministic ±`amplitude` pseudo-noise sequence from a seed.
+pub fn pn_sequence(seed: u64, len: usize, amplitude: f32) -> Vec<f32> {
+    // Domain-separate PN streams from other PRNG uses of the same seed.
+    let mut rng = Prng::new(seed ^ 0x504E_5345_5121_AA55);
+    (0..len).map(|_| if rng.next_u64() & 1 == 0 { amplitude } else { -amplitude }).collect()
+}
+
+/// Add a PN sequence to an update (client-side, pre-publication).
+pub fn apply_pn(update: &mut [f32], seed: u64, amplitude: f32) {
+    let pn = pn_sequence(seed, update.len(), amplitude);
+    for (u, p) in update.iter_mut().zip(pn) {
+        *u += p;
+    }
+}
+
+/// Normalised correlation between an update and a PN sequence in [-1, 1].
+pub fn pn_correlation(update: &[f32], seed: u64, amplitude: f32) -> f64 {
+    let pn = pn_sequence(seed, update.len(), amplitude);
+    let dot: f64 = update.iter().zip(&pn).map(|(&u, &p)| u as f64 * p as f64).sum();
+    let nu: f64 = update.iter().map(|&u| (u as f64).powi(2)).sum::<f64>().sqrt();
+    let np: f64 = pn.iter().map(|&p| (p as f64).powi(2)).sum::<f64>().sqrt();
+    if nu == 0.0 || np == 0.0 {
+        return 0.0;
+    }
+    dot / (nu * np)
+}
+
+/// Given published updates and their revealed PN seeds, flag lazy clients:
+/// update `i` correlating above `threshold` with client `j`'s PN (j != i)
+/// means `i` copied `j`'s published update.
+pub fn detect_lazy(
+    updates: &[Vec<f32>],
+    seeds: &[u64],
+    amplitude: f32,
+    threshold: f64,
+) -> Vec<usize> {
+    assert_eq!(updates.len(), seeds.len());
+    let mut lazy = Vec::new();
+    for (i, u) in updates.iter().enumerate() {
+        for (j, &seed) in seeds.iter().enumerate() {
+            if i != j && pn_correlation(u, seed, amplitude) > threshold {
+                lazy.push(i);
+                break;
+            }
+        }
+    }
+    lazy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
+    }
+
+    const N: usize = 20_000;
+    const AMP: f32 = 0.005;
+
+    #[test]
+    fn pn_sequence_deterministic_and_balanced() {
+        let a = pn_sequence(7, N, AMP);
+        assert_eq!(a, pn_sequence(7, N, AMP));
+        let pos = a.iter().filter(|&&v| v > 0.0).count() as f64 / N as f64;
+        assert!((pos - 0.5).abs() < 0.02, "positive fraction {pos}");
+        assert_ne!(a, pn_sequence(8, N, AMP));
+    }
+
+    #[test]
+    fn own_pn_correlates_others_do_not() {
+        let mut u = update(1, N);
+        apply_pn(&mut u, 42, AMP);
+        assert!(pn_correlation(&u, 42, AMP) > 0.3, "{}", pn_correlation(&u, 42, AMP));
+        assert!(pn_correlation(&u, 43, AMP).abs() < 0.05);
+    }
+
+    #[test]
+    fn detects_lazy_copier() {
+        // Clients 0, 1 honest; client 2 copies 0's published update and
+        // stamps its own PN on top.
+        let seeds = [100u64, 101, 102];
+        let mut u0 = update(1, N);
+        apply_pn(&mut u0, seeds[0], AMP);
+        let mut u1 = update(2, N);
+        apply_pn(&mut u1, seeds[1], AMP);
+        let mut u2 = u0.clone();
+        apply_pn(&mut u2, seeds[2], AMP);
+        let lazy = detect_lazy(&[u0, u1, u2], &seeds, AMP, 0.2);
+        assert_eq!(lazy, vec![2]);
+    }
+
+    #[test]
+    fn honest_round_flags_nobody() {
+        let seeds = [1u64, 2, 3, 4];
+        let updates: Vec<Vec<f32>> = seeds
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let mut u = update(i as u64 + 10, N);
+                apply_pn(&mut u, s, AMP);
+                u
+            })
+            .collect();
+        assert!(detect_lazy(&updates, &seeds, AMP, 0.2).is_empty());
+    }
+}

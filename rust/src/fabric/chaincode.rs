@@ -1,0 +1,127 @@
+//! Chaincode (smart contract) interface and the transaction simulation
+//! context that records read/write sets during endorsement.
+
+use std::sync::Mutex;
+
+use crate::ledger::state::WorldState;
+use crate::ledger::tx::{ReadSet, RwSet, WriteSet};
+
+/// A deployed smart contract.
+///
+/// `invoke` runs during endorsement simulation; reads/writes go through the
+/// [`TxContext`] so the peer can endorse the exact effect set. Returning
+/// `Err` rejects the proposal (e.g. the defence policy refused the model
+/// update), which surfaces to the client as an endorsement failure.
+pub trait Chaincode: Send + Sync {
+    /// Contract name as deployed on the channel.
+    fn name(&self) -> &str;
+    /// Execute `function(args)` against the simulation context.
+    fn invoke(&self, ctx: &mut TxContext<'_>, function: &str, args: &[String])
+        -> Result<Vec<u8>, String>;
+}
+
+/// Transaction simulation context: reads hit committed state (recording the
+/// observed version), writes are buffered. Read-your-writes is supported
+/// within a single simulation.
+pub struct TxContext<'a> {
+    state: &'a Mutex<WorldState>,
+    reads: ReadSet,
+    writes: WriteSet,
+}
+
+impl<'a> TxContext<'a> {
+    pub fn new(state: &'a Mutex<WorldState>) -> Self {
+        TxContext { state, reads: Vec::new(), writes: Vec::new() }
+    }
+
+    /// Read a key. Buffered writes from this simulation win; otherwise the
+    /// committed value is returned and the observed version recorded.
+    pub fn get(&mut self, key: &str) -> Option<Vec<u8>> {
+        if let Some((_, v)) = self.writes.iter().rev().find(|(k, _)| k == key) {
+            return v.clone();
+        }
+        let guard = self.state.lock().unwrap();
+        let hit = guard.get(key);
+        self.reads.push((key.to_string(), hit.map(|(_, ver)| ver)));
+        hit.map(|(v, _)| v.to_vec())
+    }
+
+    /// Buffer a write.
+    pub fn put(&mut self, key: &str, value: Vec<u8>) {
+        self.writes.push((key.to_string(), Some(value)));
+    }
+
+    /// Buffer a delete.
+    pub fn delete(&mut self, key: &str) {
+        self.writes.push((key.to_string(), None));
+    }
+
+    /// Prefix scan over committed state; records a read per hit so MVCC
+    /// catches concurrent modification of any returned key.
+    pub fn scan(&mut self, prefix: &str) -> Vec<(String, Vec<u8>)> {
+        let guard = self.state.lock().unwrap();
+        let hits = guard.scan_prefix(prefix);
+        for (k, _) in &hits {
+            let ver = guard.get(k).map(|(_, v)| v);
+            self.reads.push((k.clone(), ver));
+        }
+        hits
+    }
+
+    /// Finish simulation, yielding the endorsed effect set.
+    pub fn into_rw_set(self) -> RwSet {
+        RwSet { reads: self.reads, writes: self.writes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::state::Version;
+    use crate::ledger::tx::RwSet;
+
+    fn seeded_state() -> Mutex<WorldState> {
+        let mut s = WorldState::new();
+        s.apply(
+            &RwSet { reads: vec![], writes: vec![("k".into(), Some(b"v1".to_vec()))] },
+            Version { block: 3, tx: 1 },
+        );
+        Mutex::new(s)
+    }
+
+    #[test]
+    fn records_read_versions() {
+        let state = seeded_state();
+        let mut ctx = TxContext::new(&state);
+        assert_eq!(ctx.get("k"), Some(b"v1".to_vec()));
+        assert_eq!(ctx.get("absent"), None);
+        let rw = ctx.into_rw_set();
+        assert_eq!(rw.reads.len(), 2);
+        assert_eq!(rw.reads[0], ("k".into(), Some(Version { block: 3, tx: 1 })));
+        assert_eq!(rw.reads[1], ("absent".into(), None));
+    }
+
+    #[test]
+    fn read_your_writes() {
+        let state = seeded_state();
+        let mut ctx = TxContext::new(&state);
+        ctx.put("k", b"v2".to_vec());
+        assert_eq!(ctx.get("k"), Some(b"v2".to_vec()));
+        ctx.delete("k");
+        assert_eq!(ctx.get("k"), None);
+        // Neither buffered read recorded a version (no MVCC dependency).
+        let rw = ctx.into_rw_set();
+        assert!(rw.reads.is_empty());
+        assert_eq!(rw.writes.len(), 2);
+    }
+
+    #[test]
+    fn scan_records_reads() {
+        let state = seeded_state();
+        let mut ctx = TxContext::new(&state);
+        let hits = ctx.scan("k");
+        assert_eq!(hits.len(), 1);
+        let rw = ctx.into_rw_set();
+        assert_eq!(rw.reads.len(), 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! Endorsement policies: which (and how many) endorsing peers must sign a
+//! transaction for it to validate at commit time.
+
+use crate::crypto::msp::{CertificateAuthority, MemberId};
+use crate::ledger::tx::{endorsement_payload, Endorsement, RwSet, TxId};
+
+/// A channel's endorsement policy over its endorser set.
+#[derive(Clone, Debug)]
+pub enum EndorsementPolicy {
+    /// At least `n` valid signatures from the member set.
+    AnyOf(usize, Vec<MemberId>),
+    /// Strict majority of the member set.
+    MajorityOf(Vec<MemberId>),
+}
+
+impl EndorsementPolicy {
+    pub fn members(&self) -> &[MemberId] {
+        match self {
+            EndorsementPolicy::AnyOf(_, m) | EndorsementPolicy::MajorityOf(m) => m,
+        }
+    }
+
+    pub fn required(&self) -> usize {
+        match self {
+            EndorsementPolicy::AnyOf(n, _) => *n,
+            EndorsementPolicy::MajorityOf(m) => m.len() / 2 + 1,
+        }
+    }
+
+    /// Validate endorsements over (tx, rw_set): signatures must verify, come
+    /// from distinct policy members, and reach the required count.
+    pub fn satisfied(
+        &self,
+        tx_id: &TxId,
+        rw_set: &RwSet,
+        endorsements: &[Endorsement],
+        ca: &CertificateAuthority,
+    ) -> bool {
+        let payload = endorsement_payload(tx_id, &rw_set.digest());
+        let mut seen: Vec<&MemberId> = Vec::new();
+        let mut valid = 0usize;
+        for e in endorsements {
+            if seen.contains(&&e.endorser) {
+                continue; // one vote per member
+            }
+            if !self.members().contains(&e.endorser) {
+                continue; // not in the policy set
+            }
+            if ca.verify(&e.endorser, &payload, &e.signature) {
+                seen.push(&e.endorser);
+                valid += 1;
+            }
+        }
+        valid >= self.required()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::CertificateAuthority;
+    use crate::crypto::sha256;
+    use crate::util::prng::Prng;
+
+    fn setup(n: usize) -> (CertificateAuthority, Vec<crate::crypto::msp::Credential>) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(1);
+        let creds = (0..n)
+            .map(|i| ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng))
+            .collect();
+        (ca, creds)
+    }
+
+    fn endorse_all(
+        creds: &[crate::crypto::msp::Credential],
+        tx: &TxId,
+        rw: &RwSet,
+    ) -> Vec<Endorsement> {
+        let payload = endorsement_payload(tx, &rw.digest());
+        creds
+            .iter()
+            .map(|c| Endorsement { endorser: c.member.clone(), signature: c.sign(&payload) })
+            .collect()
+    }
+
+    #[test]
+    fn majority_policy_counts() {
+        let (ca, creds) = setup(4);
+        let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+        let policy = EndorsementPolicy::MajorityOf(members);
+        assert_eq!(policy.required(), 3);
+        let tx = sha256(b"tx");
+        let rw = RwSet::default();
+        let all = endorse_all(&creds, &tx, &rw);
+        assert!(policy.satisfied(&tx, &rw, &all, &ca));
+        assert!(policy.satisfied(&tx, &rw, &all[..3], &ca));
+        assert!(!policy.satisfied(&tx, &rw, &all[..2], &ca));
+    }
+
+    #[test]
+    fn duplicate_endorsements_count_once() {
+        let (ca, creds) = setup(3);
+        let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+        let policy = EndorsementPolicy::AnyOf(2, members);
+        let tx = sha256(b"tx");
+        let rw = RwSet::default();
+        let one = endorse_all(&creds[..1], &tx, &rw);
+        let dup = vec![one[0].clone(), one[0].clone()];
+        assert!(!policy.satisfied(&tx, &rw, &dup, &ca));
+    }
+
+    #[test]
+    fn forged_or_foreign_signatures_rejected() {
+        let (ca, creds) = setup(3);
+        let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+        let policy = EndorsementPolicy::AnyOf(1, members.clone());
+        let tx = sha256(b"tx");
+        let rw = RwSet::default();
+        // Signature over a different rw-set digest.
+        let other_rw = RwSet {
+            reads: vec![],
+            writes: vec![("k".into(), Some(b"evil".to_vec()))],
+        };
+        let stale = endorse_all(&creds, &tx, &other_rw);
+        assert!(!policy.satisfied(&tx, &rw, &stale, &ca));
+        // Member outside the policy.
+        let mut rng = Prng::new(9);
+        let outsider = ca.enroll(MemberId::new("mallory"), &mut rng);
+        let payload = endorsement_payload(&tx, &rw.digest());
+        let e = Endorsement { endorser: outsider.member.clone(), signature: outsider.sign(&payload) };
+        assert!(!policy.satisfied(&tx, &rw, &[e], &ca));
+    }
+}

@@ -1,0 +1,211 @@
+//! Client gateway: the submit-and-wait flow a transactor runs — fan the
+//! proposal out to endorsing peers, check rw-set agreement, assemble the
+//! envelope, hand it to the orderer, and wait for the commit event
+//! (with the paper's 30 s timeout semantics).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::ledger::block::ValidationCode;
+use crate::ledger::tx::{Envelope, Proposal};
+
+use super::orderer::OrderingService;
+use super::peer::Peer;
+
+/// Outcome of a submitted transaction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommitOutcome {
+    /// Committed with this validation code after `latency`.
+    Committed { code: ValidationCode, latency: Duration },
+    /// All/enough endorsements failed (chaincode or policy rejection).
+    EndorsementFailed { reason: String, latency: Duration },
+    /// No commit event within the timeout.
+    TimedOut,
+}
+
+impl CommitOutcome {
+    pub fn is_valid(&self) -> bool {
+        matches!(self, CommitOutcome::Committed { code: ValidationCode::Valid, .. })
+    }
+}
+
+/// Gateway bound to a set of endorsing peers and the ordering service.
+pub struct Gateway {
+    pub endorsers: Vec<Arc<Peer>>,
+    pub orderer: Arc<OrderingService>,
+    /// Transaction timeout (paper: 30 s).
+    pub timeout: Duration,
+}
+
+impl Gateway {
+    pub fn new(endorsers: Vec<Arc<Peer>>, orderer: Arc<OrderingService>) -> Gateway {
+        Gateway { endorsers, orderer, timeout: Duration::from_secs(30) }
+    }
+
+    /// Endorse in parallel across peers; require every collected rw-set to
+    /// agree (Fabric's determinism requirement — identical model hashes
+    /// evaluate identically, paper §3.3).
+    pub fn endorse(&self, proposal: &Proposal) -> Result<Envelope, String> {
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .endorsers
+                .iter()
+                .map(|p| {
+                    let p = Arc::clone(p);
+                    let prop = proposal.clone();
+                    s.spawn(move || p.endorse(&prop))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("endorser panicked")).collect()
+        });
+        let mut rw = None;
+        let mut endorsements = Vec::new();
+        let mut errors = Vec::new();
+        for r in results {
+            match r {
+                Ok((rwset, e, _payload)) => {
+                    if let Some(prev) = &rw {
+                        if *prev != rwset {
+                            return Err("endorsement divergence: rw-sets disagree".into());
+                        }
+                    } else {
+                        rw = Some(rwset);
+                    }
+                    endorsements.push(e);
+                }
+                Err(e) => errors.push(e),
+            }
+        }
+        match rw {
+            Some(rw_set) => Ok(Envelope { proposal: proposal.clone(), rw_set, endorsements }),
+            None => Err(format!("all endorsements failed: {}", errors.join("; "))),
+        }
+    }
+
+    /// Full transaction flow; `listener` must be subscribed on the target
+    /// channel *before* calling (the gateway subscribes internally).
+    pub fn submit_and_wait(&self, proposal: &Proposal) -> CommitOutcome {
+        let started = Instant::now();
+        let tx_id = proposal.tx_id();
+        // Subscribe before ordering so the commit event cannot be missed.
+        let rx = match self.endorsers[0].subscribe(&proposal.channel) {
+            Ok(rx) => rx,
+            Err(e) => {
+                return CommitOutcome::EndorsementFailed {
+                    reason: e,
+                    latency: started.elapsed(),
+                }
+            }
+        };
+        let envelope = match self.endorse(proposal) {
+            Ok(env) => env,
+            Err(reason) => {
+                return CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() }
+            }
+        };
+        if let Err(reason) = self.orderer.submit(envelope) {
+            return CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() };
+        }
+        loop {
+            let remaining = self.timeout.saturating_sub(started.elapsed());
+            if remaining.is_zero() {
+                return CommitOutcome::TimedOut;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(ev) if ev.tx_id == tx_id => {
+                    return CommitOutcome::Committed { code: ev.code, latency: started.elapsed() }
+                }
+                Ok(_) => continue,
+                Err(_) => return CommitOutcome::TimedOut,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::{CertificateAuthority, MemberId};
+    use crate::fabric::chaincode::{Chaincode, TxContext};
+    use crate::fabric::endorsement::EndorsementPolicy;
+    use crate::fabric::orderer::OrdererConfig;
+    use crate::util::prng::Prng;
+
+    struct PutOrFail;
+    impl Chaincode for PutOrFail {
+        fn name(&self) -> &str {
+            "kv"
+        }
+        fn invoke(
+            &self,
+            ctx: &mut TxContext<'_>,
+            f: &str,
+            args: &[String],
+        ) -> Result<Vec<u8>, String> {
+            if f == "Fail" {
+                return Err("policy rejected".into());
+            }
+            ctx.put(&args[0], b"v".to_vec());
+            Ok(vec![])
+        }
+    }
+
+    fn gateway(n: usize) -> (Vec<Arc<Peer>>, Gateway) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(2);
+        let peers: Vec<Arc<Peer>> = (0..n)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
+        }
+        let orderer = OrderingService::start(
+            OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
+            peers.clone(),
+            7,
+        );
+        (peers.clone(), Gateway::new(peers, orderer))
+    }
+
+    fn prop(f: &str, key: &str, nonce: u64) -> Proposal {
+        Proposal {
+            channel: "ch".into(),
+            chaincode: "kv".into(),
+            function: f.into(),
+            args: vec![key.into()],
+            creator: MemberId::new("client"),
+            nonce,
+        }
+    }
+
+    #[test]
+    fn submit_and_wait_commits() {
+        let (peers, gw) = gateway(3);
+        let out = gw.submit_and_wait(&prop("Put", "a", 1));
+        assert!(out.is_valid(), "{out:?}");
+        assert_eq!(peers[1].channel("ch").unwrap().query("a"), Some(b"v".to_vec()));
+    }
+
+    #[test]
+    fn endorsement_failure_reported() {
+        let (_peers, gw) = gateway(3);
+        let out = gw.submit_and_wait(&prop("Fail", "a", 2));
+        assert!(matches!(out, CommitOutcome::EndorsementFailed { .. }), "{out:?}");
+    }
+
+    #[test]
+    fn timeout_when_orderer_unreachable() {
+        let (peers, mut gw) = gateway(2);
+        // Replace the orderer with one that delivers to nobody.
+        gw.orderer = OrderingService::start(OrdererConfig::default(), Vec::new(), 8);
+        gw.timeout = Duration::from_millis(150);
+        let out = gw.submit_and_wait(&prop("Put", "a", 3));
+        assert_eq!(out, CommitOutcome::TimedOut);
+        assert_eq!(peers[0].channel("ch").unwrap().query("a"), None);
+    }
+}

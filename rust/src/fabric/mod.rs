@@ -1,0 +1,26 @@
+//! Fabric-style permissioned ledger: the execute–order–validate pipeline.
+//!
+//! - **Execute**: clients send proposals to *endorsing peers*, which run the
+//!   chaincode (including the model-evaluation defence policy — the paper's
+//!   endorsement bottleneck) against current state, producing signed
+//!   read/write sets ([`peer`], [`chaincode`]).
+//! - **Order**: assembled envelopes go to the ordering service, which batches
+//!   them into blocks through Raft (or PBFT) consensus ([`orderer`]).
+//! - **Validate**: every peer independently checks the endorsement policy
+//!   and MVCC read versions, then commits valid writes ([`peer::PeerChannel`]).
+//!
+//! Channels model shards (paper §4): one channel per shard plus the
+//! mainchain channel every peer joins.
+
+pub mod chaincode;
+pub mod endorsement;
+pub mod gateway;
+pub mod orderer;
+pub mod peer;
+pub mod wire;
+
+pub use chaincode::{Chaincode, TxContext};
+pub use endorsement::EndorsementPolicy;
+pub use gateway::{CommitOutcome, Gateway};
+pub use orderer::{OrdererConfig, OrderingService};
+pub use peer::{CommitEvent, Peer, PeerChannel};

@@ -1,0 +1,371 @@
+//! The ordering service: batches endorsed envelopes into blocks through a
+//! Raft cluster (the paper's orderer) and delivers committed blocks to every
+//! peer on the batch's channel.
+//!
+//! One driver thread owns the whole consensus group (sans-io Raft nodes with
+//! in-memory message exchange — the paper likewise ran a single ordering
+//! process) plus the batching state: a block is cut when `batch_size`
+//! envelopes are pending or `batch_timeout` elapsed since the first.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::consensus::pbft::{Pbft, PbftConfig};
+use crate::consensus::raft::{Raft, RaftConfig};
+use crate::consensus::ConsensusNode;
+use crate::ledger::tx::Envelope;
+use crate::util::prng::Prng;
+
+use super::peer::Peer;
+use super::wire;
+
+/// Which consensus protocol orders blocks (the paper's §3.2 pluggable
+/// consensus: Raft for trusted/small shards, PBFT for byzantine settings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsensusKind {
+    Raft,
+    Pbft,
+}
+
+/// Ordering service configuration.
+#[derive(Clone, Debug)]
+pub struct OrdererConfig {
+    /// Envelopes per block before a cut is forced.
+    pub batch_size: usize,
+    /// Max time the first pending envelope waits before a cut.
+    pub batch_timeout: Duration,
+    /// Consensus cluster size (1 = the paper's single orderer).
+    pub consensus_nodes: usize,
+    /// Ordering protocol.
+    pub consensus: ConsensusKind,
+    /// Driver loop granularity.
+    pub tick: Duration,
+}
+
+impl Default for OrdererConfig {
+    fn default() -> Self {
+        OrdererConfig {
+            batch_size: 10,
+            batch_timeout: Duration::from_millis(100),
+            consensus_nodes: 1,
+            consensus: ConsensusKind::Raft,
+            tick: Duration::from_millis(2),
+        }
+    }
+}
+
+enum Input {
+    Submit(Envelope),
+    Shutdown,
+}
+
+/// Handle to the running ordering service.
+pub struct OrderingService {
+    tx: mpsc::Sender<Input>,
+    handle: Option<thread::JoinHandle<()>>,
+    blocks_cut: Arc<AtomicU64>,
+}
+
+impl OrderingService {
+    /// Start the orderer; committed blocks are delivered synchronously to
+    /// every peer in `peers` that joined the batch's channel.
+    pub fn start(cfg: OrdererConfig, peers: Vec<Arc<Peer>>, seed: u64) -> Arc<OrderingService> {
+        let (tx, rx) = mpsc::channel::<Input>();
+        let blocks_cut = Arc::new(AtomicU64::new(0));
+        let counter = Arc::clone(&blocks_cut);
+        let handle = thread::Builder::new()
+            .name("orderer".into())
+            .spawn(move || {
+                let n = cfg.consensus_nodes.max(1);
+                let mut rng = Prng::new(seed);
+                match cfg.consensus {
+                    ConsensusKind::Raft => {
+                        let nodes: Vec<Raft> = (0..n)
+                            .map(|i| Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64)))
+                            .collect();
+                        driver(cfg, peers, rx, counter, nodes)
+                    }
+                    ConsensusKind::Pbft => {
+                        let nodes: Vec<Pbft> =
+                            (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
+                        driver(cfg, peers, rx, counter, nodes)
+                    }
+                }
+            })
+            .expect("spawn orderer");
+        Arc::new(OrderingService { tx, handle: Some(handle), blocks_cut })
+    }
+
+    /// Submit an endorsed envelope for ordering.
+    pub fn submit(&self, env: Envelope) -> Result<(), String> {
+        self.tx.send(Input::Submit(env)).map_err(|_| "orderer stopped".to_string())
+    }
+
+    pub fn blocks_cut(&self) -> u64 {
+        self.blocks_cut.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for OrderingService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Input::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn driver<C: ConsensusNode>(
+    cfg: OrdererConfig,
+    peers: Vec<Arc<Peer>>,
+    rx: mpsc::Receiver<Input>,
+    blocks_cut: Arc<AtomicU64>,
+    mut nodes: Vec<C>,
+) {
+    // Pending envelopes per channel + arrival time of the oldest.
+    let mut pending: HashMap<String, (Vec<Envelope>, Instant)> = HashMap::new();
+    let start = Instant::now();
+    let mut delivered_seq = 0u64;
+
+    loop {
+        // Drain inputs without blocking longer than one tick.
+        let deadline = Instant::now() + cfg.tick;
+        loop {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Input::Submit(env)) => {
+                    let channel = env.proposal.channel.clone();
+                    pending
+                        .entry(channel)
+                        .or_insert_with(|| (Vec::new(), Instant::now()))
+                        .0
+                        .push(env);
+                }
+                Ok(Input::Shutdown) => return,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+
+        let now = start.elapsed().as_secs_f64();
+        // Consensus housekeeping: ticks + instant message exchange.
+        let mut inbox: Vec<(usize, usize, C::Msg)> = Vec::new();
+        for node in nodes.iter_mut() {
+            for (to, m) in node.tick(now) {
+                inbox.push((node.node_id(), to, m));
+            }
+        }
+        // Settle the exchange (bounded rounds to avoid spinning).
+        for _ in 0..8 {
+            if inbox.is_empty() {
+                break;
+            }
+            let mut next = Vec::new();
+            for (from, to, m) in inbox.drain(..) {
+                for (dest, out) in nodes[to].handle(from, m, now) {
+                    next.push((to, dest, out));
+                }
+            }
+            inbox = next;
+        }
+
+        // Cut blocks where due and propose through the leader.
+        let leader = nodes.iter().position(|nd| nd.is_leader());
+        if let Some(l) = leader {
+            let due: Vec<String> = pending
+                .iter()
+                .filter(|(_, (envs, since))| {
+                    !envs.is_empty()
+                        && (envs.len() >= cfg.batch_size || since.elapsed() >= cfg.batch_timeout)
+                })
+                .map(|(ch, _)| ch.clone())
+                .collect();
+            for ch in due {
+                let (mut envs, _) = pending.remove(&ch).unwrap();
+                // Respect batch_size per block; leftover re-queues.
+                let rest = if envs.len() > cfg.batch_size {
+                    envs.split_off(cfg.batch_size)
+                } else {
+                    Vec::new()
+                };
+                if !rest.is_empty() {
+                    pending.insert(ch.clone(), (rest, Instant::now()));
+                }
+                let payload = wire::encode_batch(&ch, &envs);
+                if nodes[l].propose(payload, now).is_err() {
+                    // Leadership moved; re-queue and retry next tick.
+                    pending.entry(ch).or_insert_with(|| (Vec::new(), Instant::now())).0.extend(envs);
+                } else {
+                    // Protocols that broadcast at proposal time (PBFT).
+                    for (to, m) in nodes[l].take_outbound() {
+                        inbox.push((l, to, m));
+                    }
+                    for _ in 0..8 {
+                        if inbox.is_empty() {
+                            break;
+                        }
+                        let mut next = Vec::new();
+                        for (from, to, m) in inbox.drain(..) {
+                            for (dest, out) in nodes[to].handle(from, m, now) {
+                                next.push((to, dest, out));
+                            }
+                        }
+                        inbox = next;
+                    }
+                }
+            }
+        }
+
+        // Deliver committed batches (node 0's stream; all nodes agree).
+        for c in nodes[0].take_committed() {
+            debug_assert_eq!(c.seq, delivered_seq + 1);
+            delivered_seq = c.seq;
+            match wire::decode_batch(&c.data) {
+                Ok((channel, envs)) => {
+                    blocks_cut.fetch_add(1, Ordering::Relaxed);
+                    for p in &peers {
+                        if p.channel(&channel).is_some() {
+                            if let Err(e) = p.commit_batch(&channel, envs.clone()) {
+                                eprintln!("orderer: commit failed on {}: {e}", p.member);
+                            }
+                        }
+                    }
+                }
+                Err(e) => eprintln!("orderer: bad batch payload: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::{CertificateAuthority, MemberId};
+    use crate::fabric::chaincode::{Chaincode, TxContext};
+    use crate::fabric::endorsement::EndorsementPolicy;
+    use crate::ledger::block::ValidationCode;
+    use crate::ledger::tx::Proposal;
+
+    struct PutCc;
+    impl Chaincode for PutCc {
+        fn name(&self) -> &str {
+            "kv"
+        }
+        fn invoke(
+            &self,
+            ctx: &mut TxContext<'_>,
+            _f: &str,
+            args: &[String],
+        ) -> Result<Vec<u8>, String> {
+            ctx.put(&args[0], args[1].as_bytes().to_vec());
+            Ok(vec![])
+        }
+    }
+
+    fn network(n_peers: usize, cfg: OrdererConfig) -> (Vec<Arc<Peer>>, Arc<OrderingService>) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(1);
+        let peers: Vec<Arc<Peer>> = (0..n_peers)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(PutCc)).unwrap();
+        }
+        let orderer = OrderingService::start(cfg, peers.clone(), 42);
+        (peers, orderer)
+    }
+
+    fn endorsed_envelope(peers: &[Arc<Peer>], nonce: u64) -> Envelope {
+        let prop = Proposal {
+            channel: "ch".into(),
+            chaincode: "kv".into(),
+            function: "Put".into(),
+            args: vec![format!("k{nonce}"), "v".into()],
+            creator: MemberId::new("client"),
+            nonce,
+        };
+        let mut endorsements = Vec::new();
+        let mut rw = None;
+        for p in peers {
+            let (r, e, _) = p.endorse(&prop).unwrap();
+            rw = Some(r);
+            endorsements.push(e);
+        }
+        Envelope { proposal: prop, rw_set: rw.unwrap(), endorsements }
+    }
+
+    #[test]
+    fn orders_and_commits_across_peers() {
+        let (peers, orderer) = network(3, OrdererConfig::default());
+        let rx = peers[2].subscribe("ch").unwrap();
+        for nonce in 0..25 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        let mut got = 0;
+        while got < 25 {
+            let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit event");
+            assert_eq!(ev.code, ValidationCode::Valid);
+            got += 1;
+        }
+        for p in &peers {
+            let ch = p.channel("ch").unwrap();
+            assert_eq!(ch.scan("k").len(), 25);
+            ch.chain.lock().unwrap().verify().unwrap();
+        }
+        assert!(orderer.blocks_cut() >= 3); // batch_size 10 -> >= 3 blocks
+    }
+
+    #[test]
+    fn batch_timeout_cuts_partial_blocks() {
+        let cfg = OrdererConfig {
+            batch_size: 100,
+            batch_timeout: Duration::from_millis(30),
+            ..OrdererConfig::default()
+        };
+        let (peers, orderer) = network(2, cfg);
+        let rx = peers[0].subscribe("ch").unwrap();
+        orderer.submit(endorsed_envelope(&peers, 1)).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(5)).expect("timeout cut");
+        assert_eq!(ev.code, ValidationCode::Valid);
+    }
+
+    #[test]
+    fn pbft_orderer_works() {
+        let cfg = OrdererConfig {
+            consensus: ConsensusKind::Pbft,
+            consensus_nodes: 4,
+            ..OrdererConfig::default()
+        };
+        let (peers, orderer) = network(2, cfg);
+        let rx = peers[0].subscribe("ch").unwrap();
+        for nonce in 0..8 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        for _ in 0..8 {
+            let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+            assert_eq!(ev.code, ValidationCode::Valid);
+        }
+    }
+
+    #[test]
+    fn multi_node_raft_orderer_works() {
+        let cfg = OrdererConfig { consensus_nodes: 3, ..OrdererConfig::default() };
+        let (peers, orderer) = network(2, cfg);
+        let rx = peers[1].subscribe("ch").unwrap();
+        for nonce in 0..5 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        for _ in 0..5 {
+            let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+            assert_eq!(ev.code, ValidationCode::Valid);
+        }
+    }
+}

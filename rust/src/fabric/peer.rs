@@ -1,0 +1,338 @@
+//! Peers: endorsement simulation, independent block validation + commit,
+//! ledger queries, and commit-event subscriptions.
+//!
+//! Each peer keeps its own chain + world state per joined channel (as in
+//! Fabric); the ordering service delivers identical block payloads to every
+//! peer, and determinism of the validator keeps replicas in agreement.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+
+use crate::crypto::msp::{CertificateAuthority, Credential, MemberId};
+use crate::ledger::block::{Block, ValidationCode};
+use crate::ledger::chain::Chain;
+use crate::ledger::state::{Version, WorldState};
+use crate::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
+
+use super::chaincode::{Chaincode, TxContext};
+use super::endorsement::EndorsementPolicy;
+
+/// Notification sent to subscribers when a transaction commits.
+#[derive(Clone, Debug)]
+pub struct CommitEvent {
+    pub channel: String,
+    pub tx_id: TxId,
+    pub block: u64,
+    pub code: ValidationCode,
+}
+
+/// Per-channel replica state on a peer.
+pub struct PeerChannel {
+    pub name: String,
+    pub chain: Mutex<Chain>,
+    pub state: Mutex<WorldState>,
+    chaincodes: RwLock<HashMap<String, Arc<dyn Chaincode>>>,
+    policy: RwLock<EndorsementPolicy>,
+    committed_ids: Mutex<HashSet<TxId>>,
+    listeners: Mutex<Vec<mpsc::Sender<CommitEvent>>>,
+}
+
+impl PeerChannel {
+    fn new(name: &str, policy: EndorsementPolicy) -> Self {
+        PeerChannel {
+            name: name.to_string(),
+            chain: Mutex::new(Chain::new()),
+            state: Mutex::new(WorldState::new()),
+            chaincodes: RwLock::new(HashMap::new()),
+            policy: RwLock::new(policy),
+            committed_ids: Mutex::new(HashSet::new()),
+            listeners: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn policy(&self) -> EndorsementPolicy {
+        self.policy.read().unwrap().clone()
+    }
+
+    /// Upgrade the channel's endorsement policy (e.g. new committee).
+    pub fn set_policy(&self, policy: EndorsementPolicy) {
+        *self.policy.write().unwrap() = policy;
+    }
+
+    /// Read a committed value (query path; no transaction).
+    pub fn query(&self, key: &str) -> Option<Vec<u8>> {
+        self.state.lock().unwrap().get_value(key).map(|v| v.to_vec())
+    }
+
+    pub fn scan(&self, prefix: &str) -> Vec<(String, Vec<u8>)> {
+        self.state.lock().unwrap().scan_prefix(prefix)
+    }
+
+    pub fn height(&self) -> u64 {
+        self.chain.lock().unwrap().height()
+    }
+}
+
+/// A network peer (holds ledgers, endorses, validates).
+pub struct Peer {
+    pub member: MemberId,
+    cred: Credential,
+    ca: CertificateAuthority,
+    channels: RwLock<HashMap<String, Arc<PeerChannel>>>,
+}
+
+impl Peer {
+    pub fn new(cred: Credential, ca: CertificateAuthority) -> Arc<Peer> {
+        Arc::new(Peer {
+            member: cred.member.clone(),
+            cred,
+            ca,
+            channels: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Join a channel with the given endorsement policy.
+    pub fn join_channel(&self, name: &str, policy: EndorsementPolicy) -> Arc<PeerChannel> {
+        let ch = Arc::new(PeerChannel::new(name, policy));
+        self.channels.write().unwrap().insert(name.to_string(), Arc::clone(&ch));
+        ch
+    }
+
+    pub fn channel(&self, name: &str) -> Option<Arc<PeerChannel>> {
+        self.channels.read().unwrap().get(name).cloned()
+    }
+
+    /// Deploy a chaincode to a joined channel.
+    pub fn install_chaincode(&self, channel: &str, cc: Arc<dyn Chaincode>) -> Result<(), String> {
+        let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
+        ch.chaincodes.write().unwrap().insert(cc.name().to_string(), cc);
+        Ok(())
+    }
+
+    /// Endorsement: simulate the proposal and sign the resulting rw-set.
+    /// This is where the model-evaluation cost lands (paper §3.4.5-3.4.6).
+    pub fn endorse(&self, proposal: &Proposal) -> Result<(RwSet, Endorsement, Vec<u8>), String> {
+        let ch = self
+            .channel(&proposal.channel)
+            .ok_or_else(|| format!("{}: not joined {}", self.member, proposal.channel))?;
+        let cc = ch
+            .chaincodes
+            .read()
+            .unwrap()
+            .get(&proposal.chaincode)
+            .cloned()
+            .ok_or_else(|| format!("chaincode {} not installed", proposal.chaincode))?;
+        let mut ctx = TxContext::new(&ch.state);
+        let payload = cc.invoke(&mut ctx, &proposal.function, &proposal.args)?;
+        let rw_set = ctx.into_rw_set();
+        let sig = self.cred.sign(&endorsement_payload(&proposal.tx_id(), &rw_set.digest()));
+        Ok((rw_set, Endorsement { endorser: self.member.clone(), signature: sig }, payload))
+    }
+
+    /// Validate + commit an ordered batch as block `number` on `channel`.
+    ///
+    /// Deterministic: policy check (signatures, count), duplicate-txid check,
+    /// MVCC read-version check, then state application in order.
+    pub fn commit_batch(&self, channel: &str, envelopes: Vec<Envelope>) -> Result<Block, String> {
+        let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
+        let policy = ch.policy();
+        let mut chain = ch.chain.lock().unwrap();
+        let mut state = ch.state.lock().unwrap();
+        let mut committed_ids = ch.committed_ids.lock().unwrap();
+        let number = chain.height();
+        let mut block = Block::new(number, chain.tip_hash(), envelopes);
+        let mut events = Vec::with_capacity(block.txs.len());
+        for (i, env) in block.txs.iter().enumerate() {
+            let tx_id = env.tx_id();
+            let code = if committed_ids.contains(&tx_id) {
+                ValidationCode::DuplicateTxId
+            } else if !policy.satisfied(&tx_id, &env.rw_set, &env.endorsements, &self.ca) {
+                ValidationCode::EndorsementPolicyFailure
+            } else if !state.mvcc_valid(&env.rw_set) {
+                ValidationCode::MvccConflict
+            } else {
+                state.apply(&env.rw_set, Version { block: number, tx: i as u32 });
+                committed_ids.insert(tx_id);
+                ValidationCode::Valid
+            };
+            block.validation.push(code);
+            events.push(CommitEvent { channel: channel.to_string(), tx_id, block: number, code });
+        }
+        chain.append(block.clone())?;
+        drop((chain, state, committed_ids));
+        let mut listeners = ch.listeners.lock().unwrap();
+        listeners.retain(|l| events.iter().all(|e| l.send(e.clone()).is_ok()));
+        Ok(block)
+    }
+
+    /// Subscribe to commit events on a channel.
+    pub fn subscribe(&self, channel: &str) -> Result<mpsc::Receiver<CommitEvent>, String> {
+        let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
+        let (tx, rx) = mpsc::channel();
+        ch.listeners.lock().unwrap().push(tx);
+        Ok(rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Toy chaincode: Put(k, v) writes, Get(k) reads, Fail errors.
+    struct KvChaincode;
+
+    impl Chaincode for KvChaincode {
+        fn name(&self) -> &str {
+            "kv"
+        }
+
+        fn invoke(
+            &self,
+            ctx: &mut TxContext<'_>,
+            function: &str,
+            args: &[String],
+        ) -> Result<Vec<u8>, String> {
+            match function {
+                "Put" => {
+                    ctx.put(&args[0], args[1].as_bytes().to_vec());
+                    Ok(vec![])
+                }
+                "Incr" => {
+                    let cur = ctx
+                        .get(&args[0])
+                        .and_then(|v| String::from_utf8(v).ok())
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .unwrap_or(0);
+                    ctx.put(&args[0], (cur + 1).to_string().into_bytes());
+                    Ok(cur.to_string().into_bytes())
+                }
+                "Fail" => Err("chaincode rejected".into()),
+                other => Err(format!("unknown function {other}")),
+            }
+        }
+    }
+
+    fn setup(n_peers: usize) -> (CertificateAuthority, Vec<Arc<Peer>>, EndorsementPolicy) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(1);
+        let peers: Vec<Arc<Peer>> = (0..n_peers)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        let policy = EndorsementPolicy::MajorityOf(members);
+        for p in &peers {
+            p.join_channel("ch", policy.clone());
+            p.install_chaincode("ch", Arc::new(KvChaincode)).unwrap();
+        }
+        (ca, peers, policy)
+    }
+
+    fn proposal(function: &str, args: &[&str], nonce: u64) -> Proposal {
+        Proposal {
+            channel: "ch".into(),
+            chaincode: "kv".into(),
+            function: function.into(),
+            args: args.iter().map(|s| s.to_string()).collect(),
+            creator: MemberId::new("client"),
+            nonce,
+        }
+    }
+
+    fn endorse_and_wrap(peers: &[Arc<Peer>], prop: &Proposal) -> Envelope {
+        let mut endorsements = Vec::new();
+        let mut rw = None;
+        for p in peers {
+            let (r, e, _) = p.endorse(prop).unwrap();
+            if let Some(prev) = &rw {
+                assert_eq!(*prev, r, "endorsement divergence");
+            }
+            rw = Some(r);
+            endorsements.push(e);
+        }
+        Envelope { proposal: prop.clone(), rw_set: rw.unwrap(), endorsements }
+    }
+
+    #[test]
+    fn full_endorse_order_validate_commit() {
+        let (_ca, peers, _) = setup(3);
+        let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
+        for p in &peers {
+            let block = p.commit_batch("ch", vec![env.clone()]).unwrap();
+            assert_eq!(block.validation, vec![ValidationCode::Valid]);
+            assert_eq!(p.channel("ch").unwrap().query("k"), Some(b"v".to_vec()));
+        }
+    }
+
+    #[test]
+    fn chaincode_error_rejects_endorsement() {
+        let (_ca, peers, _) = setup(1);
+        assert!(peers[0].endorse(&proposal("Fail", &[], 1)).is_err());
+    }
+
+    #[test]
+    fn insufficient_endorsements_fail_policy() {
+        let (_ca, peers, _) = setup(3); // majority = 2
+        let prop = proposal("Put", &["k", "v"], 1);
+        let (rw, e, _) = peers[0].endorse(&prop).unwrap();
+        let env = Envelope { proposal: prop, rw_set: rw, endorsements: vec![e] };
+        let block = peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert_eq!(block.validation, vec![ValidationCode::EndorsementPolicyFailure]);
+        assert_eq!(peers[0].channel("ch").unwrap().query("k"), None);
+    }
+
+    #[test]
+    fn mvcc_conflict_between_racing_txs() {
+        let (_ca, peers, _) = setup(3);
+        // Both txs read counter version None and write 1.
+        let p1 = proposal("Incr", &["ctr"], 1);
+        let p2 = proposal("Incr", &["ctr"], 2);
+        let env1 = endorse_and_wrap(&peers, &p1);
+        let env2 = endorse_and_wrap(&peers, &p2); // endorsed before env1 commits
+        let block = peers[0].commit_batch("ch", vec![env1, env2]).unwrap();
+        assert_eq!(
+            block.validation,
+            vec![ValidationCode::Valid, ValidationCode::MvccConflict]
+        );
+        assert_eq!(peers[0].channel("ch").unwrap().query("ctr"), Some(b"1".to_vec()));
+    }
+
+    #[test]
+    fn duplicate_txid_rejected() {
+        let (_ca, peers, _) = setup(3);
+        let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
+        peers[0].commit_batch("ch", vec![env.clone()]).unwrap();
+        let block = peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert_eq!(block.validation, vec![ValidationCode::DuplicateTxId]);
+    }
+
+    #[test]
+    fn replicas_stay_in_agreement() {
+        let (_ca, peers, _) = setup(3);
+        let mut envs = Vec::new();
+        for i in 0..5 {
+            envs.push(endorse_and_wrap(&peers, &proposal("Put", &[&format!("k{i}"), "v"], i)));
+        }
+        let blocks: Vec<Block> =
+            peers.iter().map(|p| p.commit_batch("ch", envs.clone()).unwrap()).collect();
+        for b in &blocks[1..] {
+            assert_eq!(b.hash(), blocks[0].hash());
+            assert_eq!(b.validation, blocks[0].validation);
+        }
+    }
+
+    #[test]
+    fn commit_events_delivered() {
+        let (_ca, peers, _) = setup(3);
+        let rx = peers[0].subscribe("ch").unwrap();
+        let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
+        let tx_id = env.tx_id();
+        peers[0].commit_batch("ch", vec![env]).unwrap();
+        let ev = rx.try_recv().unwrap();
+        assert_eq!(ev.tx_id, tx_id);
+        assert_eq!(ev.code, ValidationCode::Valid);
+    }
+}

@@ -1,0 +1,211 @@
+//! Binary wire format for envelopes and block payloads — what the ordering
+//! service replicates through consensus.
+
+use crate::crypto::msp::{MemberId, Signature};
+use crate::ledger::codec::{Reader, Writer};
+use crate::ledger::state::Version;
+use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet};
+
+/// Serialize one envelope.
+pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
+    let p = &env.proposal;
+    w.str(&p.channel).str(&p.chaincode).str(&p.function);
+    w.u32(p.args.len() as u32);
+    for a in &p.args {
+        w.str(a);
+    }
+    w.str(&p.creator.0).u64(p.nonce);
+
+    w.u32(env.rw_set.reads.len() as u32);
+    for (k, ver) in &env.rw_set.reads {
+        w.str(k);
+        match ver {
+            Some(v) => {
+                w.u8(1).u64(v.block).u32(v.tx);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+    w.u32(env.rw_set.writes.len() as u32);
+    for (k, val) in &env.rw_set.writes {
+        w.str(k);
+        match val {
+            Some(v) => {
+                w.u8(1).bytes(v);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+    w.u32(env.endorsements.len() as u32);
+    for e in &env.endorsements {
+        w.str(&e.endorser.0);
+        w.bytes(&e.signature.0);
+    }
+}
+
+/// Deserialize one envelope.
+pub fn decode_envelope(r: &mut Reader<'_>) -> Result<Envelope, String> {
+    let channel = r.str()?;
+    let chaincode = r.str()?;
+    let function = r.str()?;
+    let nargs = r.u32()? as usize;
+    let mut args = Vec::with_capacity(nargs);
+    for _ in 0..nargs {
+        args.push(r.str()?);
+    }
+    let creator = MemberId::new(r.str()?);
+    let nonce = r.u64()?;
+
+    let nreads = r.u32()? as usize;
+    let mut reads = Vec::with_capacity(nreads);
+    for _ in 0..nreads {
+        let k = r.str()?;
+        let ver = match r.u8()? {
+            1 => Some(Version { block: r.u64()?, tx: r.u32()? }),
+            _ => None,
+        };
+        reads.push((k, ver));
+    }
+    let nwrites = r.u32()? as usize;
+    let mut writes = Vec::with_capacity(nwrites);
+    for _ in 0..nwrites {
+        let k = r.str()?;
+        let val = match r.u8()? {
+            1 => Some(r.bytes()?.to_vec()),
+            _ => None,
+        };
+        writes.push((k, val));
+    }
+    let nend = r.u32()? as usize;
+    let mut endorsements = Vec::with_capacity(nend);
+    for _ in 0..nend {
+        let endorser = MemberId::new(r.str()?);
+        let sig_bytes = r.bytes()?;
+        let sig: [u8; 32] =
+            sig_bytes.try_into().map_err(|_| "bad signature length".to_string())?;
+        endorsements.push(Endorsement { endorser, signature: Signature(sig) });
+    }
+    Ok(Envelope {
+        proposal: Proposal { channel, chaincode, function, args, creator, nonce },
+        rw_set: RwSet { reads, writes },
+        endorsements,
+    })
+}
+
+/// A consensus payload: one cut batch for one channel.
+pub fn encode_batch(channel: &str, envs: &[Envelope]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(channel).u32(envs.len() as u32);
+    for e in envs {
+        encode_envelope(e, &mut w);
+    }
+    w.finish()
+}
+
+/// Decode a consensus payload into (channel, envelopes).
+pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<Envelope>), String> {
+    let mut r = Reader::new(buf);
+    let channel = r.str()?;
+    let n = r.u32()? as usize;
+    let mut envs = Vec::with_capacity(n);
+    for _ in 0..n {
+        envs.push(decode_envelope(&mut r)?);
+    }
+    if !r.done() {
+        return Err("trailing bytes in batch".into());
+    }
+    Ok((channel, envs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::prng::Prng;
+
+    fn random_envelope(rng: &mut Prng) -> Envelope {
+        let nargs = rng.below(4);
+        Envelope {
+            proposal: Proposal {
+                channel: format!("shard{}", rng.below(8)),
+                chaincode: "models".into(),
+                function: "CreateModelUpdate".into(),
+                args: (0..nargs).map(|i| format!("arg{i}-{}", rng.next_u64())).collect(),
+                creator: MemberId::new(format!("org{}.client", rng.below(8))),
+                nonce: rng.next_u64(),
+            },
+            rw_set: RwSet {
+                reads: (0..rng.below(4))
+                    .map(|i| {
+                        let ver = if rng.below(2) == 0 {
+                            None
+                        } else {
+                            Some(Version { block: rng.next_u64() % 100, tx: rng.below(10) as u32 })
+                        };
+                        (format!("rk{i}"), ver)
+                    })
+                    .collect(),
+                writes: (0..rng.below(4))
+                    .map(|i| {
+                        let val = if rng.below(4) == 0 {
+                            None
+                        } else {
+                            Some(rng.next_u64().to_le_bytes().to_vec())
+                        };
+                        (format!("wk{i}"), val)
+                    })
+                    .collect(),
+            },
+            endorsements: (0..rng.below(4))
+                .map(|i| {
+                    let mut sig = [0u8; 32];
+                    for c in sig.chunks_mut(8) {
+                        c.copy_from_slice(&rng.next_u64().to_le_bytes()[..c.len()]);
+                    }
+                    Endorsement {
+                        endorser: MemberId::new(format!("org{i}.peer")),
+                        signature: Signature(sig),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn property_envelope_roundtrip() {
+        check("envelope-roundtrip", 40, |rng| {
+            let env = random_envelope(rng);
+            let mut w = Writer::new();
+            encode_envelope(&env, &mut w);
+            let buf = w.finish();
+            let mut r = Reader::new(&buf);
+            let back = decode_envelope(&mut r).unwrap();
+            assert_eq!(back, env);
+            assert!(r.done());
+        });
+    }
+
+    #[test]
+    fn batch_roundtrip_preserves_order() {
+        let mut rng = Prng::new(5);
+        let envs: Vec<Envelope> = (0..7).map(|_| random_envelope(&mut rng)).collect();
+        let buf = encode_batch("shard3", &envs);
+        let (ch, back) = decode_batch(&buf).unwrap();
+        assert_eq!(ch, "shard3");
+        assert_eq!(back, envs);
+    }
+
+    #[test]
+    fn corrupt_batch_errors() {
+        let mut rng = Prng::new(6);
+        let buf = encode_batch("c", &[random_envelope(&mut rng)]);
+        assert!(decode_batch(&buf[..buf.len() - 2]).is_err());
+        let mut extra = buf.clone();
+        extra.push(0);
+        assert!(decode_batch(&extra).is_err());
+    }
+}

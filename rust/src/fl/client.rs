@@ -1,0 +1,239 @@
+//! FL clients: local training over the PJRT runtime, with honest and
+//! adversarial behaviours (label flip, noise, boosting, Sybil, lazy).
+
+use anyhow::Result;
+
+use super::datasets::SynthDataset;
+use crate::defense::pn;
+use crate::runtime::ops::{FlatParams, ModelOps};
+use crate::util::prng::Prng;
+
+/// Local-training hyperparameters (paper: B in {10, 20}, E in {1, 5, 15},
+/// eta_k = 1e-2).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub batch: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub dp: Option<DpConfig>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { batch: 10, epochs: 1, lr: 1e-2, dp: None }
+    }
+}
+
+/// DP-SGD settings (paper: noise 0.4, clip 1.2, (eps, delta) = (5, 1e-5)).
+#[derive(Clone, Copy, Debug)]
+pub struct DpConfig {
+    pub clip: f32,
+    pub noise_mult: f32,
+    pub delta: f64,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        DpConfig { clip: 1.2, noise_mult: 0.4, delta: 1e-5 }
+    }
+}
+
+/// Client behaviour during a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Behavior {
+    Honest,
+    /// Data poisoning: train on flipped labels.
+    LabelFlip,
+    /// Model poisoning: submit random noise of the given scale (x100 -> DOS).
+    NoiseUpdate,
+    /// Boost the honest delta by `factor` (backdoor amplification).
+    Boost(u32),
+    /// Lazy: copy the victim client's published update (PN detection target).
+    Lazy { victim: usize },
+}
+
+/// One federated client.
+pub struct FlClient {
+    pub id: usize,
+    pub data: SynthDataset,
+    pub behavior: Behavior,
+    pub rng: Prng,
+    /// PN seed for this round's lazy-client defence (revealed post-round).
+    pub pn_seed: u64,
+    /// Steps taken so far (for the DP accountant).
+    pub dp_steps: u64,
+}
+
+/// A produced local update plus metadata the workflow pins on-chain.
+#[derive(Clone, Debug)]
+pub struct LocalUpdate {
+    pub client_id: usize,
+    pub params: FlatParams,
+    pub train_loss: f64,
+    pub samples: usize,
+    pub pn_seed: u64,
+}
+
+impl FlClient {
+    pub fn new(id: usize, data: SynthDataset, behavior: Behavior, rng: Prng) -> FlClient {
+        let mut rng = rng;
+        let pn_seed = rng.next_u64();
+        FlClient { id, data, behavior, rng, pn_seed, dp_steps: 0 }
+    }
+
+    /// Run local training from the global params (paper Eq. 3-4) and return
+    /// the update this client *publishes* (behaviour applied).
+    pub fn train(
+        &mut self,
+        ops: &ModelOps,
+        global: &FlatParams,
+        cfg: &TrainConfig,
+    ) -> Result<LocalUpdate> {
+        let mut data = self.data.clone();
+        if self.behavior == Behavior::LabelFlip {
+            data.flip_labels();
+        }
+        if let Behavior::NoiseUpdate = self.behavior {
+            // Pure model poisoning: no training at all.
+            let params: FlatParams =
+                global.iter().map(|&g| g + 0.5 * self.rng.normal() as f32).collect();
+            return Ok(LocalUpdate {
+                client_id: self.id,
+                params,
+                train_loss: f64::NAN,
+                samples: data.len(),
+                pn_seed: self.pn_seed,
+            });
+        }
+        let mut params = global.clone();
+        let mut losses = Vec::new();
+        for _ in 0..cfg.epochs {
+            for (x, y) in data.batches(cfg.batch, &mut self.rng) {
+                let (next, loss) = match cfg.dp {
+                    Some(dp) if cfg.batch == 32 => {
+                        self.dp_steps += 1;
+                        ops.dp_train_step(
+                            params,
+                            &x,
+                            &y,
+                            cfg.lr,
+                            self.rng.next_u64() as i32,
+                            dp.clip,
+                            dp.noise_mult,
+                        )?
+                    }
+                    _ => ops.train_step(params, &x, &y, cfg.lr)?,
+                };
+                params = next;
+                losses.push(loss);
+            }
+        }
+        if let Behavior::Boost(factor) = self.behavior {
+            for (p, g) in params.iter_mut().zip(global) {
+                *p = g + (*p - g) * factor as f32;
+            }
+        }
+        Ok(LocalUpdate {
+            client_id: self.id,
+            params,
+            train_loss: crate::util::mean(&losses),
+            samples: data.len(),
+            pn_seed: self.pn_seed,
+        })
+    }
+
+    /// Publish with the PN sequence applied (paper §5 lazy-client defence).
+    pub fn publish_with_pn(&self, mut update: LocalUpdate, amplitude: f32) -> LocalUpdate {
+        pn::apply_pn(&mut update.params, self.pn_seed, amplitude);
+        update
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::datasets;
+
+    fn client(behavior: Behavior, seed: u64, ops: &ModelOps) -> FlClient {
+        let data = datasets::mnist_like(1, seed, 120, ops.input_dim(), 10);
+        FlClient::new(0, data, behavior, Prng::new(seed))
+    }
+
+    #[test]
+    fn honest_training_reduces_loss() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let mut c = client(Behavior::Honest, 1, &ops);
+        let global = ops.init_params(0).unwrap();
+        let cfg = TrainConfig { batch: 10, epochs: 5, lr: 0.05, dp: None };
+        let up = c.train(&ops, &global, &cfg).unwrap();
+        assert!(up.train_loss.is_finite());
+        assert_ne!(up.params, global);
+        // Re-train from the produced params: loss should be lower on avg.
+        let mut c2 = client(Behavior::Honest, 1, &ops);
+        let up2 = c2.train(&ops, &up.params, &cfg).unwrap();
+        assert!(up2.train_loss < up.train_loss, "{} !< {}", up2.train_loss, up.train_loss);
+    }
+
+    #[test]
+    fn dp_training_works_at_batch_32() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let mut c = client(Behavior::Honest, 2, &ops);
+        let global = ops.init_params(0).unwrap();
+        let cfg = TrainConfig {
+            batch: 32,
+            epochs: 1,
+            lr: 0.01,
+            dp: Some(DpConfig::default()),
+        };
+        let up = c.train(&ops, &global, &cfg).unwrap();
+        assert!(up.train_loss.is_finite());
+        assert!(c.dp_steps > 0);
+    }
+
+    #[test]
+    fn boost_scales_delta() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let global = ops.init_params(0).unwrap();
+        let cfg = TrainConfig { batch: 10, epochs: 1, lr: 0.01, dp: None };
+        let mut honest = client(Behavior::Honest, 3, &ops);
+        let mut boosted = client(Behavior::Boost(10), 3, &ops);
+        let uh = honest.train(&ops, &global, &cfg).unwrap();
+        let ub = boosted.train(&ops, &global, &cfg).unwrap();
+        let norm = |u: &LocalUpdate| -> f64 {
+            u.params
+                .iter()
+                .zip(&global)
+                .map(|(&p, &g)| ((p - g) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let (nh, nb) = (norm(&uh), norm(&ub));
+        assert!(nb > 5.0 * nh, "boosted {nb} vs honest {nh}");
+    }
+
+    #[test]
+    fn noise_update_skips_training() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let global = ops.init_params(0).unwrap();
+        let mut evil = client(Behavior::NoiseUpdate, 4, &ops);
+        let up = evil
+            .train(&ops, &global, &TrainConfig::default())
+            .unwrap();
+        assert!(up.train_loss.is_nan());
+        assert_ne!(up.params, global);
+    }
+
+    #[test]
+    fn pn_publication_is_detectable() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let global = ops.init_params(0).unwrap();
+        let cfg = TrainConfig { batch: 10, epochs: 1, lr: 0.01, dp: None };
+        let mut c = client(Behavior::Honest, 5, &ops);
+        let up = c.train(&ops, &global, &cfg).unwrap();
+        let published = c.publish_with_pn(up, 1e-3);
+        // Delta from global correlates with the client's own PN.
+        let delta: Vec<f32> =
+            published.params.iter().zip(&global).map(|(&p, &g)| p - g).collect();
+        assert!(pn::pn_correlation(&delta, c.pn_seed, 1e-3) > 0.2);
+    }
+}

@@ -1,0 +1,239 @@
+//! Deterministic synthetic datasets standing in for MNIST / CIFAR-10 /
+//! LEAF-FEMNIST (DESIGN.md §2: no network access in this environment).
+//!
+//! Each class has a fixed smoothed prototype "image"; samples are the
+//! prototype plus per-sample noise and a random shift, so the task is
+//! learnable by the MLP yet non-trivial. The FEMNIST analogue additionally
+//! applies a per-writer pixel transform so writer-partitioned splits are
+//! genuinely non-IID in feature space (as handwriting style is).
+
+use crate::util::prng::Prng;
+
+/// A dense classification dataset (row-major features).
+#[derive(Clone, Debug)]
+pub struct SynthDataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl SynthDataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Extract the subset at `indices` (cloning rows).
+    pub fn subset(&self, indices: &[usize]) -> SynthDataset {
+        let mut x = Vec::with_capacity(indices.len() * self.dim);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        SynthDataset { x, y, dim: self.dim, classes: self.classes }
+    }
+
+    /// Take a contiguous (start, len) slice as a new dataset.
+    pub fn slice(&self, start: usize, len: usize) -> SynthDataset {
+        let idx: Vec<usize> = (start..(start + len).min(self.len())).collect();
+        self.subset(&idx)
+    }
+
+    /// Shuffled minibatches of exactly `batch` rows (drops the remainder,
+    /// as FedAvg's local loop does).
+    pub fn batches(&self, batch: usize, rng: &mut Prng) -> Vec<(Vec<f32>, Vec<i32>)> {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.chunks(batch)
+            .filter(|c| c.len() == batch)
+            .map(|c| {
+                let mut x = Vec::with_capacity(batch * self.dim);
+                let mut y = Vec::with_capacity(batch);
+                for &i in c {
+                    x.extend_from_slice(self.row(i));
+                    y.push(self.y[i]);
+                }
+                (x, y)
+            })
+            .collect()
+    }
+
+    /// Flip every label (targeted data-poisoning attack).
+    pub fn flip_labels(&mut self) {
+        for y in &mut self.y {
+            *y = (*y + 1) % self.classes as i32;
+        }
+    }
+}
+
+/// Smoothed class prototypes: random field re-usable across samples.
+fn prototypes(rng: &mut Prng, classes: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..classes)
+        .map(|_| {
+            let raw: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            // 1D smoothing gives "stroke-like" correlated structure.
+            let mut out = vec![0.0f32; dim];
+            for i in 0..dim {
+                let lo = i.saturating_sub(3);
+                let hi = (i + 4).min(dim);
+                out[i] = raw[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+            }
+            out
+        })
+        .collect()
+}
+
+fn gen(
+    task_seed: u64,
+    sample_seed: u64,
+    n: usize,
+    dim: usize,
+    classes: usize,
+    noise: f32,
+    shift: usize,
+) -> SynthDataset {
+    // Prototypes depend only on the *task* seed: train/eval/test splits of
+    // the same task share class structure (different sample seeds).
+    let mut prng = Prng::new(task_seed ^ 0x7A5C_17E5_EED5_0000);
+    let protos = prototypes(&mut prng, classes, dim);
+    let mut rng = Prng::new(sample_seed);
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes);
+        let s = if shift > 0 { rng.below(2 * shift + 1) as isize - shift as isize } else { 0 };
+        for i in 0..dim {
+            let j = (i as isize + s).rem_euclid(dim as isize) as usize;
+            x.push(protos[c][j] + noise * rng.normal() as f32);
+        }
+        y.push(c as i32);
+    }
+    SynthDataset { x, y, dim, classes }
+}
+
+/// MNIST analogue: strong prototypes, light noise, small shifts.
+pub fn mnist_like(task_seed: u64, sample_seed: u64, n: usize, dim: usize, classes: usize) -> SynthDataset {
+    gen(task_seed, sample_seed, n, dim, classes, 0.35, 2)
+}
+
+/// CIFAR-10 analogue: noisier, larger shifts (harder task).
+pub fn cifar_like(task_seed: u64, sample_seed: u64, n: usize, dim: usize, classes: usize) -> SynthDataset {
+    gen(task_seed, sample_seed, n, dim, classes, 0.8, 6)
+}
+
+/// FEMNIST analogue: per-writer style transform (fixed gain field + bias)
+/// applied on top of the shared prototypes, so different writers' data
+/// differ in feature space, not just label mix.
+pub fn femnist_like(
+    task_seed: u64,
+    sample_seed: u64,
+    n: usize,
+    dim: usize,
+    classes: usize,
+    writer: u64,
+) -> SynthDataset {
+    let mut base = gen(task_seed, sample_seed, n, dim, classes, 0.35, 2);
+    let mut wrng = Prng::new(task_seed ^ writer.wrapping_mul(0xA24B_AED4_963E_E407));
+    let gain: Vec<f32> = (0..dim).map(|_| 0.7 + 0.6 * wrng.next_f32()).collect();
+    let bias: Vec<f32> = (0..dim).map(|_| 0.2 * wrng.normal() as f32).collect();
+    for r in 0..base.len() {
+        for i in 0..dim {
+            base.x[r * dim + i] = base.x[r * dim + i] * gain[i] + bias[i];
+        }
+    }
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = mnist_like(1, 1, 100, 784, 10);
+        let b = mnist_like(1, 1, 100, 784, 10);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = mnist_like(1, 2, 100, 784, 10);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn all_classes_present_and_labels_in_range() {
+        let d = mnist_like(3, 3, 2000, 784, 10);
+        for c in 0..10 {
+            assert!(d.y.contains(&c), "class {c} missing");
+        }
+        assert!(d.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn class_structure_is_learnable() {
+        // Same-class rows must be closer (on average) than cross-class rows.
+        let d = mnist_like(4, 4, 400, 200, 10);
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum()
+        };
+        let (mut same, mut diff, mut ns, mut nd) = (0.0, 0.0, 0, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = dist(d.row(i), d.row(j));
+                if d.y[i] == d.y[j] {
+                    same += dd;
+                    ns += 1;
+                } else {
+                    diff += dd;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(same / ns as f64 * 1.5 < diff / nd as f64);
+    }
+
+    #[test]
+    fn writer_transforms_differ() {
+        let a = femnist_like(1, 1, 50, 100, 10, 0);
+        let b = femnist_like(1, 1, 50, 100, 10, 1);
+        assert_eq!(a.y, b.y); // same underlying samples…
+        assert_ne!(a.x, b.x); // …different writer style
+    }
+
+    #[test]
+    fn batches_shape_and_coverage() {
+        let d = mnist_like(5, 5, 105, 50, 10);
+        let mut rng = Prng::new(1);
+        let bs = d.batches(20, &mut rng);
+        assert_eq!(bs.len(), 5); // 105 / 20 -> 5 full batches
+        for (x, y) in &bs {
+            assert_eq!(x.len(), 20 * 50);
+            assert_eq!(y.len(), 20);
+        }
+    }
+
+    #[test]
+    fn flip_labels_changes_all() {
+        let mut d = mnist_like(6, 6, 50, 20, 10);
+        let orig = d.y.clone();
+        d.flip_labels();
+        assert!(d.y.iter().zip(&orig).all(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn subset_and_slice() {
+        let d = mnist_like(7, 7, 30, 10, 10);
+        let s = d.subset(&[0, 5, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.row(1), d.row(5));
+        let sl = d.slice(28, 10);
+        assert_eq!(sl.len(), 2); // clipped at the end
+    }
+}

@@ -1,0 +1,11 @@
+//! Federated-learning substrate: synthetic datasets, non-IID partitioners,
+//! clients (honest and malicious), DP accounting, and the Flower-style
+//! round coordination that the sharded workflow drives.
+
+pub mod client;
+pub mod datasets;
+pub mod dp;
+pub mod partition;
+
+pub use client::{Behavior, DpConfig, FlClient, TrainConfig};
+pub use datasets::SynthDataset;

@@ -1,0 +1,182 @@
+//! Client data partitioners: IID, Dirichlet non-IID (label skew), and
+//! writer-based (the LEAF/FEMNIST split, paper §4.2).
+
+use std::collections::HashMap;
+
+use super::datasets::SynthDataset;
+use crate::util::prng::Prng;
+
+/// Evenly split classes between clients (the paper's IID setting).
+pub fn iid(data: &SynthDataset, clients: usize, rng: &mut Prng) -> Vec<SynthDataset> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    rng.shuffle(&mut idx);
+    (0..clients)
+        .map(|c| {
+            let share: Vec<usize> =
+                idx.iter().skip(c).step_by(clients).copied().collect();
+            data.subset(&share)
+        })
+        .collect()
+}
+
+/// Dirichlet(alpha) label-skew partition: for each class, split its samples
+/// between clients with proportions drawn from Dirichlet(alpha). Small alpha
+/// => strongly non-IID (each client dominated by few classes).
+pub fn dirichlet(
+    data: &SynthDataset,
+    clients: usize,
+    alpha: f64,
+    rng: &mut Prng,
+) -> Vec<SynthDataset> {
+    let mut by_class: HashMap<i32, Vec<usize>> = HashMap::new();
+    for (i, &y) in data.y.iter().enumerate() {
+        by_class.entry(y).or_default().push(i);
+    }
+    let mut shares: Vec<Vec<usize>> = vec![Vec::new(); clients];
+    let mut classes: Vec<i32> = by_class.keys().copied().collect();
+    classes.sort_unstable();
+    for c in classes {
+        let mut idx = by_class.remove(&c).unwrap();
+        rng.shuffle(&mut idx);
+        let props = rng.dirichlet(alpha, clients);
+        // cumulative cut points
+        let n = idx.len();
+        let mut start = 0usize;
+        let mut acc = 0.0;
+        for (cl, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if cl == clients - 1 { n } else { (acc * n as f64).round() as usize };
+            let end = end.clamp(start, n);
+            shares[cl].extend_from_slice(&idx[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee every client has at least one sample (move from the richest).
+    for c in 0..clients {
+        if shares[c].is_empty() {
+            let richest =
+                (0..clients).max_by_key(|&i| shares[i].len()).expect("clients > 0");
+            if let Some(moved) = shares[richest].pop() {
+                shares[c].push(moved);
+            }
+        }
+    }
+    shares.iter().map(|s| data.subset(s)).collect()
+}
+
+/// Writer-based split (FEMNIST): each client is a distinct writer with its
+/// own style transform — non-IID in both features and label mix.
+pub fn by_writer(
+    task_seed: u64,
+    clients: usize,
+    samples_per_client: usize,
+    dim: usize,
+    classes: usize,
+) -> Vec<SynthDataset> {
+    (0..clients)
+        .map(|w| {
+            super::datasets::femnist_like(
+                task_seed,
+                task_seed.wrapping_add(w as u64 + 1),
+                samples_per_client,
+                dim,
+                classes,
+                w as u64,
+            )
+        })
+        .collect()
+}
+
+/// Label-distribution skew measure: mean total-variation distance between
+/// each client's label histogram and the global histogram (0 = IID).
+pub fn label_skew(parts: &[SynthDataset], classes: usize) -> f64 {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut global = vec![0.0f64; classes];
+    for p in parts {
+        for &y in &p.y {
+            global[y as usize] += 1.0;
+        }
+    }
+    for g in &mut global {
+        *g /= total as f64;
+    }
+    let mut acc = 0.0;
+    for p in parts {
+        let mut h = vec![0.0f64; classes];
+        for &y in &p.y {
+            h[y as usize] += 1.0;
+        }
+        for v in &mut h {
+            *v /= p.len().max(1) as f64;
+        }
+        acc += h.iter().zip(&global).map(|(a, b)| (a - b).abs()).sum::<f64>() / 2.0;
+    }
+    acc / parts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::datasets::mnist_like;
+    use crate::util::check::check;
+
+    #[test]
+    fn iid_covers_everything_evenly() {
+        let d = mnist_like(1, 1, 1000, 50, 10);
+        let mut rng = Prng::new(1);
+        let parts = iid(&d, 8, &mut rng);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 1000);
+        for p in &parts {
+            assert!((p.len() as i64 - 125).abs() <= 8);
+        }
+        assert!(label_skew(&parts, 10) < 0.12, "skew {}", label_skew(&parts, 10));
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_skewed() {
+        let d = mnist_like(2, 2, 4000, 50, 10);
+        let mut rng = Prng::new(2);
+        let iid_parts = iid(&d, 8, &mut rng);
+        let skewed = dirichlet(&d, 8, 0.1, &mut rng);
+        let mild = dirichlet(&d, 8, 100.0, &mut rng);
+        let s_skewed = label_skew(&skewed, 10);
+        let s_mild = label_skew(&mild, 10);
+        let s_iid = label_skew(&iid_parts, 10);
+        assert!(s_skewed > 0.4, "alpha=0.1 skew {s_skewed}");
+        assert!(s_mild < 0.2, "alpha=100 skew {s_mild}");
+        assert!(s_skewed > s_mild && s_mild >= s_iid * 0.5);
+    }
+
+    #[test]
+    fn dirichlet_partition_is_exact_and_nonempty() {
+        check("dirichlet-partition", 12, |rng| {
+            let n = rng.range(200, 1000);
+            let clients = rng.range(2, 12);
+            let d = mnist_like(1, rng.next_u64(), n, 20, 10);
+            let parts = dirichlet(&d, clients, 0.5, rng);
+            assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), n);
+            assert!(parts.iter().all(|p| !p.is_empty()));
+        });
+    }
+
+    #[test]
+    fn writer_split_is_feature_non_iid() {
+        let parts = by_writer(7, 4, 100, 30, 10);
+        assert_eq!(parts.len(), 4);
+        // Mean feature vectors differ across writers.
+        let mean = |p: &SynthDataset| -> Vec<f32> {
+            let mut m = vec![0.0f32; p.dim];
+            for r in 0..p.len() {
+                for (i, v) in p.row(r).iter().enumerate() {
+                    m[i] += v;
+                }
+            }
+            m.iter().map(|v| v / p.len() as f32).collect()
+        };
+        let m0 = mean(&parts[0]);
+        let m1 = mean(&parts[1]);
+        let diff: f32 = m0.iter().zip(&m1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1.0, "writers look identical (diff {diff})");
+    }
+}

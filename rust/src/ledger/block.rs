@@ -1,0 +1,113 @@
+//! Blocks: header (number, prev hash, merkle data hash), envelope payloads,
+//! and per-transaction validation metadata set by the commit-time validator.
+
+use crate::crypto::{merkle, sha256_parts, Digest};
+use crate::ledger::tx::Envelope;
+
+/// Why a transaction was (in)validated at commit time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValidationCode {
+    Valid,
+    /// A read version no longer matches current state (phantom/conflict).
+    MvccConflict,
+    /// Endorsement policy unsatisfied (too few / invalid signatures).
+    EndorsementPolicyFailure,
+    /// Duplicate transaction id already committed.
+    DuplicateTxId,
+}
+
+/// Block header; `hash()` chains blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockHeader {
+    pub number: u64,
+    pub prev_hash: Digest,
+    /// Merkle root over envelope digests.
+    pub data_hash: Digest,
+}
+
+impl BlockHeader {
+    pub fn hash(&self) -> Digest {
+        sha256_parts(&[&self.number.to_le_bytes(), &self.prev_hash.0, &self.data_hash.0])
+    }
+}
+
+/// A block of ordered envelopes plus commit-time validation flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub header: BlockHeader,
+    pub txs: Vec<Envelope>,
+    /// Parallel to `txs`; empty until the validator commits the block.
+    pub validation: Vec<ValidationCode>,
+}
+
+impl Block {
+    /// Assemble a block from ordered envelopes.
+    pub fn new(number: u64, prev_hash: Digest, txs: Vec<Envelope>) -> Block {
+        let leaves: Vec<Digest> = txs.iter().map(|e| e.digest()).collect();
+        Block {
+            header: BlockHeader { number, prev_hash, data_hash: merkle::root(&leaves) },
+            txs,
+            validation: Vec::new(),
+        }
+    }
+
+    pub fn hash(&self) -> Digest {
+        self.header.hash()
+    }
+
+    /// Recompute the merkle root and compare (tamper check).
+    pub fn verify_data_hash(&self) -> bool {
+        let leaves: Vec<Digest> = self.txs.iter().map(|e| e.digest()).collect();
+        merkle::root(&leaves) == self.header.data_hash
+    }
+
+    pub fn valid_tx_count(&self) -> usize {
+        self.validation.iter().filter(|c| **c == ValidationCode::Valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::MemberId;
+    use crate::ledger::tx::{Proposal, RwSet};
+
+    fn envelope(nonce: u64) -> Envelope {
+        Envelope {
+            proposal: Proposal {
+                channel: "c".into(),
+                chaincode: "models".into(),
+                function: "f".into(),
+                args: vec![],
+                creator: MemberId::new("m"),
+                nonce,
+            },
+            rw_set: RwSet::default(),
+            endorsements: vec![],
+        }
+    }
+
+    #[test]
+    fn data_hash_detects_tampering() {
+        let b = Block::new(1, Digest::ZERO, vec![envelope(1), envelope(2)]);
+        assert!(b.verify_data_hash());
+        let mut tampered = b.clone();
+        tampered.txs[0].proposal.nonce = 99;
+        assert!(!tampered.verify_data_hash());
+    }
+
+    #[test]
+    fn header_hash_chains() {
+        let b1 = Block::new(1, Digest::ZERO, vec![envelope(1)]);
+        let b2 = Block::new(2, b1.hash(), vec![envelope(2)]);
+        assert_eq!(b2.header.prev_hash, b1.hash());
+        assert_ne!(b1.hash(), b2.hash());
+    }
+
+    #[test]
+    fn empty_block_is_fine() {
+        let b = Block::new(0, Digest::ZERO, vec![]);
+        assert!(b.verify_data_hash());
+        assert_eq!(b.valid_tx_count(), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Permissioned-ledger substrate: transactions with read/write sets, blocks,
+//! hash chains, and an MVCC-versioned world state — the Fabric-style
+//! execute–order–validate data model ScaleSFL's chaincodes run on.
+
+pub mod block;
+pub mod chain;
+pub mod codec;
+pub mod state;
+pub mod tx;
+
+pub use block::{Block, BlockHeader, ValidationCode};
+pub use chain::Chain;
+pub use state::{Version, WorldState};
+pub use tx::{Endorsement, Envelope, Proposal, ReadSet, RwSet, TxId, WriteSet};

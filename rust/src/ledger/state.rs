@@ -1,0 +1,167 @@
+//! Versioned world state with MVCC validation (Fabric's commit rule).
+//!
+//! Every committed write stamps its key with the (block, tx) version; at
+//! commit time a transaction is valid only if every key it *read* during
+//! endorsement still carries the version it observed. This is what lets
+//! endorsement run in parallel ahead of ordering (execute–order–validate).
+
+use std::collections::HashMap;
+
+use crate::ledger::tx::RwSet;
+
+/// Key version: the (block, tx-in-block) coordinates of the last write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Version {
+    pub block: u64,
+    pub tx: u32,
+}
+
+/// The channel's current key-value state.
+#[derive(Clone, Debug, Default)]
+pub struct WorldState {
+    map: HashMap<String, (Vec<u8>, Version)>,
+}
+
+impl WorldState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Value + version for a key (None if absent).
+    pub fn get(&self, key: &str) -> Option<(&[u8], Version)> {
+        self.map.get(key).map(|(v, ver)| (v.as_slice(), *ver))
+    }
+
+    pub fn get_value(&self, key: &str) -> Option<&[u8]> {
+        self.map.get(key).map(|(v, _)| v.as_slice())
+    }
+
+    /// Range scan over keys with the given prefix (sorted by key).
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(String, Vec<u8>)> {
+        let mut out: Vec<(String, Vec<u8>)> = self
+            .map
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, (v, _))| (k.clone(), v.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// MVCC check: do all read versions still match current state?
+    pub fn mvcc_valid(&self, rw: &RwSet) -> bool {
+        rw.reads.iter().all(|(key, observed)| {
+            let current = self.map.get(key).map(|(_, ver)| *ver);
+            current == *observed
+        })
+    }
+
+    /// Apply a write set at the given version (validator-only entry point).
+    pub fn apply(&mut self, rw: &RwSet, version: Version) {
+        for (key, val) in &rw.writes {
+            match val {
+                Some(v) => {
+                    self.map.insert(key.clone(), (v.clone(), version));
+                }
+                None => {
+                    self.map.remove(key);
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn w(key: &str, val: &[u8]) -> RwSet {
+        RwSet { reads: vec![], writes: vec![(key.into(), Some(val.to_vec()))] }
+    }
+
+    #[test]
+    fn apply_and_get() {
+        let mut s = WorldState::new();
+        s.apply(&w("k", b"v1"), Version { block: 1, tx: 0 });
+        assert_eq!(s.get("k"), Some((b"v1".as_slice(), Version { block: 1, tx: 0 })));
+        s.apply(&w("k", b"v2"), Version { block: 2, tx: 3 });
+        assert_eq!(s.get("k").unwrap().1, Version { block: 2, tx: 3 });
+    }
+
+    #[test]
+    fn delete_removes_key() {
+        let mut s = WorldState::new();
+        s.apply(&w("k", b"v"), Version { block: 1, tx: 0 });
+        s.apply(
+            &RwSet { reads: vec![], writes: vec![("k".into(), None)] },
+            Version { block: 2, tx: 0 },
+        );
+        assert_eq!(s.get("k"), None);
+    }
+
+    #[test]
+    fn mvcc_detects_stale_read() {
+        let mut s = WorldState::new();
+        s.apply(&w("k", b"v1"), Version { block: 1, tx: 0 });
+        // Endorsement observed (1, 0)…
+        let rw = RwSet {
+            reads: vec![("k".into(), Some(Version { block: 1, tx: 0 }))],
+            writes: vec![("k".into(), Some(b"v2".to_vec()))],
+        };
+        assert!(s.mvcc_valid(&rw));
+        // …but a competing tx commits first.
+        s.apply(&w("k", b"other"), Version { block: 2, tx: 0 });
+        assert!(!s.mvcc_valid(&rw));
+    }
+
+    #[test]
+    fn mvcc_absent_key_semantics() {
+        let s = WorldState::new();
+        let rw = RwSet { reads: vec![("nope".into(), None)], writes: vec![] };
+        assert!(s.mvcc_valid(&rw)); // read-of-absent stays valid while absent
+        let rw2 = RwSet {
+            reads: vec![("nope".into(), Some(Version { block: 1, tx: 0 }))],
+            writes: vec![],
+        };
+        assert!(!s.mvcc_valid(&rw2));
+    }
+
+    #[test]
+    fn scan_prefix_sorted() {
+        let mut s = WorldState::new();
+        for k in ["models/r1/c2", "models/r1/c1", "global/r1"] {
+            s.apply(&w(k, b"x"), Version { block: 1, tx: 0 });
+        }
+        let hits = s.scan_prefix("models/r1/");
+        assert_eq!(
+            hits.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+            vec!["models/r1/c1", "models/r1/c2"]
+        );
+    }
+
+    #[test]
+    fn property_serial_apply_keeps_latest() {
+        check("state-latest-write-wins", 32, |rng| {
+            let mut s = WorldState::new();
+            let mut last: HashMap<String, Vec<u8>> = HashMap::new();
+            for b in 0..rng.range(1, 30) as u64 {
+                let key = format!("k{}", rng.below(5));
+                let val = rng.next_u64().to_le_bytes().to_vec();
+                s.apply(&w(&key, &val), Version { block: b, tx: 0 });
+                last.insert(key, val);
+            }
+            for (k, v) in &last {
+                assert_eq!(s.get_value(k), Some(v.as_slice()));
+            }
+        });
+    }
+}

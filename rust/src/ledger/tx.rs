@@ -1,0 +1,197 @@
+//! Transactions: proposals, read/write sets, endorsements, envelopes.
+//!
+//! Mirrors Fabric's transaction flow: a client *proposal* names a chaincode
+//! function; endorsing peers *execute* it against their current state,
+//! producing a read set (keys + observed versions) and a write set; the
+//! client assembles endorsements into an *envelope* submitted for ordering.
+
+use crate::crypto::msp::{MemberId, Signature};
+use crate::crypto::{sha256_parts, Digest};
+use crate::ledger::state::Version;
+
+/// Transaction id: hash of the proposal.
+pub type TxId = Digest;
+
+/// A client proposal to invoke a chaincode function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Proposal {
+    pub channel: String,
+    pub chaincode: String,
+    pub function: String,
+    pub args: Vec<String>,
+    pub creator: MemberId,
+    /// Uniquifies otherwise-identical proposals.
+    pub nonce: u64,
+}
+
+impl Proposal {
+    pub fn tx_id(&self) -> TxId {
+        let mut parts: Vec<&[u8]> = vec![
+            self.channel.as_bytes(),
+            self.chaincode.as_bytes(),
+            self.function.as_bytes(),
+        ];
+        for a in &self.args {
+            parts.push(a.as_bytes());
+        }
+        let nonce = self.nonce.to_le_bytes();
+        parts.push(self.creator.0.as_bytes());
+        parts.push(&nonce);
+        sha256_parts(&parts)
+    }
+}
+
+/// Keys read during simulation with the version observed (None = absent).
+pub type ReadSet = Vec<(String, Option<Version>)>;
+/// Keys written during simulation (None value = delete).
+pub type WriteSet = Vec<(String, Option<Vec<u8>>)>;
+
+/// The simulation result a peer endorses.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RwSet {
+    pub reads: ReadSet,
+    pub writes: WriteSet,
+}
+
+impl RwSet {
+    /// Canonical digest of the rw-set (what endorsers sign).
+    pub fn digest(&self) -> Digest {
+        let mut buf = Vec::new();
+        for (k, v) in &self.reads {
+            buf.extend_from_slice(&(k.len() as u32).to_le_bytes());
+            buf.extend_from_slice(k.as_bytes());
+            match v {
+                Some(ver) => {
+                    buf.push(1);
+                    buf.extend_from_slice(&ver.block.to_le_bytes());
+                    buf.extend_from_slice(&ver.tx.to_le_bytes());
+                }
+                None => buf.push(0),
+            }
+        }
+        buf.push(0xFF); // separator between reads and writes
+        for (k, v) in &self.writes {
+            buf.extend_from_slice(&(k.len() as u32).to_le_bytes());
+            buf.extend_from_slice(k.as_bytes());
+            match v {
+                Some(val) => {
+                    buf.push(1);
+                    buf.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                    buf.extend_from_slice(val);
+                }
+                None => buf.push(0),
+            }
+        }
+        sha256_parts(&[&buf])
+    }
+}
+
+/// One endorsing peer's signed approval of a simulation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Endorsement {
+    pub endorser: MemberId,
+    /// Signature over tx_id || rw_set digest.
+    pub signature: Signature,
+}
+
+/// Bytes an endorser signs for (tx, rw_set).
+pub fn endorsement_payload(tx_id: &TxId, rw_digest: &Digest) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.extend_from_slice(&tx_id.0);
+    buf.extend_from_slice(&rw_digest.0);
+    buf
+}
+
+/// The ordered unit: proposal + agreed rw-set + endorsements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub proposal: Proposal,
+    pub rw_set: RwSet,
+    pub endorsements: Vec<Endorsement>,
+}
+
+impl Envelope {
+    pub fn tx_id(&self) -> TxId {
+        self.proposal.tx_id()
+    }
+
+    /// Digest covering the full envelope (block merkle leaf).
+    pub fn digest(&self) -> Digest {
+        let rw = self.rw_set.digest();
+        let tx = self.tx_id();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&tx.0);
+        buf.extend_from_slice(&rw.0);
+        for e in &self.endorsements {
+            buf.extend_from_slice(e.endorser.0.as_bytes());
+            buf.extend_from_slice(&e.signature.0);
+        }
+        sha256_parts(&[&buf])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn proposal(nonce: u64) -> Proposal {
+        Proposal {
+            channel: "shard0".into(),
+            chaincode: "models".into(),
+            function: "CreateModelUpdate".into(),
+            args: vec!["round-1".into(), "hash".into()],
+            creator: MemberId::new("org1.client"),
+            nonce,
+        }
+    }
+
+    #[test]
+    fn tx_id_depends_on_all_fields() {
+        let base = proposal(1);
+        assert_eq!(base.tx_id(), proposal(1).tx_id());
+        assert_ne!(base.tx_id(), proposal(2).tx_id());
+        let mut p = proposal(1);
+        p.args[0] = "round-2".into();
+        assert_ne!(base.tx_id(), p.tx_id());
+        let mut p = proposal(1);
+        p.channel = "shard1".into();
+        assert_ne!(base.tx_id(), p.tx_id());
+    }
+
+    #[test]
+    fn rw_digest_orders_matter() {
+        let a = RwSet {
+            reads: vec![("k1".into(), Some(Version { block: 1, tx: 0 }))],
+            writes: vec![("k2".into(), Some(b"v".to_vec()))],
+        };
+        let mut b = a.clone();
+        b.reads[0].1 = Some(Version { block: 2, tx: 0 });
+        assert_ne!(a.digest(), b.digest());
+        let mut c = a.clone();
+        c.writes[0].1 = None;
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn read_write_boundary_unambiguous() {
+        // A key appearing as a read vs as a write must hash differently.
+        let a = RwSet { reads: vec![("k".into(), None)], writes: vec![] };
+        let b = RwSet { reads: vec![], writes: vec![("k".into(), None)] };
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn envelope_digest_covers_endorsements() {
+        let env = Envelope {
+            proposal: proposal(1),
+            rw_set: RwSet::default(),
+            endorsements: vec![],
+        };
+        let mut env2 = env.clone();
+        env2.endorsements.push(Endorsement {
+            endorser: MemberId::new("org1.peer"),
+            signature: Signature([7u8; 32]),
+        });
+        assert_ne!(env.digest(), env2.digest());
+    }
+}

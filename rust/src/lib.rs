@@ -1,0 +1,31 @@
+//! ScaleSFL — a sharding solution for blockchain-based federated learning.
+//!
+//! Reproduction of Madill et al., *ScaleSFL* (BSCI '22) as a three-layer
+//! Rust + JAX + Pallas stack: this crate is Layer-3, the coordinator that owns
+//! the permissioned-ledger substrate (execute–order–validate, Raft/PBFT
+//! ordering, MVCC validation), the sharded federated-learning workflow
+//! (shard chains + mainchain "catalyst" aggregation), the pluggable
+//! model-acceptance defences, and the Caliper-style benchmark harness.
+//!
+//! Model compute (training, endorsement-time evaluation, FedAvg aggregation,
+//! defence distance matrices) executes AOT-compiled HLO artifacts produced by
+//! the Python build step (`make artifacts`) via the PJRT CPU client — Python
+//! is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for measured results.
+
+pub mod caliper;
+pub mod chaincode;
+pub mod consensus;
+pub mod crypto;
+pub mod defense;
+pub mod fabric;
+pub mod fl;
+pub mod ledger;
+pub mod network;
+pub mod runtime;
+pub mod sharding;
+pub mod sim;
+pub mod storage;
+pub mod util;

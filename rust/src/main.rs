@@ -1,0 +1,242 @@
+//! ScaleSFL launcher.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is not in the offline vendor
+//! set):
+//!
+//!   scalesfl info                         — artifact manifest + runtime info
+//!   scalesfl train   [--shards N] [--rounds N] [--clients N] [--batch B]
+//!                    [--epochs E] [--lr F] [--dirichlet A | --writer]
+//!                    [--dp] [--defense none|roni|norm] [--agg none|krum|fg]
+//!   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
+//!   scalesfl calibrate                    — print DES calibration numbers
+
+use std::time::Duration;
+
+use scalesfl::caliper::figures;
+use scalesfl::fl::client::{DpConfig, TrainConfig};
+use scalesfl::sim::{AggDefense, DefenseChoice, Partition, ScaleSfl, SimConfig};
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn parse<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> T {
+    arg_value(args, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn has_flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let code = match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(rest),
+        "figures" => cmd_figures(rest),
+        "calibrate" => cmd_calibrate(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "scalesfl — sharded blockchain-based federated learning (paper reproduction)
+
+USAGE:
+  scalesfl info
+  scalesfl train   [--shards N] [--rounds N] [--clients N] [--batch B] [--epochs E]
+                   [--lr F] [--dirichlet ALPHA | --writer] [--dp]
+                   [--defense none|roni|norm] [--agg none|krum|fg] [--pn]
+  scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
+  scalesfl calibrate
+
+Run `make artifacts` before anything that touches the model runtime."
+    );
+}
+
+fn cmd_info() -> i32 {
+    let Some(rt) = scalesfl::runtime::shared() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return 1;
+    };
+    let m = rt.manifest();
+    println!("model: {} params ({} padded), input {}, hidden {:?}, {} classes",
+        m.p, m.p_pad, m.input_dim, m.hidden, m.num_classes);
+    println!("aggregation width K = {}, eval batch = {}", m.k, m.b_eval);
+    println!("train batch sizes: {:?}", m.train_batch_sizes);
+    println!("artifacts: {}", m.artifacts.join(", "));
+    0
+}
+
+fn cmd_calibrate() -> i32 {
+    let Some(ops) = scalesfl::runtime::shared_ops() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return 1;
+    };
+    for samples in [512usize, 2048, 10000] {
+        match ops.calibrate(samples, 3) {
+            Ok(c) => println!(
+                "eval({} samples) = {:.1} ms    fedavg_agg(K=8) = {:.1} ms",
+                samples,
+                c.eval_s * 1e3,
+                c.agg_s * 1e3
+            ),
+            Err(e) => {
+                eprintln!("calibration failed: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let Some(ops) = scalesfl::runtime::shared_ops() else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return 1;
+    };
+    let shards = parse(args, "--shards", 2usize);
+    let rounds = parse(args, "--rounds", 3usize);
+    let clients = parse(args, "--clients", 4usize);
+    let batch = parse(args, "--batch", 10usize);
+    let epochs = parse(args, "--epochs", 1usize);
+    let lr = parse(args, "--lr", 0.05f32);
+    let dp = has_flag(args, "--dp");
+    let partition = if has_flag(args, "--writer") {
+        Partition::Writer
+    } else if let Some(a) = arg_value(args, "--dirichlet") {
+        Partition::Dirichlet { alpha: a.parse().unwrap_or(0.5) }
+    } else {
+        Partition::Iid
+    };
+    let defense = match arg_value(args, "--defense").as_deref() {
+        Some("roni") => DefenseChoice::Roni { max_degradation: 0.05 },
+        Some("norm") => DefenseChoice::NormBound { max_norm: 10.0 },
+        _ => DefenseChoice::None,
+    };
+    let agg_defense = match arg_value(args, "--agg").as_deref() {
+        Some("krum") => AggDefense::MultiKrum { f: 2 },
+        Some("fg") => AggDefense::FoolsGold,
+        _ => AggDefense::None,
+    };
+    let train = TrainConfig {
+        batch: if dp { 32 } else { batch },
+        epochs,
+        lr,
+        dp: dp.then(DpConfig::default),
+    };
+    let cfg = SimConfig {
+        shards,
+        peers_per_shard: 2,
+        clients_per_shard: clients,
+        train,
+        defense,
+        agg_defense,
+        partition,
+        samples_per_client: 100,
+        eval_samples: 64,
+        test_samples: 512,
+        verify_aggregate: true,
+        pn_amplitude: if has_flag(args, "--pn") { 1e-3 } else { 0.0 },
+        seed: parse(args, "--seed", 42u64),
+        timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    println!("ScaleSFL: {shards} shards x {clients} clients, {rounds} rounds, B={batch} E={epochs} lr={lr}");
+    let mut net = match ScaleSfl::build(cfg, ops) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("build failed: {e}");
+            return 1;
+        }
+    };
+    for _ in 0..rounds {
+        match net.run_round() {
+            Ok(r) => println!(
+                "round {:>3}: loss {:.4} acc {:.4} | accepted {}/{} lazy {}",
+                r.round,
+                r.mean_train_loss,
+                r.global_eval.accuracy,
+                r.accepted_updates,
+                r.accepted_updates + r.rejected_updates,
+                r.lazy_detected
+            ),
+            Err(e) => {
+                eprintln!("round failed: {e}");
+                return 1;
+            }
+        }
+    }
+    if dp {
+        let steps: u64 =
+            net.shards.iter().flat_map(|s| s.clients.iter().map(|c| c.dp_steps)).max().unwrap_or(0);
+        let q = batch as f64 / 100.0;
+        let eps = scalesfl::fl::dp::epsilon(q, 0.4, steps, 1e-5);
+        println!("DP accountant: worst-case client {steps} steps -> epsilon ~= {eps:.2} (delta 1e-5)");
+    }
+    0
+}
+
+fn cmd_figures(args: &[String]) -> i32 {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = !(has_flag(args, "--full") || figures::full_requested());
+    if matches!(which, "ablation" | "all") {
+        println!("# ablation — endorsement computations (C=64, P_E=8)");
+        for s in [1usize, 2, 4, 8] {
+            let (flat, per_shard, global) = figures::ablation_eval_count(64, 8, s);
+            println!("shards={s}: flat={flat} per-shard={per_shard} global={global}");
+        }
+    }
+    let needs_env = matches!(which, "fig4" | "fig5" | "fig6" | "fig7" | "fig8" | "all");
+    if needs_env {
+        let Some(env) = figures::env(quick) else {
+            eprintln!("artifacts not built — run `make artifacts`");
+            return 1;
+        };
+        if matches!(which, "fig4" | "all") {
+            println!("\n# fig4");
+            for (s, r) in figures::fig4(&env) {
+                println!("shards={s} {}", r.row());
+            }
+        }
+        if matches!(which, "fig5" | "all") {
+            println!("\n# fig5");
+            for (s, tps, r) in figures::fig5(&env) {
+                println!("shards={s} sent={tps:.2} {}", r.row());
+            }
+        }
+        if matches!(which, "fig6" | "fig7" | "all") {
+            println!("\n# fig6+fig7");
+            for (txs, r) in figures::fig6_7(&env) {
+                println!("txs={txs} {}", r.row());
+            }
+        }
+        if matches!(which, "fig8" | "all") {
+            println!("\n# fig8");
+            for (s, w, r) in figures::fig8(&env) {
+                println!("shards={s} workers={w} {}", r.row());
+            }
+        }
+    }
+    if matches!(which, "fig9" | "all") {
+        let Some(ops) = scalesfl::runtime::shared_ops() else {
+            eprintln!("artifacts not built — run `make artifacts`");
+            return 1;
+        };
+        match figures::fig9_table2(&ops, quick) {
+            Ok(cells) => figures::print_table2(&cells),
+            Err(e) => {
+                eprintln!("fig9 failed: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}

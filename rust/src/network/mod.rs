@@ -1,0 +1,7 @@
+//! Simulated network substrate.
+//!
+//! `simnet` is the message-level transport used to drive the sans-io
+//! consensus nodes (and the fault-injection tests): per-link uniform latency,
+//! probabilistic drops, and node isolation (partitions/crashes).
+
+pub mod simnet;

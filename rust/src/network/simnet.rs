@@ -1,0 +1,158 @@
+//! In-process simulated network: latency, jitter, drops, partitions.
+//!
+//! Messages are scheduled onto a priority queue keyed by virtual delivery
+//! time; `deliver_until(now)` drains in timestamp order. Deterministic given
+//! the seed, which is what makes the consensus property tests reproducible.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+
+use crate::consensus::NodeId;
+use crate::util::prng::Prng;
+
+/// Orderable f64 wrapper for the scheduling heap.
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+struct Time(f64);
+
+impl Eq for Time {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time")
+    }
+}
+
+/// The simulated transport.
+pub struct SimNet<M> {
+    heap: BinaryHeap<Reverse<(Time, u64, NodeId, NodeId)>>,
+    payloads: std::collections::HashMap<u64, M>,
+    seq: u64,
+    latency_min: f64,
+    latency_max: f64,
+    drop_prob: f64,
+    isolated: HashSet<NodeId>,
+    rng: Prng,
+    pub sent: u64,
+    pub dropped: u64,
+}
+
+impl<M> SimNet<M> {
+    /// Uniform latency in [latency_min, latency_max], iid drop probability.
+    pub fn new(latency_min: f64, latency_max: f64, drop_prob: f64, rng: Prng) -> Self {
+        SimNet {
+            heap: BinaryHeap::new(),
+            payloads: std::collections::HashMap::new(),
+            seq: 0,
+            latency_min,
+            latency_max,
+            drop_prob,
+            isolated: HashSet::new(),
+            rng,
+            sent: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Schedule a message from `from` to `to` at virtual time `now`.
+    pub fn send(&mut self, from: NodeId, to: NodeId, msg: M, now: f64) {
+        self.sent += 1;
+        if self.isolated.contains(&from) || self.isolated.contains(&to) {
+            self.dropped += 1;
+            return;
+        }
+        if self.drop_prob > 0.0 && self.rng.next_f64() < self.drop_prob {
+            self.dropped += 1;
+            return;
+        }
+        let latency =
+            self.latency_min + self.rng.next_f64() * (self.latency_max - self.latency_min);
+        let at = now + latency;
+        self.seq += 1;
+        self.payloads.insert(self.seq, msg);
+        self.heap.push(Reverse((Time(at), self.seq, from, to)));
+    }
+
+    /// Pop all messages with delivery time <= now, in order.
+    pub fn deliver_until(&mut self, now: f64) -> Vec<(NodeId, NodeId, M)> {
+        let mut out = Vec::new();
+        while let Some(Reverse((Time(t), seq, from, to))) = self.heap.peek().cloned() {
+            if t > now {
+                break;
+            }
+            self.heap.pop();
+            // Late isolation drops in-flight traffic too.
+            let msg = self.payloads.remove(&seq).expect("payload");
+            if self.isolated.contains(&from) || self.isolated.contains(&to) {
+                self.dropped += 1;
+                continue;
+            }
+            out.push((from, to, msg));
+        }
+        out
+    }
+
+    /// Cut a node off from the network (crash/partition simulation).
+    pub fn isolate(&mut self, node: NodeId) {
+        self.isolated.insert(node);
+    }
+
+    /// Reconnect a previously isolated node.
+    pub fn heal(&mut self, node: NodeId) {
+        self.isolated.remove(&node);
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivers_in_time_order() {
+        let mut net: SimNet<u32> = SimNet::new(0.001, 0.010, 0.0, Prng::new(1));
+        for i in 0..50 {
+            net.send(0, 1, i, 0.0);
+        }
+        let got = net.deliver_until(1.0);
+        assert_eq!(got.len(), 50);
+        // Monotone redelivery times are enforced by heap order; check count
+        // and that nothing is left.
+        assert_eq!(net.in_flight(), 0);
+    }
+
+    #[test]
+    fn respects_now_cutoff() {
+        let mut net: SimNet<u32> = SimNet::new(0.5, 0.5, 0.0, Prng::new(2));
+        net.send(0, 1, 7, 0.0);
+        assert!(net.deliver_until(0.4).is_empty());
+        assert_eq!(net.deliver_until(0.6).len(), 1);
+    }
+
+    #[test]
+    fn drops_at_configured_rate() {
+        let mut net: SimNet<u32> = SimNet::new(0.0, 0.0, 0.3, Prng::new(3));
+        for _ in 0..10_000 {
+            net.send(0, 1, 0, 0.0);
+        }
+        let delivered = net.deliver_until(1.0).len() as f64;
+        let rate = 1.0 - delivered / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "drop rate {rate}");
+    }
+
+    #[test]
+    fn isolation_blocks_both_directions_and_in_flight() {
+        let mut net: SimNet<u32> = SimNet::new(0.1, 0.1, 0.0, Prng::new(4));
+        net.send(0, 1, 1, 0.0); // in flight when isolation happens
+        net.isolate(1);
+        net.send(0, 1, 2, 0.0);
+        net.send(1, 0, 3, 0.0);
+        assert!(net.deliver_until(1.0).is_empty());
+        net.heal(1);
+        net.send(0, 1, 4, 1.0);
+        assert_eq!(net.deliver_until(2.0).len(), 1);
+    }
+}

@@ -1,0 +1,128 @@
+//! `artifacts/manifest.txt` parser: the static dimensions the Python AOT
+//! step baked into the HLO executables (flat param width, committee size,
+//! batch sizes). Rust-side shapes must match these exactly.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Exact (unpadded) parameter count.
+    pub p: usize,
+    /// Lane-aligned flat vector width crossing the HLO boundary.
+    pub p_pad: usize,
+    /// Stacked updates per aggregation/defence executable.
+    pub k: usize,
+    /// Endorsement evaluation batch.
+    pub b_eval: usize,
+    /// Fused multi-batch evaluation width (perf path; 0 if absent).
+    pub b_eval_block: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub hidden: Vec<usize>,
+    /// Train-step batch sizes with a lowered executable.
+    pub train_batch_sizes: Vec<usize>,
+    /// Artifact names present on disk.
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad manifest line: {line}"))?;
+            kv.insert(k.trim(), v.trim());
+        }
+        let get = |k: &str| -> Result<&str> {
+            kv.get(k).copied().with_context(|| format!("manifest missing key {k}"))
+        };
+        let usize_of = |k: &str| -> Result<usize> {
+            get(k)?.parse::<usize>().with_context(|| format!("bad usize for {k}"))
+        };
+        let list_of = |k: &str| -> Result<Vec<usize>> {
+            get(k)?
+                .split(',')
+                .map(|s| s.parse::<usize>().with_context(|| format!("bad list for {k}")))
+                .collect()
+        };
+        let m = Manifest {
+            p: usize_of("P")?,
+            p_pad: usize_of("P_PAD")?,
+            k: usize_of("K")?,
+            b_eval: usize_of("B_EVAL")?,
+            b_eval_block: kv.get("B_EVAL_BLOCK").and_then(|v| v.parse().ok()).unwrap_or(0),
+            input_dim: usize_of("INPUT_DIM")?,
+            num_classes: usize_of("NUM_CLASSES")?,
+            hidden: list_of("HIDDEN")?,
+            train_batch_sizes: list_of("TRAIN_BATCH_SIZES")?,
+            artifacts: get("ARTIFACTS")?.split(',').map(|s| s.to_string()).collect(),
+        };
+        if m.p_pad < m.p {
+            bail!("P_PAD {} < P {}", m.p_pad, m.p);
+        }
+        for name in &m.artifacts {
+            let f = dir.join(format!("{name}.hlo.txt"));
+            if !f.exists() {
+                bail!("manifest lists {name} but {f:?} is missing");
+            }
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join(format!("scalesfl-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::File::create(dir.join("foo.hlo.txt")).unwrap();
+        write_manifest(
+            &dir,
+            "P=235146\nP_PAD=235520\nK=8\nB_EVAL=256\nINPUT_DIM=784\nNUM_CLASSES=10\nHIDDEN=256,128\nTRAIN_BATCH_SIZES=10,20,32\nARTIFACTS=foo\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.p, 235146);
+        assert_eq!(m.hidden, vec![256, 128]);
+        assert_eq!(m.artifacts, vec!["foo"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let dir = std::env::temp_dir().join(format!("scalesfl-manifest2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "P=1\nP_PAD=1024\nK=8\nB_EVAL=4\nINPUT_DIM=4\nNUM_CLASSES=2\nHIDDEN=2\nTRAIN_BATCH_SIZES=2\nARTIFACTS=missing\n",
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.p_pad % 1024 == 0);
+            assert!(m.artifacts.iter().any(|a| a == "eval_step"));
+        }
+    }
+}

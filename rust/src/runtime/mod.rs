@@ -1,0 +1,48 @@
+//! PJRT runtime: load the AOT artifacts and execute them from the L3 hot
+//! path. Python never runs here — `make artifacts` lowered everything to
+//! HLO text, which we parse, compile once per worker, and execute via the
+//! `xla` crate's CPU PJRT client.
+//!
+//! `PjRtClient`/`PjRtLoadedExecutable` are not `Send`, so the runtime owns a
+//! set of worker threads that each hold their own client + compiled
+//! executables; callers submit jobs over a channel and block on a reply.
+//! This mirrors the paper's "peer worker" processes (one gRPC worker per
+//! peer) and lets every simulated peer evaluate models concurrently.
+
+pub mod manifest;
+pub mod ops;
+pub mod service;
+pub mod tensor;
+
+pub use manifest::Manifest;
+pub use ops::ModelOps;
+pub use service::{Runtime, RuntimeConfig};
+pub use tensor::Tensor;
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Shared runtime for tests/benches: compiled once per process.
+///
+/// Returns `None` when `make artifacts` has not been run (tests that need
+/// real PJRT skip themselves in that case).
+pub fn shared() -> Option<std::sync::Arc<Runtime>> {
+    use std::sync::OnceLock;
+    static SHARED: OnceLock<Option<std::sync::Arc<Runtime>>> = OnceLock::new();
+    SHARED
+        .get_or_init(|| {
+            let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS);
+            if !dir.join("manifest.txt").exists() {
+                eprintln!("runtime::shared — artifacts not built, skipping");
+                return None;
+            }
+            let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Some(Runtime::load(&RuntimeConfig { artifacts_dir: dir, workers }).expect("load runtime"))
+        })
+        .clone()
+}
+
+/// Shared `ModelOps` over [`shared`].
+pub fn shared_ops() -> Option<ModelOps> {
+    shared().map(ModelOps::new)
+}

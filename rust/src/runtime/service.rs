@@ -1,0 +1,246 @@
+//! The runtime service: worker threads that each own a PJRT CPU client and
+//! the full set of compiled executables, fed by a shared job queue.
+//!
+//! Job submission is blocking (the caller waits on a reply channel); the
+//! per-worker client gives true pipeline parallelism when the host has
+//! multiple cores, and a faithful "one single-threaded worker per peer"
+//! model when capped at one (the paper's experimental configuration).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// Runtime configuration.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: PathBuf,
+    /// PJRT worker threads (each compiles its own copy of all executables).
+    pub workers: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig { artifacts_dir: PathBuf::from(super::DEFAULT_ARTIFACTS), workers: 1 }
+    }
+}
+
+struct Job {
+    exec: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Handle to the runtime service. Cloneable; shared by all peers/clients.
+pub struct Runtime {
+    tx: Mutex<mpsc::Sender<Job>>,
+    manifest: Manifest,
+    handles: Vec<thread::JoinHandle<()>>,
+    /// Total executions and total busy nanoseconds (for calibration).
+    exec_count: Arc<AtomicU64>,
+    busy_ns: Arc<AtomicU64>,
+}
+
+impl Runtime {
+    /// Load the manifest and spin up workers; each worker parses + compiles
+    /// every artifact once at startup.
+    pub fn load(cfg: &RuntimeConfig) -> Result<Arc<Runtime>> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let exec_count = Arc::new(AtomicU64::new(0));
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let dir = cfg.artifacts_dir.clone();
+            let names = manifest.artifacts.clone();
+            let ready = ready_tx.clone();
+            let exec_count = Arc::clone(&exec_count);
+            let busy_ns = Arc::clone(&busy_ns);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pjrt-{w}"))
+                    .spawn(move || worker_main(rx, dir, names, ready, exec_count, busy_ns))
+                    .expect("spawn pjrt worker"),
+            );
+        }
+        drop(ready_tx);
+        // Wait for every worker to finish compiling (or fail fast).
+        for _ in 0..cfg.workers.max(1) {
+            ready_rx.recv().context("pjrt worker died during startup")??;
+        }
+        Ok(Arc::new(Runtime { tx: Mutex::new(tx), manifest, handles, exec_count, busy_ns }))
+    }
+
+    /// Convenience: default config with `workers` threads.
+    pub fn load_default(workers: usize) -> Result<Arc<Runtime>> {
+        // Resolve artifacts relative to the crate root so tests/benches work
+        // from any working directory.
+        let mut dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        dir.push(super::DEFAULT_ARTIFACTS);
+        Runtime::load(&RuntimeConfig { artifacts_dir: dir, workers })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name; blocks until the result is ready.
+    pub fn run(&self, exec: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, wait) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Job { exec: exec.to_string(), inputs, reply })
+                .map_err(|_| anyhow!("runtime stopped"))?;
+        }
+        wait.recv().map_err(|_| anyhow!("runtime worker dropped job"))?
+    }
+
+    /// (executions, mean service seconds) since startup — used to calibrate
+    /// the DES service-time model.
+    pub fn stats(&self) -> (u64, f64) {
+        let n = self.exec_count.load(Ordering::Relaxed);
+        let ns = self.busy_ns.load(Ordering::Relaxed);
+        (n, if n == 0 { 0.0 } else { ns as f64 / n as f64 / 1e9 })
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        // Close the queue, then join workers.
+        {
+            let (dead_tx, _) = mpsc::channel();
+            let mut guard = self.tx.lock().unwrap();
+            *guard = dead_tx;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    dir: PathBuf,
+    names: Vec<String>,
+    ready: mpsc::Sender<Result<()>>,
+    exec_count: Arc<AtomicU64>,
+    busy_ns: Arc<AtomicU64>,
+) {
+    let setup = || -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let mut execs = HashMap::new();
+        for name in &names {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            execs.insert(name.clone(), exe);
+        }
+        Ok((client, execs))
+    };
+    let (_client, execs) = match setup() {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(job) = job else { return };
+        let started = Instant::now();
+        let result = run_one(&execs, &job.exec, &job.inputs);
+        busy_ns.fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        exec_count.fetch_add(1, Ordering::Relaxed);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_one(
+    execs: &HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let Some(exe) = execs.get(name) else {
+        bail!("unknown executable '{name}'");
+    };
+    let mut literals = Vec::with_capacity(inputs.len());
+    for t in inputs {
+        literals.push(t.to_literal()?);
+    }
+    let out = exe.execute::<xla::Literal>(&literals)?;
+    // AOT lowers with return_tuple=True: one device, one tuple literal.
+    let lit = out
+        .first()
+        .and_then(|d| d.first())
+        .context("empty execution result")?
+        .to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    parts.iter().map(Tensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        crate::runtime::shared()
+    }
+
+    #[test]
+    fn init_params_returns_padded_vector() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.manifest().clone();
+        let out = rt.run("init_params", vec![Tensor::scalar_i32(0)]).unwrap();
+        assert_eq!(out.len(), 1);
+        let params = out[0].as_f32().unwrap();
+        assert_eq!(params.len(), m.p_pad);
+        // padding region is zero
+        assert!(params[m.p..].iter().all(|&v| v == 0.0));
+        // deterministic
+        let again = rt.run("init_params", vec![Tensor::scalar_i32(0)]).unwrap();
+        assert_eq!(out[0], again[0]);
+    }
+
+    #[test]
+    fn unknown_executable_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.run("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn fedavg_agg_executes() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.manifest().clone();
+        let stack = vec![1.0f32; m.k * m.p_pad];
+        let mut weights = vec![0.0f32; m.k];
+        weights[0] = 1.0;
+        let out = rt
+            .run(
+                "fedavg_agg",
+                vec![Tensor::mat_f32(stack, m.k, m.p_pad), Tensor::vec_f32(weights)],
+            )
+            .unwrap();
+        let agg = out[0].as_f32().unwrap();
+        assert_eq!(agg.len(), m.p_pad);
+        assert!(agg.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

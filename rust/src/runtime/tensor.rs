@@ -1,0 +1,147 @@
+//! Host tensors crossing the Rust <-> PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// A host tensor (f32 or i32) with shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32(vec![v], vec![])
+    }
+
+    pub fn vec_f32(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::F32(v, vec![n])
+    }
+
+    pub fn vec_i32(v: Vec<i32>) -> Tensor {
+        let n = v.len();
+        Tensor::I32(v, vec![n])
+    }
+
+    pub fn mat_f32(v: Vec<f32>, rows: usize, cols: usize) -> Tensor {
+        assert_eq!(v.len(), rows * cols);
+        Tensor::F32(v, vec![rows, cols])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v, _) => v.len(),
+            Tensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar extraction (len-1 tensors of either dtype, widened to f64).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Tensor::F32(v, _) if v.len() == 1 => Ok(v[0] as f64),
+            Tensor::I32(v, _) if v.len() == 1 => Ok(v[0] as f64),
+            _ => bail!("tensor is not a scalar (len {})", self.len()),
+        }
+    }
+
+    /// Build the xla literal for this tensor.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, s) => {
+                if s.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            Tensor::I32(v, s) => {
+                if s.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Tensor::mat_f32(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert!(Tensor::scalar_f32(5.0).scalar().unwrap() == 5.0);
+        assert!(Tensor::vec_i32(vec![1, 2]).scalar().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::mat_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 42.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Sharding: client-to-shard assignment strategies and per-round committee
+//! (endorsing peer) election — the paper's §3 contribution surface.
+//!
+//! Assignment is pluggable (random / region-based / organisation-based,
+//! §5 "Hierarchical Sharding"); committees are re-elected per round either
+//! randomly (the paper's implementation simplification) or by score from the
+//! previous round (Li et al.'s committee consensus).
+
+use std::collections::HashMap;
+
+use crate::util::prng::Prng;
+
+/// Identifies a shard (channel `shard{N}`).
+pub type ShardId = usize;
+
+/// A participant eligible for shard assignment.
+#[derive(Clone, Debug)]
+pub struct Participant {
+    pub id: usize,
+    /// Region label for region-based placement (e.g. latency domain).
+    pub region: usize,
+    /// Organisation for consortium grouping.
+    pub org: usize,
+}
+
+/// Client-to-shard assignment strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assignment {
+    /// Uniform random (the paper's default; resists single-shard takeover).
+    Random,
+    /// Group by region to cut intra-shard latency (§5).
+    ByRegion,
+    /// Group by organisation (cross-silo / consortium settings, §5).
+    ByOrg,
+}
+
+/// Assign participants to `shards` shards.
+pub fn assign(
+    participants: &[Participant],
+    shards: usize,
+    strategy: Assignment,
+    rng: &mut Prng,
+) -> HashMap<ShardId, Vec<usize>> {
+    assert!(shards > 0);
+    let mut out: HashMap<ShardId, Vec<usize>> = (0..shards).map(|s| (s, Vec::new())).collect();
+    match strategy {
+        Assignment::Random => {
+            let mut ids: Vec<usize> = participants.iter().map(|p| p.id).collect();
+            rng.shuffle(&mut ids);
+            for (i, id) in ids.into_iter().enumerate() {
+                out.get_mut(&(i % shards)).unwrap().push(id);
+            }
+        }
+        Assignment::ByRegion => {
+            for p in participants {
+                out.get_mut(&(p.region % shards)).unwrap().push(p.id);
+            }
+        }
+        Assignment::ByOrg => {
+            for p in participants {
+                out.get_mut(&(p.org % shards)).unwrap().push(p.id);
+            }
+        }
+    }
+    out
+}
+
+/// Committee election policy for a shard round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Election {
+    /// Uniform random committee (paper's implementation).
+    Random,
+    /// Highest-scoring peers from the previous round (committee consensus).
+    ByScore,
+}
+
+/// Elect `committee_size` endorsing peers from the shard's peer list.
+///
+/// `scores` maps peer id -> previous-round score (higher = better); peers
+/// without a score default to 0 (ByScore) and ties break deterministically
+/// by id so every honest node elects the same committee.
+pub fn elect_committee(
+    peers: &[usize],
+    committee_size: usize,
+    policy: Election,
+    scores: &HashMap<usize, f64>,
+    rng: &mut Prng,
+) -> Vec<usize> {
+    let n = committee_size.min(peers.len());
+    match policy {
+        Election::Random => {
+            let idx = rng.sample_indices(peers.len(), n);
+            let mut c: Vec<usize> = idx.into_iter().map(|i| peers[i]).collect();
+            c.sort_unstable();
+            c
+        }
+        Election::ByScore => {
+            let mut ranked: Vec<usize> = peers.to_vec();
+            ranked.sort_by(|a, b| {
+                let (sa, sb) = (scores.get(a).unwrap_or(&0.0), scores.get(b).unwrap_or(&0.0));
+                sb.partial_cmp(sa).unwrap().then(a.cmp(b))
+            });
+            let mut c: Vec<usize> = ranked.into_iter().take(n).collect();
+            c.sort_unstable();
+            c
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn participants(n: usize) -> Vec<Participant> {
+        (0..n).map(|id| Participant { id, region: id % 3, org: id % 4 }).collect()
+    }
+
+    #[test]
+    fn random_assignment_is_balanced_partition() {
+        let mut rng = Prng::new(1);
+        let ps = participants(64);
+        let m = assign(&ps, 8, Assignment::Random, &mut rng);
+        let mut all: Vec<usize> = m.values().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+        for v in m.values() {
+            assert_eq!(v.len(), 8);
+        }
+    }
+
+    #[test]
+    fn region_assignment_groups_regions() {
+        let mut rng = Prng::new(2);
+        let ps = participants(30);
+        let m = assign(&ps, 3, Assignment::ByRegion, &mut rng);
+        for (shard, members) in &m {
+            for id in members {
+                assert_eq!(ps[*id].region % 3, *shard);
+            }
+        }
+    }
+
+    #[test]
+    fn committee_random_is_deterministic_given_seed() {
+        let peers: Vec<usize> = (0..16).collect();
+        let scores = HashMap::new();
+        let a = elect_committee(&peers, 4, Election::Random, &scores, &mut Prng::new(7));
+        let b = elect_committee(&peers, 4, Election::Random, &scores, &mut Prng::new(7));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn committee_by_score_picks_top() {
+        let peers: Vec<usize> = (0..6).collect();
+        let scores: HashMap<usize, f64> =
+            [(0, 0.1), (1, 0.9), (2, 0.5), (3, 0.9), (4, 0.0), (5, 0.2)].into();
+        let c = elect_committee(&peers, 3, Election::ByScore, &scores, &mut Prng::new(1));
+        assert_eq!(c, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn committee_size_capped_at_peer_count() {
+        let peers = vec![3, 5];
+        let c =
+            elect_committee(&peers, 10, Election::Random, &HashMap::new(), &mut Prng::new(1));
+        assert_eq!(c, vec![3, 5]);
+    }
+
+    #[test]
+    fn property_assignment_is_always_partition() {
+        check("assign-partition", 24, |rng| {
+            let n = rng.range(1, 100);
+            let s = rng.range(1, 9);
+            let ps = participants(n);
+            let strat = match rng.below(3) {
+                0 => Assignment::Random,
+                1 => Assignment::ByRegion,
+                _ => Assignment::ByOrg,
+            };
+            let m = assign(&ps, s, strat, rng);
+            let mut all: Vec<usize> = m.values().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>());
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Flat FedAvg baseline (McMahan et al.) — the comparison line in Fig 9 /
+//! Table 2: the same clients and hyperparameters, but a single trusted
+//! aggregator and no blockchain/sharding.
+
+use anyhow::Result;
+
+use crate::fl::client::{Behavior, FlClient, TrainConfig};
+use crate::fl::datasets::{self, SynthDataset};
+use crate::fl::partition;
+use crate::runtime::ops::{EvalResult, FlatParams, ModelOps};
+use crate::util::prng::Prng;
+
+use super::network::Partition;
+
+/// Baseline configuration (mirrors the relevant SimConfig knobs).
+#[derive(Clone, Debug)]
+pub struct FedAvgConfig {
+    pub clients: usize,
+    pub train: TrainConfig,
+    pub partition: Partition,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub seed: u64,
+}
+
+impl Default for FedAvgConfig {
+    fn default() -> Self {
+        FedAvgConfig {
+            clients: 8,
+            train: TrainConfig::default(),
+            partition: Partition::Iid,
+            samples_per_client: 100,
+            test_samples: 512,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-round result of the baseline run.
+#[derive(Clone, Debug)]
+pub struct BaselineRound {
+    pub round: u64,
+    pub mean_train_loss: f64,
+    pub global_eval: EvalResult,
+}
+
+/// Run `rounds` of flat FedAvg; aggregation is hierarchical in chunks of K
+/// (the runtime's stacked-aggregation width) which is numerically identical
+/// to the flat sample-weighted mean.
+pub fn fedavg_baseline(
+    cfg: &FedAvgConfig,
+    ops: &ModelOps,
+    rounds: u64,
+) -> Result<Vec<BaselineRound>> {
+    let mut rng = Prng::new(cfg.seed);
+    let dim = ops.input_dim();
+    let classes = 10;
+    let client_data: Vec<SynthDataset> = match cfg.partition {
+        Partition::Iid => {
+            let pool = datasets::mnist_like(
+                cfg.seed,
+                cfg.seed.wrapping_add(1),
+                cfg.clients * cfg.samples_per_client,
+                dim,
+                classes,
+            );
+            partition::iid(&pool, cfg.clients, &mut rng)
+        }
+        Partition::Dirichlet { alpha } => {
+            let pool = datasets::mnist_like(
+                cfg.seed,
+                cfg.seed.wrapping_add(1),
+                cfg.clients * cfg.samples_per_client,
+                dim,
+                classes,
+            );
+            partition::dirichlet(&pool, cfg.clients, alpha, &mut rng)
+        }
+        Partition::Writer => {
+            partition::by_writer(cfg.seed, cfg.clients, cfg.samples_per_client, dim, classes)
+        }
+    };
+    let test = datasets::mnist_like(cfg.seed, cfg.seed ^ 0xFEED, cfg.test_samples, dim, classes);
+    let mut clients: Vec<FlClient> = client_data
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| FlClient::new(i, d, Behavior::Honest, rng.fork(i as u64)))
+        .collect();
+
+    let mut global = ops.init_params(cfg.seed as i32)?;
+    let mut reports = Vec::new();
+    for round in 1..=rounds {
+        let mut updates: Vec<(FlatParams, f64)> = Vec::new();
+        let mut losses = Vec::new();
+        for c in clients.iter_mut() {
+            let up = c.train(ops, &global, &cfg.train)?;
+            losses.push(up.train_loss);
+            updates.push((up.params, up.samples as f64));
+        }
+        global = aggregate_chunked(ops, &updates)?;
+        let global_eval = ops.evaluate(&global, &test.x, &test.y)?;
+        reports.push(BaselineRound {
+            round,
+            mean_train_loss: crate::util::mean(&losses),
+            global_eval,
+        });
+    }
+    Ok(reports)
+}
+
+/// Sample-weighted mean of arbitrarily many updates via K-wide stacked
+/// aggregation: chunk, aggregate each chunk, then aggregate the chunk
+/// results weighted by their chunk sample totals (exact, by linearity).
+pub fn aggregate_chunked(ops: &ModelOps, updates: &[(FlatParams, f64)]) -> Result<FlatParams> {
+    let k = ops.k();
+    if updates.len() <= k {
+        let refs: Vec<&FlatParams> = updates.iter().map(|(p, _)| p).collect();
+        let ws: Vec<f64> = updates.iter().map(|(_, w)| *w).collect();
+        return ops.fedavg_agg(&refs, &ws);
+    }
+    let mut level: Vec<(FlatParams, f64)> = Vec::new();
+    for chunk in updates.chunks(k) {
+        let refs: Vec<&FlatParams> = chunk.iter().map(|(p, _)| p).collect();
+        let ws: Vec<f64> = chunk.iter().map(|(_, w)| *w).collect();
+        let agg = ops.fedavg_agg(&refs, &ws)?;
+        level.push((agg, ws.iter().sum()));
+    }
+    aggregate_chunked(ops, &level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_learns() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let cfg = FedAvgConfig {
+            clients: 4,
+            samples_per_client: 60,
+            test_samples: 128,
+            train: TrainConfig { batch: 10, epochs: 2, lr: 0.05, dp: None },
+            ..Default::default()
+        };
+        let rounds = fedavg_baseline(&cfg, &ops, 3).unwrap();
+        assert_eq!(rounds.len(), 3);
+        assert!(
+            rounds[2].global_eval.accuracy > rounds[0].global_eval.accuracy * 0.9,
+            "{rounds:?}"
+        );
+        assert!(rounds[2].global_eval.accuracy > 0.3);
+    }
+
+    #[test]
+    fn chunked_aggregation_matches_flat_mean() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let p = ops.p_pad();
+        // 20 updates of constant vectors: weighted mean is analytic.
+        let updates: Vec<(FlatParams, f64)> =
+            (0..20).map(|i| (vec![i as f32; p], (i + 1) as f64)).collect();
+        let total_w: f64 = updates.iter().map(|(_, w)| w).sum();
+        let expect: f64 =
+            updates.iter().map(|(u, w)| u[0] as f64 * w).sum::<f64>() / total_w;
+        let agg = aggregate_chunked(&ops, &updates).unwrap();
+        assert!(
+            (agg[0] as f64 - expect).abs() < 1e-4,
+            "{} vs {expect}",
+            agg[0]
+        );
+    }
+}

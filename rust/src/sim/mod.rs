@@ -1,0 +1,9 @@
+//! Full-system assembly: build a ScaleSFL deployment (S shard channels +
+//! the mainchain, peers, orderer, chaincodes, FL clients) and drive
+//! federated rounds end-to-end through the blockchain (paper §3.4 workflow).
+
+pub mod fedavg;
+pub mod network;
+
+pub use fedavg::{aggregate_chunked, fedavg_baseline, BaselineRound, FedAvgConfig};
+pub use network::{AggDefense, DefenseChoice, Partition, RoundReport, ScaleSfl, SimConfig};

@@ -1,0 +1,735 @@
+//! The ScaleSFL network: S shard channels + mainchain, committee peers with
+//! per-peer local eval splits, the Raft orderer, and the full §3.4 round
+//! workflow (client training → off-chain storage → model submission →
+//! endorsement/defence → shard aggregation → mainchain consensus → global
+//! aggregation → pin + redistribute).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::chaincode::{CatalystChaincode, ModelMeta, ModelsChaincode};
+use crate::crypto::msp::{CertificateAuthority, MemberId};
+use crate::defense::endorse::{EndorsementDefense, NoDefense, NormBound, Roni};
+use crate::defense::{detect_lazy, foolsgold_weights, multi_krum};
+use crate::fabric::{EndorsementPolicy, Gateway, OrdererConfig, OrderingService, Peer};
+use crate::fl::client::{Behavior, FlClient, LocalUpdate, TrainConfig};
+use crate::fl::datasets::{self, SynthDataset};
+use crate::fl::partition;
+use crate::runtime::ops::{EvalResult, FlatParams, ModelOps};
+use crate::storage::ModelStore;
+use crate::util::prng::Prng;
+
+/// Endorsement-time defence selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DefenseChoice {
+    None,
+    Roni { max_degradation: f64 },
+    NormBound { max_norm: f64 },
+}
+
+/// Aggregation-time defence selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggDefense {
+    None,
+    MultiKrum { f: usize },
+    FoolsGold,
+    /// FoolsGold weights over the Multi-Krum survivor set.
+    Both { f: usize },
+}
+
+/// Dataset / partition selection (paper §4.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    Iid,
+    Dirichlet { alpha: f64 },
+    Writer,
+}
+
+/// Deployment + workload configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub shards: usize,
+    /// Peers per shard; the paper relaxes P = P_E (every peer endorses).
+    pub peers_per_shard: usize,
+    /// Clients sampled per shard per round.
+    pub clients_per_shard: usize,
+    pub train: TrainConfig,
+    pub defense: DefenseChoice,
+    pub agg_defense: AggDefense,
+    pub partition: Partition,
+    pub samples_per_client: usize,
+    /// Per-peer held-out split size (RONI baseline data).
+    pub eval_samples: usize,
+    /// Global test set size (reported accuracy).
+    pub test_samples: usize,
+    /// Mainchain endorsers verify the posted global numerically.
+    pub verify_aggregate: bool,
+    /// PN amplitude (0 disables the lazy-client defence).
+    pub pn_amplitude: f32,
+    pub seed: u64,
+    /// Transaction timeout (paper: 30 s).
+    pub timeout: Duration,
+    /// Endorsing committee size per shard per round (None = every peer
+    /// endorses, the paper's P = P_E relaxation). When set, a committee is
+    /// re-elected each round (paper §2.2.1 committee consensus).
+    pub committee_size: Option<usize>,
+    /// Committee election policy (paper: randomized for simplicity, or
+    /// score-based from the previous round).
+    pub election: crate::sharding::Election,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            shards: 2,
+            peers_per_shard: 2,
+            clients_per_shard: 4,
+            train: TrainConfig::default(),
+            defense: DefenseChoice::None,
+            agg_defense: AggDefense::None,
+            partition: Partition::Iid,
+            samples_per_client: 100,
+            eval_samples: 64,
+            test_samples: 512,
+            verify_aggregate: true,
+            pn_amplitude: 0.0,
+            seed: 42,
+            timeout: Duration::from_secs(30),
+            committee_size: None,
+            election: crate::sharding::Election::Random,
+        }
+    }
+}
+
+/// One shard: its channel name, committee peers, and clients.
+pub struct Shard {
+    pub id: usize,
+    pub channel: String,
+    pub peers: Vec<Arc<Peer>>,
+    pub clients: Vec<FlClient>,
+}
+
+/// Per-round outcome (drives Fig 9 / Table 2 and the defence studies).
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub round: u64,
+    pub accepted_updates: usize,
+    pub rejected_updates: usize,
+    pub lazy_detected: usize,
+    pub mean_train_loss: f64,
+    pub global_eval: EvalResult,
+}
+
+/// A running ScaleSFL deployment.
+pub struct ScaleSfl {
+    pub cfg: SimConfig,
+    pub ops: ModelOps,
+    pub store: ModelStore,
+    pub ca: CertificateAuthority,
+    pub shards: Vec<Shard>,
+    pub all_peers: Vec<Arc<Peer>>,
+    pub orderer: Arc<OrderingService>,
+    pub test_set: SynthDataset,
+    pub global: FlatParams,
+    pub round: u64,
+    rng: Prng,
+    /// Endorsement-evaluation invocations per round (ablation metric:
+    /// C x P_E / S^2 per shard — paper §3.2).
+    pub eval_invocations: u64,
+    /// Per-peer committee scores (successful endorsement participations).
+    scores: std::collections::HashMap<usize, f64>,
+    /// This round's elected committee per shard (peer indices).
+    committees: Vec<Vec<usize>>,
+}
+
+pub const MAINCHAIN: &str = "mainchain";
+
+impl ScaleSfl {
+    /// Build the network: enrol identities, create channels, install
+    /// chaincodes (per-peer instances with private eval splits), start the
+    /// orderer, partition data, and initialise the global model.
+    pub fn build(cfg: SimConfig, ops: ModelOps) -> Result<ScaleSfl> {
+        let mut rng = Prng::new(cfg.seed);
+        let ca = CertificateAuthority::new();
+        let store = ModelStore::new();
+        let dim = ops.input_dim();
+        let classes = 10;
+
+        // Global pool of client datasets.
+        let total_clients = cfg.shards * cfg.clients_per_shard;
+        let client_data: Vec<SynthDataset> = match cfg.partition {
+            Partition::Iid => {
+                let pool = datasets::mnist_like(
+                    cfg.seed,
+                    cfg.seed.wrapping_add(1),
+                    total_clients * cfg.samples_per_client,
+                    dim,
+                    classes,
+                );
+                partition::iid(&pool, total_clients, &mut rng)
+            }
+            Partition::Dirichlet { alpha } => {
+                let pool = datasets::mnist_like(
+                    cfg.seed,
+                    cfg.seed.wrapping_add(1),
+                    total_clients * cfg.samples_per_client,
+                    dim,
+                    classes,
+                );
+                partition::dirichlet(&pool, total_clients, alpha, &mut rng)
+            }
+            Partition::Writer => partition::by_writer(
+                cfg.seed,
+                total_clients,
+                cfg.samples_per_client,
+                dim,
+                classes,
+            ),
+        };
+        let test_set = datasets::mnist_like(cfg.seed, cfg.seed ^ 0xFEED, cfg.test_samples, dim, classes);
+
+        let mut shards = Vec::with_capacity(cfg.shards);
+        let mut all_peers = Vec::new();
+        let mut all_members = Vec::new();
+        let mut client_iter = client_data.into_iter();
+        for s in 0..cfg.shards {
+            let channel = format!("shard{s}");
+            let mut peers = Vec::with_capacity(cfg.peers_per_shard);
+            let mut members = Vec::with_capacity(cfg.peers_per_shard);
+            for p in 0..cfg.peers_per_shard {
+                let cred =
+                    ca.enroll(MemberId::new(format!("org{s}x{p}.peer")), &mut rng);
+                let peer = Peer::new(cred, ca.clone());
+                members.push(peer.member.clone());
+                peers.push(peer);
+            }
+            all_members.extend(members.clone());
+            let policy = EndorsementPolicy::MajorityOf(members);
+            for (p, peer) in peers.iter().enumerate() {
+                peer.join_channel(&channel, policy.clone());
+                // Per-peer private eval split (paper: "potentially unique to
+                // each endorsing peer").
+                let eval_data = datasets::mnist_like(
+                    cfg.seed,
+                    cfg.seed ^ (0xE0 + s as u64 * 131 + p as u64),
+                    cfg.eval_samples,
+                    dim,
+                    classes,
+                );
+                let defense: Arc<dyn EndorsementDefense> = match cfg.defense {
+                    DefenseChoice::None => Arc::new(NoDefense),
+                    DefenseChoice::Roni { max_degradation } => Arc::new(Roni { max_degradation }),
+                    DefenseChoice::NormBound { max_norm } => Arc::new(NormBound { max_norm }),
+                };
+                peer.install_chaincode(
+                    &channel,
+                    Arc::new(ModelsChaincode {
+                        store: store.clone(),
+                        ops: ops.clone(),
+                        defense,
+                        eval_data,
+                    }),
+                )
+                .map_err(|e| anyhow!(e))?;
+            }
+            let clients = (0..cfg.clients_per_shard)
+                .map(|c| {
+                    let data = client_iter.next().expect("client data");
+                    FlClient::new(
+                        s * cfg.clients_per_shard + c,
+                        data,
+                        Behavior::Honest,
+                        rng.fork((s * 1000 + c) as u64),
+                    )
+                })
+                .collect();
+            shards.push(Shard { id: s, channel, peers: peers.clone(), clients });
+            all_peers.extend(peers);
+        }
+
+        // Mainchain: every peer joins; catalyst chaincode installed on all.
+        let main_policy = EndorsementPolicy::MajorityOf(all_members);
+        for peer in &all_peers {
+            peer.join_channel(MAINCHAIN, main_policy.clone());
+            peer.install_chaincode(
+                MAINCHAIN,
+                Arc::new(CatalystChaincode {
+                    store: store.clone(),
+                    ops: ops.clone(),
+                    verify_aggregate: cfg.verify_aggregate,
+                }),
+            )
+            .map_err(|e| anyhow!(e))?;
+        }
+
+        let orderer = OrderingService::start(
+            OrdererConfig {
+                batch_size: 16,
+                batch_timeout: Duration::from_millis(20),
+                ..Default::default()
+            },
+            all_peers.clone(),
+            cfg.seed ^ 0x0DDE,
+        );
+        let global = ops.init_params(cfg.seed as i32)?;
+        let mut net = ScaleSfl {
+            cfg,
+            ops,
+            store,
+            ca,
+            shards,
+            all_peers,
+            orderer,
+            test_set,
+            global,
+            round: 1,
+            rng,
+            eval_invocations: 0,
+            scores: std::collections::HashMap::new(),
+            committees: Vec::new(),
+        };
+        // Pin the initial model as round 0 on every shard so round-1
+        // endorsers have a baseline for RONI/norm-bound checks.
+        let (gdigest, guri) = net.store.put(net.global.clone());
+        for s in 0..net.shards.len() {
+            let proposal = crate::ledger::tx::Proposal {
+                channel: net.shards[s].channel.clone(),
+                chaincode: "models".into(),
+                function: "PinGlobalModel".into(),
+                args: vec!["0".into(), gdigest.hex(), guri.clone(), "0".into()],
+                creator: net.shards[s].peers[0].member.clone(),
+                nonce: net.rng.next_u64(),
+            };
+            let outcome = net.shard_gateway(s).submit_and_wait(&proposal);
+            if !outcome.is_valid() {
+                bail!("initial PinGlobalModel failed on shard {s}: {outcome:?}");
+            }
+        }
+        Ok(net)
+    }
+
+    /// Inject adversarial behaviour into specific clients (global ids).
+    pub fn set_behavior(&mut self, client_id: usize, behavior: Behavior) {
+        for shard in &mut self.shards {
+            for c in &mut shard.clients {
+                if c.id == client_id {
+                    c.behavior = behavior;
+                }
+            }
+        }
+    }
+
+    /// Replace a client's local dataset (Sybil injection: give several
+    /// clients the same poisoned data so they share one objective).
+    pub fn set_client_data(&mut self, client_id: usize, data: crate::fl::datasets::SynthDataset) {
+        for shard in &mut self.shards {
+            for c in &mut shard.clients {
+                if c.id == client_id {
+                    c.data = data.clone();
+                }
+            }
+        }
+    }
+
+    fn shard_gateway(&self, s: usize) -> Gateway {
+        // Restrict endorsement fan-out to this round's committee when one
+        // has been elected; otherwise every shard peer endorses.
+        let peers = match self.committees.get(s) {
+            Some(c) if !c.is_empty() => {
+                c.iter().map(|&i| Arc::clone(&self.shards[s].peers[i])).collect()
+            }
+            _ => self.shards[s].peers.clone(),
+        };
+        let mut gw = Gateway::new(peers, Arc::clone(&self.orderer));
+        gw.timeout = self.cfg.timeout;
+        gw
+    }
+
+    /// Re-elect each shard's endorsing committee and install the matching
+    /// endorsement policy on every replica (paper §2.2.1 / §3.2).
+    pub fn elect_committees(&mut self) {
+        let Some(size) = self.cfg.committee_size else {
+            return;
+        };
+        self.committees.clear();
+        for shard in &self.shards {
+            let peer_idx: Vec<usize> = (0..shard.peers.len()).collect();
+            let committee = crate::sharding::elect_committee(
+                &peer_idx,
+                size,
+                self.cfg.election,
+                &self.scores,
+                &mut self.rng,
+            );
+            let members: Vec<MemberId> =
+                committee.iter().map(|&i| shard.peers[i].member.clone()).collect();
+            let policy = EndorsementPolicy::MajorityOf(members);
+            for p in &shard.peers {
+                if let Some(ch) = p.channel(&shard.channel) {
+                    ch.set_policy(policy.clone());
+                }
+            }
+            // Participation score for the elected members.
+            for &i in &committee {
+                *self.scores.entry(shard.id * 1000 + i).or_insert(0.0) += 1.0;
+            }
+            self.committees.push(committee);
+        }
+    }
+
+    /// Model provenance (paper §5): restore the global model pinned on the
+    /// mainchain for `round` (checkpoint recovery after a poisoning event).
+    pub fn restore_from_round(&mut self, round: u64) -> Result<()> {
+        let main = self.all_peers[0]
+            .channel(MAINCHAIN)
+            .context("mainchain channel")?;
+        let raw = main
+            .query(&format!("global/{round:08}"))
+            .with_context(|| format!("round {round} not finalised on the mainchain"))?;
+        let meta = ModelMeta::decode(&raw).map_err(|e| anyhow!(e))?;
+        let digest = crate::crypto::Digest::from_hex(&meta.hash)
+            .ok_or_else(|| anyhow!("bad pinned hash"))?;
+        let blob = self.store.get_verified(&meta.uri, &digest).map_err(|e| anyhow!(e))?;
+        self.global = (*blob).clone();
+        Ok(())
+    }
+
+    fn mainchain_gateway(&self) -> Gateway {
+        let mut gw = Gateway::new(self.all_peers.clone(), Arc::clone(&self.orderer));
+        gw.timeout = self.cfg.timeout;
+        gw
+    }
+
+    /// One full federated round through the blockchain (paper §3.4).
+    pub fn run_round(&mut self) -> Result<RoundReport> {
+        let round = self.round;
+        self.elect_committees();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut lazy_detected = 0usize;
+        let mut losses = Vec::new();
+        let mut shard_models: Vec<(FlatParams, u64)> = Vec::new();
+
+        for s in 0..self.shards.len() {
+            // §3.4.2 client training (off-chain, real PJRT compute).
+            let mut updates: Vec<LocalUpdate> = Vec::new();
+            {
+                let global = self.global.clone();
+                let (train, ops) = (self.cfg.train, self.ops.clone());
+                let pn_amp = self.cfg.pn_amplitude;
+                let shard = &mut self.shards[s];
+                let n_clients = shard.clients.len();
+                let mut published: Vec<LocalUpdate> = Vec::new();
+                for c in shard.clients.iter_mut() {
+                    if let Behavior::Lazy { victim } = c.behavior {
+                        // Lazy client: copy the victim's *published* update
+                        // and stamp its own PN on top (paper §5).
+                        let victim_up = published
+                            .iter()
+                            .find(|u| u.client_id % n_clients == victim)
+                            .or_else(|| published.first());
+                        if let Some(v) = victim_up {
+                            let mut copied = v.clone();
+                            copied.client_id = c.id;
+                            copied.pn_seed = c.pn_seed;
+                            let mut p = copied.clone();
+                            if pn_amp > 0.0 {
+                                crate::defense::apply_pn(&mut p.params, c.pn_seed, pn_amp);
+                            }
+                            published.push(p);
+                            continue;
+                        }
+                    }
+                    let up = c.train(&ops, &global, &train)?;
+                    if !up.train_loss.is_nan() {
+                        losses.push(up.train_loss);
+                    }
+                    let p =
+                        if pn_amp > 0.0 { c.publish_with_pn(up, pn_amp) } else { up };
+                    published.push(p);
+                }
+                updates.extend(published);
+            }
+
+            // §3.4.3-3.4.5 store off-chain, submit metadata, endorse.
+            let gw = self.shard_gateway(s);
+            let channel = self.shards[s].channel.clone();
+            for up in &updates {
+                let (digest, uri) = self.store.put(up.params.clone());
+                let proposal = crate::ledger::tx::Proposal {
+                    channel: channel.clone(),
+                    chaincode: "models".into(),
+                    function: "CreateModelUpdate".into(),
+                    args: vec![
+                        round.to_string(),
+                        format!("client{}", up.client_id),
+                        digest.hex(),
+                        uri,
+                        up.samples.to_string(),
+                    ],
+                    creator: MemberId::new(format!("client{}", up.client_id)),
+                    nonce: self.rng.next_u64(),
+                };
+                let endorsers = match self.committees.get(s) {
+                    Some(c) if !c.is_empty() => c.len(),
+                    _ => self.shards[s].peers.len(),
+                };
+                self.eval_invocations += endorsers as u64;
+                let outcome = gw.submit_and_wait(&proposal);
+                if outcome.is_valid() {
+                    accepted += 1;
+                } else {
+                    rejected += 1;
+                }
+            }
+
+            // §3.4.7 shard aggregation over *committed* updates only
+            // (queried from the peer's ledger, the paper's Flower-strategy
+            // filter).
+            let committed: Vec<ModelMeta> = self.shards[s].peers[0]
+                .channel(&channel)
+                .context("channel")?
+                .scan(&format!("models/{round:08}/"))
+                .into_iter()
+                .filter(|(k, _)| !k.ends_with("/global"))
+                .map(|(_, v)| ModelMeta::decode(&v))
+                .collect::<Result<_, _>>()
+                .map_err(|e| anyhow!(e))?;
+            if committed.is_empty() {
+                continue;
+            }
+            let blobs: Vec<Arc<Vec<f32>>> = committed
+                .iter()
+                .map(|m| {
+                    let d = crate::crypto::Digest::from_hex(&m.hash)
+                        .ok_or_else(|| anyhow!("bad hash"))?;
+                    self.store.get_verified(&m.uri, &d).map_err(|e| anyhow!(e))
+                })
+                .collect::<Result<_>>()?;
+
+            // PN-sequence lazy detection (revealed seeds).
+            let mut keep: Vec<bool> = vec![true; committed.len()];
+            if self.cfg.pn_amplitude > 0.0 {
+                let seeds: Vec<u64> = committed
+                    .iter()
+                    .map(|m| {
+                        updates
+                            .iter()
+                            .find(|u| format!("client{}", u.client_id) == m.client)
+                            .map(|u| u.pn_seed)
+                            .unwrap_or(0)
+                    })
+                    .collect();
+                let deltas: Vec<Vec<f32>> = blobs
+                    .iter()
+                    .map(|b| {
+                        b.iter().zip(&self.global).map(|(&p, &g)| p - g).collect()
+                    })
+                    .collect();
+                for i in detect_lazy(&deltas, &seeds, self.cfg.pn_amplitude, 0.2) {
+                    keep[i] = false;
+                    lazy_detected += 1;
+                }
+            }
+
+            // Aggregation-time defence weights.
+            let kept: Vec<usize> =
+                (0..committed.len()).filter(|&i| keep[i]).collect();
+            if kept.is_empty() {
+                continue;
+            }
+            let kept_blobs: Vec<&Vec<f32>> =
+                kept.iter().map(|&i| blobs[i].as_ref()).collect();
+            let mut weights: Vec<f64> =
+                kept.iter().map(|&i| committed[i].samples as f64).collect();
+            match self.cfg.agg_defense {
+                AggDefense::None => {}
+                AggDefense::MultiKrum { f } => {
+                    let d = self.ops.pairwise_dist(&kept_blobs)?;
+                    let sel = multi_krum(&d, f);
+                    for (pos, w) in weights.iter_mut().enumerate() {
+                        if !sel.contains(&pos) {
+                            *w = 0.0;
+                        }
+                    }
+                }
+                AggDefense::FoolsGold => {
+                    let deltas: Vec<Vec<f32>> = kept_blobs
+                        .iter()
+                        .map(|b| b.iter().zip(&self.global).map(|(&p, &g)| p - g).collect())
+                        .collect();
+                    let drefs: Vec<&Vec<f32>> = deltas.iter().collect();
+                    let c = self.ops.cosine_sim(&drefs)?;
+                    for (w, fg) in weights.iter_mut().zip(foolsgold_weights(&c)) {
+                        *w *= fg;
+                    }
+                }
+                AggDefense::Both { f } => {
+                    let d = self.ops.pairwise_dist(&kept_blobs)?;
+                    let sel = multi_krum(&d, f);
+                    let deltas: Vec<Vec<f32>> = kept_blobs
+                        .iter()
+                        .map(|b| b.iter().zip(&self.global).map(|(&p, &g)| p - g).collect())
+                        .collect();
+                    let drefs: Vec<&Vec<f32>> = deltas.iter().collect();
+                    let c = self.ops.cosine_sim(&drefs)?;
+                    let fg = foolsgold_weights(&c);
+                    for (pos, w) in weights.iter_mut().enumerate() {
+                        *w *= if sel.contains(&pos) { fg[pos] } else { 0.0 };
+                    }
+                }
+            }
+            if weights.iter().sum::<f64>() <= 0.0 {
+                continue;
+            }
+            let shard_model = self.ops.fedavg_agg(&kept_blobs, &weights)?;
+            let shard_samples: u64 = kept
+                .iter()
+                .zip(&weights)
+                .filter(|(_, &w)| w > 0.0)
+                .map(|(&i, _)| committed[i].samples)
+                .sum();
+
+            // §3.4.7 publish the shard aggregate to the mainchain.
+            let (digest, uri) = self.store.put(shard_model.clone());
+            let proposal = crate::ledger::tx::Proposal {
+                channel: MAINCHAIN.into(),
+                chaincode: "catalyst".into(),
+                function: "SubmitShardModel".into(),
+                args: vec![
+                    round.to_string(),
+                    format!("shard{s}"),
+                    digest.hex(),
+                    uri,
+                    shard_samples.to_string(),
+                ],
+                creator: self.shards[s].peers[0].member.clone(),
+                nonce: self.rng.next_u64(),
+            };
+            let outcome = self.mainchain_gateway().submit_and_wait(&proposal);
+            if !outcome.is_valid() {
+                bail!("shard {s} mainchain submission failed: {outcome:?}");
+            }
+            shard_models.push((shard_model, shard_samples));
+        }
+
+        if shard_models.is_empty() {
+            bail!("round {round}: no shard produced a model");
+        }
+
+        // §3.4.8 global aggregation + finalisation on the mainchain.
+        let refs: Vec<&FlatParams> = shard_models.iter().map(|(m, _)| m).collect();
+        let ws: Vec<f64> = shard_models.iter().map(|(_, n)| *n as f64).collect();
+        let new_global = self.ops.fedavg_agg(&refs, &ws)?;
+        let (gdigest, guri) = self.store.put(new_global.clone());
+        let proposal = crate::ledger::tx::Proposal {
+            channel: MAINCHAIN.into(),
+            chaincode: "catalyst".into(),
+            function: "FinalizeGlobal".into(),
+            args: vec![
+                round.to_string(),
+                gdigest.hex(),
+                guri.clone(),
+                shard_models.len().to_string(),
+            ],
+            creator: self.all_peers[0].member.clone(),
+            nonce: self.rng.next_u64(),
+        };
+        let outcome = self.mainchain_gateway().submit_and_wait(&proposal);
+        if !outcome.is_valid() {
+            bail!("FinalizeGlobal failed: {outcome:?}");
+        }
+
+        // Pin the global model onto each shard chain (next round's baseline).
+        let total: u64 = shard_models.iter().map(|(_, n)| n).sum();
+        for s in 0..self.shards.len() {
+            let proposal = crate::ledger::tx::Proposal {
+                channel: self.shards[s].channel.clone(),
+                chaincode: "models".into(),
+                function: "PinGlobalModel".into(),
+                args: vec![round.to_string(), gdigest.hex(), guri.clone(), total.to_string()],
+                creator: self.shards[s].peers[0].member.clone(),
+                nonce: self.rng.next_u64(),
+            };
+            let outcome = self.shard_gateway(s).submit_and_wait(&proposal);
+            if !outcome.is_valid() {
+                bail!("PinGlobalModel failed on shard {s}: {outcome:?}");
+            }
+        }
+
+        self.global = new_global;
+        self.round += 1;
+        let global_eval = self.ops.evaluate(&self.global, &self.test_set.x, &self.test_set.y)?;
+        Ok(RoundReport {
+            round,
+            accepted_updates: accepted,
+            rejected_updates: rejected,
+            lazy_detected,
+            mean_train_loss: crate::util::mean(&losses),
+            global_eval,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig {
+            shards: 2,
+            peers_per_shard: 2,
+            clients_per_shard: 2,
+            samples_per_client: 60,
+            eval_samples: 40,
+            test_samples: 128,
+            train: TrainConfig { batch: 10, epochs: 1, lr: 0.05, dp: None },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_round_improves_model() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let mut net = ScaleSfl::build(quick_cfg(), ops).unwrap();
+        let before = net
+            .ops
+            .evaluate(&net.global, &net.test_set.x, &net.test_set.y)
+            .unwrap();
+        let mut last = None;
+        for _ in 0..3 {
+            last = Some(net.run_round().unwrap());
+        }
+        let report = last.unwrap();
+        assert_eq!(report.accepted_updates, 4);
+        assert_eq!(report.rejected_updates, 0);
+        assert!(
+            report.global_eval.accuracy > before.accuracy,
+            "{} !> {}",
+            report.global_eval.accuracy,
+            before.accuracy
+        );
+        // Ledgers recorded the round on every shard + mainchain.
+        for shard in &net.shards {
+            let ch = shard.peers[0].channel(&shard.channel).unwrap();
+            assert!(ch.height() > 0);
+            assert!(ch.query("global/00000001").is_some());
+        }
+        let main = net.all_peers[0].channel(MAINCHAIN).unwrap();
+        assert!(main.query("global/00000001").is_some());
+        assert!(main.query("shards/00000001/shard0").is_some());
+    }
+
+    #[test]
+    fn norm_bound_defense_rejects_boosted_client() {
+        let Some(ops) = crate::runtime::shared_ops() else { return };
+        let mut cfg = quick_cfg();
+        cfg.defense = DefenseChoice::NormBound { max_norm: 8.0 };
+        let mut net = ScaleSfl::build(cfg, ops).unwrap();
+        net.set_behavior(0, Behavior::Boost(100));
+        let report = net.run_round().unwrap();
+        assert_eq!(report.rejected_updates, 1, "{report:?}");
+        assert_eq!(report.accepted_updates, 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! Off-chain content-addressed model store (IPFS analogue).
+//!
+//! Clients upload full model weight vectors here (paper §3.4.3); only the
+//! hash + URI go on-chain. Endorsing peers fetch by URI and verify the hash
+//! before evaluating (§3.4.6). A configurable fetch latency models the
+//! network hop to the peer-worker gRPC cache of the paper's testbed.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::crypto::{hash_f32, Digest};
+
+/// URI scheme for stored blobs.
+pub const SCHEME: &str = "sim://";
+
+/// Content-addressed store for flat f32 model blobs.
+#[derive(Clone, Default)]
+pub struct ModelStore {
+    blobs: Arc<RwLock<HashMap<Digest, Arc<Vec<f32>>>>>,
+    /// Simulated per-fetch latency (0 in tests).
+    fetch_latency: Duration,
+}
+
+impl ModelStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_fetch_latency(latency: Duration) -> Self {
+        ModelStore { blobs: Arc::default(), fetch_latency: latency }
+    }
+
+    /// Store a blob; returns (content hash, URI).
+    pub fn put(&self, params: Vec<f32>) -> (Digest, String) {
+        let digest = hash_f32(&params);
+        self.blobs.write().unwrap().insert(digest, Arc::new(params));
+        (digest, format!("{SCHEME}{}", digest.hex()))
+    }
+
+    /// Fetch by URI; verifies the URI is well-formed.
+    pub fn get(&self, uri: &str) -> Option<Arc<Vec<f32>>> {
+        let digest = Self::parse_uri(uri)?;
+        if !self.fetch_latency.is_zero() {
+            std::thread::sleep(self.fetch_latency);
+        }
+        self.blobs.read().unwrap().get(&digest).cloned()
+    }
+
+    /// Fetch + integrity check against an expected hash (endorsement step 6).
+    pub fn get_verified(&self, uri: &str, expected: &Digest) -> Result<Arc<Vec<f32>>, String> {
+        let blob = self.get(uri).ok_or_else(|| format!("blob not found: {uri}"))?;
+        let actual = hash_f32(&blob);
+        if actual != *expected {
+            return Err(format!(
+                "hash mismatch: expected {} got {}",
+                expected.short(),
+                actual.short()
+            ));
+        }
+        Ok(blob)
+    }
+
+    pub fn parse_uri(uri: &str) -> Option<Digest> {
+        uri.strip_prefix(SCHEME).and_then(Digest::from_hex)
+    }
+
+    pub fn len(&self) -> usize {
+        self.blobs.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let store = ModelStore::new();
+        let data = vec![1.0, 2.0, 3.0];
+        let (digest, uri) = store.put(data.clone());
+        assert_eq!(*store.get(&uri).unwrap(), data);
+        assert_eq!(store.get_verified(&uri, &digest).map(|b| (*b).clone()), Ok(data));
+    }
+
+    #[test]
+    fn verification_catches_wrong_hash() {
+        let store = ModelStore::new();
+        let (_, uri) = store.put(vec![1.0]);
+        let wrong = hash_f32(&[2.0]);
+        assert!(store.get_verified(&uri, &wrong).is_err());
+    }
+
+    #[test]
+    fn missing_and_malformed_uris() {
+        let store = ModelStore::new();
+        assert!(store.get("sim://deadbeef").is_none()); // short hex
+        assert!(store.get("http://x").is_none());
+        let fake = format!("{SCHEME}{}", hash_f32(&[9.0]).hex());
+        assert!(store.get(&fake).is_none());
+    }
+
+    #[test]
+    fn content_addressing_dedupes() {
+        let store = ModelStore::new();
+        let (d1, u1) = store.put(vec![1.0, 2.0]);
+        let (d2, u2) = store.put(vec![1.0, 2.0]);
+        assert_eq!(d1, d2);
+        assert_eq!(u1, u2);
+        assert_eq!(store.len(), 1);
+    }
+}

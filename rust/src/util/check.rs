@@ -1,0 +1,62 @@
+//! Tiny randomized property-testing helper (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure against `cases`
+//! independently seeded PRNGs and panics with the failing seed so a failure
+//! reproduces deterministically:
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries don't inherit the xla rpath rustflags
+//! // on this image, so the example is compile-checked only.)
+//! use scalesfl::util::check::check;
+//! check("sum-commutes", 64, |rng| {
+//!     let (a, b) = (rng.next_f64(), rng.next_f64());
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Run `prop` across `cases` seeded PRNGs; panics name the failing seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Prng) + std::panic::RefUnwindSafe) {
+    // Fixed base seed keeps CI deterministic; override with SCALESFL_CHECK_SEED.
+    let base: u64 = std::env::var("SCALESFL_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5CA1E5F1);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Prng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (SCALESFL_CHECK_SEED={seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("trivial", 32, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_names_seed() {
+        check("fails", 8, |rng| {
+            assert!(rng.next_f64() < 0.0, "always fails");
+        });
+    }
+}

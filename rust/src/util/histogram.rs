@@ -1,0 +1,158 @@
+//! Latency histogram with logarithmic buckets plus exact streaming summaries.
+//!
+//! Used by the Caliper-style harness for per-transaction latency
+//! distributions (p50/p95/p99, mean, min/max) without retaining every sample.
+
+/// Log-bucketed histogram over positive values (seconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket i covers [base * gamma^i, base * gamma^(i+1)).
+    counts: Vec<u64>,
+    base: f64,
+    gamma: f64,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 1 microsecond .. ~10 hours at 5% resolution.
+        Histogram::new(1e-6, 1.05, 512)
+    }
+}
+
+impl Histogram {
+    pub fn new(base: f64, gamma: f64, nbuckets: usize) -> Self {
+        Histogram {
+            counts: vec![0; nbuckets],
+            base,
+            gamma,
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(&self, v: f64) -> usize {
+        if v <= self.base {
+            return 0;
+        }
+        let i = ((v / self.base).ln() / self.gamma.ln()) as usize;
+        i.min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile (bucket upper edge), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return self.base * self.gamma.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_and_extrema_exact() {
+        let mut h = Histogram::default();
+        for v in [0.1, 0.2, 0.3] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 0.3);
+    }
+
+    #[test]
+    fn quantiles_within_resolution() {
+        let mut h = Histogram::default();
+        let mut r = crate::util::prng::Prng::new(1);
+        for _ in 0..50_000 {
+            h.record(0.001 + 0.999 * r.next_f64()); // U(1ms, 1s)
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() < 0.06, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 0.99).abs() < 0.08, "p99 {p99}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        a.record(0.1);
+        b.record(0.3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,44 @@
+//! Shared utilities: deterministic PRNG, minimal JSON, thread pool,
+//! latency histograms, and a small randomized property-testing helper.
+//!
+//! The offline build vendors only the `xla` dependency tree, so these are
+//! hand-rolled rather than pulled from crates.io (no rand/serde/rayon).
+
+pub mod check;
+pub mod histogram;
+pub mod json;
+pub mod prng;
+pub mod threadpool;
+
+/// Round `x` up to the next multiple of `m`.
+pub fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

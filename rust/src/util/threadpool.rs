@@ -1,0 +1,128 @@
+//! Fixed-size thread pool over std channels (no external deps).
+//!
+//! Peers use a pool for endorsement work; the caliper harness uses one for
+//! workload workers. Jobs are `FnOnce() + Send` closures; `join` blocks until
+//! the queue drains.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    inflight: Arc<(AtomicUsize, Mutex<()>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` worker threads (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new((AtomicUsize::new(0), Mutex::new(()), Condvar::new()));
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (count, lock, cv) = &*inflight;
+                                if count.fetch_sub(1, Ordering::SeqCst) == 1 {
+                                    let _g = lock.lock().unwrap();
+                                    cv.notify_all();
+                                }
+                            }
+                            Err(_) => return,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), handles, inflight }
+    }
+
+    /// Enqueue a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.inflight.0.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool closed");
+    }
+
+    /// Block until all enqueued jobs have completed.
+    pub fn join(&self) {
+        let (count, lock, cv) = &*self.inflight;
+        let mut g = lock.lock().unwrap();
+        while count.load(Ordering::SeqCst) != 0 {
+            g = cv.wait(g).unwrap();
+        }
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn inflight(&self) -> usize {
+        self.inflight.0.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn join_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                thread::sleep(std::time::Duration::from_millis(20));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.inflight(), 0);
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}
