@@ -1,0 +1,22 @@
+# ScaleSFL build/verify entry points.
+#
+#   make check     - formatting + lints + tier-1 verify (CI gate)
+#   make verify    - tier-1: release build + tests
+#   make bench     - mempool ingress baseline (writes BENCH_mempool.json)
+
+.PHONY: check fmt clippy verify bench
+
+check: fmt clippy verify
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+verify:
+	cargo build --release
+	cargo test -q
+
+bench:
+	cargo bench --bench mempool

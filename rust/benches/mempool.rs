@@ -1,0 +1,320 @@
+//! Mempool micro-bench + orderer surge baseline.
+//!
+//! Measures the ingress hot path (admission with and without signature
+//! prechecks, batch pulls) and drives the *real* orderer at 2x its
+//! configured block-production knee to show the bounded pool shedding
+//! load while committed-tx latency stays bounded. Emits the baseline to
+//! `BENCH_mempool.json` (schema below) for regression tracking.
+//!
+//!     cargo bench --bench mempool    (or `make bench`)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scalesfl::crypto::msp::{CertificateAuthority, MemberId};
+use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+use scalesfl::fabric::endorsement::EndorsementPolicy;
+use scalesfl::fabric::orderer::{OrdererConfig, OrderingService};
+use scalesfl::fabric::peer::Peer;
+use scalesfl::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
+use scalesfl::mempool::{MempoolConfig, MempoolRegistry, Reject, ShardMempool};
+use scalesfl::util::histogram::Histogram;
+use scalesfl::util::json::Json;
+use scalesfl::util::prng::Prng;
+
+fn plain_envelope(nonce: u64) -> Envelope {
+    Envelope {
+        proposal: Proposal {
+            channel: "shard0".into(),
+            chaincode: "models".into(),
+            function: "CreateModelUpdate".into(),
+            args: vec![
+                "1".into(),
+                format!("client{nonce}"),
+                "ab".repeat(32),
+                "sim://blob".into(),
+                "100".into(),
+            ],
+            creator: MemberId::new(format!("client{}", nonce % 64)),
+            nonce,
+        },
+        rw_set: RwSet::default(),
+        endorsements: Vec::new(),
+    }
+}
+
+/// Admission throughput without signature prechecks.
+fn bench_admit(n: usize) -> (f64, f64) {
+    let pool = ShardMempool::new(
+        "shard0",
+        MempoolConfig { lane_capacity: n, ..Default::default() },
+    );
+    let envs: Vec<Envelope> = (0..n as u64).map(plain_envelope).collect();
+    let t0 = Instant::now();
+    for env in envs {
+        pool.submit(env).expect("admit");
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    println!(
+        "{:<44} {:>10.0} ns/op   {:>12.0} tx/s",
+        "admit (dedup+lanes+caps)",
+        per * 1e9,
+        1.0 / per
+    );
+    (per * 1e9, 1.0 / per)
+}
+
+/// Admission throughput with HMAC endorsement-policy prechecks.
+fn bench_admit_verified(n: usize) -> (f64, f64) {
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(7);
+    let creds: Vec<_> = (0..2)
+        .map(|i| ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng))
+        .collect();
+    let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+    let pool = ShardMempool::with_parts(
+        "shard0",
+        MempoolConfig {
+            lane_capacity: n,
+            verify_endorsements: true,
+            ..Default::default()
+        },
+        scalesfl::util::clock::SystemClock::shared(),
+        Some(ca),
+    );
+    pool.set_policy(EndorsementPolicy::MajorityOf(members));
+    let envs: Vec<Envelope> = (0..n as u64)
+        .map(|nonce| {
+            let mut env = plain_envelope(nonce);
+            let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+            for c in &creds {
+                env.endorsements.push(Endorsement {
+                    endorser: c.member.clone(),
+                    signature: c.sign(&payload),
+                });
+            }
+            env
+        })
+        .collect();
+    let t0 = Instant::now();
+    for env in envs {
+        pool.submit(env).expect("admit verified");
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    println!(
+        "{:<44} {:>10.0} ns/op   {:>12.0} tx/s",
+        "admit + policy precheck (2 HMAC sigs)",
+        per * 1e9,
+        1.0 / per
+    );
+    (per * 1e9, 1.0 / per)
+}
+
+/// Batch-pull throughput (the orderer's side of the pipeline).
+fn bench_take_batch(n: usize) -> f64 {
+    let pool = ShardMempool::new(
+        "shard0",
+        MempoolConfig { lane_capacity: n, ..Default::default() },
+    );
+    for nonce in 0..n as u64 {
+        pool.submit(plain_envelope(nonce)).expect("fill");
+    }
+    let t0 = Instant::now();
+    let mut pulled = 0usize;
+    while pulled < n {
+        let batch = pool.take_batch(256, 0);
+        if batch.is_empty() {
+            break;
+        }
+        pulled += batch.len();
+    }
+    let per = t0.elapsed().as_secs_f64() / pulled.max(1) as f64;
+    println!(
+        "{:<44} {:>10.0} ns/tx   ({} txs in 256-tx batches)",
+        "take_batch (priority drain)",
+        per * 1e9,
+        pulled
+    );
+    per * 1e9
+}
+
+struct PutCc;
+impl Chaincode for PutCc {
+    fn name(&self) -> &str {
+        "kv"
+    }
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        _f: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        ctx.put(&args[0], b"v".to_vec());
+        Ok(vec![])
+    }
+}
+
+/// Drive the real orderer at 2x its block-production knee with a bounded
+/// pool: the queue must stay bounded, overload must shed, and committed-tx
+/// latency must stay flat instead of growing with the backlog.
+fn surge_2x(offered: usize) -> Json {
+    let lane_capacity = 128usize;
+    let batch_size = 16usize;
+    let min_block_interval = Duration::from_millis(20);
+    // Knee: one 16-tx block per 20 ms = 800 tx/s of ordering bandwidth.
+    let knee_tps = batch_size as f64 / min_block_interval.as_secs_f64();
+    let offered_tps = knee_tps * 2.0;
+
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(3);
+    let peers: Vec<Arc<Peer>> = (0..2)
+        .map(|i| {
+            let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+            Peer::new(cred, ca.clone())
+        })
+        .collect();
+    let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+    for p in &peers {
+        p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+        p.install_chaincode("ch", Arc::new(PutCc)).unwrap();
+    }
+    let mempool = MempoolRegistry::new(MempoolConfig {
+        lane_capacity,
+        ..Default::default()
+    });
+    let orderer = OrderingService::start_with_mempool(
+        OrdererConfig {
+            batch_size,
+            batch_timeout: Duration::from_millis(10),
+            min_block_interval,
+            tick: Duration::from_millis(1),
+            ..Default::default()
+        },
+        peers.clone(),
+        42,
+        mempool,
+    );
+    let rx = peers[0].subscribe("ch").unwrap();
+
+    // Pre-endorse outside the timed window.
+    let envs: Vec<Envelope> = (0..offered as u64)
+        .map(|nonce| {
+            let prop = Proposal {
+                channel: "ch".into(),
+                chaincode: "kv".into(),
+                function: "Put".into(),
+                args: vec![format!("k{nonce}")],
+                creator: MemberId::new("stress-client"),
+                nonce,
+            };
+            let mut endorsements = Vec::new();
+            let mut rw = None;
+            for p in &peers {
+                let (r, e, _) = p.endorse(&prop).unwrap();
+                rw = Some(r);
+                endorsements.push(e);
+            }
+            Envelope { proposal: prop, rw_set: rw.unwrap(), endorsements }
+        })
+        .collect();
+
+    let start = Instant::now();
+    let mut submit_at: HashMap<TxId, Instant> = HashMap::new();
+    let mut admitted = 0usize;
+    let mut shed = 0usize;
+    for (i, env) in envs.into_iter().enumerate() {
+        // Burst-of-8 pacing keeps the mean rate despite coarse sleeps.
+        if i % 8 == 0 {
+            let due = start + Duration::from_secs_f64(i as f64 / offered_tps);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+        }
+        let tx_id = env.tx_id();
+        match orderer.submit(env) {
+            Ok(()) => {
+                submit_at.insert(tx_id, Instant::now());
+                admitted += 1;
+            }
+            Err(Reject::PoolFull) => shed += 1,
+            Err(other) => panic!("unexpected reject: {other:?}"),
+        }
+    }
+    let send_wall = start.elapsed().as_secs_f64();
+
+    let mut latency = Histogram::default();
+    let mut committed = 0usize;
+    while committed < admitted {
+        let ev = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("commit event within 30s — queue must stay bounded");
+        if let Some(at) = submit_at.get(&ev.tx_id) {
+            latency.record(at.elapsed().as_secs_f64());
+            committed += 1;
+        }
+    }
+    let total_wall = start.elapsed().as_secs_f64();
+    let stats = orderer.mempool().snapshot();
+
+    println!("\n# surge at 2x knee ({offered} txs offered at {offered_tps:.0} tx/s, knee {knee_tps:.0} tx/s)");
+    println!(
+        "admitted={admitted} shed={shed} committed={committed} depth_high_water={} (lane cap {lane_capacity})",
+        stats.depth_high_water
+    );
+    println!(
+        "commit latency: avg {:.3}s p95 {:.3}s max {:.3}s | blocks {} | wall {:.2}s",
+        latency.mean(),
+        latency.quantile(0.95),
+        latency.max(),
+        orderer.blocks_cut(),
+        total_wall
+    );
+    let bounded = stats.depth_high_water <= lane_capacity as u64;
+    let shed_nonzero = shed > 0;
+    println!(
+        "verdict: bounded_queue={} nonzero_shed={} (expect true/true past the knee)",
+        bounded, shed_nonzero
+    );
+
+    Json::obj()
+        .set("offered", offered)
+        .set("offered_tps", offered_tps)
+        .set("knee_tps", knee_tps)
+        .set("lane_capacity", lane_capacity)
+        .set("admitted", admitted)
+        .set("shed", shed)
+        .set("committed", committed)
+        .set("depth_high_water", stats.depth_high_water)
+        .set("blocks_cut", orderer.blocks_cut())
+        .set("avg_commit_latency_s", latency.mean())
+        .set("p95_commit_latency_s", latency.quantile(0.95))
+        .set("max_commit_latency_s", latency.max())
+        .set("send_wall_s", send_wall)
+        .set("total_wall_s", total_wall)
+        .set("bounded_queue", bounded)
+        .set("nonzero_shed", shed_nonzero)
+}
+
+fn main() {
+    println!("# mempool benches — ingress hot path + orderer surge\n");
+    let (admit_ns, admit_tps) = bench_admit(20_000);
+    let (verified_ns, verified_tps) = bench_admit_verified(5_000);
+    let take_ns = bench_take_batch(20_000);
+    let surge = surge_2x(2_000);
+
+    let out = Json::obj()
+        .set("bench", "mempool")
+        .set(
+            "admit",
+            Json::obj().set("ns_per_op", admit_ns).set("tx_per_s", admit_tps),
+        )
+        .set(
+            "admit_verified",
+            Json::obj().set("ns_per_op", verified_ns).set("tx_per_s", verified_tps),
+        )
+        .set("take_batch", Json::obj().set("ns_per_tx", take_ns))
+        .set("surge_2x", surge);
+    std::fs::write("BENCH_mempool.json", format!("{out}\n")).expect("write BENCH_mempool.json");
+    println!("\nwrote BENCH_mempool.json");
+}

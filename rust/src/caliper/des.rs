@@ -49,6 +49,12 @@ pub struct DesConfig {
     /// Caliper on the same machine as the peers, so more workers slow the
     /// endorsement servers — Fig 8's downward throughput trend).
     pub worker_cpu_contention: f64,
+    /// Bounded per-shard ingress pool (the sharded mempool's lane
+    /// capacity): a transaction arriving while `pool_capacity` admitted
+    /// transactions are still in flight is *shed* — rejected instantly,
+    /// consuming no endorser time — and counted in `Report::shed`.
+    /// `0` models the legacy unbounded ingress queue.
+    pub pool_capacity: usize,
 }
 
 impl Default for DesConfig {
@@ -66,6 +72,7 @@ impl Default for DesConfig {
             validate_s: 0.0005,
             worker_overhead_s: 0.01,
             worker_cpu_contention: 0.02,
+            pool_capacity: 0,
         }
     }
 }
@@ -95,6 +102,11 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
     let mut worker_free = vec![0.0f64; wl.workers.max(1)];
     // Stage 2: each endorser is a FIFO single server.
     let mut endorser_free = vec![vec![0.0f64; cfg.endorsers_per_shard]; cfg.shards];
+    // Bounded ingress pool: per-shard endorsement completion times of
+    // admitted transactions still in flight at a given arrival (FIFO, so
+    // completions are nondecreasing and a deque front-pop suffices).
+    let mut inflight: Vec<std::collections::VecDeque<f64>> =
+        vec![std::collections::VecDeque::new(); cfg.shards];
 
     let mut txs: Vec<Tx> = Vec::with_capacity(wl.txs);
     for i in 0..wl.txs {
@@ -103,9 +115,22 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
         let submit = sched.max(worker_free[w]) + cfg.worker_overhead_s;
         worker_free[w] = submit;
         let shard = i % cfg.shards;
+        let arrive = submit + cfg.net_hop_s;
+
+        // Admission control: shed instantly when the shard pool is full
+        // (the client got backpressure; no endorser time is consumed).
+        if cfg.pool_capacity > 0 {
+            let q = &mut inflight[shard];
+            while q.front().is_some_and(|&done| done <= arrive) {
+                q.pop_front();
+            }
+            if q.len() >= cfg.pool_capacity {
+                report.shed += 1;
+                continue;
+            }
+        }
 
         // Every endorser evaluates; the quorum-th completion endorses.
-        let arrive = submit + cfg.net_hop_s;
         let mut dones: Vec<f64> = endorser_free[shard]
             .iter_mut()
             .map(|free| {
@@ -120,6 +145,9 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
             .collect();
         dones.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let endorsed = dones[cfg.quorum - 1] + cfg.net_hop_s;
+        if cfg.pool_capacity > 0 {
+            inflight[shard].push_back(endorsed);
+        }
         txs.push(Tx { submit: sched, endorsed, shard });
     }
 
@@ -266,6 +294,39 @@ mod tests {
         let many = run_des(&c, &Workload { workers: 10, ..wl(300, cap) }, 5);
         // Generation parallelism doesn't raise server-side capacity.
         assert!(many.throughput <= few.throughput * 1.2);
+    }
+
+    #[test]
+    fn bounded_pool_sheds_instead_of_queueing_unboundedly() {
+        let c = cfg(1);
+        let cap = global_capacity(&c);
+        // Pool sized to ~4 s of service at the knee.
+        let bounded = DesConfig { pool_capacity: (4.0 * cap).ceil() as usize, ..c };
+        let wl2x = wl(400, cap * 2.0);
+        let with_pool = run_des(&bounded, &wl2x, 11);
+        let without_pool = run_des(&c, &wl2x, 11);
+        // Backpressure: nonzero shed, and everything else accounted for.
+        assert!(with_pool.shed > 0, "expected shed load at 2x knee");
+        assert_eq!(
+            with_pool.succeeded + with_pool.failed + with_pool.shed,
+            with_pool.sent
+        );
+        assert_eq!(without_pool.shed, 0, "unbounded ingress never sheds");
+        // Admitted-tx latency stays bounded by roughly the pool's service
+        // backlog, far below the unbounded queue's worst case.
+        assert!(
+            with_pool.latency.max() < 3.0 * (4.0 + c.eval_s),
+            "bounded pool latency {:.2}s",
+            with_pool.latency.max()
+        );
+        assert!(
+            without_pool.latency.max() > with_pool.latency.max(),
+            "unbounded {:.2}s vs bounded {:.2}s",
+            without_pool.latency.max(),
+            with_pool.latency.max()
+        );
+        // Throughput still tracks capacity.
+        assert!(with_pool.throughput > 0.5 * cap);
     }
 
     #[test]

@@ -2,7 +2,12 @@
 //!
 //! Workloads are defined by (#transactions, target send TPS, #workers,
 //! timeout); the harness reports sent/observed TPS, latency distribution,
-//! and failure counts — the exact quantities Figs. 4-8 plot.
+//! and failure counts — the exact quantities Figs. 4-8 plot. Since the
+//! sharded mempool landed, reports also carry a `shed` column: load refused
+//! by ingress admission control (`Reject::PoolFull` / `Reject::RateLimited`),
+//! reported separately from failures so surge figures show explicit
+//! backpressure instead of unbounded queue growth. Per-reason counters come
+//! from `mempool::StatsSnapshot`.
 //!
 //! Two execution backends:
 //! - [`real`]: wall-clock workers driving the actual fabric pipeline with

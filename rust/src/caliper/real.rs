@@ -29,7 +29,7 @@ pub fn run_real(
 ) -> Report {
     let started = Instant::now();
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(bool, f64)>> = Mutex::new(Vec::with_capacity(wl.txs));
+    let results: Mutex<Vec<(bool, bool, f64)>> = Mutex::new(Vec::with_capacity(wl.txs));
     let make_proposal = &make_proposal;
     thread::scope(|s| {
         for _ in 0..wl.workers.max(1) {
@@ -49,7 +49,8 @@ pub fn run_real(
                 let latency = sent_at.elapsed().as_secs_f64();
                 let ok = matches!(outcome, CommitOutcome::Committed { code, .. }
                     if code == crate::ledger::block::ValidationCode::Valid);
-                results.lock().unwrap().push((ok, latency));
+                // Admission-control backpressure is shed load, not failure.
+                results.lock().unwrap().push((ok, outcome.is_rejected(), latency));
             });
         }
     });
@@ -58,10 +59,12 @@ pub fn run_real(
     let mut report = Report::new(name);
     report.sent = wl.txs;
     let mut hist = Histogram::default();
-    for (ok, lat) in &results {
+    for (ok, shed, lat) in &results {
         if *ok && *lat <= wl.timeout_s {
             report.succeeded += 1;
             hist.record(*lat);
+        } else if *shed {
+            report.shed += 1;
         } else {
             report.failed += 1;
         }

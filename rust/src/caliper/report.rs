@@ -1,4 +1,12 @@
 //! Benchmark report: the metrics Caliper prints per workload round.
+//!
+//! Since the sharded mempool landed, overload no longer shows up as
+//! unbounded queue growth: envelopes refused at admission (pool full /
+//! rate capped) are counted in [`Report::shed`], separately from
+//! [`Report::failed`] (endorsement rejections, invalidations, timeouts).
+//! Surge rounds (Figs. 6-7) report nonzero shed while committed-tx latency
+//! stays bounded. Per-reason reject counters live in
+//! `mempool::StatsSnapshot` and export via its `to_json`.
 
 use crate::util::histogram::Histogram;
 use crate::util::json::Json;
@@ -13,6 +21,10 @@ pub struct Report {
     pub succeeded: usize,
     /// Failures (endorsement rejections, invalidations, timeouts).
     pub failed: usize,
+    /// Load shed by ingress admission control (mempool backpressure:
+    /// `Reject::PoolFull` / `Reject::RateLimited`). Shed transactions never
+    /// consumed pipeline capacity.
+    pub shed: usize,
     /// Actual aggregate send rate achieved (TPS).
     pub send_tps: f64,
     /// Observed throughput: successes / makespan (TPS).
@@ -30,6 +42,7 @@ impl Report {
             sent: 0,
             succeeded: 0,
             failed: 0,
+            shed: 0,
             send_tps: 0.0,
             throughput: 0.0,
             latency: Histogram::default(),
@@ -44,11 +57,12 @@ impl Report {
     /// One table row, Caliper-style.
     pub fn row(&self) -> String {
         format!(
-            "{:<28} sent={:<5} ok={:<5} fail={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s",
+            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s",
             self.name,
             self.sent,
             self.succeeded,
             self.failed,
+            self.shed,
             self.send_tps,
             self.throughput,
             self.avg_latency(),
@@ -62,6 +76,7 @@ impl Report {
             .set("sent", self.sent)
             .set("succeeded", self.succeeded)
             .set("failed", self.failed)
+            .set("shed", self.shed)
             .set("send_tps", self.send_tps)
             .set("throughput", self.throughput)
             .set("avg_latency_s", self.avg_latency())
@@ -79,15 +94,18 @@ mod tests {
     fn report_row_and_json() {
         let mut r = Report::new("fig4/s2");
         r.sent = 100;
-        r.succeeded = 95;
+        r.succeeded = 90;
         r.failed = 5;
+        r.shed = 5;
         r.send_tps = 10.0;
-        r.throughput = 9.5;
+        r.throughput = 9.0;
         r.latency.record(0.5);
         r.duration_s = 10.0;
         assert!(r.row().contains("fig4/s2"));
+        assert!(r.row().contains("shed=5"));
         let j = r.to_json();
-        assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(95.0));
+        assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(90.0));
+        assert_eq!(j.get("shed").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
     }
 }

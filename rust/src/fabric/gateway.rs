@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 
 use crate::ledger::block::ValidationCode;
 use crate::ledger::tx::{Envelope, Proposal};
+use crate::mempool::Reject;
 
 use super::orderer::OrderingService;
 use super::peer::Peer;
@@ -19,6 +20,9 @@ pub enum CommitOutcome {
     Committed { code: ValidationCode, latency: Duration },
     /// All/enough endorsements failed (chaincode or policy rejection).
     EndorsementFailed { reason: String, latency: Duration },
+    /// The mempool refused the envelope at admission (backpressure: pool
+    /// full, rate cap, replay, …). The transaction was never ordered.
+    Rejected { reject: Reject, latency: Duration },
     /// No commit event within the timeout.
     TimedOut,
 }
@@ -26,6 +30,12 @@ pub enum CommitOutcome {
 impl CommitOutcome {
     pub fn is_valid(&self) -> bool {
         matches!(self, CommitOutcome::Committed { code: ValidationCode::Valid, .. })
+    }
+
+    /// Was this shed by ingress admission control (not a failure of the
+    /// transaction itself)?
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, CommitOutcome::Rejected { .. })
     }
 }
 
@@ -103,8 +113,8 @@ impl Gateway {
                 return CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() }
             }
         };
-        if let Err(reason) = self.orderer.submit(envelope) {
-            return CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() };
+        if let Err(reject) = self.orderer.submit(envelope) {
+            return CommitOutcome::Rejected { reject, latency: started.elapsed() };
         }
         loop {
             let remaining = self.timeout.saturating_sub(started.elapsed());
@@ -196,6 +206,45 @@ mod tests {
         let (_peers, gw) = gateway(3);
         let out = gw.submit_and_wait(&prop("Fail", "a", 2));
         assert!(matches!(out, CommitOutcome::EndorsementFailed { .. }), "{out:?}");
+    }
+
+    #[test]
+    fn backpressure_surfaces_as_rejected() {
+        use crate::mempool::{MempoolConfig, MempoolRegistry, Reject};
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(5);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
+        }
+        // One tx per ~17 minutes: the second submission hits the rate cap.
+        let mempool = MempoolRegistry::new(MempoolConfig {
+            rate_limit: Some(0.001),
+            rate_burst: 1.0,
+            ..Default::default()
+        });
+        let orderer = OrderingService::start_with_mempool(
+            OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
+            peers.clone(),
+            7,
+            mempool,
+        );
+        let gw = Gateway::new(peers, orderer);
+        assert!(gw.submit_and_wait(&prop("Put", "a", 1)).is_valid());
+        let out = gw.submit_and_wait(&prop("Put", "b", 2));
+        assert!(
+            matches!(out, CommitOutcome::Rejected { reject: Reject::RateLimited, .. }),
+            "{out:?}"
+        );
+        assert!(out.is_rejected());
+        assert_eq!(gw.orderer.mempool().snapshot().rate_limited, 1);
     }
 
     #[test]

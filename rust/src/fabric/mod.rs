@@ -4,8 +4,12 @@
 //!   chaincode (including the model-evaluation defence policy — the paper's
 //!   endorsement bottleneck) against current state, producing signed
 //!   read/write sets ([`peer`], [`chaincode`]).
-//! - **Order**: assembled envelopes go to the ordering service, which batches
-//!   them into blocks through Raft (or PBFT) consensus ([`orderer`]).
+//! - **Order**: assembled envelopes pass admission control into the
+//!   per-channel mempool (`crate::mempool`: bounded priority lanes, rate
+//!   caps, explicit backpressure); the ordering service pulls
+//!   size-and-byte-bounded batches and replicates them through Raft (or
+//!   PBFT) consensus, while a committer thread pipelines validation
+//!   ([`orderer`]).
 //! - **Validate**: every peer independently checks the endorsement policy
 //!   and MVCC read versions, then commits valid writes ([`peer::PeerChannel`]).
 //!

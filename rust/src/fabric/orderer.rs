@@ -2,13 +2,15 @@
 //! Raft cluster (the paper's orderer) and delivers committed blocks to every
 //! peer on the batch's channel.
 //!
-//! One driver thread owns the whole consensus group (sans-io Raft nodes with
-//! in-memory message exchange — the paper likewise ran a single ordering
-//! process) plus the batching state: a block is cut when `batch_size`
-//! envelopes are pending or `batch_timeout` elapsed since the first.
+//! Ingress goes through the sharded mempool (`crate::mempool`): `submit`
+//! routes envelopes into the per-channel pool (admission control, priority
+//! lanes, explicit backpressure), and the driver thread *pulls*
+//! size-and-byte-bounded batches from the pools instead of owning batching
+//! state. Block production is pipelined: the driver runs consensus while a
+//! separate committer thread validates and applies delivered blocks, so
+//! batch cutting, ordering, and validation overlap.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -17,6 +19,7 @@ use crate::consensus::pbft::{Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::ConsensusNode;
 use crate::ledger::tx::Envelope;
+use crate::mempool::{MempoolConfig, MempoolRegistry, Reject};
 use crate::util::prng::Prng;
 
 use super::peer::Peer;
@@ -35,8 +38,15 @@ pub enum ConsensusKind {
 pub struct OrdererConfig {
     /// Envelopes per block before a cut is forced.
     pub batch_size: usize,
+    /// Max serialized bytes per block (0 = unbounded). The pool enforces
+    /// this when the driver pulls a batch.
+    pub batch_bytes: usize,
     /// Max time the first pending envelope waits before a cut.
     pub batch_timeout: Duration,
+    /// Minimum spacing between consecutive block proposals (models finite
+    /// consensus bandwidth; zero = cut as fast as batches are due). This is
+    /// what makes the ordering stage a measurable knee in surge benches.
+    pub min_block_interval: Duration,
     /// Consensus cluster size (1 = the paper's single orderer).
     pub consensus_nodes: usize,
     /// Ordering protocol.
@@ -49,7 +59,9 @@ impl Default for OrdererConfig {
     fn default() -> Self {
         OrdererConfig {
             batch_size: 10,
+            batch_bytes: 512 * 1024,
             batch_timeout: Duration::from_millis(100),
+            min_block_interval: Duration::ZERO,
             consensus_nodes: 1,
             consensus: ConsensusKind::Raft,
             tick: Duration::from_millis(2),
@@ -57,51 +69,108 @@ impl Default for OrdererConfig {
     }
 }
 
-enum Input {
-    Submit(Envelope),
-    Shutdown,
-}
-
 /// Handle to the running ordering service.
 pub struct OrderingService {
-    tx: mpsc::Sender<Input>,
-    handle: Option<thread::JoinHandle<()>>,
+    mempool: Arc<MempoolRegistry>,
+    shutdown: Arc<AtomicBool>,
+    driver: Option<thread::JoinHandle<()>>,
+    committer: Option<thread::JoinHandle<()>>,
     blocks_cut: Arc<AtomicU64>,
 }
 
 impl OrderingService {
-    /// Start the orderer; committed blocks are delivered synchronously to
-    /// every peer in `peers` that joined the batch's channel.
+    /// Start the orderer with a default (admission-precheck-off) mempool;
+    /// committed blocks are delivered to every peer in `peers` that joined
+    /// the batch's channel.
     pub fn start(cfg: OrdererConfig, peers: Vec<Arc<Peer>>, seed: u64) -> Arc<OrderingService> {
-        let (tx, rx) = mpsc::channel::<Input>();
-        let blocks_cut = Arc::new(AtomicU64::new(0));
-        let counter = Arc::clone(&blocks_cut);
-        let handle = thread::Builder::new()
-            .name("orderer".into())
-            .spawn(move || {
-                let n = cfg.consensus_nodes.max(1);
-                let mut rng = Prng::new(seed);
-                match cfg.consensus {
-                    ConsensusKind::Raft => {
-                        let nodes: Vec<Raft> = (0..n)
-                            .map(|i| Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64)))
-                            .collect();
-                        driver(cfg, peers, rx, counter, nodes)
-                    }
-                    ConsensusKind::Pbft => {
-                        let nodes: Vec<Pbft> =
-                            (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
-                        driver(cfg, peers, rx, counter, nodes)
-                    }
-                }
-            })
-            .expect("spawn orderer");
-        Arc::new(OrderingService { tx, handle: Some(handle), blocks_cut })
+        OrderingService::start_with_mempool(
+            cfg,
+            peers,
+            seed,
+            MempoolRegistry::new(MempoolConfig::default()),
+        )
     }
 
-    /// Submit an endorsed envelope for ordering.
-    pub fn submit(&self, env: Envelope) -> Result<(), String> {
-        self.tx.send(Input::Submit(env)).map_err(|_| "orderer stopped".to_string())
+    /// Start the orderer over an externally configured mempool registry
+    /// (admission control, rate caps, per-channel policies).
+    pub fn start_with_mempool(
+        cfg: OrdererConfig,
+        peers: Vec<Arc<Peer>>,
+        seed: u64,
+        mempool: Arc<MempoolRegistry>,
+    ) -> Arc<OrderingService> {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let blocks_cut = Arc::new(AtomicU64::new(0));
+
+        // Pipeline stage 3: validation/commit runs off the consensus thread.
+        let (commit_tx, commit_rx) = mpsc::channel::<(String, Vec<Envelope>)>();
+        let committer = {
+            let counter = Arc::clone(&blocks_cut);
+            thread::Builder::new()
+                .name("orderer-committer".into())
+                .spawn(move || {
+                    while let Ok((channel, envs)) = commit_rx.recv() {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        for p in &peers {
+                            if p.channel(&channel).is_some() {
+                                if let Err(e) = p.commit_batch(&channel, envs.clone()) {
+                                    eprintln!("orderer: commit failed on {}: {e}", p.member);
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn orderer committer")
+        };
+
+        let driver = {
+            let mempool = Arc::clone(&mempool);
+            let stop = Arc::clone(&shutdown);
+            thread::Builder::new()
+                .name("orderer".into())
+                .spawn(move || {
+                    let n = cfg.consensus_nodes.max(1);
+                    let mut rng = Prng::new(seed);
+                    match cfg.consensus {
+                        ConsensusKind::Raft => {
+                            let nodes: Vec<Raft> = (0..n)
+                                .map(|i| {
+                                    Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64))
+                                })
+                                .collect();
+                            driver(cfg, mempool, stop, commit_tx, nodes)
+                        }
+                        ConsensusKind::Pbft => {
+                            let nodes: Vec<Pbft> =
+                                (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
+                            driver(cfg, mempool, stop, commit_tx, nodes)
+                        }
+                    }
+                })
+                .expect("spawn orderer")
+        };
+
+        Arc::new(OrderingService {
+            mempool,
+            shutdown,
+            driver: Some(driver),
+            committer: Some(committer),
+            blocks_cut,
+        })
+    }
+
+    /// Submit an endorsed envelope for ordering. `Err` is explicit
+    /// backpressure from admission control — the envelope was *not* queued.
+    pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
+        if self.shutdown.load(Ordering::Relaxed) {
+            return Err(Reject::Shutdown);
+        }
+        self.mempool.submit(env)
+    }
+
+    /// The ingress pools (per-channel policies, reject/overflow counters).
+    pub fn mempool(&self) -> &Arc<MempoolRegistry> {
+        &self.mempool
     }
 
     pub fn blocks_cut(&self) -> u64 {
@@ -111,46 +180,61 @@ impl OrderingService {
 
 impl Drop for OrderingService {
     fn drop(&mut self) {
-        let _ = self.tx.send(Input::Shutdown);
-        if let Some(h) = self.handle.take() {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.mempool.close_all();
+        if let Some(h) = self.driver.take() {
+            let _ = h.join();
+        }
+        // The driver owned the commit sender; once it exits the committer
+        // drains the channel and stops.
+        if let Some(h) = self.committer.take() {
             let _ = h.join();
         }
     }
 }
 
-fn driver<C: ConsensusNode>(
-    cfg: OrdererConfig,
-    peers: Vec<Arc<Peer>>,
-    rx: mpsc::Receiver<Input>,
-    blocks_cut: Arc<AtomicU64>,
-    mut nodes: Vec<C>,
+/// Run up to 8 rounds of instant message exchange between consensus nodes.
+fn exchange<C: ConsensusNode>(
+    nodes: &mut [C],
+    inbox: &mut Vec<(usize, usize, C::Msg)>,
+    now: f64,
 ) {
-    // Pending envelopes per channel + arrival time of the oldest.
-    let mut pending: HashMap<String, (Vec<Envelope>, Instant)> = HashMap::new();
-    let start = Instant::now();
-    let mut delivered_seq = 0u64;
-
-    loop {
-        // Drain inputs without blocking longer than one tick.
-        let deadline = Instant::now() + cfg.tick;
-        loop {
-            let timeout = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(timeout) {
-                Ok(Input::Submit(env)) => {
-                    let channel = env.proposal.channel.clone();
-                    pending
-                        .entry(channel)
-                        .or_insert_with(|| (Vec::new(), Instant::now()))
-                        .0
-                        .push(env);
-                }
-                Ok(Input::Shutdown) => return,
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+    for _ in 0..8 {
+        if inbox.is_empty() {
+            break;
+        }
+        let mut next = Vec::new();
+        for (from, to, m) in inbox.drain(..) {
+            for (dest, out) in nodes[to].handle(from, m, now) {
+                next.push((to, dest, out));
             }
         }
+        *inbox = next;
+    }
+}
 
+fn driver<C: ConsensusNode>(
+    cfg: OrdererConfig,
+    mempool: Arc<MempoolRegistry>,
+    shutdown: Arc<AtomicBool>,
+    commit_tx: mpsc::Sender<(String, Vec<Envelope>)>,
+    mut nodes: Vec<C>,
+) {
+    let start = Instant::now();
+    let mut delivered_seq = 0u64;
+    let mut last_cut = f64::NEG_INFINITY;
+    let min_interval = cfg.min_block_interval.as_secs_f64();
+    // Rotates the channel drain order so a saturated channel cannot starve
+    // the others when min_block_interval throttles cuts to one per tick.
+    let mut rotation = 0usize;
+
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        thread::sleep(cfg.tick);
         let now = start.elapsed().as_secs_f64();
+
         // Consensus housekeeping: ticks + instant message exchange.
         let mut inbox: Vec<(usize, usize, C::Msg)> = Vec::new();
         for node in nodes.iter_mut() {
@@ -158,80 +242,55 @@ fn driver<C: ConsensusNode>(
                 inbox.push((node.node_id(), to, m));
             }
         }
-        // Settle the exchange (bounded rounds to avoid spinning).
-        for _ in 0..8 {
-            if inbox.is_empty() {
-                break;
-            }
-            let mut next = Vec::new();
-            for (from, to, m) in inbox.drain(..) {
-                for (dest, out) in nodes[to].handle(from, m, now) {
-                    next.push((to, dest, out));
-                }
-            }
-            inbox = next;
-        }
+        exchange(&mut nodes, &mut inbox, now);
 
-        // Cut blocks where due and propose through the leader.
+        // Pull due batches from the per-channel pools and propose them,
+        // round-robin across channels.
         let leader = nodes.iter().position(|nd| nd.is_leader());
         if let Some(l) = leader {
-            let due: Vec<String> = pending
-                .iter()
-                .filter(|(_, (envs, since))| {
-                    !envs.is_empty()
-                        && (envs.len() >= cfg.batch_size || since.elapsed() >= cfg.batch_timeout)
-                })
-                .map(|(ch, _)| ch.clone())
-                .collect();
-            for ch in due {
-                let (mut envs, _) = pending.remove(&ch).unwrap();
-                // Respect batch_size per block; leftover re-queues.
-                let rest = if envs.len() > cfg.batch_size {
-                    envs.split_off(cfg.batch_size)
-                } else {
-                    Vec::new()
-                };
-                if !rest.is_empty() {
-                    pending.insert(ch.clone(), (rest, Instant::now()));
-                }
-                let payload = wire::encode_batch(&ch, &envs);
-                if nodes[l].propose(payload, now).is_err() {
-                    // Leadership moved; re-queue and retry next tick.
-                    pending.entry(ch).or_insert_with(|| (Vec::new(), Instant::now())).0.extend(envs);
-                } else {
+            let mut channels = mempool.channels();
+            if !channels.is_empty() {
+                let n = channels.len();
+                channels.rotate_left(rotation % n);
+                rotation = rotation.wrapping_add(1);
+            }
+            'channels: for channel in channels {
+                let Some(pool) = mempool.get(&channel) else { continue };
+                while pool.ready(cfg.batch_size, cfg.batch_timeout) {
+                    if min_interval > 0.0 && now - last_cut < min_interval {
+                        // Consensus bandwidth exhausted for this tick; the
+                        // pools keep absorbing (and, at capacity, shedding).
+                        break 'channels;
+                    }
+                    let envs = pool.take_batch(cfg.batch_size, cfg.batch_bytes);
+                    if envs.is_empty() {
+                        break;
+                    }
+                    let payload = wire::encode_batch(&channel, &envs);
+                    if nodes[l].propose(payload, now).is_err() {
+                        // Leadership moved; re-queue and retry next tick.
+                        pool.restore(envs);
+                        break 'channels;
+                    }
+                    last_cut = now;
                     // Protocols that broadcast at proposal time (PBFT).
                     for (to, m) in nodes[l].take_outbound() {
                         inbox.push((l, to, m));
                     }
-                    for _ in 0..8 {
-                        if inbox.is_empty() {
-                            break;
-                        }
-                        let mut next = Vec::new();
-                        for (from, to, m) in inbox.drain(..) {
-                            for (dest, out) in nodes[to].handle(from, m, now) {
-                                next.push((to, dest, out));
-                            }
-                        }
-                        inbox = next;
-                    }
+                    exchange(&mut nodes, &mut inbox, now);
                 }
             }
         }
 
-        // Deliver committed batches (node 0's stream; all nodes agree).
+        // Hand committed batches to the committer thread (pipeline overlap:
+        // the next tick's consensus work proceeds while peers validate).
         for c in nodes[0].take_committed() {
             debug_assert_eq!(c.seq, delivered_seq + 1);
             delivered_seq = c.seq;
             match wire::decode_batch(&c.data) {
-                Ok((channel, envs)) => {
-                    blocks_cut.fetch_add(1, Ordering::Relaxed);
-                    for p in &peers {
-                        if p.channel(&channel).is_some() {
-                            if let Err(e) = p.commit_batch(&channel, envs.clone()) {
-                                eprintln!("orderer: commit failed on {}: {e}", p.member);
-                            }
-                        }
+                Ok(pair) => {
+                    if commit_tx.send(pair).is_err() {
+                        return;
                     }
                 }
                 Err(e) => eprintln!("orderer: bad batch payload: {e}"),
@@ -249,10 +308,10 @@ mod tests {
     use crate::ledger::block::ValidationCode;
     use crate::ledger::tx::Proposal;
 
-    struct PutCc;
-    impl Chaincode for PutCc {
+    struct PutAs(&'static str);
+    impl Chaincode for PutAs {
         fn name(&self) -> &str {
-            "kv"
+            self.0
         }
         fn invoke(
             &self,
@@ -265,7 +324,11 @@ mod tests {
         }
     }
 
-    fn network(n_peers: usize, cfg: OrdererConfig) -> (Vec<Arc<Peer>>, Arc<OrderingService>) {
+    fn network_with(
+        n_peers: usize,
+        cfg: OrdererConfig,
+        mempool: Option<Arc<MempoolRegistry>>,
+    ) -> (Vec<Arc<Peer>>, Arc<OrderingService>) {
         let ca = CertificateAuthority::new();
         let mut rng = Prng::new(1);
         let peers: Vec<Arc<Peer>> = (0..n_peers)
@@ -277,18 +340,30 @@ mod tests {
         let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
         for p in &peers {
             p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
-            p.install_chaincode("ch", Arc::new(PutCc)).unwrap();
+            p.install_chaincode("ch", Arc::new(PutAs("kv"))).unwrap();
+            p.install_chaincode("ch", Arc::new(PutAs("catalyst"))).unwrap();
         }
-        let orderer = OrderingService::start(cfg, peers.clone(), 42);
+        let orderer = match mempool {
+            Some(m) => OrderingService::start_with_mempool(cfg, peers.clone(), 42, m),
+            None => OrderingService::start(cfg, peers.clone(), 42),
+        };
         (peers, orderer)
     }
 
-    fn endorsed_envelope(peers: &[Arc<Peer>], nonce: u64) -> Envelope {
+    fn network(n_peers: usize, cfg: OrdererConfig) -> (Vec<Arc<Peer>>, Arc<OrderingService>) {
+        network_with(n_peers, cfg, None)
+    }
+
+    fn endorsed_envelope_for(
+        peers: &[Arc<Peer>],
+        chaincode: &str,
+        nonce: u64,
+    ) -> Envelope {
         let prop = Proposal {
             channel: "ch".into(),
-            chaincode: "kv".into(),
+            chaincode: chaincode.into(),
             function: "Put".into(),
-            args: vec![format!("k{nonce}"), "v".into()],
+            args: vec![format!("{chaincode}-k{nonce}"), "v".into()],
             creator: MemberId::new("client"),
             nonce,
         };
@@ -300,6 +375,10 @@ mod tests {
             endorsements.push(e);
         }
         Envelope { proposal: prop, rw_set: rw.unwrap(), endorsements }
+    }
+
+    fn endorsed_envelope(peers: &[Arc<Peer>], nonce: u64) -> Envelope {
+        endorsed_envelope_for(peers, "kv", nonce)
     }
 
     #[test]
@@ -317,10 +396,14 @@ mod tests {
         }
         for p in &peers {
             let ch = p.channel("ch").unwrap();
-            assert_eq!(ch.scan("k").len(), 25);
+            assert_eq!(ch.scan("kv-k").len(), 25);
             ch.chain.lock().unwrap().verify().unwrap();
         }
         assert!(orderer.blocks_cut() >= 3); // batch_size 10 -> >= 3 blocks
+        let stats = orderer.mempool().snapshot();
+        assert_eq!(stats.admitted, 25);
+        assert_eq!(stats.txs_ordered, 25);
+        assert_eq!(stats.rejected_total(), 0);
     }
 
     #[test]
@@ -367,5 +450,73 @@ mod tests {
             let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
             assert_eq!(ev.code, ValidationCode::Valid);
         }
+    }
+
+    #[test]
+    fn catalyst_lane_orders_ahead_of_queries() {
+        // Large batch_size so a single timeout cut carries every pending tx
+        // in one block; the catalyst envelope must lead it despite being
+        // submitted last.
+        let cfg = OrdererConfig {
+            batch_size: 100,
+            batch_timeout: Duration::from_millis(60),
+            ..OrdererConfig::default()
+        };
+        let (peers, orderer) = network(2, cfg);
+        let rx = peers[0].subscribe("ch").unwrap();
+        for nonce in 0..3 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        let catalyst = endorsed_envelope_for(&peers, "catalyst", 50);
+        let catalyst_id = catalyst.tx_id();
+        orderer.submit(catalyst).unwrap();
+        let first = rx.recv_timeout(Duration::from_secs(5)).expect("commit");
+        assert_eq!(first.code, ValidationCode::Valid);
+        assert_eq!(first.tx_id, catalyst_id, "catalyst tx should lead the block");
+    }
+
+    #[test]
+    fn bounded_pool_sheds_overload_but_commits_admitted() {
+        let mempool = MempoolRegistry::new(MempoolConfig {
+            lane_capacity: 8,
+            ..Default::default()
+        });
+        let cfg = OrdererConfig {
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(20),
+            // Throttle consensus so the burst below genuinely overflows.
+            min_block_interval: Duration::from_millis(40),
+            ..OrdererConfig::default()
+        };
+        let (peers, orderer) = network_with(2, cfg, Some(mempool));
+        let rx = peers[0].subscribe("ch").unwrap();
+        let mut admitted = 0u32;
+        let mut shed = 0u32;
+        for nonce in 0..40 {
+            match orderer.submit(endorsed_envelope(&peers, nonce)) {
+                Ok(()) => admitted += 1,
+                Err(Reject::PoolFull) => shed += 1,
+                Err(other) => panic!("unexpected reject: {other:?}"),
+            }
+        }
+        assert!(shed > 0, "expected backpressure from the bounded pool");
+        assert!(admitted >= 8, "burst should fill the lane");
+        for _ in 0..admitted {
+            let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+            assert_eq!(ev.code, ValidationCode::Valid);
+        }
+        let stats = orderer.mempool().snapshot();
+        assert_eq!(stats.admitted as u32, admitted);
+        assert_eq!(stats.pool_full as u32, shed);
+        assert_eq!(stats.txs_ordered as u32, admitted);
+        assert!(stats.depth_high_water <= 3 * 8, "queue stayed bounded");
+    }
+
+    #[test]
+    fn duplicate_submission_rejected_at_ingress() {
+        let (peers, orderer) = network(2, OrdererConfig::default());
+        let env = endorsed_envelope(&peers, 7);
+        orderer.submit(env.clone()).unwrap();
+        assert_eq!(orderer.submit(env), Err(Reject::Duplicate));
     }
 }

@@ -7,6 +7,17 @@
 //! (shard chains + mainchain "catalyst" aggregation), the pluggable
 //! model-acceptance defences, and the Caliper-style benchmark harness.
 //!
+//! **Ingress path** (`mempool`): client/gateway submissions no longer feed
+//! the orderer's driver thread over an unbounded channel. Every channel has
+//! a bounded per-shard transaction pool with admission control (signature +
+//! endorsement-policy precheck, replay dedup, per-client rate caps),
+//! priority lanes (catalyst/checkpoint > model updates > queries) with TTL
+//! eviction, and explicit backpressure (`Reject::PoolFull`,
+//! `Reject::RateLimited`) surfaced to clients as
+//! `fabric::CommitOutcome::Rejected` and to the benchmark harness as shed
+//! counters. The orderer pulls size-and-byte-bounded batches from the pool,
+//! so batch cutting, consensus, and block validation overlap.
+//!
 //! Model compute (training, endorsement-time evaluation, FedAvg aggregation,
 //! defence distance matrices) executes AOT-compiled HLO artifacts produced by
 //! the Python build step (`make artifacts`) via the PJRT CPU client — Python
@@ -14,6 +25,12 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for measured results.
+
+// Seed code predates these pedantic-adjacent lints; keep `make check`
+// (clippy -D warnings) focused on real defects.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
 
 pub mod caliper;
 pub mod chaincode;
@@ -23,6 +40,7 @@ pub mod defense;
 pub mod fabric;
 pub mod fl;
 pub mod ledger;
+pub mod mempool;
 pub mod network;
 pub mod runtime;
 pub mod sharding;

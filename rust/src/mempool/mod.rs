@@ -1,0 +1,31 @@
+//! Sharded mempool: the ingress path between clients/gateways and the
+//! ordering service.
+//!
+//! The paper's evaluation (Figs. 5-7) is about the saturation knee —
+//! throughput tracks sent TPS until shard capacity, then latency spikes.
+//! The prototype submitted envelopes straight into the orderer's driver
+//! thread over an unbounded channel, so overload was only modeled
+//! implicitly. This subsystem makes the ingress path real:
+//!
+//! 1. **Admission control** ([`admission`]): endorsement-signature and
+//!    policy prechecks, content-hash dedup / replay rejection, and
+//!    per-client token-bucket rate caps.
+//! 2. **Priority lanes** ([`pool::Lane`]): catalyst/checkpoint traffic >
+//!    model updates > queries, each lane a bounded queue with TTL
+//!    eviction and explicit backpressure ([`Reject::PoolFull`],
+//!    [`Reject::RateLimited`]) surfaced as counters ([`stats`]).
+//! 3. **Pipelined block production**: the orderer pulls
+//!    size-and-byte-bounded batches ([`ShardMempool::take_batch`]) instead
+//!    of owning batching state, so batch cutting, consensus, and
+//!    validation overlap.
+//!
+//! One [`ShardMempool`] serves one channel (shard chains + the mainchain);
+//! a [`MempoolRegistry`] routes by channel and aggregates counters.
+
+pub mod admission;
+pub mod pool;
+pub mod stats;
+
+pub use admission::{Reject, TokenBucket};
+pub use pool::{encoded_len, Lane, MempoolConfig, MempoolRegistry, ShardMempool};
+pub use stats::{MempoolStats, StatsSnapshot};

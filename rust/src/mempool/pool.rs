@@ -1,0 +1,725 @@
+//! The per-shard transaction pool and the per-channel registry the
+//! ordering service drains.
+//!
+//! Ingress path: gateway/client → [`ShardMempool::submit`] (admission
+//! control, bounded priority lanes, explicit backpressure) → the orderer
+//! driver pulls size-and-byte-bounded batches with [`ShardMempool::take_batch`].
+//! The pool owns all batching state, so batch cutting, consensus, and
+//! validation pipeline against each other.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::crypto::msp::CertificateAuthority;
+use crate::fabric::endorsement::EndorsementPolicy;
+use crate::fabric::wire;
+use crate::ledger::codec::Writer;
+use crate::ledger::tx::{Envelope, Proposal, TxId};
+use crate::util::clock::{Clock, SystemClock};
+
+use super::admission::{Reject, TokenBucket};
+use super::stats::{MempoolStats, StatsSnapshot};
+
+/// Priority lanes, drained highest-priority-first when a block is cut:
+/// checkpoint/aggregation traffic must not starve behind bulk model
+/// updates, and queries yield to both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Mainchain catalyst txs and global-model pins (checkpoint traffic).
+    Catalyst,
+    /// Client model-update submissions (`CreateModelUpdate`, shard models).
+    ModelUpdate,
+    /// Everything else (generic chaincode invocations, queries).
+    Query,
+}
+
+impl Lane {
+    pub const COUNT: usize = 3;
+
+    /// Classify a proposal into its ingress lane.
+    pub fn classify(proposal: &Proposal) -> Lane {
+        if proposal.chaincode == "catalyst" || proposal.function == "PinGlobalModel" {
+            Lane::Catalyst
+        } else if proposal.function.starts_with("Create") || proposal.function.starts_with("Submit")
+        {
+            Lane::ModelUpdate
+        } else {
+            Lane::Query
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Catalyst => 0,
+            Lane::ModelUpdate => 1,
+            Lane::Query => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Catalyst => "catalyst",
+            Lane::ModelUpdate => "model-update",
+            Lane::Query => "query",
+        }
+    }
+}
+
+/// Pool sizing and admission-control knobs.
+#[derive(Clone, Debug)]
+pub struct MempoolConfig {
+    /// Max queued envelopes per priority lane (the bounded queue).
+    pub lane_capacity: usize,
+    /// Queued envelopes older than this are evicted (counted as expired).
+    pub ttl: Duration,
+    /// Per-client sustained admission rate in tx/s (`None` = uncapped).
+    pub rate_limit: Option<f64>,
+    /// Token-bucket burst allowance when rate limiting.
+    pub rate_burst: f64,
+    /// Verify endorsement signatures / policy quorum at admission (needs a
+    /// CA handle on the pool; silently skipped otherwise).
+    pub verify_endorsements: bool,
+    /// Recently-admitted tx ids remembered for replay rejection.
+    pub dedup_window: usize,
+}
+
+impl Default for MempoolConfig {
+    fn default() -> Self {
+        MempoolConfig {
+            lane_capacity: 4096,
+            ttl: Duration::from_secs(30),
+            rate_limit: None,
+            rate_burst: 64.0,
+            verify_endorsements: false,
+            dedup_window: 1 << 16,
+        }
+    }
+}
+
+struct Entry {
+    env: Envelope,
+    tx_id: TxId,
+    bytes: usize,
+    enqueued: f64,
+}
+
+struct Inner {
+    lanes: [VecDeque<Entry>; Lane::COUNT],
+    seen: HashSet<TxId>,
+    seen_order: VecDeque<TxId>,
+    buckets: HashMap<String, TokenBucket>,
+    open: bool,
+}
+
+/// Wire-encoded size of an envelope (what consensus replicates; the byte
+/// bound for block cutting).
+pub fn encoded_len(env: &Envelope) -> usize {
+    let mut w = Writer::new();
+    wire::encode_envelope(env, &mut w);
+    w.finish().len()
+}
+
+/// One channel's bounded ingress pool.
+pub struct ShardMempool {
+    pub channel: String,
+    cfg: MempoolConfig,
+    clock: Arc<dyn Clock>,
+    ca: Option<CertificateAuthority>,
+    policy: RwLock<Option<EndorsementPolicy>>,
+    inner: Mutex<Inner>,
+    stats: MempoolStats,
+}
+
+impl ShardMempool {
+    pub fn new(channel: &str, cfg: MempoolConfig) -> ShardMempool {
+        ShardMempool::with_parts(channel, cfg, SystemClock::shared(), None)
+    }
+
+    pub fn with_parts(
+        channel: &str,
+        cfg: MempoolConfig,
+        clock: Arc<dyn Clock>,
+        ca: Option<CertificateAuthority>,
+    ) -> ShardMempool {
+        ShardMempool {
+            channel: channel.to_string(),
+            cfg,
+            clock,
+            ca,
+            policy: RwLock::new(None),
+            inner: Mutex::new(Inner {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                seen: HashSet::new(),
+                seen_order: VecDeque::new(),
+                buckets: HashMap::new(),
+                open: true,
+            }),
+            stats: MempoolStats::default(),
+        }
+    }
+
+    /// Install/replace the endorsement policy used by the admission
+    /// precheck (e.g. after a committee re-election).
+    pub fn set_policy(&self, policy: EndorsementPolicy) {
+        *self.policy.write().unwrap() = Some(policy);
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Queued envelopes across all lanes.
+    pub fn pending(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    /// Admission control + enqueue. Every `Err` is explicit backpressure
+    /// the caller can act on (retry later, slow down, drop).
+    ///
+    /// Check order is cheapest-first so overload floods shed without
+    /// wasting work: replay dedup, lane capacity, rate cap (tokens are only
+    /// debited once the envelope would otherwise fit), then the HMAC
+    /// signature/policy precheck, and only then wire-encoding for the byte
+    /// accounting.
+    pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
+        let now = self.clock.now();
+        let tx_id = env.tx_id();
+        let lane = Lane::classify(&env.proposal);
+
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.open {
+            return Err(Reject::Shutdown);
+        }
+        self.evict_expired(&mut inner, now);
+
+        if inner.seen.contains(&tx_id) {
+            self.stats.note_reject(Reject::Duplicate);
+            return Err(Reject::Duplicate);
+        }
+        if inner.lanes[lane.index()].len() >= self.cfg.lane_capacity.max(1) {
+            self.stats.note_reject(Reject::PoolFull);
+            return Err(Reject::PoolFull);
+        }
+        if let Some(rate) = self.cfg.rate_limit {
+            let burst = self.cfg.rate_burst.max(1.0);
+            let bucket = inner
+                .buckets
+                .entry(env.proposal.creator.0.clone())
+                .or_insert_with(|| TokenBucket::new(burst, now));
+            if !bucket.try_take(now, rate, burst) {
+                self.stats.note_reject(Reject::RateLimited);
+                return Err(Reject::RateLimited);
+            }
+        }
+        // Signature / policy precheck (µs-scale HMAC): runs only for
+        // envelopes that passed every load check, so floods shed cheaply
+        // above.
+        if self.cfg.verify_endorsements {
+            if let Some(ca) = &self.ca {
+                let policy = self.policy.read().unwrap().clone();
+                match policy {
+                    Some(p) => {
+                        if !p.satisfied(&tx_id, &env.rw_set, &env.endorsements, ca) {
+                            self.stats.note_reject(Reject::PolicyUnsatisfiable);
+                            return Err(Reject::PolicyUnsatisfiable);
+                        }
+                    }
+                    None => {
+                        let payload = crate::ledger::tx::endorsement_payload(
+                            &tx_id,
+                            &env.rw_set.digest(),
+                        );
+                        let any_valid = env
+                            .endorsements
+                            .iter()
+                            .any(|e| ca.verify(&e.endorser, &payload, &e.signature));
+                        if !any_valid {
+                            self.stats.note_reject(Reject::BadSignature);
+                            return Err(Reject::BadSignature);
+                        }
+                    }
+                }
+            }
+        }
+
+        let bytes = encoded_len(&env);
+        inner.seen.insert(tx_id);
+        inner.seen_order.push_back(tx_id);
+        while inner.seen_order.len() > self.cfg.dedup_window.max(1) {
+            if let Some(old) = inner.seen_order.pop_front() {
+                inner.seen.remove(&old);
+            }
+        }
+        inner.lanes[lane.index()].push_back(Entry { env, tx_id, bytes, enqueued: now });
+        let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
+        self.stats.note_admitted(depth as u64);
+        Ok(())
+    }
+
+    /// Is a block due? Same cut rule the orderer used to own: pending count
+    /// reached `batch_size`, or the oldest queued envelope has waited
+    /// `batch_timeout`.
+    pub fn ready(&self, batch_size: usize, batch_timeout: Duration) -> bool {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        self.evict_expired(&mut inner, now);
+        let pending: usize = inner.lanes.iter().map(|l| l.len()).sum();
+        if pending == 0 {
+            return false;
+        }
+        if pending >= batch_size.max(1) {
+            return true;
+        }
+        let oldest = inner
+            .lanes
+            .iter()
+            .filter_map(|l| l.front().map(|e| e.enqueued))
+            .fold(f64::INFINITY, f64::min);
+        now - oldest >= batch_timeout.as_secs_f64()
+    }
+
+    /// Pull the next block's worth of envelopes: priority lanes drained in
+    /// order, bounded by `max_txs` and `max_bytes` (`max_bytes == 0` means
+    /// unbounded). A lone envelope larger than `max_bytes` still ships
+    /// (blocks never starve on the byte bound alone).
+    pub fn take_batch(&self, max_txs: usize, max_bytes: usize) -> Vec<Envelope> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap();
+        self.evict_expired(&mut inner, now);
+        let mut out = Vec::new();
+        let mut bytes = 0usize;
+        'lanes: for lane in inner.lanes.iter_mut() {
+            while out.len() < max_txs.max(1) {
+                let front_bytes = match lane.front() {
+                    Some(e) => e.bytes,
+                    None => break,
+                };
+                if !out.is_empty() && max_bytes > 0 && bytes + front_bytes > max_bytes {
+                    break 'lanes;
+                }
+                let e = lane.pop_front().expect("front checked");
+                bytes += e.bytes;
+                out.push(e.env);
+            }
+            if out.len() >= max_txs.max(1) {
+                break;
+            }
+        }
+        if !out.is_empty() {
+            self.stats.note_ordered(out.len() as u64, bytes as u64);
+        }
+        out
+    }
+
+    /// Put a taken batch back (consensus proposal failed, e.g. leadership
+    /// moved); order is preserved at the lane fronts.
+    pub fn restore(&self, envs: Vec<Envelope>) {
+        if envs.is_empty() {
+            return;
+        }
+        let now = self.clock.now();
+        let mut total_bytes = 0u64;
+        let n = envs.len() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        for env in envs.into_iter().rev() {
+            let lane = Lane::classify(&env.proposal);
+            let tx_id = env.tx_id();
+            let bytes = encoded_len(&env);
+            total_bytes += bytes as u64;
+            inner.lanes[lane.index()].push_front(Entry { env, tx_id, bytes, enqueued: now });
+        }
+        self.stats.note_restored(n, total_bytes);
+    }
+
+    /// Refuse all further submissions (orderer shutdown).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().open = false;
+    }
+
+    fn evict_expired(&self, inner: &mut Inner, now: f64) {
+        let ttl = self.cfg.ttl.as_secs_f64();
+        if ttl <= 0.0 {
+            return;
+        }
+        let mut dropped: Vec<TxId> = Vec::new();
+        for lane in inner.lanes.iter_mut() {
+            while lane.front().is_some_and(|e| now - e.enqueued > ttl) {
+                if let Some(e) = lane.pop_front() {
+                    dropped.push(e.tx_id);
+                }
+                self.stats.note_expired();
+            }
+        }
+        // An expired envelope was never ordered: forget it in the dedup set
+        // so the client's retry is admitted instead of rejected as a replay.
+        // (Its id may linger in `seen_order`; the redundant remove when the
+        // window rolls past it is harmless.)
+        for tx_id in dropped {
+            inner.seen.remove(&tx_id);
+        }
+    }
+}
+
+/// Per-channel pool registry shared between gateways (producers) and the
+/// ordering service (consumer). Pools are created lazily on first use and
+/// share one config/clock/CA.
+pub struct MempoolRegistry {
+    cfg: MempoolConfig,
+    clock: Arc<dyn Clock>,
+    ca: Option<CertificateAuthority>,
+    pools: RwLock<HashMap<String, Arc<ShardMempool>>>,
+}
+
+impl MempoolRegistry {
+    pub fn new(cfg: MempoolConfig) -> Arc<MempoolRegistry> {
+        MempoolRegistry::with_parts(cfg, SystemClock::shared(), None)
+    }
+
+    /// Registry whose pools verify endorsement signatures/policies at
+    /// admission using `ca`.
+    pub fn with_admission(cfg: MempoolConfig, ca: CertificateAuthority) -> Arc<MempoolRegistry> {
+        MempoolRegistry::with_parts(cfg, SystemClock::shared(), Some(ca))
+    }
+
+    pub fn with_parts(
+        cfg: MempoolConfig,
+        clock: Arc<dyn Clock>,
+        ca: Option<CertificateAuthority>,
+    ) -> Arc<MempoolRegistry> {
+        Arc::new(MempoolRegistry { cfg, clock, ca, pools: RwLock::new(HashMap::new()) })
+    }
+
+    /// Get or create the pool for `channel`.
+    pub fn pool(&self, channel: &str) -> Arc<ShardMempool> {
+        if let Some(p) = self.pools.read().unwrap().get(channel) {
+            return Arc::clone(p);
+        }
+        let mut pools = self.pools.write().unwrap();
+        let entry = pools.entry(channel.to_string()).or_insert_with(|| {
+            Arc::new(ShardMempool::with_parts(
+                channel,
+                self.cfg.clone(),
+                Arc::clone(&self.clock),
+                self.ca.clone(),
+            ))
+        });
+        Arc::clone(entry)
+    }
+
+    pub fn get(&self, channel: &str) -> Option<Arc<ShardMempool>> {
+        self.pools.read().unwrap().get(channel).cloned()
+    }
+
+    /// Channels with a pool (sorted for deterministic drain order).
+    pub fn channels(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.pools.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Install the admission policy for a channel's pool.
+    pub fn set_policy(&self, channel: &str, policy: EndorsementPolicy) {
+        self.pool(channel).set_policy(policy);
+    }
+
+    /// Route an envelope to its channel's pool.
+    pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
+        let pool = self.pool(&env.proposal.channel);
+        pool.submit(env)
+    }
+
+    /// Aggregate counters across every pool.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for pool in self.pools.read().unwrap().values() {
+            total.merge(&pool.stats());
+        }
+        total
+    }
+
+    /// Close every pool (orderer shutdown).
+    pub fn close_all(&self) {
+        for pool in self.pools.read().unwrap().values() {
+            pool.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::MemberId;
+    use crate::ledger::tx::{endorsement_payload, Endorsement, RwSet};
+    use crate::util::clock::VirtualClock;
+    use crate::util::prng::Prng;
+
+    fn envelope(
+        channel: &str,
+        chaincode: &str,
+        function: &str,
+        creator: &str,
+        nonce: u64,
+    ) -> Envelope {
+        Envelope {
+            proposal: Proposal {
+                channel: channel.into(),
+                chaincode: chaincode.into(),
+                function: function.into(),
+                args: vec!["a".into(), "b".into()],
+                creator: MemberId::new(creator),
+                nonce,
+            },
+            rw_set: RwSet::default(),
+            endorsements: Vec::new(),
+        }
+    }
+
+    fn query_env(nonce: u64) -> Envelope {
+        envelope("ch", "kv", "Put", "client", nonce)
+    }
+
+    #[test]
+    fn lanes_classify_by_traffic_class() {
+        let cat = envelope("main", "catalyst", "SubmitShardModel", "c", 1);
+        let pin = envelope("shard0", "models", "PinGlobalModel", "c", 2);
+        let upd = envelope("shard0", "models", "CreateModelUpdate", "c", 3);
+        let q = envelope("shard0", "kv", "Get", "c", 4);
+        assert_eq!(Lane::classify(&cat.proposal), Lane::Catalyst);
+        assert_eq!(Lane::classify(&pin.proposal), Lane::Catalyst);
+        assert_eq!(Lane::classify(&upd.proposal), Lane::ModelUpdate);
+        assert_eq!(Lane::classify(&q.proposal), Lane::Query);
+        assert_eq!(Lane::Catalyst.name(), "catalyst");
+    }
+
+    #[test]
+    fn priority_lanes_drain_in_order() {
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        pool.submit(envelope("ch", "kv", "Get", "c", 1)).unwrap();
+        pool.submit(envelope("ch", "models", "CreateModelUpdate", "c", 2)).unwrap();
+        pool.submit(envelope("ch", "catalyst", "SubmitShardModel", "c", 3)).unwrap();
+        let batch = pool.take_batch(10, 0);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].proposal.chaincode, "catalyst");
+        assert_eq!(batch[1].proposal.function, "CreateModelUpdate");
+        assert_eq!(batch[2].proposal.function, "Get");
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn bounded_lane_rejects_pool_full() {
+        let cfg = MempoolConfig { lane_capacity: 3, ..Default::default() };
+        let pool = ShardMempool::new("ch", cfg);
+        for n in 0..3 {
+            pool.submit(query_env(n)).unwrap();
+        }
+        assert_eq!(pool.submit(query_env(99)), Err(Reject::PoolFull));
+        // A different lane still has room: backpressure is per-class.
+        pool.submit(envelope("ch", "catalyst", "X", "c", 100)).unwrap();
+        let snap = pool.stats();
+        assert_eq!(snap.admitted, 4);
+        assert_eq!(snap.pool_full, 1);
+        assert_eq!(snap.shed(), 1);
+        assert_eq!(snap.depth_high_water, 4);
+    }
+
+    #[test]
+    fn duplicate_replay_rejected_even_after_ordering() {
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        pool.submit(query_env(1)).unwrap();
+        assert_eq!(pool.submit(query_env(1)), Err(Reject::Duplicate));
+        let batch = pool.take_batch(10, 0);
+        assert_eq!(batch.len(), 1);
+        // Still remembered after the batch was pulled.
+        assert_eq!(pool.submit(query_env(1)), Err(Reject::Duplicate));
+        assert_eq!(pool.stats().duplicate, 2);
+    }
+
+    #[test]
+    fn rate_cap_rejects_then_refills_on_clock() {
+        let clock = Arc::new(VirtualClock::new());
+        let cfg = MempoolConfig {
+            rate_limit: Some(10.0),
+            rate_burst: 2.0,
+            ..Default::default()
+        };
+        let pool =
+            ShardMempool::with_parts("ch", cfg, Arc::clone(&clock) as Arc<dyn Clock>, None);
+        pool.submit(query_env(1)).unwrap();
+        pool.submit(query_env(2)).unwrap();
+        assert_eq!(pool.submit(query_env(3)), Err(Reject::RateLimited));
+        // Another client is not throttled by the first's bucket.
+        pool.submit(envelope("ch", "kv", "Put", "other", 50)).unwrap();
+        // 0.1 virtual seconds at 10 tx/s refills one token.
+        clock.advance(Duration::from_millis(100));
+        pool.submit(query_env(4)).unwrap();
+        assert_eq!(pool.stats().rate_limited, 1);
+    }
+
+    #[test]
+    fn ttl_evicts_stale_entries() {
+        let clock = Arc::new(VirtualClock::new());
+        let cfg = MempoolConfig { ttl: Duration::from_secs(5), ..Default::default() };
+        let pool =
+            ShardMempool::with_parts("ch", cfg, Arc::clone(&clock) as Arc<dyn Clock>, None);
+        pool.submit(query_env(1)).unwrap();
+        clock.advance(Duration::from_secs(3));
+        pool.submit(query_env(2)).unwrap();
+        clock.advance(Duration::from_secs(3));
+        // nonce 1 is now 6 s old (> 5 s TTL); nonce 2 is 3 s old.
+        let batch = pool.take_batch(10, 0);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].proposal.nonce, 2);
+        assert_eq!(pool.stats().expired, 1);
+    }
+
+    #[test]
+    fn ttl_expiry_allows_resubmission() {
+        let clock = Arc::new(VirtualClock::new());
+        let cfg = MempoolConfig { ttl: Duration::from_secs(5), ..Default::default() };
+        let pool =
+            ShardMempool::with_parts("ch", cfg, Arc::clone(&clock) as Arc<dyn Clock>, None);
+        pool.submit(query_env(1)).unwrap();
+        clock.advance(Duration::from_secs(6));
+        // The original expired un-ordered, so the retry must be admitted —
+        // not bounced as a replay.
+        pool.submit(query_env(1)).unwrap();
+        let snap = pool.stats();
+        assert_eq!(snap.expired, 1);
+        assert_eq!(snap.admitted, 2);
+        assert_eq!(snap.duplicate, 0);
+    }
+
+    #[test]
+    fn pool_full_rejection_does_not_burn_rate_tokens() {
+        let cfg = MempoolConfig {
+            lane_capacity: 1,
+            rate_limit: Some(1.0),
+            rate_burst: 2.0,
+            ..Default::default()
+        };
+        let pool = ShardMempool::new("ch", cfg);
+        pool.submit(query_env(1)).unwrap(); // burns token 1, fills the lane
+        assert_eq!(pool.submit(query_env(2)), Err(Reject::PoolFull));
+        pool.take_batch(10, 0);
+        // The PoolFull bounce must not have debited the bucket: one token
+        // remains for the retry, and only the tx after it is rate-capped.
+        pool.submit(query_env(3)).unwrap();
+        assert_eq!(pool.submit(query_env(4)), Err(Reject::RateLimited));
+    }
+
+    #[test]
+    fn batches_are_size_and_byte_bounded() {
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        for n in 0..10 {
+            pool.submit(query_env(n)).unwrap();
+        }
+        let one_len = encoded_len(&query_env(999));
+        // Size bound.
+        assert_eq!(pool.take_batch(4, 0).len(), 4);
+        // Byte bound: room for two envelopes only.
+        assert_eq!(pool.take_batch(10, 2 * one_len).len(), 2);
+        // A lone oversized envelope still ships.
+        assert_eq!(pool.take_batch(10, 1).len(), 1);
+        assert_eq!(pool.pending(), 3);
+        let snap = pool.stats();
+        assert_eq!(snap.txs_ordered, 7);
+        assert_eq!(snap.batches_cut, 3);
+    }
+
+    #[test]
+    fn ready_respects_size_and_timeout_cuts() {
+        let clock = Arc::new(VirtualClock::new());
+        let pool = ShardMempool::with_parts(
+            "ch",
+            MempoolConfig::default(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            None,
+        );
+        assert!(!pool.ready(2, Duration::from_millis(100)));
+        pool.submit(query_env(1)).unwrap();
+        assert!(!pool.ready(2, Duration::from_millis(100)));
+        pool.submit(query_env(2)).unwrap();
+        assert!(pool.ready(2, Duration::from_millis(100)));
+        pool.take_batch(10, 0);
+        pool.submit(query_env(3)).unwrap();
+        clock.advance(Duration::from_millis(150));
+        assert!(pool.ready(100, Duration::from_millis(100)), "timeout cut due");
+    }
+
+    #[test]
+    fn restore_preserves_order_and_counters() {
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        for n in 0..4 {
+            pool.submit(query_env(n)).unwrap();
+        }
+        let batch = pool.take_batch(3, 0);
+        pool.restore(batch);
+        let again = pool.take_batch(10, 0);
+        let nonces: Vec<u64> = again.iter().map(|e| e.proposal.nonce).collect();
+        assert_eq!(nonces, vec![0, 1, 2, 3]);
+        let snap = pool.stats();
+        assert_eq!(snap.txs_ordered, 4);
+        assert_eq!(snap.batches_cut, 1);
+    }
+
+    #[test]
+    fn admission_precheck_rejects_unsigned_envelopes() {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(1);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let outsider = ca.enroll(MemberId::new("mallory"), &mut rng);
+        let cfg = MempoolConfig { verify_endorsements: true, ..Default::default() };
+        let pool =
+            ShardMempool::with_parts("ch", cfg, SystemClock::shared(), Some(ca.clone()));
+        pool.set_policy(EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]));
+
+        // No endorsements at all -> policy can never be satisfied.
+        assert_eq!(pool.submit(query_env(1)), Err(Reject::PolicyUnsatisfiable));
+
+        // Properly endorsed envelope is admitted.
+        let mut env = query_env(2);
+        let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+        env.endorsements.push(Endorsement {
+            endorser: cred.member.clone(),
+            signature: cred.sign(&payload),
+        });
+        pool.submit(env).unwrap();
+
+        // Signature from outside the policy set does not count.
+        let mut env = query_env(3);
+        let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+        env.endorsements.push(Endorsement {
+            endorser: outsider.member.clone(),
+            signature: outsider.sign(&payload),
+        });
+        assert_eq!(pool.submit(env), Err(Reject::PolicyUnsatisfiable));
+        assert_eq!(pool.stats().policy_unsatisfiable, 2);
+        assert_eq!(pool.stats().admitted, 1);
+    }
+
+    #[test]
+    fn registry_isolates_channels_and_aggregates_stats() {
+        let registry = MempoolRegistry::new(MempoolConfig {
+            lane_capacity: 1,
+            ..Default::default()
+        });
+        registry.submit(envelope("shard0", "kv", "Put", "c", 1)).unwrap();
+        registry.submit(envelope("shard1", "kv", "Put", "c", 2)).unwrap();
+        // shard0's query lane is full; shard1 unaffected.
+        assert_eq!(
+            registry.submit(envelope("shard0", "kv", "Put", "c", 3)),
+            Err(Reject::PoolFull)
+        );
+        assert_eq!(registry.channels(), vec!["shard0".to_string(), "shard1".to_string()]);
+        let total = registry.snapshot();
+        assert_eq!(total.admitted, 2);
+        assert_eq!(total.pool_full, 1);
+        registry.close_all();
+        assert_eq!(
+            registry.submit(envelope("shard1", "kv", "Put", "c", 9)),
+            Err(Reject::Shutdown)
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Overflow / reject / throughput counters for the mempool, exported into
+//! the Caliper-style reports so surge figures show shed load explicitly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+use super::admission::Reject;
+
+/// Live atomic counters owned by one `ShardMempool`.
+#[derive(Debug, Default)]
+pub struct MempoolStats {
+    admitted: AtomicU64,
+    pool_full: AtomicU64,
+    rate_limited: AtomicU64,
+    duplicate: AtomicU64,
+    bad_signature: AtomicU64,
+    policy_unsatisfiable: AtomicU64,
+    expired: AtomicU64,
+    batches_cut: AtomicU64,
+    txs_ordered: AtomicU64,
+    bytes_ordered: AtomicU64,
+    depth_high_water: AtomicU64,
+}
+
+impl MempoolStats {
+    pub fn note_admitted(&self, depth_after: u64) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.depth_high_water.fetch_max(depth_after, Ordering::Relaxed);
+    }
+
+    pub fn note_reject(&self, r: Reject) {
+        let counter = match r {
+            Reject::PoolFull => &self.pool_full,
+            Reject::RateLimited => &self.rate_limited,
+            Reject::Duplicate => &self.duplicate,
+            Reject::BadSignature => &self.bad_signature,
+            Reject::PolicyUnsatisfiable => &self.policy_unsatisfiable,
+            // Shutdown races are not a workload signal; don't count them.
+            Reject::Shutdown => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_ordered(&self, txs: u64, bytes: u64) {
+        self.batches_cut.fetch_add(1, Ordering::Relaxed);
+        self.txs_ordered.fetch_add(txs, Ordering::Relaxed);
+        self.bytes_ordered.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Roll back one `note_ordered` after a failed consensus proposal
+    /// (the batch went back into the pool).
+    pub fn note_restored(&self, txs: u64, bytes: u64) {
+        self.batches_cut.fetch_sub(1, Ordering::Relaxed);
+        self.txs_ordered.fetch_sub(txs, Ordering::Relaxed);
+        self.bytes_ordered.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            pool_full: self.pool_full.load(Ordering::Relaxed),
+            rate_limited: self.rate_limited.load(Ordering::Relaxed),
+            duplicate: self.duplicate.load(Ordering::Relaxed),
+            bad_signature: self.bad_signature.load(Ordering::Relaxed),
+            policy_unsatisfiable: self.policy_unsatisfiable.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            batches_cut: self.batches_cut.load(Ordering::Relaxed),
+            txs_ordered: self.txs_ordered.load(Ordering::Relaxed),
+            bytes_ordered: self.bytes_ordered.load(Ordering::Relaxed),
+            depth_high_water: self.depth_high_water.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters (mergeable across pools).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub admitted: u64,
+    pub pool_full: u64,
+    pub rate_limited: u64,
+    pub duplicate: u64,
+    pub bad_signature: u64,
+    pub policy_unsatisfiable: u64,
+    pub expired: u64,
+    pub batches_cut: u64,
+    pub txs_ordered: u64,
+    pub bytes_ordered: u64,
+    pub depth_high_water: u64,
+}
+
+impl StatsSnapshot {
+    /// Backpressure sheds: envelopes refused because of load (not because
+    /// they were invalid or replays).
+    pub fn shed(&self) -> u64 {
+        self.pool_full + self.rate_limited
+    }
+
+    /// Every admission refusal, whatever the reason.
+    pub fn rejected_total(&self) -> u64 {
+        self.pool_full
+            + self.rate_limited
+            + self.duplicate
+            + self.bad_signature
+            + self.policy_unsatisfiable
+    }
+
+    /// Accumulate another pool's counters (high-water keeps the max).
+    pub fn merge(&mut self, other: &StatsSnapshot) {
+        self.admitted += other.admitted;
+        self.pool_full += other.pool_full;
+        self.rate_limited += other.rate_limited;
+        self.duplicate += other.duplicate;
+        self.bad_signature += other.bad_signature;
+        self.policy_unsatisfiable += other.policy_unsatisfiable;
+        self.expired += other.expired;
+        self.batches_cut += other.batches_cut;
+        self.txs_ordered += other.txs_ordered;
+        self.bytes_ordered += other.bytes_ordered;
+        self.depth_high_water = self.depth_high_water.max(other.depth_high_water);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("admitted", self.admitted)
+            .set("rejected_pool_full", self.pool_full)
+            .set("rejected_rate_limited", self.rate_limited)
+            .set("rejected_duplicate", self.duplicate)
+            .set("rejected_bad_signature", self.bad_signature)
+            .set("rejected_policy", self.policy_unsatisfiable)
+            .set("expired_ttl", self.expired)
+            .set("batches_cut", self.batches_cut)
+            .set("txs_ordered", self.txs_ordered)
+            .set("bytes_ordered", self.bytes_ordered)
+            .set("depth_high_water", self.depth_high_water)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let s = MempoolStats::default();
+        s.note_admitted(3);
+        s.note_admitted(7);
+        s.note_admitted(5);
+        s.note_reject(Reject::PoolFull);
+        s.note_reject(Reject::RateLimited);
+        s.note_reject(Reject::Duplicate);
+        s.note_reject(Reject::Shutdown); // not counted
+        s.note_expired();
+        s.note_ordered(10, 1000);
+        let snap = s.snapshot();
+        assert_eq!(snap.admitted, 3);
+        assert_eq!(snap.shed(), 2);
+        assert_eq!(snap.rejected_total(), 3);
+        assert_eq!(snap.depth_high_water, 7);
+        assert_eq!(snap.txs_ordered, 10);
+        assert_eq!(snap.expired, 1);
+    }
+
+    #[test]
+    fn restore_rolls_back_ordered() {
+        let s = MempoolStats::default();
+        s.note_ordered(10, 1000);
+        s.note_ordered(4, 400);
+        s.note_restored(4, 400);
+        let snap = s.snapshot();
+        assert_eq!(snap.batches_cut, 1);
+        assert_eq!(snap.txs_ordered, 10);
+        assert_eq!(snap.bytes_ordered, 1000);
+    }
+
+    #[test]
+    fn merge_sums_and_maxes() {
+        let mut a = StatsSnapshot { admitted: 1, depth_high_water: 5, ..Default::default() };
+        let b = StatsSnapshot { admitted: 2, depth_high_water: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.admitted, 3);
+        assert_eq!(a.depth_high_water, 5);
+    }
+
+    #[test]
+    fn json_export_names_reject_reasons() {
+        let snap = StatsSnapshot { pool_full: 4, ..Default::default() };
+        let j = snap.to_json();
+        assert_eq!(j.get("rejected_pool_full").unwrap().as_f64(), Some(4.0));
+        assert!(j.get("depth_high_water").is_some());
+    }
+}

@@ -16,6 +16,7 @@ use crate::fabric::{EndorsementPolicy, Gateway, OrdererConfig, OrderingService, 
 use crate::fl::client::{Behavior, FlClient, LocalUpdate, TrainConfig};
 use crate::fl::datasets::{self, SynthDataset};
 use crate::fl::partition;
+use crate::mempool::{MempoolConfig, MempoolRegistry};
 use crate::runtime::ops::{EvalResult, FlatParams, ModelOps};
 use crate::storage::ModelStore;
 use crate::util::prng::Prng;
@@ -192,6 +193,7 @@ impl ScaleSfl {
         let mut shards = Vec::with_capacity(cfg.shards);
         let mut all_peers = Vec::new();
         let mut all_members = Vec::new();
+        let mut channel_policies: Vec<(String, EndorsementPolicy)> = Vec::new();
         let mut client_iter = client_data.into_iter();
         for s in 0..cfg.shards {
             let channel = format!("shard{s}");
@@ -206,6 +208,7 @@ impl ScaleSfl {
             }
             all_members.extend(members.clone());
             let policy = EndorsementPolicy::MajorityOf(members);
+            channel_policies.push((channel.clone(), policy.clone()));
             for (p, peer) in peers.iter().enumerate() {
                 peer.join_channel(&channel, policy.clone());
                 // Per-peer private eval split (paper: "potentially unique to
@@ -263,7 +266,17 @@ impl ScaleSfl {
             .map_err(|e| anyhow!(e))?;
         }
 
-        let orderer = OrderingService::start(
+        // Ingress: per-channel pools verify endorsement signatures/policies
+        // at admission, so garbage load is shed before consensus sees it.
+        let mempool = MempoolRegistry::with_admission(
+            MempoolConfig { verify_endorsements: true, ..Default::default() },
+            ca.clone(),
+        );
+        for (channel, policy) in &channel_policies {
+            mempool.set_policy(channel, policy.clone());
+        }
+        mempool.set_policy(MAINCHAIN, main_policy.clone());
+        let orderer = OrderingService::start_with_mempool(
             OrdererConfig {
                 batch_size: 16,
                 batch_timeout: Duration::from_millis(20),
@@ -271,6 +284,7 @@ impl ScaleSfl {
             },
             all_peers.clone(),
             cfg.seed ^ 0x0DDE,
+            mempool,
         );
         let global = ops.init_params(cfg.seed as i32)?;
         let mut net = ScaleSfl {
@@ -370,6 +384,9 @@ impl ScaleSfl {
                     ch.set_policy(policy.clone());
                 }
             }
+            // Keep the ingress admission precheck aligned with the newly
+            // elected committee.
+            self.orderer.mempool().set_policy(&shard.channel, policy.clone());
             // Participation score for the elected members.
             for &i in &committee {
                 *self.scores.entry(shard.id * 1000 + i).or_insert(0.0) += 1.0;

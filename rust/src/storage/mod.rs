@@ -3,23 +3,38 @@
 //! Clients upload full model weight vectors here (paper §3.4.3); only the
 //! hash + URI go on-chain. Endorsing peers fetch by URI and verify the hash
 //! before evaluating (§3.4.6). A configurable fetch latency models the
-//! network hop to the peer-worker gRPC cache of the paper's testbed.
+//! network hop to the peer-worker gRPC cache of the paper's testbed; the
+//! delay goes through an injectable [`Clock`], so surge tests can use a
+//! [`crate::util::clock::VirtualClock`] and never stall real threads.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use crate::crypto::{hash_f32, Digest};
+use crate::util::clock::{Clock, SystemClock};
 
 /// URI scheme for stored blobs.
 pub const SCHEME: &str = "sim://";
 
 /// Content-addressed store for flat f32 model blobs.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct ModelStore {
     blobs: Arc<RwLock<HashMap<Digest, Arc<Vec<f32>>>>>,
     /// Simulated per-fetch latency (0 in tests).
     fetch_latency: Duration,
+    /// Clock the fetch latency elapses on (wall or virtual).
+    clock: Arc<dyn Clock>,
+}
+
+impl Default for ModelStore {
+    fn default() -> Self {
+        ModelStore {
+            blobs: Arc::default(),
+            fetch_latency: Duration::ZERO,
+            clock: SystemClock::shared(),
+        }
+    }
 }
 
 impl ModelStore {
@@ -28,7 +43,13 @@ impl ModelStore {
     }
 
     pub fn with_fetch_latency(latency: Duration) -> Self {
-        ModelStore { blobs: Arc::default(), fetch_latency: latency }
+        ModelStore { fetch_latency: latency, ..Default::default() }
+    }
+
+    /// Store with a simulated fetch latency elapsing on `clock` — pass a
+    /// `VirtualClock` to model slow fetches without blocking threads.
+    pub fn with_clock(latency: Duration, clock: Arc<dyn Clock>) -> Self {
+        ModelStore { blobs: Arc::default(), fetch_latency: latency, clock }
     }
 
     /// Store a blob; returns (content hash, URI).
@@ -42,7 +63,7 @@ impl ModelStore {
     pub fn get(&self, uri: &str) -> Option<Arc<Vec<f32>>> {
         let digest = Self::parse_uri(uri)?;
         if !self.fetch_latency.is_zero() {
-            std::thread::sleep(self.fetch_latency);
+            self.clock.sleep(self.fetch_latency);
         }
         self.blobs.read().unwrap().get(&digest).cloned()
     }
@@ -77,6 +98,8 @@ impl ModelStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::VirtualClock;
+    use std::time::Instant;
 
     #[test]
     fn put_get_roundtrip() {
@@ -112,5 +135,32 @@ mod tests {
         assert_eq!(d1, d2);
         assert_eq!(u1, u2);
         assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn virtual_clock_fetch_latency_does_not_stall_threads() {
+        let clock = Arc::new(VirtualClock::new());
+        // A 10-second simulated fetch hop per get().
+        let store = ModelStore::with_clock(
+            Duration::from_secs(10),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let (_, uri) = store.put(vec![1.0, 2.0]);
+        let t0 = Instant::now();
+        assert!(store.get(&uri).is_some());
+        assert!(store.get(&uri).is_some());
+        // 20 s of simulated latency elapsed on the virtual clock...
+        assert!((clock.now() - 20.0).abs() < 1e-9);
+        // ...while the real thread never slept.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn system_clock_fetch_latency_still_blocks() {
+        let store = ModelStore::with_fetch_latency(Duration::from_millis(20));
+        let (_, uri) = store.put(vec![3.0]);
+        let t0 = Instant::now();
+        assert!(store.get(&uri).is_some());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
     }
 }

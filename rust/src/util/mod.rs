@@ -5,6 +5,7 @@
 //! hand-rolled rather than pulled from crates.io (no rand/serde/rayon).
 
 pub mod check;
+pub mod clock;
 pub mod histogram;
 pub mod json;
 pub mod prng;

@@ -1,0 +1,140 @@
+//! Offline vendored HMAC (RFC 2104) over the vendored SHA-256: the
+//! API-compatible subset of the `hmac` crate this repo uses
+//! (`Hmac<Sha256>` driven through the `Mac` trait).
+
+#![allow(clippy::needless_range_loop)]
+
+use std::marker::PhantomData;
+
+use sha2::{Digest, Sha256};
+
+const BLOCK: usize = 64;
+
+/// Key error (never returned by this HMAC — any key length is valid —
+/// but kept for API compatibility).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InvalidLength;
+
+/// Tag verification failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MacError;
+
+/// Finalized MAC tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CtOutput([u8; 32]);
+
+impl CtOutput {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.0
+    }
+}
+
+/// Keyed-MAC trait (subset of `digest::Mac`).
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> CtOutput;
+    fn verify_slice(self, tag: &[u8]) -> Result<(), MacError>;
+}
+
+/// HMAC instance; only `Hmac<Sha256>` is implemented in this vendored copy.
+#[derive(Clone)]
+pub struct Hmac<D> {
+    inner: Sha256,
+    opad_key: [u8; BLOCK],
+    _digest: PhantomData<D>,
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut k0 = [0u8; BLOCK];
+        if key.len() > BLOCK {
+            k0[..32].copy_from_slice(&Sha256::digest_of(key));
+        } else {
+            k0[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad = [0u8; BLOCK];
+        let mut opad = [0u8; BLOCK];
+        for i in 0..BLOCK {
+            ipad[i] = k0[i] ^ 0x36;
+            opad[i] = k0[i] ^ 0x5c;
+        }
+        let mut inner = Sha256::new();
+        inner.update(ipad);
+        Ok(Hmac { inner, opad_key: opad, _digest: PhantomData })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> CtOutput {
+        let inner_hash: [u8; 32] = self.inner.finalize().into();
+        let mut outer = Sha256::new();
+        outer.update(self.opad_key);
+        outer.update(inner_hash);
+        CtOutput(outer.finalize().into())
+    }
+
+    fn verify_slice(self, tag: &[u8]) -> Result<(), MacError> {
+        let computed = self.finalize().into_bytes();
+        if tag.len() != computed.len() {
+            return Err(MacError);
+        }
+        // Constant-time-style comparison.
+        let mut diff = 0u8;
+        for (a, b) in computed.iter().zip(tag) {
+            diff |= a ^ b;
+        }
+        if diff == 0 {
+            Ok(())
+        } else {
+            Err(MacError)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hmac_hex(key: &[u8], msg: &[u8]) -> String {
+        let mut mac = Hmac::<Sha256>::new_from_slice(key).unwrap();
+        mac.update(msg);
+        mac.finalize().into_bytes().iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn rfc4231_test_vectors() {
+        // RFC 4231 test case 1.
+        assert_eq!(
+            hmac_hex(&[0x0b; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // RFC 4231 test case 2 ("Jefe").
+        assert_eq!(
+            hmac_hex(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // RFC 4231 test case 6: key longer than one block.
+        assert_eq!(
+            hmac_hex(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            ),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn verify_accepts_good_rejects_bad() {
+        let mut mac = Hmac::<Sha256>::new_from_slice(b"secret").unwrap();
+        mac.update(b"payload");
+        let tag = mac.clone().finalize().into_bytes();
+        assert!(mac.clone().verify_slice(&tag).is_ok());
+        let mut bad = tag;
+        bad[0] ^= 1;
+        assert!(mac.clone().verify_slice(&bad).is_err());
+        assert!(mac.verify_slice(&tag[..16]).is_err());
+    }
+}
