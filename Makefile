@@ -2,7 +2,8 @@
 #
 #   make check     - formatting + lints + tier-1 verify (CI gate)
 #   make verify    - tier-1: release build + tests
-#   make bench     - mempool ingress baseline (writes BENCH_mempool.json)
+#   make bench     - perf baselines (writes BENCH_mempool.json,
+#                    BENCH_gateway.json)
 
 .PHONY: check fmt clippy verify bench
 
@@ -20,3 +21,4 @@ verify:
 
 bench:
 	cargo bench --bench mempool
+	cargo bench --bench gateway_pipeline

@@ -11,6 +11,11 @@ cargo clippy --all-targets -- -D warnings
 echo "==> cargo build --release"
 cargo build --release
 
+# Examples and benches are the drivers of the submission API; build them
+# so API churn can never silently break them again.
+echo "==> cargo build --release --examples --benches"
+cargo build --release --examples --benches
+
 echo "==> cargo test -q"
 cargo test -q
 

@@ -232,7 +232,8 @@ fn main() -> anyhow::Result<()> {
         // peers, so per-host capacity ~= 1/eval_s regardless of shards.
         let capacity = 1.0 / cal.eval_s / 4.0; // 4 endorsers share the core
         let tps = capacity * mult;
-        let wl = Workload { txs: 24, send_tps: tps, workers: 2, timeout_s: 8.0 };
+        let wl =
+            Workload { txs: 24, send_tps: tps, workers: 2, timeout_s: 8.0, max_in_flight: 16 };
         let digest_hex = digest.hex();
         let uri = uri.clone();
         let names = shard_names.clone();
@@ -287,8 +288,13 @@ fn main() -> anyhow::Result<()> {
         "sent TPS", "tput", "avgLat(s)", "fail", "shed"
     );
     for mult in [0.5, 1.5, 4.0] {
-        let wl =
-            Workload { txs: 200, send_tps: cap * mult, workers: 2, timeout_s: 8.0 };
+        let wl = Workload {
+            txs: 200,
+            send_tps: cap * mult,
+            workers: 2,
+            timeout_s: 8.0,
+            ..Default::default()
+        };
         let r = run_des(&des_cfg, &wl, 42);
         println!(
             "{:<10.2} {:>10.2} {:>10.3} {:>8} {:>8}",

@@ -1,0 +1,150 @@
+//! Closed-loop vs open-loop committed throughput through one shard.
+//!
+//! The closed-loop driver (sequential `submit_and_wait`) pays the full
+//! batch-timeout + ordering latency per transaction; the open-loop driver
+//! (`submit_all` at in-flight depths 1/8/64) keeps the mempool fed so the
+//! orderer cuts full blocks back-to-back. Emits the committed-TPS
+//! trajectory to `BENCH_gateway.json` (shed/reject counts reported, never
+//! dropped) so the concurrency win is tracked across PRs — the depth-64
+//! open loop is expected to clear 3x the closed-loop baseline on the same
+//! topology.
+//!
+//!     cargo bench --bench gateway_pipeline    (or `make bench`)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scalesfl::crypto::msp::{CertificateAuthority, MemberId};
+use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+use scalesfl::fabric::endorsement::EndorsementPolicy;
+use scalesfl::fabric::orderer::{OrdererConfig, OrderingService};
+use scalesfl::fabric::peer::Peer;
+use scalesfl::fabric::{CommitOutcome, Gateway};
+use scalesfl::ledger::tx::Proposal;
+use scalesfl::util::json::Json;
+use scalesfl::util::prng::Prng;
+
+struct PutCc;
+impl Chaincode for PutCc {
+    fn name(&self) -> &str {
+        "kv"
+    }
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        _f: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        ctx.put(&args[0], b"v".to_vec());
+        Ok(vec![])
+    }
+}
+
+/// One shard: 2 endorsing peers, default mempool, 16-tx blocks with a
+/// 20 ms batch timeout (what a lone closed-loop tx always waits for).
+fn shard() -> (Vec<Arc<Peer>>, Gateway) {
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(17);
+    let peers: Vec<Arc<Peer>> = (0..2)
+        .map(|i| {
+            let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+            Peer::new(cred, ca.clone())
+        })
+        .collect();
+    let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+    for p in &peers {
+        p.join_channel("shard0", EndorsementPolicy::MajorityOf(members.clone()));
+        p.install_chaincode("shard0", Arc::new(PutCc)).unwrap();
+    }
+    let orderer = OrderingService::start(
+        OrdererConfig {
+            batch_size: 16,
+            batch_timeout: Duration::from_millis(20),
+            tick: Duration::from_millis(2),
+            ..Default::default()
+        },
+        peers.clone(),
+        17,
+    );
+    (peers.clone(), Gateway::new(peers, orderer))
+}
+
+fn proposal(run: &str, i: usize) -> Proposal {
+    Proposal {
+        channel: "shard0".into(),
+        chaincode: "kv".into(),
+        function: "Put".into(),
+        args: vec![format!("{run}-k{i}")],
+        creator: MemberId::new("bench-client"),
+        nonce: i as u64,
+    }
+}
+
+fn tally(name: &str, outcomes: &[CommitOutcome], wall: f64) -> Json {
+    let committed = outcomes.iter().filter(|o| o.is_valid()).count();
+    let shed = outcomes.iter().filter(|o| o.is_rejected()).count();
+    let failed = outcomes.len() - committed - shed;
+    let tps = committed as f64 / wall.max(1e-9);
+    println!(
+        "{name:<28} committed={committed:<4} shed={shed:<3} failed={failed:<3} wall={wall:>6.2}s   {tps:>8.1} committed-TPS"
+    );
+    Json::obj()
+        .set("committed", committed)
+        .set("shed", shed)
+        .set("failed", failed)
+        .set("wall_s", wall)
+        .set("committed_tps", tps)
+}
+
+/// Sequential `submit_and_wait`: one transaction in flight, ever.
+fn closed_loop(txs: usize) -> Json {
+    let (_peers, gw) = shard();
+    let t0 = Instant::now();
+    let outcomes: Vec<CommitOutcome> =
+        (0..txs).map(|i| gw.submit_and_wait(&proposal("closed", i))).collect();
+    tally("closed-loop (submit_and_wait)", &outcomes, t0.elapsed().as_secs_f64())
+}
+
+/// `submit_all` with a bounded in-flight window on a fresh, identical
+/// topology per depth (comparable chains, no cross-run dedup effects).
+fn open_loop(txs: usize, depth: usize) -> Json {
+    let (_peers, gw) = shard();
+    let run = format!("open{depth}");
+    let proposals: Vec<Proposal> = (0..txs).map(|i| proposal(&run, i)).collect();
+    let t0 = Instant::now();
+    let outcomes = gw.submit_all(&proposals, depth);
+    let j = tally(
+        &format!("open-loop depth={depth} (submit_all)"),
+        &outcomes,
+        t0.elapsed().as_secs_f64(),
+    );
+    j.set("depth", depth).set("in_flight_high_water", gw.in_flight_high_water())
+}
+
+fn main() {
+    println!("# gateway pipeline bench — closed-loop vs open-loop submission\n");
+    let txs = 120;
+    let closed = closed_loop(txs);
+    let depths = [1usize, 8, 64];
+    let mut open = Vec::new();
+    for &d in &depths {
+        open.push(open_loop(txs, d));
+    }
+
+    let closed_tps = closed.get("committed_tps").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let deep_tps =
+        open.last().and_then(|j| j.get("committed_tps")).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let speedup = deep_tps / closed_tps.max(1e-9);
+    println!(
+        "\nverdict: depth-64 open loop at {speedup:.1}x the closed-loop baseline (expect >= 3x)"
+    );
+
+    let out = Json::obj()
+        .set("bench", "gateway_pipeline")
+        .set("txs", txs)
+        .set("closed_loop", closed)
+        .set("open_loop", open)
+        .set("speedup_depth64_vs_closed", speedup);
+    std::fs::write("BENCH_gateway.json", format!("{out}\n")).expect("write BENCH_gateway.json");
+    println!("wrote BENCH_gateway.json");
+}

@@ -166,7 +166,9 @@ fn bench_real_vs_des() {
         5,
     );
     let gw = Arc::new(Gateway::new(peers, orderer));
-    let wl = Workload { txs: 120, send_tps: 400.0, workers: 4, timeout_s: 10.0 };
+    // Cap the open-loop window at the worker count so the real run stays
+    // comparable with the DES's closed-loop worker model.
+    let wl = Workload { txs: 120, send_tps: 400.0, workers: 4, timeout_s: 10.0, max_in_flight: 4 };
     let real = run_real("real/kv", &wl, &[gw], |i| Proposal {
         channel: "ch".into(),
         chaincode: "kv".into(),

@@ -237,7 +237,7 @@ mod tests {
     }
 
     fn wl(txs: usize, tps: f64) -> Workload {
-        Workload { txs, send_tps: tps, workers: 2, timeout_s: 30.0 }
+        Workload { txs, send_tps: tps, workers: 2, ..Default::default() }
     }
 
     #[test]

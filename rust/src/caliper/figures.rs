@@ -70,7 +70,7 @@ pub fn fig4(env: &FigureEnv) -> Vec<(usize, Report)> {
         .map(|shards| {
             let cfg = DesConfig { shards, ..env.base };
             let cap = global_capacity(&cfg);
-            let wl = Workload { txs, send_tps: cap * 1.15, workers: 2, timeout_s: 30.0 };
+            let wl = Workload { txs, send_tps: cap * 1.15, workers: 2, ..Default::default() };
             let mut r = run_des(&cfg, &wl, 4_000 + shards as u64);
             r.name = format!("fig4/shards={shards}");
             (shards, r)
@@ -92,7 +92,7 @@ pub fn fig5(env: &FigureEnv) -> Vec<(usize, f64, Report)> {
         let steps = if env.quick { 4 } else { 8 };
         for i in 1..=steps {
             let tps = cap * (0.3 + 0.25 * i as f64);
-            let wl = Workload { txs, send_tps: tps, workers: 2, timeout_s: 30.0 };
+            let wl = Workload { txs, send_tps: tps, workers: 2, ..Default::default() };
             let mut r = run_des(&cfg, &wl, 5_000 + shards as u64 * 100 + i as u64);
             r.name = format!("fig5/shards={shards}/sent={tps:.2}");
             rows.push((shards, tps, r));
@@ -117,7 +117,7 @@ pub fn fig6_7(env: &FigureEnv) -> Vec<(usize, Report)> {
     counts
         .iter()
         .map(|&txs| {
-            let wl = Workload { txs, send_tps: cap * 1.3, workers: 2, timeout_s: 30.0 };
+            let wl = Workload { txs, send_tps: cap * 1.3, workers: 2, ..Default::default() };
             let mut r = run_des(&cfg, &wl, 6_000 + txs as u64);
             r.name = format!("fig6_7/txs={txs}");
             (txs, r)
@@ -137,7 +137,7 @@ pub fn fig8(env: &FigureEnv) -> Vec<(usize, usize, Report)> {
         let cfg = DesConfig { shards, ..env.base };
         let cap = global_capacity(&cfg);
         for &w in workers {
-            let wl = Workload { txs, send_tps: cap, workers: w, timeout_s: 30.0 };
+            let wl = Workload { txs, send_tps: cap, workers: w, ..Default::default() };
             let mut r = run_des(&cfg, &wl, 8_000 + shards as u64 * 100 + w as u64);
             r.name = format!("fig8/shards={shards}/workers={w}");
             rows.push((shards, w, r));

@@ -10,9 +10,14 @@
 //! from `mempool::StatsSnapshot`.
 //!
 //! Two execution backends:
-//! - [`real`]: wall-clock workers driving the actual fabric pipeline with
-//!   real PJRT endorsement evaluations (bounded by host cores — this image
-//!   has one).
+//! - [`real`]: a rate-targeted **open-loop** driver over the pipelined
+//!   submission API (`Gateway::submit` handles): workers pace submissions
+//!   at the target TPS and commits resolve asynchronously through the
+//!   per-channel demux, so in-flight depth — reported as
+//!   [`Report::in_flight_high_water`] — is bounded by
+//!   [`Workload::max_in_flight`], not by worker count. Endorsements still
+//!   run real PJRT evaluations (bounded by host cores — this image has
+//!   one).
 //! - [`des`]: a discrete-event simulation of the same pipeline whose service
 //!   times are *calibrated from real PJRT runs* (DESIGN.md §3b), used to
 //!   regenerate the paper's multi-core figures on a 1-core host.
@@ -36,10 +41,16 @@ pub struct Workload {
     pub workers: usize,
     /// Transaction timeout in seconds (paper: 30).
     pub timeout_s: f64,
+    /// Open-loop depth cap for the [`real`] backend: max transactions in
+    /// the submission pipeline at once — from the moment a worker starts
+    /// endorsing until the commit outcome resolves — before submitters
+    /// pause (the DES models concurrency through `workers` instead and
+    /// ignores this).
+    pub max_in_flight: usize,
 }
 
 impl Default for Workload {
     fn default() -> Self {
-        Workload { txs: 200, send_tps: 10.0, workers: 2, timeout_s: 30.0 }
+        Workload { txs: 200, send_tps: 10.0, workers: 2, timeout_s: 30.0, max_in_flight: 256 }
     }
 }

@@ -1,5 +1,14 @@
-//! Wall-clock Caliper backend: worker threads drive the real fabric
-//! pipeline (real PJRT endorsement evaluations) at a target send rate.
+//! Wall-clock Caliper backend: a rate-targeted **open-loop** driver over
+//! the pipelined submission API.
+//!
+//! Workers pace `Gateway::submit` calls at the target send rate and hand
+//! the returned `SubmitHandle`s to a collector that resolves commit
+//! outcomes as they land — submitters never block on a commit, so the
+//! pipeline holds up to [`Workload::max_in_flight`] transactions at once
+//! (the observed depth is reported as `Report::in_flight_high_water`).
+//! This is how the paper's Caliper setup saturates each shard; the old
+//! closed-loop driver capped concurrency at the worker count and never
+//! exercised the mempool/orderer pipeline.
 //!
 //! On this 1-core image the endorsement evaluations serialize, so absolute
 //! numbers undershoot the paper's 8-core testbed; the DES backend
@@ -7,16 +16,19 @@
 //! the DES against reality at small scale (see `benches/micro.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::fabric::gateway::{CommitOutcome, Gateway};
+use crate::fabric::gateway::{CommitOutcome, Gateway, SubmitHandle};
 use crate::ledger::tx::Proposal;
 use crate::util::histogram::Histogram;
 
 use super::report::Report;
 use super::Workload;
+
+/// How long submitters nap when the in-flight window is full.
+const BACKOFF: Duration = Duration::from_micros(200);
 
 /// Run a workload against real gateways. `make_proposal(i)` builds the i-th
 /// transaction; `gateways[i % gateways.len()]` submits it (shard
@@ -29,11 +41,56 @@ pub fn run_real(
 ) -> Report {
     let started = Instant::now();
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(bool, bool, f64)>> = Mutex::new(Vec::with_capacity(wl.txs));
-    let make_proposal = &make_proposal;
-    thread::scope(|s| {
+    let in_flight = AtomicUsize::new(0);
+    let in_flight_high = AtomicUsize::new(0);
+    let max_in_flight = wl.max_in_flight.max(1);
+    let timeout = Duration::from_secs_f64(wl.timeout_s.max(0.0));
+    let (handle_tx, handle_rx) = mpsc::channel::<SubmitHandle>();
+
+    let outcomes = thread::scope(|s| {
+        let (next, in_flight, in_flight_high) = (&next, &in_flight, &in_flight_high);
+        let make_proposal = &make_proposal;
+        // Collector: sweeps the window with non-blocking polls and resolves
+        // handles in *commit* order, so one slow head-of-line tx (batch
+        // timeout, leadership churn) cannot pin the in-flight gauge and
+        // stall every submitter while the pipeline is actually empty.
+        let collector = s.spawn(move || {
+            let mut out: Vec<CommitOutcome> = Vec::with_capacity(wl.txs);
+            let mut pending: Vec<SubmitHandle> = Vec::new();
+            let mut open = true;
+            while open || !pending.is_empty() {
+                if open {
+                    match handle_rx.recv_timeout(Duration::from_millis(1)) {
+                        Ok(h) => pending.push(h),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                    }
+                } else {
+                    // Workers are done; pace the remaining sweeps.
+                    thread::sleep(Duration::from_millis(1));
+                }
+                let mut i = 0;
+                while i < pending.len() {
+                    let h = &mut pending[i];
+                    let resolved = match h.try_wait() {
+                        Some(outcome) => Some(outcome),
+                        None if h.elapsed() >= timeout => Some(CommitOutcome::TimedOut),
+                        None => None,
+                    };
+                    if let Some(outcome) = resolved {
+                        out.push(outcome);
+                        in_flight.fetch_sub(1, Ordering::SeqCst);
+                        pending.swap_remove(i);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            out
+        });
         for _ in 0..wl.workers.max(1) {
-            s.spawn(|| loop {
+            let handle_tx = handle_tx.clone();
+            s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::SeqCst);
                 if i >= wl.txs {
                     return;
@@ -43,27 +100,52 @@ pub fn run_real(
                 if let Some(wait) = due.checked_duration_since(Instant::now()) {
                     thread::sleep(wait);
                 }
+                // Open-loop depth cap: claim a slot by CAS so concurrent
+                // workers cannot collectively overshoot the window.
+                let mut depth = in_flight.load(Ordering::SeqCst);
+                loop {
+                    if depth >= max_in_flight {
+                        thread::sleep(BACKOFF);
+                        depth = in_flight.load(Ordering::SeqCst);
+                        continue;
+                    }
+                    match in_flight.compare_exchange_weak(
+                        depth,
+                        depth + 1,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    ) {
+                        Ok(_) => break,
+                        Err(cur) => depth = cur,
+                    }
+                }
+                in_flight_high.fetch_max(depth + 1, Ordering::SeqCst);
                 let gw = &gateways[i % gateways.len()];
-                let sent_at = Instant::now();
-                let outcome = gw.submit_and_wait(&make_proposal(i));
-                let latency = sent_at.elapsed().as_secs_f64();
-                let ok = matches!(outcome, CommitOutcome::Committed { code, .. }
-                    if code == crate::ledger::block::ValidationCode::Valid);
-                // Admission-control backpressure is shed load, not failure.
-                results.lock().unwrap().push((ok, outcome.is_rejected(), latency));
+                let h = gw.submit(&make_proposal(i));
+                if handle_tx.send(h).is_err() {
+                    return;
+                }
             });
         }
+        // Workers hold clones; once they all finish the collector drains.
+        drop(handle_tx);
+        collector.join().expect("collector panicked")
     });
+
     let duration = started.elapsed().as_secs_f64().max(1e-9);
-    let results = results.into_inner().unwrap();
     let mut report = Report::new(name);
     report.sent = wl.txs;
     let mut hist = Histogram::default();
-    for (ok, shed, lat) in &results {
-        if *ok && *lat <= wl.timeout_s {
+    for outcome in &outcomes {
+        let lat = match outcome {
+            CommitOutcome::Committed { latency, .. } => latency.as_secs_f64(),
+            _ => f64::INFINITY,
+        };
+        if outcome.is_valid() && lat <= wl.timeout_s {
             report.succeeded += 1;
-            hist.record(*lat);
-        } else if *shed {
+            hist.record(lat);
+        } else if outcome.is_rejected() {
+            // Admission-control backpressure is shed load, not failure.
             report.shed += 1;
         } else {
             report.failed += 1;
@@ -73,6 +155,7 @@ pub fn run_real(
     report.duration_s = duration;
     report.throughput = report.succeeded as f64 / duration;
     report.latency = hist;
+    report.in_flight_high_water = in_flight_high.load(Ordering::SeqCst);
     report
 }
 
@@ -123,7 +206,8 @@ mod tests {
             1,
         );
         let gw = Arc::new(Gateway::new(peers.clone(), orderer));
-        let wl = Workload { txs: 40, send_tps: 500.0, workers: 4, timeout_s: 10.0 };
+        let wl =
+            Workload { txs: 40, send_tps: 500.0, workers: 4, timeout_s: 10.0, max_in_flight: 16 };
         let report = run_real("smoke", &wl, &[gw], |i| Proposal {
             channel: "ch".into(),
             chaincode: "kv".into(),

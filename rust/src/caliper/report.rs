@@ -33,6 +33,10 @@ pub struct Report {
     pub latency: Histogram,
     /// Workload makespan in seconds (first send -> last completion).
     pub duration_s: f64,
+    /// Deepest open-loop window the real backend reached: transactions in
+    /// the submission pipeline at once, endorsement included (0 for DES
+    /// reports; the demux-registered depth is `Gateway::in_flight_high_water`).
+    pub in_flight_high_water: usize,
 }
 
 impl Report {
@@ -47,6 +51,7 @@ impl Report {
             throughput: 0.0,
             latency: Histogram::default(),
             duration_s: 0.0,
+            in_flight_high_water: 0,
         }
     }
 
@@ -57,7 +62,7 @@ impl Report {
     /// One table row, Caliper-style.
     pub fn row(&self) -> String {
         format!(
-            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s",
+            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s inflight={:<4}",
             self.name,
             self.sent,
             self.succeeded,
@@ -67,6 +72,7 @@ impl Report {
             self.throughput,
             self.avg_latency(),
             self.latency.quantile(0.95),
+            self.in_flight_high_water,
         )
     }
 
@@ -83,6 +89,7 @@ impl Report {
             .set("p95_latency_s", self.latency.quantile(0.95))
             .set("max_latency_s", self.latency.max())
             .set("duration_s", self.duration_s)
+            .set("in_flight_high_water", self.in_flight_high_water)
     }
 }
 
@@ -101,11 +108,14 @@ mod tests {
         r.throughput = 9.0;
         r.latency.record(0.5);
         r.duration_s = 10.0;
+        r.in_flight_high_water = 32;
         assert!(r.row().contains("fig4/s2"));
         assert!(r.row().contains("shed=5"));
+        assert!(r.row().contains("inflight=32"));
         let j = r.to_json();
         assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(90.0));
         assert_eq!(j.get("shed").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("in_flight_high_water").unwrap().as_f64(), Some(32.0));
     }
 }

@@ -1,17 +1,40 @@
-//! Client gateway: the submit-and-wait flow a transactor runs — fan the
-//! proposal out to endorsing peers, check rw-set agreement, assemble the
-//! envelope, hand it to the orderer, and wait for the commit event
-//! (with the paper's 30 s timeout semantics).
+//! Client gateway: the pipelined submission API a transactor drives.
+//!
+//! [`Gateway::submit`] runs the *synchronous* front half of a transaction
+//! — endorse across peers, check rw-set agreement, assemble the envelope,
+//! pass admission control into the orderer's mempool — and returns a
+//! non-blocking [`SubmitHandle`] carrying the endorse/admission result
+//! immediately. The commit outcome resolves later through the handle
+//! ([`SubmitHandle::wait`] / [`SubmitHandle::try_wait`]), so a client can
+//! keep thousands of transactions in flight without a thread each.
+//!
+//! Handle lifecycle: `submit` registers the tx id with the channel's
+//! [`CommitWaiter`] *before* the envelope reaches the orderer (a commit
+//! can never race past its waiter), the demux routes the one matching
+//! [`CommitEvent`](super::peer::CommitEvent) to the handle, and dropping
+//! an unresolved handle deregisters it. One waiter — one
+//! `Peer::subscribe` stream — exists per (gateway, channel) no matter how
+//! many transactions are in flight; the old design gave every in-flight
+//! tx its own subscription that scanned all commit events (O(N²) clones
+//! under load).
+//!
+//! [`Gateway::submit_all`] is the open-loop batch driver (bounded
+//! in-flight window, drains `Reject::PoolFull` backpressure by waiting
+//! out the oldest in-flight tx), and [`Gateway::submit_and_wait`] remains
+//! as a one-line closed-loop shim with the paper's 30 s timeout
+//! semantics.
 
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ledger::block::ValidationCode;
-use crate::ledger::tx::{Envelope, Proposal};
+use crate::ledger::tx::{Envelope, Proposal, TxId};
 use crate::mempool::Reject;
 
 use super::orderer::OrderingService;
-use super::peer::Peer;
+use super::peer::{CommitEvent, Peer};
+use super::waiter::CommitWaiter;
 
 /// Outcome of a submitted transaction.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,17 +62,137 @@ impl CommitOutcome {
     }
 }
 
+enum HandleState {
+    /// Outcome known already: resolved at submit time (endorsement failure,
+    /// admission reject) or drained from the demux.
+    Resolved(CommitOutcome),
+    /// Awaiting the commit event through the channel's demux (events come
+    /// stamped with their arrival time, so latency is measured to the
+    /// commit, not to whenever the handle gets drained). The handle keeps
+    /// the waiter (and its demux thread) alive until it resolves.
+    Pending { rx: mpsc::Receiver<(CommitEvent, Instant)>, waiter: Arc<CommitWaiter> },
+}
+
+/// A submitted transaction whose commit outcome resolves asynchronously.
+///
+/// Returned by [`Gateway::submit`] with the endorse/admission verdict
+/// already decided: [`SubmitHandle::outcome`] is `Some` immediately for
+/// endorsement failures and mempool rejects, and the commit result arrives
+/// later via [`wait`](SubmitHandle::wait) / [`try_wait`](SubmitHandle::try_wait).
+/// Dropping a still-pending handle deregisters its waiter.
+pub struct SubmitHandle {
+    tx_id: TxId,
+    started: Instant,
+    timeout: Duration,
+    state: HandleState,
+}
+
+impl SubmitHandle {
+    fn resolved(tx_id: TxId, started: Instant, timeout: Duration, out: CommitOutcome) -> Self {
+        SubmitHandle { tx_id, started, timeout, state: HandleState::Resolved(out) }
+    }
+
+    pub fn tx_id(&self) -> TxId {
+        self.tx_id
+    }
+
+    /// Time since `submit` was called.
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// Still awaiting its commit event?
+    pub fn is_pending(&self) -> bool {
+        matches!(self.state, HandleState::Pending { .. })
+    }
+
+    /// The outcome resolved so far (submit-time verdicts are available
+    /// immediately; commit outcomes once a `wait`/`try_wait` drained them).
+    pub fn outcome(&self) -> Option<&CommitOutcome> {
+        match &self.state {
+            HandleState::Resolved(out) => Some(out),
+            HandleState::Pending { .. } => None,
+        }
+    }
+
+    /// Non-blocking poll: `Some` once the outcome is known.
+    pub fn try_wait(&mut self) -> Option<CommitOutcome> {
+        let res = match &self.state {
+            HandleState::Resolved(out) => return Some(out.clone()),
+            HandleState::Pending { rx, .. } => rx.try_recv(),
+        };
+        match res {
+            Ok((ev, at)) => Some(self.resolve_event(ev, at)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(self.resolve_dead()),
+        }
+    }
+
+    /// Block up to `timeout` (from now) for the outcome. Returns
+    /// [`CommitOutcome::TimedOut`] without giving up the waiter slot: a
+    /// late commit can still be drained by a later `wait`/`try_wait`.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> CommitOutcome {
+        let res = match &self.state {
+            HandleState::Resolved(out) => return out.clone(),
+            HandleState::Pending { rx, .. } => rx.recv_timeout(timeout),
+        };
+        match res {
+            Ok((ev, at)) => self.resolve_event(ev, at),
+            Err(mpsc::RecvTimeoutError::Timeout) => CommitOutcome::TimedOut,
+            Err(mpsc::RecvTimeoutError::Disconnected) => self.resolve_dead(),
+        }
+    }
+
+    /// Block for the outcome with the submitting gateway's timeout counted
+    /// from submission (the old `submit_and_wait` semantics).
+    pub fn wait(mut self) -> CommitOutcome {
+        let remaining = self.timeout.saturating_sub(self.started.elapsed());
+        self.wait_timeout(remaining)
+    }
+
+    fn resolve_event(&mut self, ev: CommitEvent, at: Instant) -> CommitOutcome {
+        let out = CommitOutcome::Committed {
+            code: ev.code,
+            latency: at.saturating_duration_since(self.started),
+        };
+        self.state = HandleState::Resolved(out.clone());
+        out
+    }
+
+    /// The demux is gone (its channel or gateway was torn down); nothing
+    /// can arrive any more.
+    fn resolve_dead(&mut self) -> CommitOutcome {
+        self.state = HandleState::Resolved(CommitOutcome::TimedOut);
+        CommitOutcome::TimedOut
+    }
+}
+
+impl Drop for SubmitHandle {
+    fn drop(&mut self) {
+        if let HandleState::Pending { waiter, .. } = &self.state {
+            waiter.deregister(&self.tx_id);
+        }
+    }
+}
+
 /// Gateway bound to a set of endorsing peers and the ordering service.
 pub struct Gateway {
     pub endorsers: Vec<Arc<Peer>>,
     pub orderer: Arc<OrderingService>,
     /// Transaction timeout (paper: 30 s).
     pub timeout: Duration,
+    /// One commit-event demux per channel this gateway has submitted on.
+    waiters: Mutex<HashMap<String, Arc<CommitWaiter>>>,
 }
 
 impl Gateway {
     pub fn new(endorsers: Vec<Arc<Peer>>, orderer: Arc<OrderingService>) -> Gateway {
-        Gateway { endorsers, orderer, timeout: Duration::from_secs(30) }
+        Gateway {
+            endorsers,
+            orderer,
+            timeout: Duration::from_secs(30),
+            waiters: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Endorse in parallel across peers; require every collected rw-set to
@@ -92,43 +235,154 @@ impl Gateway {
         }
     }
 
-    /// Full transaction flow; `listener` must be subscribed on the target
-    /// channel *before* calling (the gateway subscribes internally).
-    pub fn submit_and_wait(&self, proposal: &Proposal) -> CommitOutcome {
-        let started = Instant::now();
-        let tx_id = proposal.tx_id();
-        // Subscribe before ordering so the commit event cannot be missed.
-        let rx = match self.endorsers[0].subscribe(&proposal.channel) {
-            Ok(rx) => rx,
-            Err(e) => {
-                return CommitOutcome::EndorsementFailed {
-                    reason: e,
-                    latency: started.elapsed(),
-                }
-            }
+    /// The channel's commit demux, created (with its single subscription)
+    /// on first use.
+    fn waiter(&self, channel: &str) -> Result<Arc<CommitWaiter>, String> {
+        let mut waiters = self.waiters.lock().unwrap();
+        if let Some(w) = waiters.get(channel) {
+            return Ok(Arc::clone(w));
+        }
+        let sub = self
+            .endorsers
+            .first()
+            .ok_or_else(|| "gateway has no endorsers".to_string())?
+            .subscribe(channel)?;
+        let w = Arc::new(CommitWaiter::start(channel, sub));
+        waiters.insert(channel.to_string(), Arc::clone(&w));
+        Ok(w)
+    }
+
+    /// The synchronous front half of a submission — demux lookup plus the
+    /// expensive endorsement (real PJRT evaluations on every peer). `Err`
+    /// is an already-resolved failure handle.
+    fn endorse_for(
+        &self,
+        proposal: &Proposal,
+        started: Instant,
+    ) -> Result<(Envelope, Arc<CommitWaiter>), SubmitHandle> {
+        let fail = |reason: String| {
+            let out = CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() };
+            SubmitHandle::resolved(proposal.tx_id(), started, self.timeout, out)
         };
-        let envelope = match self.endorse(proposal) {
-            Ok(env) => env,
-            Err(reason) => {
-                return CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() }
-            }
+        let waiter = match self.waiter(&proposal.channel) {
+            Ok(w) => w,
+            Err(reason) => return Err(fail(reason)),
+        };
+        match self.endorse(proposal) {
+            Ok(envelope) => Ok((envelope, waiter)),
+            Err(reason) => Err(fail(reason)),
+        }
+    }
+
+    /// The back half: register with the demux, then pass admission control.
+    /// Reusable with the same envelope (no re-endorsement) when admission
+    /// bounces it with backpressure.
+    fn order_endorsed(
+        &self,
+        envelope: Envelope,
+        waiter: &Arc<CommitWaiter>,
+        started: Instant,
+    ) -> SubmitHandle {
+        let timeout = self.timeout;
+        let tx_id = envelope.tx_id();
+        // Register before ordering so the commit event cannot be missed.
+        let Some(rx) = waiter.register(tx_id) else {
+            // Already in flight through this gateway.
+            let out =
+                CommitOutcome::Rejected { reject: Reject::Duplicate, latency: started.elapsed() };
+            return SubmitHandle::resolved(tx_id, started, timeout, out);
         };
         if let Err(reject) = self.orderer.submit(envelope) {
-            return CommitOutcome::Rejected { reject, latency: started.elapsed() };
+            waiter.deregister(&tx_id);
+            let out = CommitOutcome::Rejected { reject, latency: started.elapsed() };
+            return SubmitHandle::resolved(tx_id, started, timeout, out);
         }
-        loop {
-            let remaining = self.timeout.saturating_sub(started.elapsed());
-            if remaining.is_zero() {
-                return CommitOutcome::TimedOut;
-            }
-            match rx.recv_timeout(remaining) {
-                Ok(ev) if ev.tx_id == tx_id => {
-                    return CommitOutcome::Committed { code: ev.code, latency: started.elapsed() }
+        let waiter = Arc::clone(waiter);
+        SubmitHandle { tx_id, started, timeout, state: HandleState::Pending { rx, waiter } }
+    }
+
+    /// Non-blocking submission: endorse, register with the channel demux,
+    /// and pass admission control. The returned handle already carries the
+    /// endorse/admission verdict; the commit outcome resolves through it.
+    pub fn submit(&self, proposal: &Proposal) -> SubmitHandle {
+        let started = Instant::now();
+        match self.endorse_for(proposal, started) {
+            Ok((envelope, waiter)) => self.order_endorsed(envelope, &waiter, started),
+            Err(handle) => handle,
+        }
+    }
+
+    /// Open-loop batch driver: submit every proposal with at most
+    /// `max_in_flight` transactions awaiting commit at once. `PoolFull`
+    /// backpressure is absorbed by draining the oldest in-flight tx and
+    /// retrying; only when nothing is left to drain does the rejection
+    /// surface in the outcomes. Outcomes are positionally aligned with
+    /// `proposals`.
+    pub fn submit_all(&self, proposals: &[Proposal], max_in_flight: usize) -> Vec<CommitOutcome> {
+        /// Resolve the oldest in-flight tx; false when the window is empty.
+        fn drain_oldest(
+            window: &mut VecDeque<(usize, SubmitHandle)>,
+            outcomes: &mut [Option<CommitOutcome>],
+        ) -> bool {
+            match window.pop_front() {
+                Some((j, h)) => {
+                    outcomes[j] = Some(h.wait());
+                    true
                 }
-                Ok(_) => continue,
-                Err(_) => return CommitOutcome::TimedOut,
+                None => false,
             }
         }
+        let max = max_in_flight.max(1);
+        let mut outcomes: Vec<Option<CommitOutcome>> = (0..proposals.len()).map(|_| None).collect();
+        let mut window: VecDeque<(usize, SubmitHandle)> = VecDeque::new();
+        for (i, proposal) in proposals.iter().enumerate() {
+            while window.len() >= max {
+                drain_oldest(&mut window, &mut outcomes);
+            }
+            let started = Instant::now();
+            let handle = match self.endorse_for(proposal, started) {
+                Ok((envelope, waiter)) => {
+                    // Endorsement is the expensive half; PoolFull retries
+                    // re-order the *same* envelope after waiting out the
+                    // oldest in-flight tx. The clone per attempt is cheap:
+                    // envelopes carry hash+URI metadata, never weights.
+                    let mut h = self.order_endorsed(envelope.clone(), &waiter, started);
+                    while matches!(
+                        h.outcome(),
+                        Some(CommitOutcome::Rejected { reject: Reject::PoolFull, .. })
+                    ) && drain_oldest(&mut window, &mut outcomes)
+                    {
+                        h = self.order_endorsed(envelope.clone(), &waiter, started);
+                    }
+                    h
+                }
+                Err(h) => h,
+            };
+            if handle.is_pending() {
+                window.push_back((i, handle));
+            } else {
+                outcomes[i] = Some(handle.wait());
+            }
+        }
+        while drain_oldest(&mut window, &mut outcomes) {}
+        outcomes.into_iter().map(|o| o.expect("every proposal resolved")).collect()
+    }
+
+    /// Closed-loop shim over [`Gateway::submit`]: one transaction,
+    /// blocking until commit or the gateway timeout.
+    pub fn submit_and_wait(&self, proposal: &Proposal) -> CommitOutcome {
+        self.submit(proposal).wait()
+    }
+
+    /// Transactions currently awaiting their commit event through this
+    /// gateway (all channels).
+    pub fn in_flight(&self) -> usize {
+        self.waiters.lock().unwrap().values().map(|w| w.pending()).sum()
+    }
+
+    /// Highest per-channel in-flight depth this gateway has reached.
+    pub fn in_flight_high_water(&self) -> usize {
+        self.waiters.lock().unwrap().values().map(|w| w.high_water()).max().unwrap_or(0)
     }
 }
 
@@ -160,7 +414,11 @@ mod tests {
         }
     }
 
-    fn gateway(n: usize) -> (Vec<Arc<Peer>>, Gateway) {
+    fn gateway_with(
+        n: usize,
+        cfg: OrdererConfig,
+        mempool: Option<Arc<crate::mempool::MempoolRegistry>>,
+    ) -> (Vec<Arc<Peer>>, Gateway) {
         let ca = CertificateAuthority::new();
         let mut rng = Prng::new(2);
         let peers: Vec<Arc<Peer>> = (0..n)
@@ -174,12 +432,19 @@ mod tests {
             p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
             p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
         }
-        let orderer = OrderingService::start(
-            OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
-            peers.clone(),
-            7,
-        );
+        let orderer = match mempool {
+            Some(m) => OrderingService::start_with_mempool(cfg, peers.clone(), 7, m),
+            None => OrderingService::start(cfg, peers.clone(), 7),
+        };
         (peers.clone(), Gateway::new(peers, orderer))
+    }
+
+    fn gateway(n: usize) -> (Vec<Arc<Peer>>, Gateway) {
+        gateway_with(
+            n,
+            OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
+            None,
+        )
     }
 
     fn prop(f: &str, key: &str, nonce: u64) -> Proposal {
@@ -245,6 +510,132 @@ mod tests {
         );
         assert!(out.is_rejected());
         assert_eq!(gw.orderer.mempool().snapshot().rate_limited, 1);
+    }
+
+    /// Orderer throttled hard enough that submissions pile up in flight.
+    fn throttled() -> (Vec<Arc<Peer>>, Gateway) {
+        gateway_with(
+            2,
+            OrdererConfig {
+                batch_size: 4,
+                batch_timeout: Duration::from_millis(5),
+                min_block_interval: Duration::from_millis(40),
+                tick: Duration::from_millis(1),
+                ..Default::default()
+            },
+            None,
+        )
+    }
+
+    #[test]
+    fn concurrent_handles_resolve_distinct_outcomes() {
+        let (peers, gw) = throttled();
+        let n = 12;
+        let handles: Vec<SubmitHandle> =
+            (0..n).map(|i| gw.submit(&prop("Put", &format!("k{i}"), i))).collect();
+        // Everything is in flight at once over ONE commit-event
+        // subscription: the demux is O(channels), not O(transactions).
+        assert_eq!(peers[0].channel("ch").unwrap().listener_count(), 1);
+        assert!(gw.in_flight_high_water() >= 4, "{}", gw.in_flight_high_water());
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.wait();
+            assert!(out.is_valid(), "tx {i}: {out:?}");
+        }
+        assert_eq!(gw.in_flight(), 0);
+        for i in 0..n {
+            assert_eq!(
+                peers[1].channel("ch").unwrap().query(&format!("k{i}")),
+                Some(b"v".to_vec()),
+                "tx {i} not committed"
+            );
+        }
+    }
+
+    #[test]
+    fn wait_timeout_returns_then_late_commit_resolves() {
+        // One lone tx only commits on the 300 ms batch-timeout cut.
+        let (_peers, gw) = gateway_with(
+            2,
+            OrdererConfig {
+                batch_size: 100,
+                batch_timeout: Duration::from_millis(300),
+                ..Default::default()
+            },
+            None,
+        );
+        let mut h = gw.submit(&prop("Put", "late", 1));
+        assert!(h.is_pending());
+        assert_eq!(h.try_wait(), None);
+        // A short wait times out without losing the waiter slot...
+        assert_eq!(h.wait_timeout(Duration::from_millis(30)), CommitOutcome::TimedOut);
+        assert!(h.is_pending());
+        // ...so the late commit is still delivered to the same handle.
+        let out = h.wait_timeout(Duration::from_secs(10));
+        assert!(out.is_valid(), "{out:?}");
+        assert_eq!(h.outcome(), Some(&out));
+    }
+
+    #[test]
+    fn dropped_handle_deregisters_its_waiter() {
+        let (_peers, gw) = throttled();
+        let h = gw.submit(&prop("Put", "gone", 1));
+        assert!(h.is_pending());
+        assert_eq!(gw.in_flight(), 1);
+        drop(h);
+        assert_eq!(gw.in_flight(), 0);
+        // The eventual commit event for the abandoned tx routes nowhere;
+        // a subsequent submission on the same demux still resolves.
+        let out = gw.submit(&prop("Put", "next", 2)).wait();
+        assert!(out.is_valid(), "{out:?}");
+    }
+
+    #[test]
+    fn duplicate_in_flight_submission_rejected_at_gateway() {
+        let (_peers, gw) = throttled();
+        let h = gw.submit(&prop("Put", "dup", 1));
+        assert!(h.is_pending());
+        let second = gw.submit(&prop("Put", "dup", 1));
+        assert!(
+            matches!(
+                second.outcome(),
+                Some(CommitOutcome::Rejected { reject: Reject::Duplicate, .. })
+            ),
+            "{:?}",
+            second.outcome()
+        );
+        assert!(h.wait().is_valid());
+    }
+
+    #[test]
+    fn submit_all_honors_max_in_flight_under_pool_full() {
+        use crate::mempool::{MempoolConfig, MempoolRegistry};
+        // Tiny pool (2 per lane) + throttled consensus: the open-loop
+        // window must run into PoolFull backpressure and absorb it by
+        // draining in-flight txs rather than shedding its own load.
+        let mempool =
+            MempoolRegistry::new(MempoolConfig { lane_capacity: 2, ..Default::default() });
+        let (_peers, gw) = gateway_with(
+            2,
+            OrdererConfig {
+                batch_size: 2,
+                batch_timeout: Duration::from_millis(5),
+                min_block_interval: Duration::from_millis(50),
+                tick: Duration::from_millis(1),
+                ..Default::default()
+            },
+            Some(mempool),
+        );
+        let proposals: Vec<Proposal> =
+            (0..16).map(|i| prop("Put", &format!("w{i}"), i)).collect();
+        let outcomes = gw.submit_all(&proposals, 4);
+        assert_eq!(outcomes.len(), 16);
+        for (i, out) in outcomes.iter().enumerate() {
+            assert!(out.is_valid(), "tx {i}: {out:?}");
+        }
+        assert!(gw.in_flight_high_water() <= 4, "{}", gw.in_flight_high_water());
+        let stats = gw.orderer.mempool().snapshot();
+        assert!(stats.pool_full > 0, "expected PoolFull backpressure, got {stats:?}");
+        assert_eq!(stats.txs_ordered, 16);
     }
 
     #[test]

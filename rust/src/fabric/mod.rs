@@ -13,6 +13,12 @@
 //! - **Validate**: every peer independently checks the endorsement policy
 //!   and MVCC read versions, then commits valid writes ([`peer::PeerChannel`]).
 //!
+//! Clients drive the pipeline through the non-blocking submission API:
+//! [`gateway::Gateway::submit`] returns a [`gateway::SubmitHandle`] and the
+//! per-channel [`waiter::CommitWaiter`] demux routes each commit event to
+//! the one handle awaiting it — thousands of transactions stay in flight
+//! per channel over a single commit-event subscription.
+//!
 //! Channels model shards (paper §4): one channel per shard plus the
 //! mainchain channel every peer joins.
 
@@ -21,10 +27,12 @@ pub mod endorsement;
 pub mod gateway;
 pub mod orderer;
 pub mod peer;
+pub mod waiter;
 pub mod wire;
 
 pub use chaincode::{Chaincode, TxContext};
 pub use endorsement::EndorsementPolicy;
-pub use gateway::{CommitOutcome, Gateway};
+pub use gateway::{CommitOutcome, Gateway, SubmitHandle};
 pub use orderer::{OrdererConfig, OrderingService};
-pub use peer::{CommitEvent, Peer, PeerChannel};
+pub use peer::{CommitEvent, Peer, PeerChannel, Subscription};
+pub use waiter::CommitWaiter;

@@ -193,6 +193,48 @@ impl Drop for OrderingService {
     }
 }
 
+/// Fair round-robin cursor over the per-channel pools.
+///
+/// The cursor persists across driver ticks and only advances past a
+/// channel when that channel actually received service (a block was cut).
+/// The previous scheme rotated the drain order once per *tick*, which
+/// aliases with `min_block_interval` throttling: when the interval spans an
+/// even number of ticks, the same channel leads the order at every moment
+/// bandwidth is available, and a saturated shard starves the others.
+/// Throttled ticks (no cut) must not rotate the order at all.
+///
+/// Tracks the last-served channel by *name*, not index: pools are created
+/// lazily, and a new channel sorting ahead of existing ones would shift
+/// every index and hand the just-served channel another turn.
+#[derive(Debug, Default)]
+struct ChannelCursor {
+    last_served: Option<String>,
+}
+
+impl ChannelCursor {
+    /// Visit order over the sorted channel list for this opportunity:
+    /// starts at the sorted successor of the last-served name.
+    fn order(&self, channels: &[String]) -> Vec<usize> {
+        let n = channels.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let start = match &self.last_served {
+            Some(last) => channels.iter().position(|c| c > last).unwrap_or(0),
+            None => 0,
+        };
+        (0..n).map(|off| (start + off) % n).collect()
+    }
+
+    /// Channel `name` was just served a block: the next opportunity starts
+    /// with its successor.
+    fn served(&mut self, name: &str) {
+        if self.last_served.as_deref() != Some(name) {
+            self.last_served = Some(name.to_string());
+        }
+    }
+}
+
 /// Run up to 8 rounds of instant message exchange between consensus nodes.
 fn exchange<C: ConsensusNode>(
     nodes: &mut [C],
@@ -224,9 +266,9 @@ fn driver<C: ConsensusNode>(
     let mut delivered_seq = 0u64;
     let mut last_cut = f64::NEG_INFINITY;
     let min_interval = cfg.min_block_interval.as_secs_f64();
-    // Rotates the channel drain order so a saturated channel cannot starve
-    // the others when min_block_interval throttles cuts to one per tick.
-    let mut rotation = 0usize;
+    // Round-robin service across channels; advances only on actual cuts so
+    // a saturated channel cannot starve the others under throttling.
+    let mut cursor = ChannelCursor::default();
 
     loop {
         if shutdown.load(Ordering::Relaxed) {
@@ -248,31 +290,30 @@ fn driver<C: ConsensusNode>(
         // round-robin across channels.
         let leader = nodes.iter().position(|nd| nd.is_leader());
         if let Some(l) = leader {
-            let mut channels = mempool.channels();
-            if !channels.is_empty() {
-                let n = channels.len();
-                channels.rotate_left(rotation % n);
-                rotation = rotation.wrapping_add(1);
-            }
-            'channels: for channel in channels {
-                let Some(pool) = mempool.get(&channel) else { continue };
+            let channels = mempool.channels();
+            'channels: for idx in cursor.order(&channels) {
+                let channel = &channels[idx];
+                let Some(pool) = mempool.get(channel) else { continue };
                 while pool.ready(cfg.batch_size, cfg.batch_timeout) {
                     if min_interval > 0.0 && now - last_cut < min_interval {
                         // Consensus bandwidth exhausted for this tick; the
                         // pools keep absorbing (and, at capacity, shedding).
+                        // The cursor stays put: un-served channels keep
+                        // their place at the head of the next opportunity.
                         break 'channels;
                     }
                     let envs = pool.take_batch(cfg.batch_size, cfg.batch_bytes);
                     if envs.is_empty() {
                         break;
                     }
-                    let payload = wire::encode_batch(&channel, &envs);
+                    let payload = wire::encode_batch(channel, &envs);
                     if nodes[l].propose(payload, now).is_err() {
                         // Leadership moved; re-queue and retry next tick.
                         pool.restore(envs);
                         break 'channels;
                     }
                     last_cut = now;
+                    cursor.served(channel);
                     // Protocols that broadcast at proposal time (PBFT).
                     for (to, m) in nodes[l].take_outbound() {
                         inbox.push((l, to, m));
@@ -354,13 +395,14 @@ mod tests {
         network_with(n_peers, cfg, None)
     }
 
-    fn endorsed_envelope_for(
+    fn endorsed_envelope_on(
         peers: &[Arc<Peer>],
+        channel: &str,
         chaincode: &str,
         nonce: u64,
     ) -> Envelope {
         let prop = Proposal {
-            channel: "ch".into(),
+            channel: channel.into(),
             chaincode: chaincode.into(),
             function: "Put".into(),
             args: vec![format!("{chaincode}-k{nonce}"), "v".into()],
@@ -375,6 +417,10 @@ mod tests {
             endorsements.push(e);
         }
         Envelope { proposal: prop, rw_set: rw.unwrap(), endorsements }
+    }
+
+    fn endorsed_envelope_for(peers: &[Arc<Peer>], chaincode: &str, nonce: u64) -> Envelope {
+        endorsed_envelope_on(peers, "ch", chaincode, nonce)
     }
 
     fn endorsed_envelope(peers: &[Arc<Peer>], nonce: u64) -> Envelope {
@@ -510,6 +556,109 @@ mod tests {
         assert_eq!(stats.pool_full as u32, shed);
         assert_eq!(stats.txs_ordered as u32, admitted);
         assert!(stats.depth_high_water <= 3 * 8, "queue stayed bounded");
+    }
+
+    #[test]
+    fn cursor_does_not_alias_with_throttled_ticks() {
+        // min_block_interval = 2 ticks: bandwidth frees up every other
+        // tick. The old per-tick rotation advanced by 2 between serves
+        // (even), so with 2 channels the same one led every opportunity.
+        // The cursor only moves on service, and throttled ticks leave it
+        // untouched, so service alternates.
+        let chans = vec!["cha".to_string(), "chb".to_string()];
+        let mut c = ChannelCursor::default();
+        let mut served = Vec::new();
+        for tick in 0..8 {
+            let first = c.order(&chans)[0];
+            if tick % 2 == 0 {
+                served.push(first);
+                c.served(&chans[first]);
+            }
+            // Throttled tick: no cut, cursor untouched.
+        }
+        assert_eq!(served, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn cursor_tracks_names_across_channel_set_growth() {
+        let chans = vec!["cha".to_string(), "chb".to_string()];
+        let mut c = ChannelCursor::default();
+        c.served(&chans[1]); // "chb" just got a block
+        // A lazily created channel sorting ahead of the others must not
+        // shift the rotation: after "chb" the wrap goes to "aaa".
+        let grown =
+            vec!["aaa".to_string(), "cha".to_string(), "chb".to_string()];
+        assert_eq!(c.order(&grown), vec![0, 1, 2]);
+        c.served("aaa");
+        assert_eq!(c.order(&grown)[0], 1, "cha is aaa's sorted successor");
+        // A served channel disappearing (pool drained away) is harmless.
+        c.served("chb");
+        assert_eq!(c.order(&chans[..1]), vec![0]);
+        assert!(c.order(&[]).is_empty());
+    }
+
+    #[test]
+    fn throttled_orderer_round_robins_channels() {
+        // Two saturated channels behind one block per 30 ms of consensus
+        // bandwidth: their drains must interleave, finishing within a few
+        // block intervals of each other instead of serially.
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(11);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            for ch in ["cha", "chb"] {
+                p.join_channel(ch, EndorsementPolicy::MajorityOf(members.clone()));
+                p.install_chaincode(ch, Arc::new(PutAs("kv"))).unwrap();
+            }
+        }
+        // Preload both pools (6 full batches each) before the orderer runs.
+        let mempool = MempoolRegistry::new(MempoolConfig::default());
+        let per_channel = 24;
+        for ch in ["cha", "chb"] {
+            for nonce in 0..per_channel {
+                mempool.submit(endorsed_envelope_on(&peers, ch, "kv", nonce)).unwrap();
+            }
+        }
+        let rx_a = peers[0].subscribe("cha").unwrap();
+        let rx_b = peers[0].subscribe("chb").unwrap();
+        let min_interval = Duration::from_millis(30);
+        let orderer = OrderingService::start_with_mempool(
+            OrdererConfig {
+                batch_size: 4,
+                batch_timeout: Duration::from_millis(5),
+                min_block_interval: min_interval,
+                tick: Duration::from_millis(1),
+                ..Default::default()
+            },
+            peers.clone(),
+            42,
+            mempool,
+        );
+        let started = Instant::now();
+        let (done_a, done_b) = thread::scope(|s| {
+            let drain = |rx: crate::fabric::peer::Subscription| {
+                move || {
+                    for _ in 0..per_channel {
+                        rx.recv_timeout(Duration::from_secs(20)).expect("commit");
+                    }
+                    started.elapsed()
+                }
+            };
+            let ha = s.spawn(drain(rx_a));
+            let hb = s.spawn(drain(rx_b));
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        drop(orderer);
+        let gap = if done_a > done_b { done_a - done_b } else { done_b - done_a };
+        // Fair interleaving finishes both within ~1 interval; the per-tick
+        // rotation bug drained one channel completely first (~6 intervals).
+        assert!(gap <= 3 * min_interval, "unfair channel service: gap {gap:?}");
     }
 
     #[test]

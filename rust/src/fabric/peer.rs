@@ -6,7 +6,7 @@
 //! peer, and determinism of the validator keeps replicas in agreement.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock, Weak};
 
 use crate::crypto::msp::{CertificateAuthority, Credential, MemberId};
 use crate::ledger::block::{Block, ValidationCode};
@@ -26,6 +26,47 @@ pub struct CommitEvent {
     pub code: ValidationCode,
 }
 
+/// A registered commit-event listener. `alive` mirrors the liveness of the
+/// matching [`Subscription`]: once the subscriber drops its end, the entry
+/// is pruned eagerly (on the subscription's own drop and on every
+/// `subscribe`) instead of lingering until a send fails mid-commit.
+struct Listener {
+    tx: mpsc::Sender<CommitEvent>,
+    alive: Weak<()>,
+}
+
+/// A live commit-event stream on one channel, returned by
+/// [`Peer::subscribe`]. Derefs to the underlying [`mpsc::Receiver`], so
+/// `recv` / `recv_timeout` / `try_recv` work directly. Dropping the
+/// subscription deregisters the listener immediately.
+pub struct Subscription {
+    rx: mpsc::Receiver<CommitEvent>,
+    token: Arc<()>,
+    channel: Weak<PeerChannel>,
+}
+
+impl std::ops::Deref for Subscription {
+    type Target = mpsc::Receiver<CommitEvent>;
+
+    fn deref(&self) -> &Self::Target {
+        &self.rx
+    }
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        if let Some(ch) = self.channel.upgrade() {
+            // `token` is still alive while this body runs, so remove our
+            // own entry by identity, plus any other dead ones.
+            let me = Arc::downgrade(&self.token);
+            ch.listeners
+                .lock()
+                .unwrap()
+                .retain(|l| l.alive.strong_count() > 0 && !Weak::ptr_eq(&l.alive, &me));
+        }
+    }
+}
+
 /// Per-channel replica state on a peer.
 pub struct PeerChannel {
     pub name: String,
@@ -34,7 +75,7 @@ pub struct PeerChannel {
     chaincodes: RwLock<HashMap<String, Arc<dyn Chaincode>>>,
     policy: RwLock<EndorsementPolicy>,
     committed_ids: Mutex<HashSet<TxId>>,
-    listeners: Mutex<Vec<mpsc::Sender<CommitEvent>>>,
+    listeners: Mutex<Vec<Listener>>,
 }
 
 impl PeerChannel {
@@ -70,6 +111,15 @@ impl PeerChannel {
 
     pub fn height(&self) -> u64 {
         self.chain.lock().unwrap().height()
+    }
+
+    /// Live commit-event listeners (dead entries are pruned first). The
+    /// gateway demux keeps this O(channels), not O(in-flight transactions):
+    /// tests assert on it.
+    pub fn listener_count(&self) -> usize {
+        let mut listeners = self.listeners.lock().unwrap();
+        listeners.retain(|l| l.alive.strong_count() > 0);
+        listeners.len()
     }
 }
 
@@ -161,16 +211,24 @@ impl Peer {
         chain.append(block.clone())?;
         drop((chain, state, committed_ids));
         let mut listeners = ch.listeners.lock().unwrap();
-        listeners.retain(|l| events.iter().all(|e| l.send(e.clone()).is_ok()));
+        listeners.retain(|l| {
+            l.alive.strong_count() > 0 && events.iter().all(|e| l.tx.send(e.clone()).is_ok())
+        });
         Ok(block)
     }
 
-    /// Subscribe to commit events on a channel.
-    pub fn subscribe(&self, channel: &str) -> Result<mpsc::Receiver<CommitEvent>, String> {
+    /// Subscribe to commit events on a channel. Dead listeners left behind
+    /// by dropped subscriptions are pruned before the new one registers.
+    pub fn subscribe(&self, channel: &str) -> Result<Subscription, String> {
         let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
         let (tx, rx) = mpsc::channel();
-        ch.listeners.lock().unwrap().push(tx);
-        Ok(rx)
+        let token = Arc::new(());
+        {
+            let mut listeners = ch.listeners.lock().unwrap();
+            listeners.retain(|l| l.alive.strong_count() > 0);
+            listeners.push(Listener { tx, alive: Arc::downgrade(&token) });
+        }
+        Ok(Subscription { rx, token, channel: Arc::downgrade(&ch) })
     }
 }
 
@@ -322,6 +380,27 @@ mod tests {
             assert_eq!(b.hash(), blocks[0].hash());
             assert_eq!(b.validation, blocks[0].validation);
         }
+    }
+
+    #[test]
+    fn dropped_subscriptions_pruned_eagerly() {
+        let (_ca, peers, _) = setup(1);
+        let ch = peers[0].channel("ch").unwrap();
+        let s1 = peers[0].subscribe("ch").unwrap();
+        let s2 = peers[0].subscribe("ch").unwrap();
+        assert_eq!(ch.listener_count(), 2);
+        // Dropping a subscription removes its listener immediately — no
+        // commit (and thus no failed send) required.
+        drop(s2);
+        assert_eq!(ch.listener_count(), 1);
+        drop(s1);
+        // A fresh subscribe prunes whatever is left before registering.
+        let s3 = peers[0].subscribe("ch").unwrap();
+        assert_eq!(ch.listener_count(), 1);
+        // The survivor still receives events.
+        let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
+        peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert!(s3.try_recv().is_ok());
     }
 
     #[test]

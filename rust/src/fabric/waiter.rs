@@ -1,0 +1,119 @@
+//! Commit-event demultiplexer: one subscription per (gateway, channel),
+//! routing each event to the single in-flight transaction waiting on it.
+//!
+//! Before this existed every in-flight transaction owned its own
+//! `Peer::subscribe` stream and scanned *every* commit event for its own
+//! tx id, so N concurrent transactions cost O(N) subscriptions and O(N²)
+//! event clones under load. The [`CommitWaiter`] owns the channel's single
+//! [`Subscription`]: a background thread receives each [`CommitEvent`]
+//! once and hands it to the waiter registered under that tx id (a
+//! one-shot `mpsc` slot per `SubmitHandle`). Waiters register *before*
+//! their envelope reaches the orderer — a commit can never race past its
+//! waiter — and deregister on drop, so the table is sized by in-flight
+//! transactions only.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::ledger::tx::TxId;
+
+use super::peer::{CommitEvent, Subscription};
+
+/// How often the demux thread re-checks the shutdown flag while idle.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+struct WaiterTable {
+    /// Events are stamped with their routing time so latency measurements
+    /// reflect when the commit *landed*, not when the handle was drained.
+    waiters: Mutex<HashMap<TxId, mpsc::Sender<(CommitEvent, Instant)>>>,
+    high_water: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// Per-channel commit-event router. Owned by a [`super::Gateway`] (one per
+/// channel it has submitted on) and kept alive by any outstanding
+/// [`super::SubmitHandle`], so pending handles stay resolvable even after
+/// the gateway itself is dropped.
+pub struct CommitWaiter {
+    shared: Arc<WaiterTable>,
+    /// Detached on drop: the thread notices the shutdown flag within
+    /// [`IDLE_TICK`] and exits on its own (joining here would stall
+    /// gateway teardown by up to a tick per channel).
+    _thread: thread::JoinHandle<()>,
+}
+
+impl CommitWaiter {
+    /// Take ownership of `sub` (the channel's single commit-event stream)
+    /// and start the demux thread.
+    pub fn start(channel: &str, sub: Subscription) -> CommitWaiter {
+        let shared = Arc::new(WaiterTable {
+            waiters: Mutex::new(HashMap::new()),
+            high_water: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let table = Arc::clone(&shared);
+        let thread = thread::Builder::new()
+            .name(format!("commit-demux-{channel}"))
+            .spawn(move || loop {
+                if table.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                match sub.recv_timeout(IDLE_TICK) {
+                    Ok(ev) => {
+                        // At most one waiter per tx id; events for unknown
+                        // ids (handle dropped, other gateways' traffic) are
+                        // discarded without cloning further.
+                        if let Some(tx) = table.waiters.lock().unwrap().remove(&ev.tx_id) {
+                            let _ = tx.send((ev, Instant::now()));
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            })
+            .expect("spawn commit demux");
+        CommitWaiter { shared, _thread: thread }
+    }
+
+    /// Register a waiter for `tx_id`; must happen before the envelope is
+    /// handed to the orderer. `None` means the tx is already awaited
+    /// through this demux (a duplicate in-flight submission).
+    pub fn register(&self, tx_id: TxId) -> Option<mpsc::Receiver<(CommitEvent, Instant)>> {
+        let (tx, rx) = mpsc::channel();
+        let mut waiters = self.shared.waiters.lock().unwrap();
+        if waiters.contains_key(&tx_id) {
+            return None;
+        }
+        waiters.insert(tx_id, tx);
+        self.shared.high_water.fetch_max(waiters.len(), Ordering::Relaxed);
+        Some(rx)
+    }
+
+    /// Forget a waiter (submission rejected, or its handle was dropped
+    /// before the commit event arrived).
+    pub fn deregister(&self, tx_id: &TxId) {
+        self.shared.waiters.lock().unwrap().remove(tx_id);
+    }
+
+    /// Transactions currently awaiting their commit event.
+    pub fn pending(&self) -> usize {
+        self.shared.waiters.lock().unwrap().len()
+    }
+
+    /// Most waiters ever registered at once (in-flight depth high-water).
+    pub fn high_water(&self) -> usize {
+        self.shared.high_water.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for CommitWaiter {
+    fn drop(&mut self) {
+        // No join: the detached demux thread sees the flag within one idle
+        // tick, drops its subscription (pruning the peer listener), and
+        // exits; teardown never blocks submitters.
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+    }
+}

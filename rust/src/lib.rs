@@ -7,16 +7,22 @@
 //! (shard chains + mainchain "catalyst" aggregation), the pluggable
 //! model-acceptance defences, and the Caliper-style benchmark harness.
 //!
-//! **Ingress path** (`mempool`): client/gateway submissions no longer feed
-//! the orderer's driver thread over an unbounded channel. Every channel has
-//! a bounded per-shard transaction pool with admission control (signature +
-//! endorsement-policy precheck, replay dedup, per-client rate caps),
-//! priority lanes (catalyst/checkpoint > model updates > queries) with TTL
-//! eviction, and explicit backpressure (`Reject::PoolFull`,
-//! `Reject::RateLimited`) surfaced to clients as
-//! `fabric::CommitOutcome::Rejected` and to the benchmark harness as shed
-//! counters. The orderer pulls size-and-byte-bounded batches from the pool,
-//! so batch cutting, consensus, and block validation overlap.
+//! **Ingress path** (`fabric::gateway` + `mempool`): clients drive the
+//! pipeline through non-blocking submission handles. `Gateway::submit`
+//! endorses, registers the tx with the channel's `CommitWaiter` demux (one
+//! commit-event subscription per channel, however many transactions are in
+//! flight), and passes admission control into the bounded per-shard
+//! transaction pool — signature + endorsement-policy precheck, replay
+//! dedup, per-client rate caps, priority lanes (catalyst/checkpoint >
+//! model updates > queries) with TTL eviction. The commit outcome resolves
+//! later through the returned `SubmitHandle`; `Gateway::submit_all` is the
+//! open-loop batch driver that absorbs `Reject::PoolFull` backpressure by
+//! draining its in-flight window, and other rejections surface as
+//! `fabric::CommitOutcome::Rejected` / harness shed counters. The orderer
+//! pulls size-and-byte-bounded batches from the pools fairly round-robin
+//! across channels, so batch cutting, consensus, and block validation
+//! overlap and thousands of transactions ride in flight without a thread
+//! each.
 //!
 //! Model compute (training, endorsement-time evaluation, FedAvg aggregation,
 //! defence distance matrices) executes AOT-compiled HLO artifacts produced by

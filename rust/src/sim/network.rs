@@ -131,6 +131,12 @@ pub struct ScaleSfl {
     pub shards: Vec<Shard>,
     pub all_peers: Vec<Arc<Peer>>,
     pub orderer: Arc<OrderingService>,
+    /// Cached per-shard gateways (rebuilt only when a committee election
+    /// changes the endorser set) and the mainchain gateway: their commit
+    /// demuxes persist across rounds, one subscription per channel for the
+    /// whole run instead of per-round thread/listener churn.
+    shard_gateways: Vec<Arc<Gateway>>,
+    main_gateway: Arc<Gateway>,
     pub test_set: SynthDataset,
     pub global: FlatParams,
     pub round: u64,
@@ -287,6 +293,11 @@ impl ScaleSfl {
             mempool,
         );
         let global = ops.init_params(cfg.seed as i32)?;
+        let main_gateway = {
+            let mut gw = Gateway::new(all_peers.clone(), Arc::clone(&orderer));
+            gw.timeout = cfg.timeout;
+            Arc::new(gw)
+        };
         let mut net = ScaleSfl {
             cfg,
             ops,
@@ -295,6 +306,8 @@ impl ScaleSfl {
             shards,
             all_peers,
             orderer,
+            shard_gateways: Vec::new(),
+            main_gateway,
             test_set,
             global,
             round: 1,
@@ -303,23 +316,13 @@ impl ScaleSfl {
             scores: std::collections::HashMap::new(),
             committees: Vec::new(),
         };
+        let gws: Vec<Arc<Gateway>> =
+            (0..net.shards.len()).map(|s| net.make_shard_gateway(s)).collect();
+        net.shard_gateways = gws;
         // Pin the initial model as round 0 on every shard so round-1
         // endorsers have a baseline for RONI/norm-bound checks.
         let (gdigest, guri) = net.store.put(net.global.clone());
-        for s in 0..net.shards.len() {
-            let proposal = crate::ledger::tx::Proposal {
-                channel: net.shards[s].channel.clone(),
-                chaincode: "models".into(),
-                function: "PinGlobalModel".into(),
-                args: vec!["0".into(), gdigest.hex(), guri.clone(), "0".into()],
-                creator: net.shards[s].peers[0].member.clone(),
-                nonce: net.rng.next_u64(),
-            };
-            let outcome = net.shard_gateway(s).submit_and_wait(&proposal);
-            if !outcome.is_valid() {
-                bail!("initial PinGlobalModel failed on shard {s}: {outcome:?}");
-            }
-        }
+        net.pin_global_on_shards(0, &gdigest, &guri, 0)?;
         Ok(net)
     }
 
@@ -346,7 +349,8 @@ impl ScaleSfl {
         }
     }
 
-    fn shard_gateway(&self, s: usize) -> Gateway {
+    /// Build a shard's gateway from the current committee state.
+    fn make_shard_gateway(&self, s: usize) -> Arc<Gateway> {
         // Restrict endorsement fan-out to this round's committee when one
         // has been elected; otherwise every shard peer endorses.
         let peers = match self.committees.get(s) {
@@ -357,7 +361,11 @@ impl ScaleSfl {
         };
         let mut gw = Gateway::new(peers, Arc::clone(&self.orderer));
         gw.timeout = self.cfg.timeout;
-        gw
+        Arc::new(gw)
+    }
+
+    fn shard_gateway(&self, s: usize) -> Arc<Gateway> {
+        Arc::clone(&self.shard_gateways[s])
     }
 
     /// Re-elect each shard's endorsing committee and install the matching
@@ -393,6 +401,11 @@ impl ScaleSfl {
             }
             self.committees.push(committee);
         }
+        // The endorser sets changed: rebuild the cached shard gateways
+        // (their demuxes re-subscribe on the new committees' peers).
+        let gws: Vec<Arc<Gateway>> =
+            (0..self.shards.len()).map(|s| self.make_shard_gateway(s)).collect();
+        self.shard_gateways = gws;
     }
 
     /// Model provenance (paper §5): restore the global model pinned on the
@@ -412,10 +425,47 @@ impl ScaleSfl {
         Ok(())
     }
 
-    fn mainchain_gateway(&self) -> Gateway {
-        let mut gw = Gateway::new(self.all_peers.clone(), Arc::clone(&self.orderer));
-        gw.timeout = self.cfg.timeout;
-        gw
+    fn mainchain_gateway(&self) -> Arc<Gateway> {
+        Arc::clone(&self.main_gateway)
+    }
+
+    /// Pin a finalised global model onto every shard chain — all shard
+    /// checkpoint txs ride in flight together (disjoint channels).
+    fn pin_global_on_shards(
+        &mut self,
+        round: u64,
+        digest: &crate::crypto::Digest,
+        uri: &str,
+        total: u64,
+    ) -> Result<()> {
+        let nonces: Vec<u64> = (0..self.shards.len()).map(|_| self.rng.next_u64()).collect();
+        let handles: Vec<_> = self
+            .shard_gateways
+            .iter()
+            .enumerate()
+            .map(|(s, gw)| {
+                gw.submit(&crate::ledger::tx::Proposal {
+                    channel: self.shards[s].channel.clone(),
+                    chaincode: "models".into(),
+                    function: "PinGlobalModel".into(),
+                    args: vec![
+                        round.to_string(),
+                        digest.hex(),
+                        uri.to_string(),
+                        total.to_string(),
+                    ],
+                    creator: self.shards[s].peers[0].member.clone(),
+                    nonce: nonces[s],
+                })
+            })
+            .collect();
+        for (s, h) in handles.into_iter().enumerate() {
+            let outcome = h.wait();
+            if !outcome.is_valid() {
+                bail!("PinGlobalModel(round {round}) failed on shard {s}: {outcome:?}");
+            }
+        }
+        Ok(())
     }
 
     /// One full federated round through the blockchain (paper §3.4).
@@ -426,7 +476,13 @@ impl ScaleSfl {
         let mut rejected = 0usize;
         let mut lazy_detected = 0usize;
         let mut losses = Vec::new();
-        let mut shard_models: Vec<(FlatParams, u64)> = Vec::new();
+        // Shard aggregates are submitted to the mainchain as each shard
+        // finishes and drained together after the loop: one gateway (and
+        // one commit demux) for all of them, with every submission in
+        // flight at once.
+        let main_gw = self.mainchain_gateway();
+        let mut pending_shard_models: Vec<(usize, FlatParams, u64, crate::fabric::SubmitHandle)> =
+            Vec::new();
 
         for s in 0..self.shards.len() {
             // §3.4.2 client training (off-chain, real PJRT compute).
@@ -469,12 +525,20 @@ impl ScaleSfl {
                 updates.extend(published);
             }
 
-            // §3.4.3-3.4.5 store off-chain, submit metadata, endorse.
+            // §3.4.3-3.4.5 store off-chain, then submit every client's
+            // metadata tx with all of them in flight at once (open-loop:
+            // endorsements run back-to-back while earlier txs are still
+            // being ordered/committed, as Caliper drives the real system).
             let gw = self.shard_gateway(s);
             let channel = self.shards[s].channel.clone();
+            let endorsers = match self.committees.get(s) {
+                Some(c) if !c.is_empty() => c.len(),
+                _ => self.shards[s].peers.len(),
+            };
+            let mut proposals = Vec::with_capacity(updates.len());
             for up in &updates {
                 let (digest, uri) = self.store.put(up.params.clone());
-                let proposal = crate::ledger::tx::Proposal {
+                proposals.push(crate::ledger::tx::Proposal {
                     channel: channel.clone(),
                     chaincode: "models".into(),
                     function: "CreateModelUpdate".into(),
@@ -487,13 +551,10 @@ impl ScaleSfl {
                     ],
                     creator: MemberId::new(format!("client{}", up.client_id)),
                     nonce: self.rng.next_u64(),
-                };
-                let endorsers = match self.committees.get(s) {
-                    Some(c) if !c.is_empty() => c.len(),
-                    _ => self.shards[s].peers.len(),
-                };
+                });
                 self.eval_invocations += endorsers as u64;
-                let outcome = gw.submit_and_wait(&proposal);
+            }
+            for outcome in gw.submit_all(&proposals, proposals.len().max(1)) {
                 if outcome.is_valid() {
                     accepted += 1;
                 } else {
@@ -608,7 +669,8 @@ impl ScaleSfl {
                 .map(|(&i, _)| committed[i].samples)
                 .sum();
 
-            // §3.4.7 publish the shard aggregate to the mainchain.
+            // §3.4.7 publish the shard aggregate to the mainchain
+            // (non-blocking: later shards keep working while this commits).
             let (digest, uri) = self.store.put(shard_model.clone());
             let proposal = crate::ledger::tx::Proposal {
                 channel: MAINCHAIN.into(),
@@ -624,11 +686,18 @@ impl ScaleSfl {
                 creator: self.shards[s].peers[0].member.clone(),
                 nonce: self.rng.next_u64(),
             };
-            let outcome = self.mainchain_gateway().submit_and_wait(&proposal);
+            let handle = main_gw.submit(&proposal);
+            pending_shard_models.push((s, shard_model, shard_samples, handle));
+        }
+
+        let mut shard_models: Vec<(FlatParams, u64)> =
+            Vec::with_capacity(pending_shard_models.len());
+        for (s, model, samples, handle) in pending_shard_models {
+            let outcome = handle.wait();
             if !outcome.is_valid() {
                 bail!("shard {s} mainchain submission failed: {outcome:?}");
             }
-            shard_models.push((shard_model, shard_samples));
+            shard_models.push((model, samples));
         }
 
         if shard_models.is_empty() {
@@ -653,27 +722,15 @@ impl ScaleSfl {
             creator: self.all_peers[0].member.clone(),
             nonce: self.rng.next_u64(),
         };
-        let outcome = self.mainchain_gateway().submit_and_wait(&proposal);
+        let outcome = main_gw.submit(&proposal).wait();
         if !outcome.is_valid() {
             bail!("FinalizeGlobal failed: {outcome:?}");
         }
 
-        // Pin the global model onto each shard chain (next round's baseline).
+        // Pin the global model onto each shard chain (next round's
+        // baseline).
         let total: u64 = shard_models.iter().map(|(_, n)| n).sum();
-        for s in 0..self.shards.len() {
-            let proposal = crate::ledger::tx::Proposal {
-                channel: self.shards[s].channel.clone(),
-                chaincode: "models".into(),
-                function: "PinGlobalModel".into(),
-                args: vec![round.to_string(), gdigest.hex(), guri.clone(), total.to_string()],
-                creator: self.shards[s].peers[0].member.clone(),
-                nonce: self.rng.next_u64(),
-            };
-            let outcome = self.shard_gateway(s).submit_and_wait(&proposal);
-            if !outcome.is_valid() {
-                bail!("PinGlobalModel failed on shard {s}: {outcome:?}");
-            }
-        }
+        self.pin_global_on_shards(round, &gdigest, &guri, total)?;
 
         self.global = new_global;
         self.round += 1;

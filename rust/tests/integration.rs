@@ -110,7 +110,7 @@ fn byzantine_shard_server_caught_by_mainchain_verification() {
         net.all_peers.clone(),
         std::sync::Arc::clone(&net.orderer),
     );
-    let outcome = gw.submit_and_wait(&proposal);
+    let outcome = gw.submit(&proposal).wait();
     // Round 2 has no shard models yet -> endorsement must fail.
     assert!(
         matches!(outcome, scalesfl::fabric::CommitOutcome::EndorsementFailed { .. }),
