@@ -3,7 +3,7 @@
 #   make check     - formatting + lints + tier-1 verify (CI gate)
 #   make verify    - tier-1: release build + tests
 #   make bench     - perf baselines (writes BENCH_mempool.json,
-#                    BENCH_gateway.json)
+#                    BENCH_gateway.json, BENCH_validation.json)
 
 .PHONY: check fmt clippy verify bench
 
@@ -22,3 +22,4 @@ verify:
 bench:
 	cargo bench --bench mempool
 	cargo bench --bench gateway_pipeline
+	cargo bench --bench validation

@@ -16,6 +16,9 @@ cargo build --release
 echo "==> cargo build --release --examples --benches"
 cargo build --release --examples --benches
 
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> cargo test -q"
 cargo test -q
 

@@ -41,8 +41,15 @@ pub struct DesConfig {
     /// Orderer block cut parameters.
     pub batch_size: usize,
     pub batch_timeout_s: f64,
-    /// Per-transaction validation/commit cost at a peer.
+    /// Per-transaction validation/commit cost at a peer (at one
+    /// validation worker).
     pub validate_s: f64,
+    /// Worker threads in the peer's parallel pre-validation stage
+    /// (mirrors `OrdererConfig::validation_workers`). Signature/policy
+    /// verification — modelled as [`VALIDATE_PARALLEL_FRACTION`] of
+    /// `validate_s` — scales with workers; the serial MVCC+apply
+    /// remainder does not (Amdahl).
+    pub validation_workers: usize,
     /// Caliper worker per-submission overhead (drives Fig 8).
     pub worker_overhead_s: f64,
     /// CPU stolen from peers per extra workload worker (the paper runs
@@ -70,11 +77,25 @@ impl Default for DesConfig {
             batch_size: 10,
             batch_timeout_s: 0.5,
             validate_s: 0.0005,
+            validation_workers: 1,
             worker_overhead_s: 0.01,
             worker_cpu_contention: 0.02,
             pool_capacity: 0,
         }
     }
+}
+
+/// Share of `DesConfig::validate_s` that the parallel pre-validation stage
+/// (signature + policy crypto) accounts for; the rest is the serial
+/// MVCC-check + apply stage. Matches the measured split on
+/// signature-heavy blocks (`benches/validation.rs`).
+pub const VALIDATE_PARALLEL_FRACTION: f64 = 0.9;
+
+/// Effective per-tx validation cost at the configured worker count.
+pub fn effective_validate_s(cfg: &DesConfig) -> f64 {
+    let w = cfg.validation_workers.max(1) as f64;
+    cfg.validate_s
+        * ((1.0 - VALIDATE_PARALLEL_FRACTION) + VALIDATE_PARALLEL_FRACTION / w)
 }
 
 /// Workload wrapper (re-exported alias for clarity in benches).
@@ -151,7 +172,9 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
         txs.push(Tx { submit: sched, endorsed, shard });
     }
 
-    // Stage 3: per-shard batching -> consensus -> commit.
+    // Stage 3: per-shard batching -> consensus -> commit (per-tx
+    // validation cost scaled by the parallel pre-validation workers).
+    let validate_s = effective_validate_s(cfg);
     let mut completion = vec![0.0f64; txs.len()];
     for s in 0..cfg.shards {
         let mut idx: Vec<usize> = (0..txs.len()).filter(|&i| txs[i].shard == s).collect();
@@ -183,7 +206,7 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
             let committed = start + cfg.order_s;
             orderer_free = committed;
             for (j, &i) in idx[pos..pos + count].iter().enumerate() {
-                completion[i] = committed + cfg.validate_s * (j + 1) as f64 + cfg.net_hop_s;
+                completion[i] = committed + validate_s * (j + 1) as f64 + cfg.net_hop_s;
             }
             pos += count;
         }
@@ -327,6 +350,29 @@ mod tests {
         );
         // Throughput still tracks capacity.
         assert!(with_pool.throughput > 0.5 * cap);
+    }
+
+    #[test]
+    fn validation_workers_shrink_the_commit_tail() {
+        // Make per-tx validation the dominant cost so the worker knob is
+        // visible in end-to-end latency.
+        let base = DesConfig { validate_s: 0.05, batch_size: 20, ..cfg(1) };
+        assert!(effective_validate_s(&base) > effective_validate_s(&DesConfig {
+            validation_workers: 4,
+            ..base
+        }));
+        // Amdahl: the serial fraction survives at any worker count.
+        let wide = DesConfig { validation_workers: 1_000, ..base };
+        assert!(effective_validate_s(&wide) > base.validate_s * 0.09);
+        let serial = run_des(&base, &wl(100, 4.0), 7);
+        let parallel =
+            run_des(&DesConfig { validation_workers: 4, ..base }, &wl(100, 4.0), 7);
+        assert!(
+            parallel.avg_latency() < serial.avg_latency(),
+            "serial {:.3}s parallel {:.3}s",
+            serial.avg_latency(),
+            parallel.avg_latency()
+        );
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! by ingress admission control (`Reject::PoolFull` / `Reject::RateLimited`),
 //! reported separately from failures so surge figures show explicit
 //! backpressure instead of unbounded queue growth. Per-reason counters come
-//! from `mempool::StatsSnapshot`.
+//! from `mempool::StatsSnapshot`; the commit-side `mvcc_conflicts` /
+//! `stale_dropped` columns and per-stage validation timings come from
+//! `fabric::ValidationSnapshot` (see `report`).
 //!
 //! Two execution backends:
 //! - [`real`]: a rate-targeted **open-loop** driver over the pipelined

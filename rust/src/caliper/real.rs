@@ -21,6 +21,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::fabric::gateway::{CommitOutcome, Gateway, SubmitHandle};
+use crate::ledger::block::ValidationCode;
 use crate::ledger::tx::Proposal;
 use crate::util::histogram::Histogram;
 
@@ -39,6 +40,10 @@ pub fn run_real(
     gateways: &[Arc<Gateway>],
     make_proposal: impl Fn(usize) -> Proposal + Send + Sync,
 ) -> Report {
+    // Deltas for the validation-pipeline columns come from the first
+    // gateway's orderer (drivers share one ordering service).
+    let stats_base = gateways.first().map(|g| g.orderer.mempool().snapshot()).unwrap_or_default();
+    let vstats_base = gateways.first().map(|g| g.orderer.validation_stats()).unwrap_or_default();
     let started = Instant::now();
     let next = AtomicUsize::new(0);
     let in_flight = AtomicUsize::new(0);
@@ -150,12 +155,25 @@ pub fn run_real(
         } else {
             report.failed += 1;
         }
+        if matches!(
+            outcome,
+            CommitOutcome::Committed { code: ValidationCode::MvccConflict, .. }
+        ) {
+            report.mvcc_conflicts += 1;
+        }
     }
     report.send_tps = wl.txs as f64 / duration;
     report.duration_s = duration;
     report.throughput = report.succeeded as f64 / duration;
     report.latency = hist;
     report.in_flight_high_water = in_flight_high.load(Ordering::SeqCst);
+    if let Some(gw) = gateways.first() {
+        let stats = gw.orderer.mempool().snapshot();
+        report.stale_dropped = (stats.stale_shed() - stats_base.stale_shed()) as usize;
+        let vstats = gw.orderer.validation_stats();
+        report.prevalidate_s = vstats.prevalidate_s() - vstats_base.prevalidate_s();
+        report.apply_s = vstats.apply_s() - vstats_base.apply_s();
+    }
     report
 }
 

@@ -7,6 +7,12 @@
 //! Surge rounds (Figs. 6-7) report nonzero shed while committed-tx latency
 //! stays bounded. Per-reason reject counters live in
 //! `mempool::StatsSnapshot` and export via its `to_json`.
+//!
+//! Since the staged validation pipeline landed, reports also carry the
+//! commit-side MVCC columns: `mvcc_conflicts` (read-version invalidations
+//! at commit), `stale_dropped` (transactions shed by admission/pull-time
+//! MVCC hinting before ordering), and the per-stage validation wall times
+//! (`prevalidate_s` / `apply_s`) from `fabric::ValidationSnapshot`.
 
 use crate::util::histogram::Histogram;
 use crate::util::json::Json;
@@ -25,6 +31,18 @@ pub struct Report {
     /// `Reject::PoolFull` / `Reject::RateLimited`). Shed transactions never
     /// consumed pipeline capacity.
     pub shed: usize,
+    /// Transactions invalidated by an MVCC read-version conflict at
+    /// commit (a subset of `failed`).
+    pub mvcc_conflicts: usize,
+    /// Transactions shed by MVCC staleness hinting before ordering:
+    /// admission rejects (`Reject::StaleReadSet`) plus pull-time drops.
+    /// Each one is an `MvccConflict` that never cost consensus bandwidth.
+    pub stale_dropped: usize,
+    /// Wall time spent in the parallel pre-validation stage (seconds,
+    /// summed across replicas; 0 when the backend doesn't measure it).
+    pub prevalidate_s: f64,
+    /// Wall time spent in the serial MVCC + apply stage (seconds).
+    pub apply_s: f64,
     /// Actual aggregate send rate achieved (TPS).
     pub send_tps: f64,
     /// Observed throughput: successes / makespan (TPS).
@@ -47,6 +65,10 @@ impl Report {
             succeeded: 0,
             failed: 0,
             shed: 0,
+            mvcc_conflicts: 0,
+            stale_dropped: 0,
+            prevalidate_s: 0.0,
+            apply_s: 0.0,
             send_tps: 0.0,
             throughput: 0.0,
             latency: Histogram::default(),
@@ -62,12 +84,14 @@ impl Report {
     /// One table row, Caliper-style.
     pub fn row(&self) -> String {
         format!(
-            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s inflight={:<4}",
+            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} mvcc={:<4} stale={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s inflight={:<4}",
             self.name,
             self.sent,
             self.succeeded,
             self.failed,
             self.shed,
+            self.mvcc_conflicts,
+            self.stale_dropped,
             self.send_tps,
             self.throughput,
             self.avg_latency(),
@@ -83,6 +107,10 @@ impl Report {
             .set("succeeded", self.succeeded)
             .set("failed", self.failed)
             .set("shed", self.shed)
+            .set("mvcc_conflicts", self.mvcc_conflicts)
+            .set("stale_dropped", self.stale_dropped)
+            .set("prevalidate_s", self.prevalidate_s)
+            .set("apply_s", self.apply_s)
             .set("send_tps", self.send_tps)
             .set("throughput", self.throughput)
             .set("avg_latency_s", self.avg_latency())
@@ -104,6 +132,8 @@ mod tests {
         r.succeeded = 90;
         r.failed = 5;
         r.shed = 5;
+        r.mvcc_conflicts = 2;
+        r.stale_dropped = 3;
         r.send_tps = 10.0;
         r.throughput = 9.0;
         r.latency.record(0.5);
@@ -111,10 +141,14 @@ mod tests {
         r.in_flight_high_water = 32;
         assert!(r.row().contains("fig4/s2"));
         assert!(r.row().contains("shed=5"));
+        assert!(r.row().contains("mvcc=2"));
+        assert!(r.row().contains("stale=3"));
         assert!(r.row().contains("inflight=32"));
         let j = r.to_json();
         assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(90.0));
         assert_eq!(j.get("shed").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("mvcc_conflicts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("stale_dropped").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
         assert_eq!(j.get("in_flight_high_water").unwrap().as_f64(), Some(32.0));
     }

@@ -165,7 +165,7 @@ impl Chaincode for CatalystChaincode {
 mod tests {
     use super::*;
     use crate::ledger::state::{Version, WorldState};
-    use std::sync::Mutex;
+    use std::sync::RwLock;
 
     fn cc() -> Option<(CatalystChaincode, ModelStore)> {
         let ops = crate::runtime::shared_ops()?;
@@ -173,15 +173,15 @@ mod tests {
         Some((CatalystChaincode { store: store.clone(), ops, verify_aggregate: true }, store))
     }
 
-    fn commit(state: &Mutex<WorldState>, ctx: TxContext<'_>, block: u64) {
+    fn commit(state: &RwLock<WorldState>, ctx: TxContext<'_>, block: u64) {
         let rw = ctx.into_rw_set();
-        state.lock().unwrap().apply(&rw, Version { block, tx: 0 });
+        state.write().unwrap().apply(&rw, Version { block, tx: 0 });
     }
 
     #[test]
     fn shard_submission_and_finalisation() {
         let Some((cc, store)) = cc() else { return };
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         // Two shards post models.
         let m0 = vec![1.0f32; cc.ops.p_pad()];
         let m1 = vec![3.0f32; cc.ops.p_pad()];
@@ -209,13 +209,13 @@ mod tests {
         cc.invoke(&mut ctx, "FinalizeGlobal", &["1".into(), gd.hex(), guri, "2".into()])
             .unwrap();
         commit(&state, ctx, 3);
-        assert!(state.lock().unwrap().get_value("global/00000001").is_some());
+        assert!(state.read().unwrap().get_value("global/00000001").is_some());
     }
 
     #[test]
     fn finalize_rejects_wrong_aggregate_and_missing_shards() {
         let Some((cc, store)) = cc() else { return };
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let (d, uri) = store.put(vec![1.0f32; cc.ops.p_pad()]);
         let mut ctx = TxContext::new(&state);
         cc.invoke(
@@ -251,7 +251,7 @@ mod tests {
     #[test]
     fn task_proposals_deduplicate() {
         let Some((cc, _store)) = cc() else { return };
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let mut ctx = TxContext::new(&state);
         cc.invoke(&mut ctx, "ProposeTask", &["t1".into(), "mnist".into(), "64".into()])
             .unwrap();

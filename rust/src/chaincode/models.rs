@@ -170,7 +170,7 @@ mod tests {
     use crate::defense::endorse::{NoDefense, NormBound};
     use crate::fl::datasets;
     use crate::ledger::state::WorldState;
-    use std::sync::Mutex;
+    use std::sync::RwLock;
 
     fn chaincode(defense: Arc<dyn EndorsementDefense>) -> Option<(ModelsChaincode, ModelStore)> {
         let ops = crate::runtime::shared_ops()?;
@@ -188,7 +188,7 @@ mod tests {
         let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
         let params = cc.ops.init_params(1).unwrap();
         let (digest, uri) = store.put(params);
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let mut ctx = TxContext::new(&state);
         let out = cc
             .invoke(&mut ctx, "CreateModelUpdate", &args(1, "c0", &digest.hex(), &uri, 100))
@@ -206,7 +206,7 @@ mod tests {
         let params = cc.ops.init_params(1).unwrap();
         let (_d, uri) = store.put(params.clone());
         let wrong = crate::crypto::hash_f32(&[1.0]);
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let mut ctx = TxContext::new(&state);
         assert!(cc
             .invoke(&mut ctx, "CreateModelUpdate", &args(1, "c0", &wrong.hex(), &uri, 1))
@@ -222,14 +222,14 @@ mod tests {
         let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
         let params = cc.ops.init_params(2).unwrap();
         let (digest, uri) = store.put(params);
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let a = args(1, "c0", &digest.hex(), &uri, 10);
         // First submit commits.
         let mut ctx = TxContext::new(&state);
         cc.invoke(&mut ctx, "CreateModelUpdate", &a).unwrap();
         let rw = ctx.into_rw_set();
         state
-            .lock()
+            .write()
             .unwrap()
             .apply(&rw, crate::ledger::state::Version { block: 1, tx: 0 });
         // Second one is rejected at simulation time.
@@ -240,7 +240,7 @@ mod tests {
     #[test]
     fn norm_bound_defense_blocks_boosted_update() {
         let Some((cc, store)) = chaincode(Arc::new(NormBound { max_norm: 1.0 })) else { return };
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         // Pin round-0 global so the delta check has a baseline.
         let global = cc.ops.init_params(7).unwrap();
         let (gd, guri) = store.put(global.clone());
@@ -249,7 +249,7 @@ mod tests {
             .unwrap();
         let rw = ctx.into_rw_set();
         state
-            .lock()
+            .write()
             .unwrap()
             .apply(&rw, crate::ledger::state::Version { block: 1, tx: 0 });
         // A far-away "model" violates the delta bound…
@@ -274,7 +274,7 @@ mod tests {
         let Some((cc, store)) = chaincode(Arc::new(NoDefense)) else { return };
         let params = cc.ops.init_params(3).unwrap();
         let (digest, uri) = store.put(params);
-        let state = Mutex::new(WorldState::new());
+        let state = RwLock::new(WorldState::new());
         let mut ctx = TxContext::new(&state);
         cc.invoke(
             &mut ctx,

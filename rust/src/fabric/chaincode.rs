@@ -1,7 +1,7 @@
 //! Chaincode (smart contract) interface and the transaction simulation
 //! context that records read/write sets during endorsement.
 
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use crate::ledger::state::WorldState;
 use crate::ledger::tx::{ReadSet, RwSet, WriteSet};
@@ -23,14 +23,18 @@ pub trait Chaincode: Send + Sync {
 /// Transaction simulation context: reads hit committed state (recording the
 /// observed version), writes are buffered. Read-your-writes is supported
 /// within a single simulation.
+///
+/// Simulation only ever takes the state's *read* lock, so any number of
+/// endorsements (and the commit pipeline's pre-validation stage) proceed
+/// concurrently; the write lock belongs to the serial apply stage alone.
 pub struct TxContext<'a> {
-    state: &'a Mutex<WorldState>,
+    state: &'a RwLock<WorldState>,
     reads: ReadSet,
     writes: WriteSet,
 }
 
 impl<'a> TxContext<'a> {
-    pub fn new(state: &'a Mutex<WorldState>) -> Self {
+    pub fn new(state: &'a RwLock<WorldState>) -> Self {
         TxContext { state, reads: Vec::new(), writes: Vec::new() }
     }
 
@@ -40,7 +44,7 @@ impl<'a> TxContext<'a> {
         if let Some((_, v)) = self.writes.iter().rev().find(|(k, _)| k == key) {
             return v.clone();
         }
-        let guard = self.state.lock().unwrap();
+        let guard = self.state.read().unwrap();
         let hit = guard.get(key);
         self.reads.push((key.to_string(), hit.map(|(_, ver)| ver)));
         hit.map(|(v, _)| v.to_vec())
@@ -57,15 +61,17 @@ impl<'a> TxContext<'a> {
     }
 
     /// Prefix scan over committed state; records a read per hit so MVCC
-    /// catches concurrent modification of any returned key.
+    /// catches concurrent modification of any returned key. Ownership is
+    /// taken here (the chaincode API hands values to contracts), off the
+    /// borrowed entries `scan_prefix` returns.
     pub fn scan(&mut self, prefix: &str) -> Vec<(String, Vec<u8>)> {
-        let guard = self.state.lock().unwrap();
-        let hits = guard.scan_prefix(prefix);
-        for (k, _) in &hits {
-            let ver = guard.get(k).map(|(_, v)| v);
-            self.reads.push((k.clone(), ver));
+        let guard = self.state.read().unwrap();
+        let mut out = Vec::new();
+        for (k, v) in guard.scan_prefix(prefix) {
+            self.reads.push((k.to_string(), guard.read_version(k)));
+            out.push((k.to_string(), v.to_vec()));
         }
-        hits
+        out
     }
 
     /// Finish simulation, yielding the endorsed effect set.
@@ -80,13 +86,13 @@ mod tests {
     use crate::ledger::state::Version;
     use crate::ledger::tx::RwSet;
 
-    fn seeded_state() -> Mutex<WorldState> {
+    fn seeded_state() -> RwLock<WorldState> {
         let mut s = WorldState::new();
         s.apply(
             &RwSet { reads: vec![], writes: vec![("k".into(), Some(b"v1".to_vec()))] },
             Version { block: 3, tx: 1 },
         );
-        Mutex::new(s)
+        RwLock::new(s)
     }
 
     #[test]

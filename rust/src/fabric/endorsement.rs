@@ -27,6 +27,21 @@ impl EndorsementPolicy {
         }
     }
 
+    /// Stable fingerprint over the policy's shape (variant, threshold,
+    /// member set). Two policies with equal fingerprints accept exactly the
+    /// same endorsement sets, so cached verification verdicts keyed by
+    /// (envelope digest, fingerprint) are safe to share across peers and
+    /// survive no-op policy reinstalls.
+    pub fn fingerprint(&self) -> u64 {
+        let required = (self.required() as u64).to_le_bytes();
+        let mut parts: Vec<&[u8]> = vec![&required];
+        for m in self.members() {
+            parts.push(m.0.as_bytes());
+        }
+        let digest = crate::crypto::sha256_parts(&parts);
+        u64::from_le_bytes(digest.0[..8].try_into().expect("digest >= 8 bytes"))
+    }
+
     /// Validate endorsements over (tx, rw_set): signatures must verify, come
     /// from distinct policy members, and reach the required count.
     pub fn satisfied(
@@ -107,6 +122,22 @@ mod tests {
         let one = endorse_all(&creds[..1], &tx, &rw);
         let dup = vec![one[0].clone(), one[0].clone()];
         assert!(!policy.satisfied(&tx, &rw, &dup, &ca));
+    }
+
+    #[test]
+    fn fingerprint_tracks_policy_shape() {
+        let (_ca, creds) = setup(3);
+        let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+        let a = EndorsementPolicy::AnyOf(1, members.clone());
+        let b = EndorsementPolicy::AnyOf(2, members.clone());
+        let c = EndorsementPolicy::AnyOf(2, members[..2].to_vec());
+        assert_eq!(a.fingerprint(), EndorsementPolicy::AnyOf(1, members.clone()).fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint(), "threshold changes the fingerprint");
+        assert_ne!(b.fingerprint(), c.fingerprint(), "member set changes the fingerprint");
+        // Same threshold + same members accept the same endorsement sets:
+        // the fingerprints may legitimately coincide across variants.
+        let maj = EndorsementPolicy::MajorityOf(members.clone());
+        assert_eq!(maj.fingerprint(), EndorsementPolicy::AnyOf(2, members).fingerprint());
     }
 
     #[test]

@@ -44,9 +44,13 @@ pub enum CommitOutcome {
     /// All/enough endorsements failed (chaincode or policy rejection).
     EndorsementFailed { reason: String, latency: Duration },
     /// The mempool refused the envelope at admission (backpressure: pool
-    /// full, rate cap, replay, …). The transaction was never ordered.
+    /// full, rate cap, replay, stale read-set, …). The transaction was
+    /// never ordered.
     Rejected { reject: Reject, latency: Duration },
-    /// No commit event within the timeout.
+    /// No commit event within the timeout. Besides genuine pipeline
+    /// stalls, this is how an admitted tx that the mempool later shed as
+    /// stale (`stale_dropped` — guaranteed `MvccConflict`, never ordered)
+    /// surfaces; re-endorse and resubmit.
     TimedOut,
 }
 
@@ -409,6 +413,10 @@ mod tests {
             if f == "Fail" {
                 return Err("policy rejected".into());
             }
+            if f == "ReadPut" {
+                // Read-modify-write: records an MVCC dependency on the key.
+                let _ = ctx.get(&args[0]);
+            }
             ctx.put(&args[0], b"v".to_vec());
             Ok(vec![])
         }
@@ -636,6 +644,57 @@ mod tests {
         let stats = gw.orderer.mempool().snapshot();
         assert!(stats.pool_full > 0, "expected PoolFull backpressure, got {stats:?}");
         assert_eq!(stats.txs_ordered, 16);
+    }
+
+    /// Admission-side MVCC hinting surfaces through the pipelined API as
+    /// an immediately-resolved `CommitOutcome::Rejected`: a transaction
+    /// endorsed on a lagging replica (its read versions already overtaken
+    /// on the replica backing the mempool's state view) is refused before
+    /// ordering, not invalidated after consensus.
+    #[test]
+    fn stale_read_set_resolves_as_rejected_handle() {
+        use crate::mempool::Reject;
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(9);
+        let fresh = {
+            let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+            Peer::new(cred, ca.clone())
+        };
+        let laggard = {
+            let cred = ca.enroll(MemberId::new("org1.peer"), &mut rng);
+            Peer::new(cred, ca.clone())
+        };
+        let policy =
+            EndorsementPolicy::AnyOf(1, vec![fresh.member.clone(), laggard.member.clone()]);
+        for p in [&fresh, &laggard] {
+            p.join_channel("ch", policy.clone());
+            p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
+        }
+        // The orderer wires its mempool's staleness oracle to `fresh`.
+        let orderer = OrderingService::start(
+            OrdererConfig { batch_timeout: Duration::from_millis(10), ..Default::default() },
+            vec![Arc::clone(&fresh)],
+            3,
+        );
+        // `fresh` commits a write to the contended key; `laggard` misses it.
+        let prop_ahead = prop("Put", "ctr", 1);
+        let (rw, e, _) = fresh.endorse(&prop_ahead).unwrap();
+        let ahead = Envelope { proposal: prop_ahead, rw_set: rw, endorsements: vec![e] };
+        fresh.commit_batch("ch", vec![ahead]).unwrap();
+        // Endorsing on the laggard observes ctr as absent — provably stale
+        // against the view replica, so admission rejects at submit time.
+        let gw = Gateway::new(vec![laggard], orderer);
+        let handle = gw.submit(&prop("ReadPut", "ctr", 2));
+        assert!(!handle.is_pending(), "stale verdict must resolve at submit");
+        let out = handle.wait();
+        assert!(
+            matches!(out, CommitOutcome::Rejected { reject: Reject::StaleReadSet, .. }),
+            "{out:?}"
+        );
+        assert!(out.is_rejected());
+        let stats = gw.orderer.mempool().snapshot();
+        assert_eq!(stats.stale_read_set, 1);
+        assert_eq!(stats.stale_shed(), 1);
     }
 
     #[test]

@@ -10,8 +10,13 @@
 //!   size-and-byte-bounded batches and replicates them through Raft (or
 //!   PBFT) consensus, while a committer thread pipelines validation
 //!   ([`orderer`]).
-//! - **Validate**: every peer independently checks the endorsement policy
-//!   and MVCC read versions, then commits valid writes ([`peer::PeerChannel`]).
+//! - **Validate**: every peer independently validates delivered blocks in
+//!   two stages ([`peer`], [`validator`]): parallel endorsement-policy /
+//!   signature pre-validation (fanned out over a worker pool, with a
+//!   verdict cache shared across replicas of the same block) followed by
+//!   the serial MVCC read-version check + state apply under the state
+//!   write lock. Per-stage timings export via
+//!   [`validator::ValidationSnapshot`].
 //!
 //! Clients drive the pipeline through the non-blocking submission API:
 //! [`gateway::Gateway::submit`] returns a [`gateway::SubmitHandle`] and the
@@ -27,6 +32,7 @@ pub mod endorsement;
 pub mod gateway;
 pub mod orderer;
 pub mod peer;
+pub mod validator;
 pub mod waiter;
 pub mod wire;
 
@@ -35,4 +41,5 @@ pub use endorsement::EndorsementPolicy;
 pub use gateway::{CommitOutcome, Gateway, SubmitHandle};
 pub use orderer::{OrdererConfig, OrderingService};
 pub use peer::{CommitEvent, Peer, PeerChannel, Subscription};
+pub use validator::{BlockValidator, ValidationSnapshot};
 pub use waiter::CommitWaiter;

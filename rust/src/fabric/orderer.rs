@@ -4,11 +4,21 @@
 //!
 //! Ingress goes through the sharded mempool (`crate::mempool`): `submit`
 //! routes envelopes into the per-channel pool (admission control, priority
-//! lanes, explicit backpressure), and the driver thread *pulls*
-//! size-and-byte-bounded batches from the pools instead of owning batching
-//! state. Block production is pipelined: the driver runs consensus while a
-//! separate committer thread validates and applies delivered blocks, so
-//! batch cutting, ordering, and validation overlap.
+//! lanes, MVCC staleness hinting, explicit backpressure), and the driver
+//! thread *pulls* size-and-byte-bounded batches from the pools instead of
+//! owning batching state. Block production is pipelined: the driver runs
+//! consensus while a separate committer thread validates and applies
+//! delivered blocks, so batch cutting, ordering, and validation overlap.
+//!
+//! The committer drives the two-stage validation pipeline: one shared
+//! [`BlockValidator`] (sized by [`OrdererConfig::validation_workers`])
+//! fans the endorsement-policy crypto out across its worker pool and lets
+//! every peer replica of a block reuse the first replica's cached
+//! verdicts; per-stage timings export via
+//! [`OrderingService::validation_stats`]. On startup the orderer also
+//! wires each channel's mempool to a replica's read-version oracle, so
+//! admission can shed transactions that are already guaranteed to fail
+//! MVCC at commit.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -18,11 +28,13 @@ use std::time::{Duration, Instant};
 use crate::consensus::pbft::{Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::ConsensusNode;
+use crate::ledger::state::StateView;
 use crate::ledger::tx::Envelope;
 use crate::mempool::{MempoolConfig, MempoolRegistry, Reject};
 use crate::util::prng::Prng;
 
 use super::peer::Peer;
+use super::validator::{BlockValidator, ValidationSnapshot};
 use super::wire;
 
 /// Which consensus protocol orders blocks (the paper's §3.2 pluggable
@@ -53,6 +65,10 @@ pub struct OrdererConfig {
     pub consensus: ConsensusKind,
     /// Driver loop granularity.
     pub tick: Duration,
+    /// Worker threads for the parallel pre-validation stage of block
+    /// commit (1 = verify inline on the committer thread; the cross-peer
+    /// verdict cache is shared either way).
+    pub validation_workers: usize,
 }
 
 impl Default for OrdererConfig {
@@ -65,6 +81,7 @@ impl Default for OrdererConfig {
             consensus_nodes: 1,
             consensus: ConsensusKind::Raft,
             tick: Duration::from_millis(2),
+            validation_workers: 1,
         }
     }
 }
@@ -76,6 +93,8 @@ pub struct OrderingService {
     driver: Option<thread::JoinHandle<()>>,
     committer: Option<thread::JoinHandle<()>>,
     blocks_cut: Arc<AtomicU64>,
+    /// Shared two-stage validator: worker pool + cross-peer verdict cache.
+    validator: Arc<BlockValidator>,
 }
 
 impl OrderingService {
@@ -101,19 +120,38 @@ impl OrderingService {
     ) -> Arc<OrderingService> {
         let shutdown = Arc::new(AtomicBool::new(false));
         let blocks_cut = Arc::new(AtomicU64::new(0));
+        let validator = Arc::new(BlockValidator::new(cfg.validation_workers));
 
-        // Pipeline stage 3: validation/commit runs off the consensus thread.
+        // Admission-side MVCC hinting: wire every already-joined channel
+        // now (covers state seeded by direct `commit_batch` before the
+        // orderer saw a block); channels joined later are wired by the
+        // committer at their first ordered block — the moment their
+        // state first becomes non-trivial.
+        for p in &peers {
+            for name in p.channel_names() {
+                wire_state_view(&mempool, &peers, &name);
+            }
+        }
+
+        // Pipeline stage 3: validation/commit runs off the consensus
+        // thread, through the shared two-stage validator (parallel policy
+        // pre-validation once per block, serial MVCC+apply per replica).
         let (commit_tx, commit_rx) = mpsc::channel::<(String, Vec<Envelope>)>();
         let committer = {
             let counter = Arc::clone(&blocks_cut);
+            let validator = Arc::clone(&validator);
+            let mempool = Arc::clone(&mempool);
             thread::Builder::new()
                 .name("orderer-committer".into())
                 .spawn(move || {
                     while let Ok((channel, envs)) = commit_rx.recv() {
                         counter.fetch_add(1, Ordering::Relaxed);
+                        wire_state_view(&mempool, &peers, &channel);
                         for p in &peers {
                             if p.channel(&channel).is_some() {
-                                if let Err(e) = p.commit_batch(&channel, envs.clone()) {
+                                if let Err(e) =
+                                    p.commit_batch_with(&validator, &channel, envs.clone())
+                                {
                                     eprintln!("orderer: commit failed on {}: {e}", p.member);
                                 }
                             }
@@ -156,6 +194,7 @@ impl OrderingService {
             driver: Some(driver),
             committer: Some(committer),
             blocks_cut,
+            validator,
         })
     }
 
@@ -176,6 +215,18 @@ impl OrderingService {
     pub fn blocks_cut(&self) -> u64 {
         self.blocks_cut.load(Ordering::Relaxed)
     }
+
+    /// The shared block validator (worker pool + verdict cache) the
+    /// committer drives.
+    pub fn validator(&self) -> &Arc<BlockValidator> {
+        &self.validator
+    }
+
+    /// Per-stage validation counters: pre-validate vs apply wall time,
+    /// cache hit rate, and commit-time conflict tallies.
+    pub fn validation_stats(&self) -> ValidationSnapshot {
+        self.validator.snapshot()
+    }
 }
 
 impl Drop for OrderingService {
@@ -190,6 +241,20 @@ impl Drop for OrderingService {
         if let Some(h) = self.committer.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Give `channel`'s pool a replica's read-version oracle for MVCC
+/// staleness hinting (no-op once wired — an explicitly configured view is
+/// never replaced). The first peer that joined the channel speaks for all
+/// replicas; a lagging view only under-hints, never mis-rejects.
+fn wire_state_view(mempool: &MempoolRegistry, peers: &[Arc<Peer>], channel: &str) {
+    let pool = mempool.pool(channel);
+    if pool.has_state_view() {
+        return;
+    }
+    if let Some(ch) = peers.iter().find_map(|p| p.channel(channel)) {
+        pool.set_state_view(ch as Arc<dyn StateView>);
     }
 }
 
@@ -450,6 +515,44 @@ mod tests {
         assert_eq!(stats.admitted, 25);
         assert_eq!(stats.txs_ordered, 25);
         assert_eq!(stats.rejected_total(), 0);
+        // Two-stage pipeline accounting: the first replica of each block
+        // pays the signature crypto; the other two are answered from the
+        // shared verdict cache (keys are per-envelope, so batching splits
+        // don't change the counts).
+        let vstats = orderer.validation_stats();
+        assert_eq!(vstats.txs, 3 * 25, "3 replicas x 25 txs");
+        assert_eq!(vstats.cache_misses, 25);
+        assert_eq!(vstats.cache_hits, 2 * 25);
+        assert_eq!(vstats.mvcc_conflicts, 0);
+        assert!(vstats.prevalidate_nanos > 0 && vstats.apply_nanos > 0);
+    }
+
+    #[test]
+    fn parallel_committer_stays_deterministic() {
+        let cfg = OrdererConfig { validation_workers: 4, ..OrdererConfig::default() };
+        let (peers, orderer) = network(3, cfg);
+        let rx = peers[0].subscribe("ch").unwrap();
+        for nonce in 0..20 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        for _ in 0..20 {
+            let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+            assert_eq!(ev.code, ValidationCode::Valid);
+        }
+        assert_eq!(orderer.validator().workers(), 4);
+        // Replicas validated through the parallel pool agree block-for-block.
+        let chains: Vec<Vec<crate::crypto::Digest>> = peers
+            .iter()
+            .map(|p| {
+                let ch = p.channel("ch").unwrap();
+                let chain = ch.chain.lock().unwrap();
+                chain.verify().unwrap();
+                chain.iter().map(|b| b.hash()).collect()
+            })
+            .collect();
+        assert!(!chains[0].is_empty());
+        assert_eq!(chains[0], chains[1]);
+        assert_eq!(chains[0], chains[2]);
     }
 
     #[test]

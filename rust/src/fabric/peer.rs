@@ -1,26 +1,58 @@
-//! Peers: endorsement simulation, independent block validation + commit,
-//! ledger queries, and commit-event subscriptions.
+//! Peers: endorsement simulation, staged block validation + commit, ledger
+//! queries, and commit-event subscriptions.
 //!
 //! Each peer keeps its own chain + world state per joined channel (as in
 //! Fabric); the ordering service delivers identical block payloads to every
 //! peer, and determinism of the validator keeps replicas in agreement.
+//!
+//! # The two-stage commit pipeline
+//!
+//! [`Peer::commit_batch_with`] validates a block in two stages:
+//!
+//! 1. **Parallel pre-validation** (no chain/state locks): endorsement
+//!    policy + signature verification for every transaction, fanned out
+//!    over the [`BlockValidator`]'s worker pool and answered from its
+//!    cross-peer verdict cache when another replica already validated the
+//!    same block. This is the O(txs × endorsements) crypto that used to
+//!    serialize on one core under the state lock.
+//! 2. **Serial MVCC + apply** (under the chain/state/dedup locks):
+//!    duplicate-txid check, read-version check against current state, and
+//!    in-order application of valid write sets. Only this stage takes the
+//!    state *write* lock, and it does no crypto — endorsement simulation
+//!    and admission-side staleness probes (both read-lock users) are never
+//!    blocked behind signature verification.
+//!
+//! The staging is outcome-invariant: validation codes are computed in the
+//! same priority order as the old single-loop validator (duplicate →
+//! policy → MVCC → apply), so serial and parallel validators produce
+//! byte-identical blocks.
+//!
+//! [`PeerChannel`] also implements [`StateView`], exposing its world
+//! state's read-version oracle to the mempool for admission-time MVCC
+//! hinting (a transaction whose read-set is already stale can never
+//! commit `Valid`; versions only move forward).
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{mpsc, Arc, Mutex, RwLock, Weak};
+use std::time::Instant;
 
 use crate::crypto::msp::{CertificateAuthority, Credential, MemberId};
 use crate::ledger::block::{Block, ValidationCode};
 use crate::ledger::chain::Chain;
-use crate::ledger::state::{Version, WorldState};
+use crate::ledger::state::{StateView, Version, WorldState};
 use crate::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
 
 use super::chaincode::{Chaincode, TxContext};
 use super::endorsement::EndorsementPolicy;
+use super::validator::BlockValidator;
 
-/// Notification sent to subscribers when a transaction commits.
+/// Notification sent to subscribers when a transaction commits. The
+/// channel name is interned (`Arc<str>`, one allocation per block), so the
+/// per-listener clone fan-out in `commit_batch` bumps a refcount instead
+/// of allocating a fresh `String` per event per listener.
 #[derive(Clone, Debug)]
 pub struct CommitEvent {
-    pub channel: String,
+    pub channel: Arc<str>,
     pub tx_id: TxId,
     pub block: u64,
     pub code: ValidationCode,
@@ -68,10 +100,15 @@ impl Drop for Subscription {
 }
 
 /// Per-channel replica state on a peer.
+///
+/// Lock layout mirrors the pipeline: `state` is a `RwLock` whose read half
+/// serves endorsement simulation, queries, and staleness probes
+/// concurrently; the write half belongs to the serial apply stage of
+/// [`Peer::commit_batch_with`] alone.
 pub struct PeerChannel {
     pub name: String,
     pub chain: Mutex<Chain>,
-    pub state: Mutex<WorldState>,
+    pub state: RwLock<WorldState>,
     chaincodes: RwLock<HashMap<String, Arc<dyn Chaincode>>>,
     policy: RwLock<EndorsementPolicy>,
     committed_ids: Mutex<HashSet<TxId>>,
@@ -83,7 +120,7 @@ impl PeerChannel {
         PeerChannel {
             name: name.to_string(),
             chain: Mutex::new(Chain::new()),
-            state: Mutex::new(WorldState::new()),
+            state: RwLock::new(WorldState::new()),
             chaincodes: RwLock::new(HashMap::new()),
             policy: RwLock::new(policy),
             committed_ids: Mutex::new(HashSet::new()),
@@ -102,11 +139,17 @@ impl PeerChannel {
 
     /// Read a committed value (query path; no transaction).
     pub fn query(&self, key: &str) -> Option<Vec<u8>> {
-        self.state.lock().unwrap().get_value(key).map(|v| v.to_vec())
+        self.state.read().unwrap().get_value(key).map(|v| v.to_vec())
     }
 
     pub fn scan(&self, prefix: &str) -> Vec<(String, Vec<u8>)> {
-        self.state.lock().unwrap().scan_prefix(prefix)
+        self.state
+            .read()
+            .unwrap()
+            .scan_prefix(prefix)
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v.to_vec()))
+            .collect()
     }
 
     pub fn height(&self) -> u64 {
@@ -123,12 +166,28 @@ impl PeerChannel {
     }
 }
 
+/// The mempool's staleness oracle: current read versions straight off the
+/// replica's world state, through the read lock only.
+impl StateView for PeerChannel {
+    fn read_version(&self, key: &str) -> Option<Version> {
+        self.state.read().unwrap().read_version(key)
+    }
+
+    fn seq(&self) -> u64 {
+        self.state.read().unwrap().seq()
+    }
+}
+
 /// A network peer (holds ledgers, endorses, validates).
 pub struct Peer {
     pub member: MemberId,
     cred: Credential,
     ca: CertificateAuthority,
     channels: RwLock<HashMap<String, Arc<PeerChannel>>>,
+    /// Fallback validator for direct [`Peer::commit_batch`] calls (serial,
+    /// private cache). The ordering service passes its own shared one via
+    /// [`Peer::commit_batch_with`] so replicas pool their verdicts.
+    validator: Arc<BlockValidator>,
 }
 
 impl Peer {
@@ -138,6 +197,7 @@ impl Peer {
             cred,
             ca,
             channels: RwLock::new(HashMap::new()),
+            validator: Arc::new(BlockValidator::serial()),
         })
     }
 
@@ -150,6 +210,13 @@ impl Peer {
 
     pub fn channel(&self, name: &str) -> Option<Arc<PeerChannel>> {
         self.channels.read().unwrap().get(name).cloned()
+    }
+
+    /// Names of every channel this peer has joined (sorted).
+    pub fn channel_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.channels.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
     }
 
     /// Deploy a chaincode to a joined channel.
@@ -179,24 +246,53 @@ impl Peer {
         Ok((rw_set, Endorsement { endorser: self.member.clone(), signature: sig }, payload))
     }
 
-    /// Validate + commit an ordered batch as block `number` on `channel`.
-    ///
-    /// Deterministic: policy check (signatures, count), duplicate-txid check,
-    /// MVCC read-version check, then state application in order.
+    /// Validate + commit an ordered batch as the next block on `channel`
+    /// using this peer's private serial validator. Kept for direct callers
+    /// and tests; the pipelined path is [`Peer::commit_batch_with`].
     pub fn commit_batch(&self, channel: &str, envelopes: Vec<Envelope>) -> Result<Block, String> {
+        let validator = Arc::clone(&self.validator);
+        self.commit_batch_with(&validator, channel, envelopes)
+    }
+
+    /// Validate + commit an ordered batch through the two-stage pipeline
+    /// (module docs): parallel policy pre-validation on `validator`, then
+    /// the serial MVCC-check + apply stage under the state write lock.
+    ///
+    /// Deterministic: validation codes are assigned in the same priority
+    /// order as the historical serial loop (duplicate-txid, endorsement
+    /// policy, MVCC read-version, apply), whatever the worker count.
+    pub fn commit_batch_with(
+        &self,
+        validator: &BlockValidator,
+        channel: &str,
+        envelopes: Vec<Envelope>,
+    ) -> Result<Block, String> {
         let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
         let policy = ch.policy();
+
+        // Stage 1 — lock-free fan-out (and cross-peer verdict reuse).
+        let envs = Arc::new(envelopes);
+        let policy_ok = validator.prevalidate(&policy, &self.ca, &envs);
+        // The workers are done with the Arc; reclaim the envelopes without
+        // cloning (the fallback clone only runs if a caller leaked a ref).
+        let envelopes = Arc::try_unwrap(envs).unwrap_or_else(|shared| (*shared).clone());
+
+        // Stage 2 — serial MVCC + apply under the block-commit locks.
         let mut chain = ch.chain.lock().unwrap();
-        let mut state = ch.state.lock().unwrap();
+        let mut state = ch.state.write().unwrap();
         let mut committed_ids = ch.committed_ids.lock().unwrap();
+        // Timed from lock acquisition so `apply_nanos` is the serial
+        // stage's own work, not contention queueing.
+        let t_apply = Instant::now();
         let number = chain.height();
         let mut block = Block::new(number, chain.tip_hash(), envelopes);
+        let channel_name: Arc<str> = Arc::from(channel);
         let mut events = Vec::with_capacity(block.txs.len());
         for (i, env) in block.txs.iter().enumerate() {
             let tx_id = env.tx_id();
             let code = if committed_ids.contains(&tx_id) {
                 ValidationCode::DuplicateTxId
-            } else if !policy.satisfied(&tx_id, &env.rw_set, &env.endorsements, &self.ca) {
+            } else if !policy_ok[i] {
                 ValidationCode::EndorsementPolicyFailure
             } else if !state.mvcc_valid(&env.rw_set) {
                 ValidationCode::MvccConflict
@@ -206,10 +302,16 @@ impl Peer {
                 ValidationCode::Valid
             };
             block.validation.push(code);
-            events.push(CommitEvent { channel: channel.to_string(), tx_id, block: number, code });
+            events.push(CommitEvent {
+                channel: Arc::clone(&channel_name),
+                tx_id,
+                block: number,
+                code,
+            });
         }
         chain.append(block.clone())?;
         drop((chain, state, committed_ids));
+        validator.note_apply(t_apply.elapsed().as_nanos() as u64, &block.validation);
         let mut listeners = ch.listeners.lock().unwrap();
         listeners.retain(|l| {
             l.alive.strong_count() > 0 && events.iter().all(|e| l.tx.send(e.clone()).is_ok())
@@ -382,6 +484,93 @@ mod tests {
         }
     }
 
+    /// The acceptance determinism check: a mixed block (valid, policy
+    /// failure, MVCC conflict, duplicate) must produce byte-identical
+    /// results through the serial validator and a 4-worker parallel one.
+    #[test]
+    fn parallel_validation_matches_serial_exactly() {
+        let (_ca, peers, _) = setup(4);
+        let mut envs = Vec::new();
+        // Two clean writes on distinct keys.
+        envs.push(endorse_and_wrap(&peers, &proposal("Put", &["a", "v"], 1)));
+        envs.push(endorse_and_wrap(&peers, &proposal("Put", &["b", "v"], 2)));
+        // Policy failure: one endorsement where majority-of-4 needs 3.
+        let prop = proposal("Put", &["c", "v"], 3);
+        let (rw, e, _) = peers[0].endorse(&prop).unwrap();
+        envs.push(Envelope { proposal: prop, rw_set: rw, endorsements: vec![e] });
+        // MVCC conflict: both read ctr@None, second loses.
+        envs.push(endorse_and_wrap(&peers, &proposal("Incr", &["ctr"], 4)));
+        envs.push(endorse_and_wrap(&peers, &proposal("Incr", &["ctr"], 5)));
+        // In-block duplicate of tx 1.
+        envs.push(envs[0].clone());
+
+        let serial = peers[0].commit_batch("ch", envs.clone()).unwrap();
+        let parallel_v = BlockValidator::new(4);
+        let parallel = peers[1].commit_batch_with(&parallel_v, "ch", envs).unwrap();
+        assert_eq!(
+            serial.validation,
+            vec![
+                ValidationCode::Valid,
+                ValidationCode::Valid,
+                ValidationCode::EndorsementPolicyFailure,
+                ValidationCode::Valid,
+                ValidationCode::MvccConflict,
+                ValidationCode::DuplicateTxId,
+            ]
+        );
+        assert_eq!(parallel.validation, serial.validation);
+        assert_eq!(parallel.hash(), serial.hash());
+        // Replica states agree too.
+        assert_eq!(
+            peers[0].channel("ch").unwrap().query("ctr"),
+            peers[1].channel("ch").unwrap().query("ctr"),
+        );
+        let snap = parallel_v.snapshot();
+        assert_eq!(snap.mvcc_conflicts, 1);
+        assert_eq!(snap.policy_failures, 1);
+        assert!(snap.prevalidate_nanos > 0);
+    }
+
+    /// Replicas committing the same block through one shared validator pay
+    /// the signature crypto once; later peers hit the verdict cache.
+    #[test]
+    fn shared_validator_caches_across_peers() {
+        let (_ca, peers, _) = setup(3);
+        let envs: Vec<Envelope> = (0..6)
+            .map(|i| endorse_and_wrap(&peers, &proposal("Put", &[&format!("k{i}"), "v"], i)))
+            .collect();
+        let shared = BlockValidator::new(2);
+        let first = peers[0].commit_batch_with(&shared, "ch", envs.clone()).unwrap();
+        let after_first = shared.snapshot();
+        assert_eq!(after_first.cache_misses, 6);
+        assert_eq!(after_first.cache_hits, 0);
+        for p in &peers[1..] {
+            let b = p.commit_batch_with(&shared, "ch", envs.clone()).unwrap();
+            assert_eq!(b.validation, first.validation);
+            assert_eq!(b.hash(), first.hash());
+        }
+        let snap = shared.snapshot();
+        assert_eq!(snap.cache_misses, 6, "crypto ran once");
+        assert_eq!(snap.cache_hits, 12, "two replicas served from cache");
+        assert_eq!(snap.blocks, 3);
+    }
+
+    #[test]
+    fn channel_state_view_reports_versions() {
+        let (_ca, peers, _) = setup(1);
+        let ch = peers[0].channel("ch").unwrap();
+        assert_eq!(StateView::seq(ch.as_ref()), 0);
+        assert_eq!(ch.read_version("k"), None);
+        let prop = proposal("Put", &["k", "v"], 1);
+        let env = endorse_and_wrap(&peers[..1], &prop);
+        // Majority of 1 = 1, so the single endorsement commits.
+        peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert_eq!(ch.read_version("k"), Some(Version { block: 0, tx: 0 }));
+        assert_eq!(StateView::seq(ch.as_ref()), 1);
+        assert!(ch.any_stale(&[("k".to_string(), None)]));
+        assert!(!ch.any_stale(&[("k".to_string(), Some(Version { block: 0, tx: 0 }))]));
+    }
+
     #[test]
     fn dropped_subscriptions_pruned_eagerly() {
         let (_ca, peers, _) = setup(1);
@@ -412,6 +601,7 @@ mod tests {
         peers[0].commit_batch("ch", vec![env]).unwrap();
         let ev = rx.try_recv().unwrap();
         assert_eq!(ev.tx_id, tx_id);
+        assert_eq!(&*ev.channel, "ch");
         assert_eq!(ev.code, ValidationCode::Valid);
     }
 }

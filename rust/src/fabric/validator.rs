@@ -1,0 +1,385 @@
+//! The parallel half of the two-stage block-validation pipeline.
+//!
+//! Fabric's execute–order–validate model permits endorsement-policy and
+//! signature verification to run *before* (and independently of) the serial
+//! MVCC-check + apply step: the verdict for one transaction's signatures
+//! depends on nothing but the envelope bytes and the channel policy. A
+//! [`BlockValidator`] exploits that twice:
+//!
+//! - **Fan-out**: policy verification for a block's transactions is spread
+//!   over a fixed [`ThreadPool`] (`workers > 1`), so a signature-heavy
+//!   block uses every core instead of serializing O(txs × endorsements)
+//!   HMAC checks on the committer thread.
+//! - **Verdict cache**: every replica of a channel validates the *same*
+//!   block payload. Verdicts are cached by (envelope digest, policy
+//!   fingerprint), so N peers validating one block pay the crypto once
+//!   and N−1 cache probes, instead of N× the crypto. The ordering
+//!   service shares one validator across all its peers for precisely
+//!   this reason. The signature-verification *membership registry* is
+//!   not part of the key: peers sharing a validator must verify against
+//!   the same `CertificateAuthority` — true of any channel's replicas,
+//!   which agree on membership by construction — and a verdict is only
+//!   as fresh as the registry (re-enrolling a member mid-flight has
+//!   always invalidated outstanding signatures; cached verdicts age the
+//!   same way).
+//!
+//! The serial stage (duplicate check, MVCC read-version check, state
+//! apply) stays in [`crate::fabric::peer::Peer::commit_batch_with`] under
+//! the chain/state locks; it reports its timing here so both stages export
+//! through one [`ValidationSnapshot`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::crypto::msp::CertificateAuthority;
+use crate::crypto::Digest;
+use crate::ledger::block::ValidationCode;
+use crate::ledger::tx::Envelope;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::endorsement::EndorsementPolicy;
+
+/// Cached verdicts kept before the table is cycled. Each entry is a
+/// 40-byte key + bool; the cap bounds memory at a few MiB while holding
+/// far more blocks than are ever in flight.
+const CACHE_CAP: usize = 1 << 16;
+
+/// Counters for both validation stages (atomics: the pre-validation stage
+/// is inherently multi-threaded and several peers report concurrently).
+#[derive(Debug, Default)]
+struct ValidationStats {
+    blocks: AtomicU64,
+    txs: AtomicU64,
+    prevalidate_nanos: AtomicU64,
+    apply_nanos: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    mvcc_conflicts: AtomicU64,
+    policy_failures: AtomicU64,
+}
+
+/// Point-in-time copy of a validator's counters. Times are cumulative
+/// across every block any peer committed through this validator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ValidationSnapshot {
+    /// Blocks committed (one per peer per block — replicas count).
+    pub blocks: u64,
+    /// Transactions validated across those blocks.
+    pub txs: u64,
+    /// Total wall time in the parallel pre-validation stage.
+    pub prevalidate_nanos: u64,
+    /// Total wall time in the serial MVCC + apply stage.
+    pub apply_nanos: u64,
+    /// Pre-validation verdicts answered from the shared cache.
+    pub cache_hits: u64,
+    /// Verdicts that had to run the signature/policy crypto.
+    pub cache_misses: u64,
+    /// Transactions invalidated by a stale read version at commit.
+    pub mvcc_conflicts: u64,
+    /// Transactions invalidated by the endorsement policy.
+    pub policy_failures: u64,
+}
+
+impl ValidationSnapshot {
+    pub fn prevalidate_s(&self) -> f64 {
+        self.prevalidate_nanos as f64 / 1e9
+    }
+
+    pub fn apply_s(&self) -> f64 {
+        self.apply_nanos as f64 / 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("blocks", self.blocks)
+            .set("txs", self.txs)
+            .set("prevalidate_s", self.prevalidate_s())
+            .set("apply_s", self.apply_s())
+            .set("cache_hits", self.cache_hits)
+            .set("cache_misses", self.cache_misses)
+            .set("mvcc_conflicts", self.mvcc_conflicts)
+            .set("policy_failures", self.policy_failures)
+    }
+}
+
+/// Shared pre-validation engine: a worker pool plus the cross-peer verdict
+/// cache. One instance is typically owned by the ordering service and used
+/// by every peer it delivers blocks to; `Peer::new` also carries a private
+/// serial one so direct `commit_batch` calls keep working unchanged.
+pub struct BlockValidator {
+    workers: usize,
+    pool: Option<ThreadPool>,
+    /// (envelope digest, policy fingerprint) → policy satisfied?
+    cache: Mutex<HashMap<(Digest, u64), bool>>,
+    stats: ValidationStats,
+}
+
+impl BlockValidator {
+    /// A validator fanning pre-validation out over `workers` threads
+    /// (`workers <= 1` verifies inline on the caller's thread; the verdict
+    /// cache is active either way).
+    pub fn new(workers: usize) -> BlockValidator {
+        let workers = workers.max(1);
+        BlockValidator {
+            workers,
+            pool: if workers > 1 { Some(ThreadPool::new(workers)) } else { None },
+            cache: Mutex::new(HashMap::new()),
+            stats: ValidationStats::default(),
+        }
+    }
+
+    /// Inline (single-threaded) validator — the default on a fresh peer.
+    pub fn serial() -> BlockValidator {
+        BlockValidator::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn snapshot(&self) -> ValidationSnapshot {
+        ValidationSnapshot {
+            blocks: self.stats.blocks.load(Ordering::Relaxed),
+            txs: self.stats.txs.load(Ordering::Relaxed),
+            prevalidate_nanos: self.stats.prevalidate_nanos.load(Ordering::Relaxed),
+            apply_nanos: self.stats.apply_nanos.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.stats.cache_misses.load(Ordering::Relaxed),
+            mvcc_conflicts: self.stats.mvcc_conflicts.load(Ordering::Relaxed),
+            policy_failures: self.stats.policy_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stage 1: policy/signature verdict per envelope, in block order.
+    /// Lock-free with respect to chain and state; callers pass the
+    /// envelopes behind an `Arc` so worker threads can borrow them without
+    /// cloning transaction payloads.
+    pub fn prevalidate(
+        &self,
+        policy: &EndorsementPolicy,
+        ca: &CertificateAuthority,
+        envs: &Arc<Vec<Envelope>>,
+    ) -> Vec<bool> {
+        let t0 = Instant::now();
+        let fp = policy.fingerprint();
+        let n = envs.len();
+        let mut ok = vec![false; n];
+        let keys: Vec<Digest> = envs.iter().map(|e| e.digest()).collect();
+        let mut misses: Vec<usize> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            for i in 0..n {
+                match cache.get(&(keys[i], fp)) {
+                    Some(&verdict) => ok[i] = verdict,
+                    None => misses.push(i),
+                }
+            }
+        }
+        self.stats.cache_hits.fetch_add((n - misses.len()) as u64, Ordering::Relaxed);
+        self.stats.cache_misses.fetch_add(misses.len() as u64, Ordering::Relaxed);
+
+        if !misses.is_empty() {
+            let verdicts: Vec<(usize, bool)> = match &self.pool {
+                Some(pool) if misses.len() > 1 => {
+                    // Chunk the misses across the workers; each chunk sends
+                    // its verdicts back over a per-call channel, so
+                    // concurrent prevalidate calls never wait on each
+                    // other's jobs.
+                    let per_chunk = misses.len().div_ceil(self.workers);
+                    let (tx, rx) = mpsc::channel::<Vec<(usize, bool)>>();
+                    let mut jobs = 0usize;
+                    for chunk in misses.chunks(per_chunk) {
+                        let chunk = chunk.to_vec();
+                        let envs = Arc::clone(envs);
+                        let policy = policy.clone();
+                        let ca = ca.clone();
+                        let tx = tx.clone();
+                        jobs += 1;
+                        pool.execute(move || {
+                            let out: Vec<(usize, bool)> = chunk
+                                .into_iter()
+                                .map(|i| {
+                                    let e = &envs[i];
+                                    let sat = policy.satisfied(
+                                        &e.tx_id(),
+                                        &e.rw_set,
+                                        &e.endorsements,
+                                        &ca,
+                                    );
+                                    (i, sat)
+                                })
+                                .collect();
+                            // Release the envelope ref *before* signalling
+                            // completion: the caller reclaims the Vec with
+                            // Arc::try_unwrap once every chunk has reported,
+                            // which must not race this closure's teardown.
+                            drop(envs);
+                            let _ = tx.send(out);
+                        });
+                    }
+                    drop(tx);
+                    let mut all = Vec::with_capacity(misses.len());
+                    for _ in 0..jobs {
+                        all.extend(rx.recv().expect("validation worker dropped its result"));
+                    }
+                    all
+                }
+                _ => misses
+                    .iter()
+                    .map(|&i| {
+                        let e = &envs[i];
+                        (i, policy.satisfied(&e.tx_id(), &e.rw_set, &e.endorsements, ca))
+                    })
+                    .collect(),
+            };
+            let mut cache = self.cache.lock().unwrap();
+            if cache.len() + verdicts.len() > CACHE_CAP {
+                // Crude but bounded: committed blocks never revalidate, so
+                // a cold cache only costs the in-flight replicas one redo.
+                cache.clear();
+            }
+            for &(i, verdict) in &verdicts {
+                ok[i] = verdict;
+                cache.insert((keys[i], fp), verdict);
+            }
+        }
+        self.stats
+            .prevalidate_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        ok
+    }
+
+    /// Stage-2 report from a peer: serial-stage wall time plus the block's
+    /// final validation codes (conflict/failure tallies come from here so
+    /// the snapshot reflects committed outcomes, not pre-verdicts).
+    pub fn note_apply(&self, nanos: u64, codes: &[ValidationCode]) {
+        self.stats.blocks.fetch_add(1, Ordering::Relaxed);
+        self.stats.txs.fetch_add(codes.len() as u64, Ordering::Relaxed);
+        self.stats.apply_nanos.fetch_add(nanos, Ordering::Relaxed);
+        let mvcc = codes.iter().filter(|c| **c == ValidationCode::MvccConflict).count();
+        let pol =
+            codes.iter().filter(|c| **c == ValidationCode::EndorsementPolicyFailure).count();
+        if mvcc > 0 {
+            self.stats.mvcc_conflicts.fetch_add(mvcc as u64, Ordering::Relaxed);
+        }
+        if pol > 0 {
+            self.stats.policy_failures.fetch_add(pol as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::MemberId;
+    use crate::ledger::tx::{endorsement_payload, Endorsement, Proposal, RwSet};
+    use crate::util::prng::Prng;
+
+    fn signed_envelopes(
+        ca: &CertificateAuthority,
+        n: usize,
+        endorsers: usize,
+    ) -> (EndorsementPolicy, Vec<Envelope>) {
+        let mut rng = Prng::new(17);
+        let creds: Vec<_> = (0..endorsers)
+            .map(|i| ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng))
+            .collect();
+        let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
+        let policy = EndorsementPolicy::MajorityOf(members);
+        let envs: Vec<Envelope> = (0..n as u64)
+            .map(|nonce| {
+                let proposal = Proposal {
+                    channel: "ch".into(),
+                    chaincode: "kv".into(),
+                    function: "Put".into(),
+                    args: vec![format!("k{nonce}")],
+                    creator: MemberId::new("client"),
+                    nonce,
+                };
+                let mut env =
+                    Envelope { proposal, rw_set: RwSet::default(), endorsements: vec![] };
+                let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+                for c in &creds {
+                    env.endorsements.push(Endorsement {
+                        endorser: c.member.clone(),
+                        signature: c.sign(&payload),
+                    });
+                }
+                env
+            })
+            .collect();
+        (policy, envs)
+    }
+
+    #[test]
+    fn parallel_verdicts_match_serial() {
+        let ca = CertificateAuthority::new();
+        let (policy, mut envs) = signed_envelopes(&ca, 12, 4);
+        // Corrupt a few: drop endorsements on 3, forge a signature on 7.
+        envs[3].endorsements.truncate(1);
+        envs[7].endorsements[0].signature.0[0] ^= 0xFF;
+        let envs = Arc::new(envs);
+        let serial = BlockValidator::serial();
+        let parallel = BlockValidator::new(4);
+        let a = serial.prevalidate(&policy, &ca, &envs);
+        let b = parallel.prevalidate(&policy, &ca, &envs);
+        assert_eq!(a, b);
+        assert!(a[0] && a[11]);
+        assert!(!a[3] && !a[7]);
+    }
+
+    #[test]
+    fn cache_shares_verdicts_across_replicas() {
+        let ca = CertificateAuthority::new();
+        let (policy, envs) = signed_envelopes(&ca, 8, 3);
+        let envs = Arc::new(envs);
+        let v = BlockValidator::new(2);
+        let first = v.prevalidate(&policy, &ca, &envs);
+        let snap = v.snapshot();
+        assert_eq!(snap.cache_misses, 8);
+        assert_eq!(snap.cache_hits, 0);
+        // Replica 2..N of the same block: all verdicts served from cache.
+        let second = v.prevalidate(&policy, &ca, &envs);
+        assert_eq!(first, second);
+        let snap = v.snapshot();
+        assert_eq!(snap.cache_misses, 8);
+        assert_eq!(snap.cache_hits, 8);
+    }
+
+    #[test]
+    fn policy_change_invalidates_cached_verdicts() {
+        let ca = CertificateAuthority::new();
+        let (policy, envs) = signed_envelopes(&ca, 2, 3);
+        let envs = Arc::new(envs);
+        let v = BlockValidator::serial();
+        assert!(v.prevalidate(&policy, &ca, &envs).iter().all(|&b| b));
+        // A stricter policy (more required signers than exist) must not be
+        // answered from the old policy's cached verdicts.
+        let strict = EndorsementPolicy::AnyOf(5, policy.members().to_vec());
+        assert!(v.prevalidate(&strict, &ca, &envs).iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn note_apply_tallies_outcomes() {
+        let v = BlockValidator::serial();
+        v.note_apply(
+            1_500,
+            &[
+                ValidationCode::Valid,
+                ValidationCode::MvccConflict,
+                ValidationCode::EndorsementPolicyFailure,
+                ValidationCode::MvccConflict,
+            ],
+        );
+        let snap = v.snapshot();
+        assert_eq!(snap.blocks, 1);
+        assert_eq!(snap.txs, 4);
+        assert_eq!(snap.apply_nanos, 1_500);
+        assert_eq!(snap.mvcc_conflicts, 2);
+        assert_eq!(snap.policy_failures, 1);
+        assert!(snap.to_json().get("mvcc_conflicts").is_some());
+    }
+}

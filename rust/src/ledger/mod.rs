@@ -10,5 +10,5 @@ pub mod tx;
 
 pub use block::{Block, BlockHeader, ValidationCode};
 pub use chain::Chain;
-pub use state::{Version, WorldState};
+pub use state::{StateView, Version, WorldState};
 pub use tx::{Endorsement, Envelope, Proposal, ReadSet, RwSet, TxId, WriteSet};

@@ -1,25 +1,91 @@
-//! Versioned world state with MVCC validation (Fabric's commit rule).
+//! Versioned world state with MVCC validation (Fabric's commit rule) and a
+//! cheap read-version API for lock-light staleness checks.
 //!
 //! Every committed write stamps its key with the (block, tx) version; at
 //! commit time a transaction is valid only if every key it *read* during
 //! endorsement still carries the version it observed. This is what lets
 //! endorsement run in parallel ahead of ordering (execute–order–validate).
+//!
+//! Two commit-path refinements hang off this module:
+//!
+//! - **Write sequence** ([`WorldState::seq`]): a monotone counter bumped on
+//!   every [`WorldState::apply`]. Readers that cached a verdict at sequence
+//!   `s` know the verdict still holds while `seq() == s` — no key-by-key
+//!   re-check needed. The mempool's pull-time staleness re-check keys off
+//!   this, so an idle channel costs one integer compare per pulled tx.
+//! - **[`StateView`]**: the read-only version oracle
+//!   (`read_version`/`seq`) a [`crate::fabric::peer::PeerChannel`] exposes
+//!   to the mempool for admission-side MVCC hinting. Versions only ever
+//!   move forward, so a read-set observed stale through a `StateView` is
+//!   *guaranteed* to fail MVCC at commit — dropping it early sheds load
+//!   without changing any outcome.
+//!
+//! The commit-time validator itself ([`crate::fabric::peer`]) holds the
+//! state write lock only for the serial MVCC-check + apply stage;
+//! signature/policy verification runs before it, lock-free.
 
 use std::collections::HashMap;
 
 use crate::ledger::tx::RwSet;
 
 /// Key version: the (block, tx-in-block) coordinates of the last write.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Ordered lexicographically — a later write always compares greater, and
+/// no version ever recurs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Version {
     pub block: u64,
     pub tx: u32,
+}
+
+/// Read-only version oracle over a channel's committed state.
+///
+/// Implemented by `PeerChannel` (behind its state lock's read half) and
+/// consumed by the mempool: admission rejects transactions whose read-set
+/// is already stale, and batch pulls drop transactions that went stale
+/// while queued — both before the orderer spends consensus bandwidth on a
+/// doomed `MvccConflict`.
+///
+/// The view need not be perfectly current: [`StateView::any_stale`] only
+/// flags reads that are *provably* overtaken (a strictly newer version
+/// exists, which can never be un-written), so a replica lagging the
+/// endorser degrades to fewer hints — never to rejecting a transaction
+/// that could still commit `Valid`.
+pub trait StateView: Send + Sync {
+    /// Current version of `key` (None if absent).
+    fn read_version(&self, key: &str) -> Option<Version>;
+
+    /// Monotone write sequence: unchanged sequence ⇒ unchanged versions.
+    fn seq(&self) -> u64;
+
+    /// Does any read in `reads` observe a version this view has already
+    /// seen overtaken? Conservative in the presence of lag: only verdicts
+    /// that hold at every later state count as stale.
+    fn any_stale(&self, reads: &[(String, Option<Version>)]) -> bool {
+        reads.iter().any(|(key, observed)| {
+            match (observed, self.read_version(key)) {
+                // A strictly newer write exists. Versions are unique and
+                // monotone, so `observed` can never match again: the
+                // commit-time MVCC check must fail.
+                (Some(v), Some(current)) => current > *v,
+                // Read-as-absent but the key now exists: doomed unless an
+                // intervening delete restores absence before commit; the
+                // workload's chaincodes never delete contended keys, so
+                // treat it as stale.
+                (None, Some(_)) => true,
+                // Key absent in this view (deleted, or the view simply
+                // lags the key's creation): nothing provable — keep it.
+                (_, None) => false,
+            }
+        })
+    }
 }
 
 /// The channel's current key-value state.
 #[derive(Clone, Debug, Default)]
 pub struct WorldState {
     map: HashMap<String, (Vec<u8>, Version)>,
+    /// Bumped on every `apply`; see the module docs.
+    seq: u64,
 }
 
 impl WorldState {
@@ -36,15 +102,28 @@ impl WorldState {
         self.map.get(key).map(|(v, _)| v.as_slice())
     }
 
-    /// Range scan over keys with the given prefix (sorted by key).
-    pub fn scan_prefix(&self, prefix: &str) -> Vec<(String, Vec<u8>)> {
-        let mut out: Vec<(String, Vec<u8>)> = self
+    /// Version of a key without touching the value (None if absent).
+    pub fn read_version(&self, key: &str) -> Option<Version> {
+        self.map.get(key).map(|(_, ver)| *ver)
+    }
+
+    /// Monotone write sequence: bumped once per [`WorldState::apply`].
+    /// Equal sequences ⇒ identical versions for every key.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Range scan over keys with the given prefix (sorted by key). Returns
+    /// borrowed entries — callers that need ownership clone at their own
+    /// boundary instead of this method cloning every value eagerly.
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(&str, &[u8])> {
+        let mut out: Vec<(&str, &[u8])> = self
             .map
             .iter()
             .filter(|(k, _)| k.starts_with(prefix))
-            .map(|(k, (v, _))| (k.clone(), v.clone()))
+            .map(|(k, (v, _))| (k.as_str(), v.as_slice()))
             .collect();
-        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out.sort_by(|a, b| a.0.cmp(b.0));
         out
     }
 
@@ -68,6 +147,7 @@ impl WorldState {
                 }
             }
         }
+        self.seq += 1;
     }
 
     pub fn len(&self) -> usize {
@@ -76,6 +156,16 @@ impl WorldState {
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+}
+
+impl StateView for WorldState {
+    fn read_version(&self, key: &str) -> Option<Version> {
+        WorldState::read_version(self, key)
+    }
+
+    fn seq(&self) -> u64 {
+        WorldState::seq(self)
     }
 }
 
@@ -95,6 +185,8 @@ mod tests {
         assert_eq!(s.get("k"), Some((b"v1".as_slice(), Version { block: 1, tx: 0 })));
         s.apply(&w("k", b"v2"), Version { block: 2, tx: 3 });
         assert_eq!(s.get("k").unwrap().1, Version { block: 2, tx: 3 });
+        assert_eq!(s.read_version("k"), Some(Version { block: 2, tx: 3 }));
+        assert_eq!(s.read_version("absent"), None);
     }
 
     #[test]
@@ -106,6 +198,43 @@ mod tests {
             Version { block: 2, tx: 0 },
         );
         assert_eq!(s.get("k"), None);
+    }
+
+    #[test]
+    fn seq_bumps_on_every_apply() {
+        let mut s = WorldState::new();
+        assert_eq!(s.seq(), 0);
+        s.apply(&w("a", b"1"), Version { block: 1, tx: 0 });
+        s.apply(&w("b", b"2"), Version { block: 1, tx: 1 });
+        assert_eq!(s.seq(), 2);
+        // Even an empty write set marks the state as touched (a block with
+        // only deletes of absent keys still advances).
+        s.apply(&RwSet::default(), Version { block: 2, tx: 0 });
+        assert_eq!(s.seq(), 3);
+    }
+
+    #[test]
+    fn state_view_detects_stale_reads() {
+        let mut s = WorldState::new();
+        s.apply(&w("k", b"v1"), Version { block: 1, tx: 0 });
+        let fresh = [("k".to_string(), Some(Version { block: 1, tx: 0 }))];
+        let absent_ok = [("nope".to_string(), None)];
+        assert!(!StateView::any_stale(&s, &fresh));
+        assert!(!StateView::any_stale(&s, &absent_ok));
+        s.apply(&w("k", b"v2"), Version { block: 2, tx: 0 });
+        assert!(StateView::any_stale(&s, &fresh));
+        // A read-of-absent goes stale once the key exists.
+        let phantom = [("k2".to_string(), None)];
+        assert!(!StateView::any_stale(&s, &phantom));
+        s.apply(&w("k2", b"x"), Version { block: 3, tx: 0 });
+        assert!(StateView::any_stale(&s, &phantom));
+        // Lag tolerance: an observation *newer* than this view (endorsed
+        // on a replica that is ahead) is not provably stale — and neither
+        // is a read of a key this view has never seen.
+        let ahead = [("k".to_string(), Some(Version { block: 9, tx: 0 }))];
+        assert!(!StateView::any_stale(&s, &ahead));
+        let unseen = [("future-key".to_string(), Some(Version { block: 9, tx: 0 }))];
+        assert!(!StateView::any_stale(&s, &unseen));
     }
 
     #[test]
@@ -136,16 +265,23 @@ mod tests {
     }
 
     #[test]
-    fn scan_prefix_sorted() {
+    fn scan_prefix_sorted_and_borrowed() {
         let mut s = WorldState::new();
-        for k in ["models/r1/c2", "models/r1/c1", "global/r1"] {
-            s.apply(&w(k, b"x"), Version { block: 1, tx: 0 });
+        // Inserted out of order; the scan must come back key-sorted (the
+        // deterministic iteration order chaincodes rely on).
+        for k in ["models/r1/c2", "models/r1/c1", "global/r1", "models/r1/c0"] {
+            s.apply(&w(k, k.as_bytes()), Version { block: 1, tx: 0 });
         }
         let hits = s.scan_prefix("models/r1/");
         assert_eq!(
-            hits.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
-            vec!["models/r1/c1", "models/r1/c2"]
+            hits.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            vec!["models/r1/c0", "models/r1/c1", "models/r1/c2"]
         );
+        // Values are borrowed straight from the map — no eager clone.
+        for (k, v) in &hits {
+            assert_eq!(*v, k.as_bytes());
+        }
+        assert!(s.scan_prefix("zzz").is_empty());
     }
 
     #[test]

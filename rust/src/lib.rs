@@ -24,6 +24,19 @@
 //! overlap and thousands of transactions ride in flight without a thread
 //! each.
 //!
+//! **Commit path** (`fabric::validator` + `fabric::peer`): block
+//! validation is a two-stage pipeline — parallel endorsement-policy /
+//! signature pre-validation (worker pool sized by
+//! `OrdererConfig::validation_workers`, with a verdict cache shared
+//! across peer replicas of the same block) followed by the serial MVCC
+//! read-version check + apply under the state write lock. The mempool is
+//! wired to a replica's `ledger::StateView`, so transactions whose
+//! read-set is already stale shed at admission (`Reject::StaleReadSet`)
+//! or at batch pull instead of costing consensus bandwidth; per-stage
+//! timings and conflict tallies export via
+//! `fabric::ValidationSnapshot` and the caliper `Report`'s
+//! `mvcc_conflicts`/`stale_dropped` columns.
+//!
 //! Model compute (training, endorsement-time evaluation, FedAvg aggregation,
 //! defence distance matrices) executes AOT-compiled HLO artifacts produced by
 //! the Python build step (`make artifacts`) via the PJRT CPU client — Python

@@ -20,6 +20,11 @@ pub enum Reject {
     /// The endorsements can never satisfy the channel's policy, so ordering
     /// the envelope would only waste a validation slot.
     PolicyUnsatisfiable,
+    /// MVCC hint: a read-set version is already stale against committed
+    /// state. Versions only move forward, so the transaction is guaranteed
+    /// `MvccConflict` at commit — the client should re-endorse instead of
+    /// burning consensus bandwidth.
+    StaleReadSet,
     /// The ordering service is shutting down.
     Shutdown,
 }
@@ -32,6 +37,7 @@ impl fmt::Display for Reject {
             Reject::Duplicate => "duplicate transaction (replay)",
             Reject::BadSignature => "endorsement signature invalid",
             Reject::PolicyUnsatisfiable => "endorsement policy unsatisfiable",
+            Reject::StaleReadSet => "read-set already stale (re-endorse)",
             Reject::Shutdown => "ordering service stopped",
         };
         f.write_str(s)

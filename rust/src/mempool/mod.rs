@@ -18,6 +18,13 @@
 //!    size-and-byte-bounded batches ([`ShardMempool::take_batch`]) instead
 //!    of owning batching state, so batch cutting, consensus, and
 //!    validation overlap.
+//! 4. **MVCC staleness hinting** ([`ShardMempool::set_state_view`]): with
+//!    a replica's read-version oracle wired in, transactions whose
+//!    read-set is already stale are rejected at admission
+//!    ([`Reject::StaleReadSet`]) and transactions that go stale while
+//!    queued are dropped at batch pull (`stale_dropped`) — versions only
+//!    move forward, so both are `MvccConflict`s shed before consensus
+//!    spends bandwidth on them.
 //!
 //! One [`ShardMempool`] serves one channel (shard chains + the mainchain);
 //! a [`MempoolRegistry`] routes by channel and aggregates counters.

@@ -6,6 +6,16 @@
 //! driver pulls size-and-byte-bounded batches with [`ShardMempool::take_batch`].
 //! The pool owns all batching state, so batch cutting, consensus, and
 //! validation pipeline against each other.
+//!
+//! **MVCC hinting**: when a channel's pool is wired to a replica's
+//! [`StateView`] (the ordering service does this for every channel its
+//! peers joined), transactions whose read-set is already stale are
+//! rejected at admission ([`Reject::StaleReadSet`]), and transactions that
+//! went stale *while queued* are dropped at batch pull — both before the
+//! orderer spends consensus bandwidth on a guaranteed `MvccConflict`.
+//! Versions only move forward, so neither shed changes any commit outcome;
+//! the pull-time re-check is gated on the state's write sequence, so an
+//! idle channel costs one integer compare per pulled transaction.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Mutex, RwLock};
@@ -15,6 +25,7 @@ use crate::crypto::msp::CertificateAuthority;
 use crate::fabric::endorsement::EndorsementPolicy;
 use crate::fabric::wire;
 use crate::ledger::codec::Writer;
+use crate::ledger::state::StateView;
 use crate::ledger::tx::{Envelope, Proposal, TxId};
 use crate::util::clock::{Clock, SystemClock};
 
@@ -102,6 +113,10 @@ struct Entry {
     tx_id: TxId,
     bytes: usize,
     enqueued: f64,
+    /// State write sequence at which this entry's read-set was last known
+    /// fresh. Batch pulls skip the key-by-key re-check while the state's
+    /// current sequence still matches.
+    checked_seq: u64,
 }
 
 struct Inner {
@@ -127,6 +142,8 @@ pub struct ShardMempool {
     clock: Arc<dyn Clock>,
     ca: Option<CertificateAuthority>,
     policy: RwLock<Option<EndorsementPolicy>>,
+    /// Read-version oracle for MVCC hinting (None = hinting off).
+    state_view: RwLock<Option<Arc<dyn StateView>>>,
     inner: Mutex<Inner>,
     stats: MempoolStats,
 }
@@ -148,6 +165,7 @@ impl ShardMempool {
             clock,
             ca,
             policy: RwLock::new(None),
+            state_view: RwLock::new(None),
             inner: Mutex::new(Inner {
                 lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
                 seen: HashSet::new(),
@@ -165,6 +183,21 @@ impl ShardMempool {
         *self.policy.write().unwrap() = Some(policy);
     }
 
+    /// Wire the channel's read-version oracle (usually one replica's
+    /// `PeerChannel`) to enable MVCC staleness hinting at admission and
+    /// batch pull. The view does not have to be the most current replica:
+    /// `StateView::any_stale` only flags observations this view has seen
+    /// strictly overtaken, so a lagging view yields fewer hints, never
+    /// false rejections.
+    pub fn set_state_view(&self, view: Arc<dyn StateView>) {
+        *self.state_view.write().unwrap() = Some(view);
+    }
+
+    /// Is MVCC hinting active on this pool?
+    pub fn has_state_view(&self) -> bool {
+        self.state_view.read().unwrap().is_some()
+    }
+
     pub fn stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
     }
@@ -178,15 +211,32 @@ impl ShardMempool {
     /// Admission control + enqueue. Every `Err` is explicit backpressure
     /// the caller can act on (retry later, slow down, drop).
     ///
-    /// Check order is cheapest-first so overload floods shed without
-    /// wasting work: replay dedup, lane capacity, rate cap (tokens are only
-    /// debited once the envelope would otherwise fit), then the HMAC
-    /// signature/policy precheck, and only then wire-encoding for the byte
-    /// accounting.
+    /// The MVCC staleness hint runs first, *outside* the pool lock (it
+    /// probes the channel state's read lock, and holding `inner` across
+    /// that would serialize admission and batch pulls behind a concurrent
+    /// block apply). The remaining checks are cheapest-first so overload
+    /// floods shed without wasting work: replay dedup, lane capacity,
+    /// rate cap (tokens are only debited once the envelope would
+    /// otherwise fit), then the HMAC signature/policy precheck, and only
+    /// then wire-encoding for the byte accounting.
     pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
         let now = self.clock.now();
         let tx_id = env.tx_id();
         let lane = Lane::classify(&env.proposal);
+
+        // Racing a commit here is fine: the verdict is only a hint, and
+        // the batch pull re-checks under the entry's recorded sequence.
+        let mut checked_seq = 0u64;
+        if !env.rw_set.reads.is_empty() {
+            let view = self.state_view.read().unwrap().clone();
+            if let Some(view) = view {
+                checked_seq = view.seq();
+                if view.any_stale(&env.rw_set.reads) {
+                    self.stats.note_reject(Reject::StaleReadSet);
+                    return Err(Reject::StaleReadSet);
+                }
+            }
+        }
 
         let mut inner = self.inner.lock().unwrap();
         if !inner.open {
@@ -252,7 +302,8 @@ impl ShardMempool {
                 inner.seen.remove(&old);
             }
         }
-        inner.lanes[lane.index()].push_back(Entry { env, tx_id, bytes, enqueued: now });
+        inner.lanes[lane.index()]
+            .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
         let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
         self.stats.note_admitted(depth as u64);
         Ok(())
@@ -284,19 +335,46 @@ impl ShardMempool {
     /// order, bounded by `max_txs` and `max_bytes` (`max_bytes == 0` means
     /// unbounded). A lone envelope larger than `max_bytes` still ships
     /// (blocks never starve on the byte bound alone).
+    ///
+    /// With a state view wired, entries whose read-set went stale while
+    /// queued are dropped here (counted as `stale_dropped`) instead of
+    /// being handed to consensus; the per-entry re-check only runs when
+    /// the state's write sequence moved past the entry's `checked_seq`.
+    ///
+    /// A pull-time drop has no commit event: a client holding a
+    /// `SubmitHandle` on a dropped tx learns through its timeout (the tx
+    /// was doomed to `MvccConflict` either way — the failure is the same,
+    /// only slower to surface). The dropped id is forgotten by dedup
+    /// immediately, so re-endorsing and resubmitting works at once;
+    /// contended read-modify-write workloads should pair hinting with
+    /// modest client timeouts.
     pub fn take_batch(&self, max_txs: usize, max_bytes: usize) -> Vec<Envelope> {
         let now = self.clock.now();
+        let view = self.state_view.read().unwrap().clone();
+        let cur_seq = view.as_ref().map(|v| v.seq()).unwrap_or(0);
         let mut inner = self.inner.lock().unwrap();
         self.evict_expired(&mut inner, now);
         let mut out = Vec::new();
         let mut bytes = 0usize;
+        let mut stale: Vec<TxId> = Vec::new();
         'lanes: for lane in inner.lanes.iter_mut() {
             while out.len() < max_txs.max(1) {
-                let front_bytes = match lane.front() {
-                    Some(e) => e.bytes,
+                let front = match lane.front() {
+                    Some(e) => e,
                     None => break,
                 };
-                if !out.is_empty() && max_bytes > 0 && bytes + front_bytes > max_bytes {
+                if let Some(view) = &view {
+                    if front.checked_seq != cur_seq
+                        && !front.env.rw_set.reads.is_empty()
+                        && view.any_stale(&front.env.rw_set.reads)
+                    {
+                        let e = lane.pop_front().expect("front checked");
+                        self.stats.note_stale_dropped();
+                        stale.push(e.tx_id);
+                        continue;
+                    }
+                }
+                if !out.is_empty() && max_bytes > 0 && bytes + front.bytes > max_bytes {
                     break 'lanes;
                 }
                 let e = lane.pop_front().expect("front checked");
@@ -306,6 +384,12 @@ impl ShardMempool {
             if out.len() >= max_txs.max(1) {
                 break;
             }
+        }
+        // A stale-dropped envelope was never ordered: forget it in the
+        // dedup set so the client's re-endorsed retry (same tx id, fresh
+        // read-set) is admitted instead of bounced as a replay.
+        for tx_id in stale {
+            inner.seen.remove(&tx_id);
         }
         if !out.is_empty() {
             self.stats.note_ordered(out.len() as u64, bytes as u64);
@@ -328,7 +412,10 @@ impl ShardMempool {
             let tx_id = env.tx_id();
             let bytes = encoded_len(&env);
             total_bytes += bytes as u64;
-            inner.lanes[lane.index()].push_front(Entry { env, tx_id, bytes, enqueued: now });
+            // checked_seq 0 forces a fresh staleness check on the next
+            // pull: versions may have moved while the batch was out.
+            inner.lanes[lane.index()]
+                .push_front(Entry { env, tx_id, bytes, enqueued: now, checked_seq: 0 });
         }
         self.stats.note_restored(n, total_bytes);
     }
@@ -422,6 +509,12 @@ impl MempoolRegistry {
     /// Install the admission policy for a channel's pool.
     pub fn set_policy(&self, channel: &str, policy: EndorsementPolicy) {
         self.pool(channel).set_policy(policy);
+    }
+
+    /// Wire a channel's read-version oracle for MVCC staleness hinting
+    /// (creating the pool if needed).
+    pub fn set_state_view(&self, channel: &str, view: Arc<dyn StateView>) {
+        self.pool(channel).set_state_view(view);
     }
 
     /// Route an envelope to its channel's pool.
@@ -697,6 +790,128 @@ mod tests {
         assert_eq!(pool.submit(env), Err(Reject::PolicyUnsatisfiable));
         assert_eq!(pool.stats().policy_unsatisfiable, 2);
         assert_eq!(pool.stats().admitted, 1);
+    }
+
+    /// A peer whose channel doubles as the pool's state view, plus direct
+    /// commit access so tests can advance versions deterministically.
+    fn staleness_fixture() -> (Arc<crate::fabric::Peer>, Arc<crate::fabric::PeerChannel>) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(21);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let peer = crate::fabric::Peer::new(cred, ca);
+        // Zero-of-zero policy: commit validity hinges on MVCC alone.
+        let ch = peer.join_channel("ch", EndorsementPolicy::AnyOf(0, vec![]));
+        (peer, ch)
+    }
+
+    /// A tx that read `ctr` as absent and writes it — the classic
+    /// read-modify-write contention shape.
+    fn contended_env(nonce: u64) -> Envelope {
+        Envelope {
+            proposal: Proposal {
+                channel: "ch".into(),
+                chaincode: "kv".into(),
+                function: "Put".into(),
+                args: vec!["ctr".into()],
+                creator: MemberId::new("client"),
+                nonce,
+            },
+            rw_set: RwSet {
+                reads: vec![("ctr".into(), None)],
+                writes: vec![("ctr".into(), Some(nonce.to_le_bytes().to_vec()))],
+            },
+            endorsements: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn stale_read_set_rejected_at_admission() {
+        let (peer, ch) = staleness_fixture();
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        pool.set_state_view(Arc::clone(&ch) as Arc<dyn StateView>);
+        assert!(pool.has_state_view());
+        // Fresh read-set: admitted.
+        pool.submit(contended_env(1)).unwrap();
+        // Another tx commits a write to the contended key...
+        let batch = pool.take_batch(10, 0);
+        peer.commit_batch("ch", batch).unwrap();
+        // ...so the same observation is now provably stale at admission.
+        assert_eq!(pool.submit(contended_env(2)), Err(Reject::StaleReadSet));
+        let snap = pool.stats();
+        assert_eq!(snap.stale_read_set, 1);
+        assert_eq!(snap.rejected_total(), 1);
+        assert_eq!(pool.pending(), 0);
+        // A re-endorsed retry observing the committed version is admitted.
+        let mut fresh = contended_env(2);
+        fresh.rw_set.reads =
+            vec![("ctr".into(), ch.read_version("ctr"))];
+        pool.submit(fresh).unwrap();
+    }
+
+    #[test]
+    fn queued_tx_dropped_at_pull_when_read_overwritten() {
+        let (peer, ch) = staleness_fixture();
+        let pool = ShardMempool::new("ch", MempoolConfig::default());
+        pool.set_state_view(Arc::clone(&ch) as Arc<dyn StateView>);
+        // Three contending txs admitted against the same (absent) version.
+        for nonce in 1..=3 {
+            pool.submit(contended_env(nonce)).unwrap();
+        }
+        // The first ships and commits, bumping the key's version.
+        let batch = pool.take_batch(1, 0);
+        assert_eq!(batch.len(), 1);
+        peer.commit_batch("ch", batch).unwrap();
+        // The queued rest went stale in place: dropped at pull, never
+        // ordered, and forgotten by dedup so re-endorsed retries pass.
+        assert_eq!(pool.take_batch(10, 0).len(), 0);
+        let snap = pool.stats();
+        assert_eq!(snap.stale_dropped, 2);
+        assert_eq!(snap.stale_shed(), 2);
+        assert_eq!(pool.pending(), 0);
+        let mut retry = contended_env(2);
+        retry.rw_set.reads = vec![("ctr".into(), ch.read_version("ctr"))];
+        pool.submit(retry).unwrap();
+        assert_eq!(pool.stats().duplicate, 0);
+    }
+
+    /// The acceptance scenario: contended keys through the hinted pool
+    /// shed stale txs before ordering, cutting commit-time MvccConflicts
+    /// versus the pre-refactor (no state view) path.
+    #[test]
+    fn hinting_reduces_commit_mvcc_conflicts() {
+        use crate::ledger::block::ValidationCode;
+        let count_conflicts = |with_view: bool| -> (u64, u64) {
+            let (peer, ch) = staleness_fixture();
+            let pool = ShardMempool::new("ch", MempoolConfig::default());
+            if with_view {
+                pool.set_state_view(Arc::clone(&ch) as Arc<dyn StateView>);
+            }
+            for nonce in 0..6 {
+                pool.submit(contended_env(nonce)).unwrap();
+            }
+            let mut conflicts = 0u64;
+            loop {
+                let batch = pool.take_batch(1, 0);
+                if batch.is_empty() {
+                    break;
+                }
+                let block = peer.commit_batch("ch", batch).unwrap();
+                conflicts += block
+                    .validation
+                    .iter()
+                    .filter(|c| **c == ValidationCode::MvccConflict)
+                    .count() as u64;
+            }
+            (conflicts, pool.stats().stale_dropped)
+        };
+        let (old_conflicts, old_dropped) = count_conflicts(false);
+        let (new_conflicts, new_dropped) = count_conflicts(true);
+        // Pre-refactor: every loser is ordered and invalidated at commit.
+        assert_eq!(old_conflicts, 5);
+        assert_eq!(old_dropped, 0);
+        // Hinted: the losers are shed before consensus ever sees them.
+        assert_eq!(new_conflicts, 0);
+        assert_eq!(new_dropped, 5);
     }
 
     #[test]

@@ -16,6 +16,8 @@ pub struct MempoolStats {
     duplicate: AtomicU64,
     bad_signature: AtomicU64,
     policy_unsatisfiable: AtomicU64,
+    stale_read_set: AtomicU64,
+    stale_dropped: AtomicU64,
     expired: AtomicU64,
     batches_cut: AtomicU64,
     txs_ordered: AtomicU64,
@@ -36,6 +38,7 @@ impl MempoolStats {
             Reject::Duplicate => &self.duplicate,
             Reject::BadSignature => &self.bad_signature,
             Reject::PolicyUnsatisfiable => &self.policy_unsatisfiable,
+            Reject::StaleReadSet => &self.stale_read_set,
             // Shutdown races are not a workload signal; don't count them.
             Reject::Shutdown => return,
         };
@@ -44,6 +47,13 @@ impl MempoolStats {
 
     pub fn note_expired(&self) {
         self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A queued transaction went stale between admission and batch pull
+    /// and was shed before consensus saw it (a guaranteed `MvccConflict`
+    /// avoided).
+    pub fn note_stale_dropped(&self) {
+        self.stale_dropped.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn note_ordered(&self, txs: u64, bytes: u64) {
@@ -68,6 +78,8 @@ impl MempoolStats {
             duplicate: self.duplicate.load(Ordering::Relaxed),
             bad_signature: self.bad_signature.load(Ordering::Relaxed),
             policy_unsatisfiable: self.policy_unsatisfiable.load(Ordering::Relaxed),
+            stale_read_set: self.stale_read_set.load(Ordering::Relaxed),
+            stale_dropped: self.stale_dropped.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             batches_cut: self.batches_cut.load(Ordering::Relaxed),
             txs_ordered: self.txs_ordered.load(Ordering::Relaxed),
@@ -86,6 +98,10 @@ pub struct StatsSnapshot {
     pub duplicate: u64,
     pub bad_signature: u64,
     pub policy_unsatisfiable: u64,
+    /// Rejected at admission because the read-set was already stale.
+    pub stale_read_set: u64,
+    /// Dropped at batch pull after going stale while queued.
+    pub stale_dropped: u64,
     pub expired: u64,
     pub batches_cut: u64,
     pub txs_ordered: u64,
@@ -107,6 +123,14 @@ impl StatsSnapshot {
             + self.duplicate
             + self.bad_signature
             + self.policy_unsatisfiable
+            + self.stale_read_set
+    }
+
+    /// Transactions shed by MVCC hinting before ordering (admission
+    /// rejects + pull-time drops): each one is an `MvccConflict` that
+    /// never reached consensus.
+    pub fn stale_shed(&self) -> u64 {
+        self.stale_read_set + self.stale_dropped
     }
 
     /// Accumulate another pool's counters (high-water keeps the max).
@@ -117,6 +141,8 @@ impl StatsSnapshot {
         self.duplicate += other.duplicate;
         self.bad_signature += other.bad_signature;
         self.policy_unsatisfiable += other.policy_unsatisfiable;
+        self.stale_read_set += other.stale_read_set;
+        self.stale_dropped += other.stale_dropped;
         self.expired += other.expired;
         self.batches_cut += other.batches_cut;
         self.txs_ordered += other.txs_ordered;
@@ -132,6 +158,8 @@ impl StatsSnapshot {
             .set("rejected_duplicate", self.duplicate)
             .set("rejected_bad_signature", self.bad_signature)
             .set("rejected_policy", self.policy_unsatisfiable)
+            .set("rejected_stale_read_set", self.stale_read_set)
+            .set("stale_dropped", self.stale_dropped)
             .set("expired_ttl", self.expired)
             .set("batches_cut", self.batches_cut)
             .set("txs_ordered", self.txs_ordered)
@@ -153,13 +181,16 @@ mod tests {
         s.note_reject(Reject::PoolFull);
         s.note_reject(Reject::RateLimited);
         s.note_reject(Reject::Duplicate);
+        s.note_reject(Reject::StaleReadSet);
         s.note_reject(Reject::Shutdown); // not counted
         s.note_expired();
+        s.note_stale_dropped();
         s.note_ordered(10, 1000);
         let snap = s.snapshot();
         assert_eq!(snap.admitted, 3);
         assert_eq!(snap.shed(), 2);
-        assert_eq!(snap.rejected_total(), 3);
+        assert_eq!(snap.rejected_total(), 4);
+        assert_eq!(snap.stale_shed(), 2);
         assert_eq!(snap.depth_high_water, 7);
         assert_eq!(snap.txs_ordered, 10);
         assert_eq!(snap.expired, 1);

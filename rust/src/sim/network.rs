@@ -286,6 +286,12 @@ impl ScaleSfl {
             OrdererConfig {
                 batch_size: 16,
                 batch_timeout: Duration::from_millis(20),
+                // Shard committees are signature-heavy (majority of every
+                // shard peer endorses each update): run the two-stage
+                // commit pipeline with a small worker pool. The orderer
+                // also wires each channel's mempool to a replica's state
+                // view, so stale model updates shed at admission.
+                validation_workers: 2,
                 ..Default::default()
             },
             all_peers.clone(),
