@@ -1,11 +1,23 @@
 # ScaleSFL build/verify entry points.
 #
-#   make check     - formatting + lints + tier-1 verify (CI gate)
-#   make verify    - tier-1: release build + tests
-#   make bench     - perf baselines (writes BENCH_mempool.json,
-#                    BENCH_gateway.json, BENCH_validation.json)
+#   make ci             - the full CI gate (identical to what
+#                         .github/workflows/ci.yml runs): fmt + clippy +
+#                         build (examples/benches/docs) + tests + the
+#                         bench smoke gate (bench_check vs bench-baselines/)
+#   make check          - formatting + lints + tier-1 verify
+#   make verify         - tier-1: release build + tests
+#   make bench          - full perf baselines (writes BENCH_mempool.json,
+#                         BENCH_gateway.json, BENCH_validation.json,
+#                         BENCH_relay.json)
+#   make bench-smoke    - fast deterministic bench runs (seconds, fixed
+#                         seeds) into target/smoke/
+#   make bench-baseline - refresh the committed CI baselines in
+#                         bench-baselines/ from a fresh smoke run
 
-.PHONY: check fmt clippy verify bench
+.PHONY: ci check fmt clippy verify bench bench-smoke bench-baseline
+
+ci:
+	./ci.sh
 
 check: fmt clippy verify
 
@@ -23,3 +35,20 @@ bench:
 	cargo bench --bench mempool
 	cargo bench --bench gateway_pipeline
 	cargo bench --bench validation
+	cargo bench --bench relay
+
+bench-smoke:
+	rm -rf target/smoke
+	cargo bench --bench mempool -- --smoke
+	cargo bench --bench gateway_pipeline -- --smoke
+	cargo bench --bench validation -- --smoke
+	cargo bench --bench relay -- --smoke
+
+bench-baseline: bench-smoke
+	mkdir -p bench-baselines
+	cp target/smoke/BENCH_*.json bench-baselines/
+	@echo "refreshed bench-baselines/ from raw measurements."
+	@echo "IMPORTANT: re-pad the headline values before committing —"
+	@echo "the gate trips at 20% past the committed headline, so leave"
+	@echo "deliberate headroom above your machine's numbers"
+	@echo "(see bench-baselines/README.md), then review and commit."

@@ -1,5 +1,7 @@
 #!/usr/bin/env sh
-# CI gate: formatting, lints (warnings are errors), tier-1 verify.
+# CI gate: formatting, lints (warnings are errors), tier-1 verify, and the
+# bench smoke regression gate. `make ci` and .github/workflows/ci.yml both
+# run exactly this script, so local and hosted CI cannot drift.
 set -eu
 
 echo "==> cargo fmt --check"
@@ -21,5 +23,21 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "==> cargo test -q"
 cargo test -q
+
+# Bench smoke gate: each perf bench runs a fast deterministic --smoke
+# configuration (seconds, fixed seeds) into target/smoke/, then
+# bench_check fails the build if a headline metric regressed >20% against
+# the committed bench-baselines/ or the JSON schema drifted.
+echo "==> bench smoke runs (mempool, gateway_pipeline, validation, relay)"
+# Stale outputs (e.g. restored from a CI target/ cache, or left by a
+# removed bench) must not reach bench_check.
+rm -rf target/smoke
+cargo bench --bench mempool -- --smoke
+cargo bench --bench gateway_pipeline -- --smoke
+cargo bench --bench validation -- --smoke
+cargo bench --bench relay -- --smoke
+
+echo "==> bench_check bench-baselines target/smoke"
+cargo run --quiet --release --bin bench_check -- bench-baselines target/smoke
 
 echo "CI OK"

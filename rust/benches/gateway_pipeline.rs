@@ -7,9 +7,10 @@
 //! trajectory to `BENCH_gateway.json` (shed/reject counts reported, never
 //! dropped) so the concurrency win is tracked across PRs — the depth-64
 //! open loop is expected to clear 3x the closed-loop baseline on the same
-//! topology.
+//! topology. `--smoke` runs a shorter deterministic workload and writes
+//! `target/smoke/BENCH_gateway.json` for the CI bench gate.
 //!
-//!     cargo bench --bench gateway_pipeline    (or `make bench`)
+//!     cargo bench --bench gateway_pipeline [-- --smoke]    (or `make bench`)
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -122,8 +123,12 @@ fn open_loop(txs: usize, depth: usize) -> Json {
 }
 
 fn main() {
-    println!("# gateway pipeline bench — closed-loop vs open-loop submission\n");
-    let txs = 120;
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let txs = if smoke { 48 } else { 120 };
+    println!(
+        "# gateway pipeline bench{} — closed-loop vs open-loop submission\n",
+        if smoke { " (smoke)" } else { "" }
+    );
     let closed = closed_loop(txs);
     let depths = [1usize, 8, 64];
     let mut open = Vec::new();
@@ -139,12 +144,30 @@ fn main() {
         "\nverdict: depth-64 open loop at {speedup:.1}x the closed-loop baseline (expect >= 3x)"
     );
 
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "speedup_depth64_vs_closed")
+            .set("value", speedup)
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "closed_loop_committed_tps")
+            .set("value", closed_tps)
+            .set("higher_is_better", true),
+    ]);
     let out = Json::obj()
         .set("bench", "gateway_pipeline")
+        .set("mode", if smoke { "smoke" } else { "full" })
         .set("txs", txs)
         .set("closed_loop", closed)
         .set("open_loop", open)
-        .set("speedup_depth64_vs_closed", speedup);
-    std::fs::write("BENCH_gateway.json", format!("{out}\n")).expect("write BENCH_gateway.json");
-    println!("wrote BENCH_gateway.json");
+        .set("speedup_depth64_vs_closed", speedup)
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_gateway.json"
+    } else {
+        "BENCH_gateway.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_gateway.json");
+    println!("wrote {path}");
 }

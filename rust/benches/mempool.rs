@@ -4,9 +4,13 @@
 //! prechecks, batch pulls) and drives the *real* orderer at 2x its
 //! configured block-production knee to show the bounded pool shedding
 //! load while committed-tx latency stays bounded. Emits the baseline to
-//! `BENCH_mempool.json` (schema below) for regression tracking.
+//! `BENCH_mempool.json` for regression tracking — or, with `--smoke`, a
+//! seconds-scale deterministic run to `target/smoke/BENCH_mempool.json`
+//! that the CI bench gate (`bench_check`) compares against
+//! `bench-baselines/`. Micro metrics take the best of three repetitions
+//! so a noisy scheduler tick cannot fake a regression.
 //!
-//!     cargo bench --bench mempool    (or `make bench`)
+//!     cargo bench --bench mempool [-- --smoke]    (or `make bench`)
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -296,15 +300,45 @@ fn surge_2x(offered: usize) -> Json {
         .set("nonzero_shed", shed_nonzero)
 }
 
-fn main() {
-    println!("# mempool benches — ingress hot path + orderer surge\n");
-    let (admit_ns, admit_tps) = bench_admit(20_000);
-    let (verified_ns, verified_tps) = bench_admit_verified(5_000);
-    let take_ns = bench_take_batch(20_000);
-    let surge = surge_2x(2_000);
+/// Best of `reps` repetitions of a (ns_per_op, tx_per_s) micro bench.
+fn best_of(reps: usize, mut run: impl FnMut() -> (f64, f64)) -> (f64, f64) {
+    (0..reps.max(1))
+        .map(|_| run())
+        .fold((f64::INFINITY, 0.0f64), |acc, x| (acc.0.min(x.0), acc.1.max(x.1)))
+}
 
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n_admit, n_verified, n_take, n_surge) =
+        if smoke { (5_000, 1_000, 5_000, 400) } else { (20_000, 5_000, 20_000, 2_000) };
+    println!(
+        "# mempool benches{} — ingress hot path + orderer surge\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let (admit_ns, admit_tps) = best_of(3, || bench_admit(n_admit));
+    let (verified_ns, verified_tps) = best_of(3, || bench_admit_verified(n_verified));
+    let (take_ns, _) = best_of(3, || (bench_take_batch(n_take), 0.0));
+    let surge = surge_2x(n_surge);
+    let surge_p95 =
+        surge.get("p95_commit_latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "admit_ns_per_op")
+            .set("value", admit_ns)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "take_batch_ns_per_tx")
+            .set("value", take_ns)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "surge_p95_commit_latency_s")
+            .set("value", surge_p95)
+            .set("higher_is_better", false),
+    ]);
     let out = Json::obj()
         .set("bench", "mempool")
+        .set("mode", if smoke { "smoke" } else { "full" })
         .set(
             "admit",
             Json::obj().set("ns_per_op", admit_ns).set("tx_per_s", admit_tps),
@@ -314,7 +348,14 @@ fn main() {
             Json::obj().set("ns_per_op", verified_ns).set("tx_per_s", verified_tps),
         )
         .set("take_batch", Json::obj().set("ns_per_tx", take_ns))
-        .set("surge_2x", surge);
-    std::fs::write("BENCH_mempool.json", format!("{out}\n")).expect("write BENCH_mempool.json");
-    println!("\nwrote BENCH_mempool.json");
+        .set("surge_2x", surge)
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_mempool.json"
+    } else {
+        "BENCH_mempool.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_mempool.json");
+    println!("\nwrote {path}");
 }

@@ -1,0 +1,368 @@
+//! Cross-shard relay bench: local admission vs 1-hop forwarding vs
+//! shard→mainchain checkpoint relay, at 2/4/8 shards. Emits the baseline
+//! to `BENCH_relay.json` (or `target/smoke/BENCH_relay.json` in `--smoke`
+//! mode — the fast deterministic configuration the CI bench gate runs and
+//! compares against `bench-baselines/`).
+//!
+//! Every wave submits fewer transactions than the batch size, so blocks
+//! cut on the batch *timeout*: commit latency is timer-dominated
+//! (≈ batch_timeout + delivery), which keeps the medians stable across
+//! hosts, and the forwarding overhead isolates the relay's per-link
+//! simnet latency. Acceptance: the 1-hop forward path adds **less than
+//! one block interval** of commit latency at the median, while every
+//! cross-shard transaction commits exactly once (dedup scenario
+//! included).
+//!
+//!     cargo bench --bench relay [-- --smoke]    (or `make bench`)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use scalesfl::crypto::msp::{CertificateAuthority, MemberId};
+use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+use scalesfl::fabric::endorsement::EndorsementPolicy;
+use scalesfl::fabric::orderer::{OrdererConfig, OrderingService};
+use scalesfl::fabric::peer::Peer;
+use scalesfl::fabric::{CommitOutcome, Gateway};
+use scalesfl::ledger::block::ValidationCode;
+use scalesfl::ledger::tx::Proposal;
+use scalesfl::mempool::RelayConfig;
+use scalesfl::util::json::Json;
+use scalesfl::util::prng::Prng;
+
+const BATCH_TIMEOUT_MS: u64 = 40;
+const RELAY_BASE_MS: u64 = 8;
+const RELAY_SPREAD_MS: u64 = 8;
+const RELAY_JITTER_MS: u64 = 2;
+const WAVE_TXS: usize = 8;
+
+struct PutCc(&'static str);
+impl Chaincode for PutCc {
+    fn name(&self) -> &str {
+        self.0
+    }
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        _f: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        ctx.put(&args[0], b"v".to_vec());
+        Ok(vec![])
+    }
+}
+
+/// S shards x 2 peers; every peer also joins the mainchain. Policies are
+/// AnyOf(1) so endorsement crypto stays negligible next to the timers.
+struct Net {
+    shards: usize,
+    peers: Vec<Vec<Arc<Peer>>>,
+    orderer: Arc<OrderingService>,
+}
+
+fn build(shards: usize, seed: u64) -> Net {
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(seed);
+    let mut peers: Vec<Vec<Arc<Peer>>> = Vec::with_capacity(shards);
+    let mut all_members = Vec::new();
+    for s in 0..shards {
+        let shard_peers: Vec<Arc<Peer>> = (0..2)
+            .map(|p| {
+                let cred = ca.enroll(MemberId::new(format!("org{s}x{p}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        all_members.extend(shard_peers.iter().map(|p| p.member.clone()));
+        peers.push(shard_peers);
+    }
+    let main_policy = EndorsementPolicy::AnyOf(1, all_members);
+    for (s, shard_peers) in peers.iter().enumerate() {
+        let members: Vec<MemberId> = shard_peers.iter().map(|p| p.member.clone()).collect();
+        let policy = EndorsementPolicy::AnyOf(1, members);
+        for p in shard_peers {
+            p.join_channel(&format!("shard{s}"), policy.clone());
+            p.install_chaincode(&format!("shard{s}"), Arc::new(PutCc("kv"))).unwrap();
+            p.join_channel("mainchain", main_policy.clone());
+            p.install_chaincode("mainchain", Arc::new(PutCc("catalyst"))).unwrap();
+        }
+    }
+    let all_peers: Vec<Arc<Peer>> = peers.iter().flatten().cloned().collect();
+    let orderer = OrderingService::start(
+        OrdererConfig {
+            batch_size: 16,
+            batch_timeout: Duration::from_millis(BATCH_TIMEOUT_MS),
+            tick: Duration::from_millis(2),
+            relay: Some(RelayConfig {
+                base_latency: Duration::from_millis(RELAY_BASE_MS),
+                latency_spread: Duration::from_millis(RELAY_SPREAD_MS),
+                jitter: Duration::from_millis(RELAY_JITTER_MS),
+                seed,
+            }),
+            ..Default::default()
+        },
+        all_peers,
+        seed,
+    );
+    Net { shards, peers, orderer }
+}
+
+impl Net {
+    /// Gateway endorsing with shard `s`, entering at shard `ingress`.
+    fn shard_gateway(&self, s: usize, ingress: usize) -> Gateway {
+        let mut gw = Gateway::new(self.peers[s].clone(), Arc::clone(&self.orderer));
+        gw.ingress = Some(format!("shard{ingress}"));
+        gw
+    }
+
+    /// Mainchain checkpoint uplink entering at shard `s`'s ingress.
+    fn checkpoint_gateway(&self, s: usize) -> Gateway {
+        let mut gw = Gateway::new(vec![Arc::clone(&self.peers[s][0])], Arc::clone(&self.orderer));
+        gw.ingress = Some(format!("shard{s}"));
+        gw
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// Home ingress: no relay hop.
+    Local,
+    /// Neighbour ingress: one forwarding hop home.
+    Forward,
+    /// Shard-produced catalyst tx relayed to the mainchain channel.
+    Checkpoint,
+}
+
+impl Mode {
+    fn key_prefix(self, shards: usize) -> String {
+        match self {
+            Mode::Local => format!("loc{shards}-"),
+            Mode::Forward => format!("fwd{shards}-"),
+            Mode::Checkpoint => format!("ck{shards}-"),
+        }
+    }
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[sorted.len() / 2]
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i]
+}
+
+/// Run `waves` waves of WAVE_TXS transactions in `mode`; each wave's
+/// handles are all in flight together and drained before the next wave,
+/// so every block cuts on the batch timeout. Returns sorted commit
+/// latencies in milliseconds.
+fn run_mode(net: &Net, mode: Mode, waves: usize, nonce: &mut u64) -> Vec<f64> {
+    let prefix = mode.key_prefix(net.shards);
+    let gateways: Vec<Gateway> = (0..net.shards)
+        .map(|s| match mode {
+            Mode::Local => net.shard_gateway(s, s),
+            Mode::Forward => net.shard_gateway(s, (s + 1) % net.shards),
+            Mode::Checkpoint => net.checkpoint_gateway(s),
+        })
+        .collect();
+    let mut latencies = Vec::with_capacity(waves * WAVE_TXS);
+    for wave in 0..waves {
+        let handles: Vec<_> = (0..WAVE_TXS)
+            .map(|i| {
+                let s = i % net.shards;
+                *nonce += 1;
+                let (channel, chaincode) = match mode {
+                    Mode::Checkpoint => ("mainchain".to_string(), "catalyst"),
+                    _ => (format!("shard{s}"), "kv"),
+                };
+                let prop = Proposal {
+                    channel,
+                    chaincode: chaincode.into(),
+                    function: "Put".into(),
+                    args: vec![format!("{prefix}w{wave}i{i}")],
+                    creator: MemberId::new("bench-client"),
+                    nonce: *nonce,
+                };
+                gateways[s].submit(&prop)
+            })
+            .collect();
+        for h in handles {
+            let out = h.wait();
+            match &out {
+                CommitOutcome::Committed { code: ValidationCode::Valid, latency } => {
+                    latencies.push(latency.as_secs_f64() * 1e3);
+                }
+                _ => panic!("tx failed in wave {wave}: {out:?}"),
+            }
+        }
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies
+}
+
+/// Every submitted key is committed exactly once: the aggregate count
+/// across home channels matches the submission count (state scans dedupe
+/// keys, commit-side DuplicateTxId blocks replays, and a lost tx would
+/// leave the count short).
+fn committed_once(net: &Net, mode: Mode, expected: usize) -> bool {
+    let prefix = mode.key_prefix(net.shards);
+    let total: usize = if mode == Mode::Checkpoint {
+        net.peers[0][0].channel("mainchain").unwrap().scan(&prefix).len()
+    } else {
+        net.peers
+            .iter()
+            .enumerate()
+            .map(|(s, shard_peers)| {
+                shard_peers[0].channel(&format!("shard{s}")).unwrap().scan(&prefix).len()
+            })
+            .sum()
+    };
+    total == expected
+}
+
+/// The same transaction submitted at two ingress pools commits once.
+fn dedup_scenario(net: &Net, nonce: &mut u64) -> Json {
+    *nonce += 1;
+    let prop = Proposal {
+        channel: "shard0".into(),
+        chaincode: "kv".into(),
+        function: "Put".into(),
+        args: vec![format!("dup{}-{}", net.shards, *nonce)],
+        creator: MemberId::new("bench-client"),
+        nonce: *nonce,
+    };
+    let before = net.orderer.relay().expect("relay on").snapshot();
+    let direct = net.shard_gateway(0, 0);
+    let detour = net.shard_gateway(0, 1 % net.shards);
+    let h1 = direct.submit(&prop);
+    let h2 = detour.submit(&prop);
+    let o1 = h1.wait();
+    let o2 = h2.wait();
+    assert!(o1.is_valid(), "direct copy must commit: {o1:?}");
+    assert!(o2.is_valid(), "gossiped copy resolves off the same commit: {o2:?}");
+    let after = net.orderer.relay().unwrap().snapshot();
+    let committed = net.peers[0][0].channel("shard0").unwrap().scan(&prop.args[0]).len();
+    assert_eq!(committed, 1, "gossiped duplicate must commit exactly once");
+    Json::obj()
+        .set("deduped_hops", after.deduped - before.deduped)
+        .set("committed", committed)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (shard_counts, waves): (&[usize], usize) =
+        if smoke { (&[2, 4], 3) } else { (&[2, 4, 8], 6) };
+    println!(
+        "# relay bench{} — {} txs/wave, {waves} waves/mode, batch timeout {BATCH_TIMEOUT_MS} ms, \
+         link {RELAY_BASE_MS}+{RELAY_SPREAD_MS}ms (+{RELAY_JITTER_MS}ms jitter)\n",
+        if smoke { " (smoke)" } else { "" },
+        WAVE_TXS
+    );
+
+    let mut nonce = 0u64;
+    let mut scenarios: Vec<Json> = Vec::new();
+    let mut headline_local = 0.0f64;
+    let mut headline_overhead = 0.0f64;
+    let mut headline_checkpoint = 0.0f64;
+    let mut dedup = Json::obj();
+    for (ci, &shards) in shard_counts.iter().enumerate() {
+        let net = build(shards, 7 + shards as u64);
+        let expected = waves * WAVE_TXS;
+        let local = run_mode(&net, Mode::Local, waves, &mut nonce);
+        let forward = run_mode(&net, Mode::Forward, waves, &mut nonce);
+        let checkpoint = run_mode(&net, Mode::Checkpoint, waves, &mut nonce);
+        let (lm, fm, cm) = (median(&local), median(&forward), median(&checkpoint));
+        let overhead = fm - lm;
+        let interval_ms = BATCH_TIMEOUT_MS as f64;
+        let within = overhead < interval_ms;
+        let once = committed_once(&net, Mode::Local, expected)
+            && committed_once(&net, Mode::Forward, expected)
+            && committed_once(&net, Mode::Checkpoint, expected);
+        let relay = net.orderer.relay().unwrap().snapshot();
+        println!(
+            "shards={shards:<2} local={lm:>7.1}ms forward={fm:>7.1}ms (+{overhead:.1}ms) \
+             checkpoint={cm:>7.1}ms | forwarded={} delivered={} dropped={}",
+            relay.forwarded, relay.delivered, relay.dropped
+        );
+        assert!(once, "every cross-shard tx must commit exactly once");
+        assert_eq!(relay.dropped, 0, "no relay losses expected");
+        assert!(
+            within,
+            "forwarding added {overhead:.1}ms — more than one {interval_ms:.0}ms block interval"
+        );
+        if ci == 0 {
+            headline_local = lm;
+            headline_overhead = overhead;
+            headline_checkpoint = cm;
+            dedup = dedup_scenario(&net, &mut nonce);
+        }
+        scenarios.push(
+            Json::obj()
+                .set("shards", shards)
+                .set(
+                    "local_ms",
+                    Json::obj().set("median", lm).set("p95", quantile(&local, 0.95)),
+                )
+                .set(
+                    "forward_ms",
+                    Json::obj().set("median", fm).set("p95", quantile(&forward, 0.95)),
+                )
+                .set(
+                    "checkpoint_ms",
+                    Json::obj().set("median", cm).set("p95", quantile(&checkpoint, 0.95)),
+                )
+                .set("forward_overhead_ms", overhead)
+                .set("mean_hop_latency_ms", relay.mean_hop_latency_s() * 1e3)
+                .set("within_one_interval", within)
+                .set("committed_once", once),
+        );
+    }
+    println!(
+        "\nverdict: forward overhead {headline_overhead:.1}ms at the median \
+         (acceptance: < {BATCH_TIMEOUT_MS} ms block interval), cross-shard txs commit exactly once"
+    );
+
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "local_commit_ms_median")
+            .set("value", headline_local)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "forward_overhead_ms_median")
+            .set("value", headline_overhead)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "checkpoint_commit_ms_median")
+            .set("value", headline_checkpoint)
+            .set("higher_is_better", false),
+    ]);
+    let out = Json::obj()
+        .set("bench", "relay")
+        .set("mode", if smoke { "smoke" } else { "full" })
+        .set(
+            "config",
+            Json::obj()
+                .set("wave_txs", WAVE_TXS)
+                .set("waves", waves)
+                .set("batch_timeout_ms", BATCH_TIMEOUT_MS)
+                .set("relay_base_ms", RELAY_BASE_MS)
+                .set("relay_spread_ms", RELAY_SPREAD_MS)
+                .set("relay_jitter_ms", RELAY_JITTER_MS),
+        )
+        .set("scenarios", Json::Arr(scenarios))
+        .set("dedup", dedup)
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_relay.json"
+    } else {
+        "BENCH_relay.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_relay.json");
+    println!("wrote {path}");
+}

@@ -1,14 +1,16 @@
 //! Staged block-validation bench: serial vs parallel pre-validation on
 //! signature-heavy blocks, the cross-peer verdict cache, and the MVCC
-//! stale-shed path. Emits the baseline to `BENCH_validation.json`.
+//! stale-shed path. Emits the baseline to `BENCH_validation.json` — or,
+//! with `--smoke`, a reduced deterministic configuration to
+//! `target/smoke/BENCH_validation.json` for the CI bench gate.
 //!
-//! Two framings are measured, both over the same 256-tx block with 8
-//! endorsement signatures per transaction (O(txs × endorsements) HMAC
-//! verifications):
+//! Two framings are measured, both over the same signature-heavy block
+//! (O(txs × endorsements) HMAC verifications — 256 txs × 8 endorsements
+//! full, 64 × 4 smoke):
 //!
 //! - `single_peer`: one replica commits the block through a fresh
-//!   validator at 1/2/4/8 workers — the pure fan-out win, bounded by the
-//!   host's core count.
+//!   validator at each worker count — the pure fan-out win, bounded by
+//!   the host's core count.
 //! - `replicated`: four replicas commit the same block the way the
 //!   orderer's committer does — through ONE shared validator — so the
 //!   first replica pays the (parallel) crypto and the rest hit the
@@ -19,7 +21,7 @@
 //! Every run cross-checks the `ValidationCode` sequence and block hash
 //! against the serial baseline (determinism).
 //!
-//!     cargo bench --bench validation    (or `make bench`)
+//!     cargo bench --bench validation [-- --smoke]    (or `make bench`)
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,10 +37,22 @@ use scalesfl::mempool::{MempoolConfig, ShardMempool};
 use scalesfl::util::json::Json;
 use scalesfl::util::prng::Prng;
 
-const BLOCK_TXS: usize = 256;
-const ENDORSERS: usize = 8;
-const REPLICAS: usize = 4;
-const REPS: usize = 5;
+/// Workload shape; `--smoke` shrinks it to seconds while keeping the
+/// same structure (and JSON schema, so baselines stay comparable).
+#[derive(Clone, Copy)]
+struct BenchCfg {
+    block_txs: usize,
+    endorsers: usize,
+    replicas: usize,
+    reps: usize,
+    /// Contended txs in the stale-shed scenario.
+    contended: usize,
+}
+
+const FULL: BenchCfg =
+    BenchCfg { block_txs: 256, endorsers: 8, replicas: 4, reps: 5, contended: 64 };
+const SMOKE: BenchCfg =
+    BenchCfg { block_txs: 64, endorsers: 4, replicas: 4, reps: 2, contended: 16 };
 
 struct Fixture {
     ca: CertificateAuthority,
@@ -47,17 +61,17 @@ struct Fixture {
     envs: Vec<Envelope>,
 }
 
-/// A signature-heavy block: every tx carries `ENDORSERS` HMAC
+/// A signature-heavy block: every tx carries `cfg.endorsers` HMAC
 /// endorsements and the majority policy verifies all of them.
-fn fixture() -> Fixture {
+fn fixture(cfg: BenchCfg) -> Fixture {
     let ca = CertificateAuthority::new();
     let mut rng = Prng::new(42);
-    let creds: Vec<_> = (0..ENDORSERS)
+    let creds: Vec<_> = (0..cfg.endorsers)
         .map(|i| ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng))
         .collect();
     let members: Vec<MemberId> = creds.iter().map(|c| c.member.clone()).collect();
     let policy = EndorsementPolicy::MajorityOf(members);
-    let envs: Vec<Envelope> = (0..BLOCK_TXS as u64)
+    let envs: Vec<Envelope> = (0..cfg.block_txs as u64)
         .map(|nonce| {
             let proposal = Proposal {
                 channel: "ch".into(),
@@ -99,9 +113,10 @@ fn fresh_peers(fx: &Fixture, n: usize, seed: u64) -> Vec<Arc<Peer>> {
 /// reproduces the pre-refactor baseline (each peer a private serial
 /// validator, crypto paid per replica); `Some(w)` is the pipelined path
 /// (one shared validator, `w` workers + verdict cache). Returns the best
-/// wall time over `REPS` repetitions plus the first run's codes.
+/// wall time over `cfg.reps` repetitions plus the first run's codes.
 fn commit_block(
     fx: &Fixture,
+    cfg: BenchCfg,
     replicas: usize,
     shared_workers: Option<usize>,
     seed: u64,
@@ -109,7 +124,7 @@ fn commit_block(
     let mut best = f64::INFINITY;
     let mut codes: Vec<ValidationCode> = Vec::new();
     let mut cache_hits = 0u64;
-    for rep in 0..REPS {
+    for rep in 0..cfg.reps {
         // Fresh peers each rep: replays would hit the duplicate check.
         let peers = fresh_peers(fx, replicas, seed * 100 + rep as u64);
         let shared = shared_workers.map(BlockValidator::new);
@@ -141,8 +156,8 @@ fn commit_block(
 /// Contended-key scenario: K txs all endorsed against the same version of
 /// one key, driven through a mempool with and without MVCC hinting, one
 /// tx per block. Returns (commit MvccConflicts, stale_dropped) per mode.
-fn stale_shed_scenario(fx: &Fixture) -> Json {
-    const CONTENDED: usize = 64;
+fn stale_shed_scenario(fx: &Fixture, cfg: BenchCfg) -> Json {
+    let contended = cfg.contended;
     let run = |hinted: bool, seed: u64| -> (u64, u64) {
         let peers = fresh_peers(fx, 1, seed);
         let ch = peers[0].channel("ch").unwrap();
@@ -151,7 +166,7 @@ fn stale_shed_scenario(fx: &Fixture) -> Json {
             pool.set_state_view(Arc::clone(&ch) as Arc<dyn StateView>);
         }
         // All read the contended key at version None; first committer wins.
-        for nonce in 0..CONTENDED as u64 {
+        for nonce in 0..contended as u64 {
             let proposal = Proposal {
                 channel: "ch".into(),
                 chaincode: "kv".into(),
@@ -165,7 +180,7 @@ fn stale_shed_scenario(fx: &Fixture) -> Json {
                 writes: vec![("ctr".into(), Some(nonce.to_le_bytes().to_vec()))],
             };
             let mut env = Envelope { proposal, rw_set, endorsements: Vec::new() };
-            // Policy is majority-of-8; the fixture's endorsers sign.
+            // Policy is majority-of-endorsers; the fixture's creds sign.
             let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
             for cred in &fx.creds {
                 env.endorsements.push(Endorsement {
@@ -193,14 +208,14 @@ fn stale_shed_scenario(fx: &Fixture) -> Json {
     let (old_conflicts, old_dropped) = run(false, 7_000);
     let (new_conflicts, new_dropped) = run(true, 8_000);
     println!(
-        "\n# stale shed ({CONTENDED} contended txs, 1 tx/block)\n\
+        "\n# stale shed ({contended} contended txs, 1 tx/block)\n\
          pre-refactor: {old_conflicts} MvccConflicts at commit, {old_dropped} shed early\n\
          hinted:       {new_conflicts} MvccConflicts at commit, {new_dropped} shed early"
     );
     assert!(new_dropped > 0, "hinted pool must shed stale txs");
     assert!(new_conflicts < old_conflicts, "hinting must cut commit conflicts");
     Json::obj()
-        .set("contended_txs", CONTENDED)
+        .set("contended_txs", contended)
         .set("old_mvcc_conflicts", old_conflicts)
         .set("old_stale_dropped", old_dropped)
         .set("new_mvcc_conflicts", new_conflicts)
@@ -208,18 +223,24 @@ fn stale_shed_scenario(fx: &Fixture) -> Json {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke { SMOKE } else { FULL };
+    let worker_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     println!(
-        "# validation bench — {BLOCK_TXS} txs x {ENDORSERS} endorsements, {REPLICAS} replicas\n"
+        "# validation bench{} — {} txs x {} endorsements, {} replicas\n",
+        if smoke { " (smoke)" } else { "" },
+        cfg.block_txs,
+        cfg.endorsers,
+        cfg.replicas
     );
-    let fx = fixture();
-    let worker_counts = [1usize, 2, 4, 8];
+    let fx = fixture(cfg);
 
     // Single replica: pure fan-out (bounded by host cores).
-    let (serial_1p, serial_codes, _) = commit_block(&fx, 1, None, 10);
+    let (serial_1p, serial_codes, _) = commit_block(&fx, cfg, 1, None, 10);
     println!("{:<36} {:>9.2} ms", "single peer, serial (baseline)", serial_1p * 1e3);
     let mut single = Json::obj().set("serial_s", serial_1p);
-    for &w in &worker_counts {
-        let (t, codes, _) = commit_block(&fx, 1, Some(w), 20 + w as u64);
+    for &w in worker_counts {
+        let (t, codes, _) = commit_block(&fx, cfg, 1, Some(w), 20 + w as u64);
         assert_eq!(codes, serial_codes, "worker count changed validation codes");
         let label = format!("single peer, {w} workers");
         println!("{:<36} {:>9.2} ms   {:>5.2}x", label, t * 1e3, serial_1p / t);
@@ -229,14 +250,14 @@ fn main() {
     // Replicated: the committer's path — serial baseline is per-peer
     // private validators (pre-refactor), pipelined is one shared
     // validator (fan-out + cross-peer verdict cache).
-    let (serial_rep, rep_codes, _) = commit_block(&fx, REPLICAS, None, 30);
+    let (serial_rep, rep_codes, _) = commit_block(&fx, cfg, cfg.replicas, None, 30);
     assert_eq!(rep_codes, serial_codes);
-    let label = format!("{REPLICAS} replicas, per-peer serial");
+    let label = format!("{} replicas, per-peer serial", cfg.replicas);
     println!("\n{:<36} {:>9.2} ms", label, serial_rep * 1e3);
     let mut replicated = Json::obj().set("serial_s", serial_rep);
     let mut speedup_at_4 = 0.0;
-    for &w in &worker_counts {
-        let (t, codes, hits) = commit_block(&fx, REPLICAS, Some(w), 40 + w as u64);
+    for &w in worker_counts {
+        let (t, codes, hits) = commit_block(&fx, cfg, cfg.replicas, Some(w), 40 + w as u64);
         assert_eq!(codes, serial_codes, "worker count changed validation codes");
         let speedup = serial_rep / t;
         if w == 4 {
@@ -244,11 +265,15 @@ fn main() {
         }
         println!(
             "{:<36} {:>9.2} ms   {:>5.2}x   cache_hits={hits}",
-            format!("{REPLICAS} replicas, shared, {w} workers"),
+            format!("{} replicas, shared, {w} workers", cfg.replicas),
             t * 1e3,
             speedup
         );
-        assert_eq!(hits, ((REPLICAS - 1) * BLOCK_TXS) as u64, "cache must serve replicas 2..N");
+        assert_eq!(
+            hits,
+            ((cfg.replicas - 1) * cfg.block_txs) as u64,
+            "cache must serve replicas 2..N"
+        );
         replicated = replicated.set(&format!("workers_{w}_s"), t);
     }
     replicated = replicated.set("speedup_at_4_workers", speedup_at_4);
@@ -256,24 +281,41 @@ fn main() {
         "\nverdict: speedup_at_4_workers={speedup_at_4:.2}x (acceptance: >= 2x), determinism ok"
     );
 
-    let stale = stale_shed_scenario(&fx);
+    let stale = stale_shed_scenario(&fx, cfg);
 
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "replicated_speedup_at_4_workers")
+            .set("value", speedup_at_4)
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "single_peer_serial_ms")
+            .set("value", serial_1p * 1e3)
+            .set("higher_is_better", false),
+    ]);
     let out = Json::obj()
         .set("bench", "validation")
+        .set("mode", if smoke { "smoke" } else { "full" })
         .set(
             "block",
             Json::obj()
-                .set("txs", BLOCK_TXS)
-                .set("endorsements_per_tx", ENDORSERS)
-                .set("replicas", REPLICAS)
-                .set("reps", REPS),
+                .set("txs", cfg.block_txs)
+                .set("endorsements_per_tx", cfg.endorsers)
+                .set("replicas", cfg.replicas)
+                .set("reps", cfg.reps),
         )
         .set("single_peer", single)
         .set("replicated", replicated)
         .set("determinism_ok", true)
         .set("speedup_ok", speedup_at_4 >= 2.0)
-        .set("stale_shed", stale);
-    std::fs::write("BENCH_validation.json", format!("{out}\n"))
-        .expect("write BENCH_validation.json");
-    println!("\nwrote BENCH_validation.json");
+        .set("stale_shed", stale)
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_validation.json"
+    } else {
+        "BENCH_validation.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_validation.json");
+    println!("\nwrote {path}");
 }

@@ -1,0 +1,381 @@
+//! CI bench-regression gate.
+//!
+//! Compares every `BENCH_*.json` in a baseline directory against the same
+//! file in a candidate directory (the fresh `--smoke` outputs under
+//! `target/smoke/`). Fails (exit 1) when:
+//!
+//! - a baseline file has no candidate, a candidate has no committed
+//!   baseline (a new bench must be gated from its first commit), or
+//!   either side fails to parse;
+//! - the JSON **schema drifts**: a key path present on one side is
+//!   missing on the other, or a value changed type (arrays are checked
+//!   element-wise against the baseline's first element);
+//! - a **headline metric regresses** beyond the tolerance (default 20%):
+//!   each bench embeds a `headline` array of
+//!   `{metric, value, higher_is_better}` entries, so the gate needs no
+//!   per-bench knowledge here.
+//!
+//! Usage: `bench_check <baseline_dir> <candidate_dir> [--tolerance 0.2]`
+//! (ci.sh runs it as `bench_check bench-baselines target/smoke`; refresh
+//! the committed baselines with `make bench-baseline`).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use scalesfl::util::json::Json;
+
+/// Recursively compare key sets and value types; every mismatch is one
+/// human-readable line pushed into `out`.
+fn schema_diff(base: &Json, cand: &Json, path: &str, out: &mut Vec<String>) {
+    match (base, cand) {
+        (Json::Obj(b), Json::Obj(c)) => {
+            for (k, bv) in b {
+                match c.iter().find(|(ck, _)| ck == k) {
+                    Some((_, cv)) => schema_diff(bv, cv, &format!("{path}.{k}"), out),
+                    None => out.push(format!("schema drift: {path}.{k} missing from candidate")),
+                }
+            }
+            for (k, _) in c {
+                if !b.iter().any(|(bk, _)| bk == k) {
+                    out.push(format!("schema drift: {path}.{k} is new in candidate"));
+                }
+            }
+        }
+        (Json::Arr(b), Json::Arr(c)) => {
+            if let Some(proto) = b.first() {
+                for (i, cv) in c.iter().enumerate() {
+                    schema_diff(proto, cv, &format!("{path}[{i}]"), out);
+                }
+                if c.is_empty() {
+                    out.push(format!("schema drift: {path} emptied in candidate"));
+                }
+            }
+        }
+        (Json::Num(_), Json::Num(_))
+        | (Json::Str(_), Json::Str(_))
+        | (Json::Bool(_), Json::Bool(_))
+        | (Json::Null, Json::Null) => {}
+        _ => out.push(format!("schema drift: {path} changed type")),
+    }
+}
+
+struct Headline {
+    metric: String,
+    value: f64,
+    higher_is_better: bool,
+}
+
+fn headlines(doc: &Json, side: &str, out: &mut Vec<String>) -> Vec<Headline> {
+    let Some(arr) = doc.get("headline").and_then(|h| h.as_arr()) else {
+        out.push(format!("{side}: no `headline` array — nothing to gate on"));
+        return Vec::new();
+    };
+    let mut parsed = Vec::new();
+    for (i, item) in arr.iter().enumerate() {
+        let metric = item.get("metric").and_then(|m| m.as_str());
+        let value = item.get("value").and_then(|v| v.as_f64());
+        match (metric, value) {
+            (Some(m), Some(v)) => parsed.push(Headline {
+                metric: m.to_string(),
+                value: v,
+                higher_is_better: item
+                    .get("higher_is_better")
+                    .and_then(|b| b.as_bool())
+                    .unwrap_or(false),
+            }),
+            _ => out.push(format!("{side}: headline[{i}] is malformed")),
+        }
+    }
+    parsed
+}
+
+/// Direction-aware regression check for one metric. Returns a failure
+/// line, or a PASS/near-zero note in `notes`.
+fn check_metric(
+    file: &str,
+    base: &Headline,
+    cand_value: f64,
+    tolerance: f64,
+    notes: &mut Vec<String>,
+) -> Option<String> {
+    if base.value.abs() < 1e-12 {
+        notes.push(format!(
+            "  ~ {file}:{} baseline is 0 — skipped ratio check (candidate {cand_value:.4})",
+            base.metric
+        ));
+        return None;
+    }
+    let (regressed, bound) = if base.higher_is_better {
+        (cand_value < base.value * (1.0 - tolerance), base.value * (1.0 - tolerance))
+    } else {
+        (cand_value > base.value * (1.0 + tolerance), base.value * (1.0 + tolerance))
+    };
+    if regressed {
+        Some(format!(
+            "{file}: {} regressed — baseline {:.4}, candidate {cand_value:.4}, allowed {} {bound:.4}",
+            base.metric,
+            base.value,
+            if base.higher_is_better { ">=" } else { "<=" },
+        ))
+    } else {
+        notes.push(format!(
+            "  ✓ {file}:{} {:.4} -> {cand_value:.4} (bound {} {bound:.4})",
+            base.metric,
+            base.value,
+            if base.higher_is_better { ">=" } else { "<=" },
+        ));
+        None
+    }
+}
+
+/// Compare one baseline/candidate document pair; returns failure lines.
+fn check_pair(
+    file: &str,
+    base: &Json,
+    cand: &Json,
+    tolerance: f64,
+    notes: &mut Vec<String>,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    schema_diff(base, cand, file, &mut failures);
+    let base_heads = headlines(base, &format!("{file} (baseline)"), &mut failures);
+    let cand_heads = headlines(cand, &format!("{file} (candidate)"), &mut failures);
+    for bh in &base_heads {
+        match cand_heads.iter().find(|ch| ch.metric == bh.metric) {
+            Some(ch) => {
+                if let Some(fail) = check_metric(file, bh, ch.value, tolerance, notes) {
+                    failures.push(fail);
+                }
+            }
+            None => failures.push(format!(
+                "{file}: headline metric `{}` missing from candidate",
+                bh.metric
+            )),
+        }
+    }
+    failures
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: unreadable ({e})", path.display()))?;
+    Json::parse(text.trim()).map_err(|e| format!("{}: bad JSON ({e})", path.display()))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut dirs: Vec<&String> = Vec::new();
+    let mut tolerance = 0.20f64;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            match args.get(i + 1).and_then(|t| t.parse::<f64>().ok()) {
+                Some(t) => tolerance = t,
+                None => {
+                    eprintln!("--tolerance needs a numeric argument");
+                    return ExitCode::FAILURE;
+                }
+            }
+            i += 2;
+        } else {
+            dirs.push(&args[i]);
+            i += 1;
+        }
+    }
+    let [baseline_dir, candidate_dir] = dirs.as_slice() else {
+        eprintln!("usage: bench_check <baseline_dir> <candidate_dir> [--tolerance 0.2]");
+        return ExitCode::FAILURE;
+    };
+    let (baseline_dir, candidate_dir) = (baseline_dir.as_str(), candidate_dir.as_str());
+
+    let mut names: Vec<String> = match std::fs::read_dir(baseline_dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("cannot read baseline dir {baseline_dir}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    names.sort();
+    if names.is_empty() {
+        eprintln!("no BENCH_*.json baselines in {baseline_dir} — run `make bench-baseline`");
+        return ExitCode::FAILURE;
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut notes: Vec<String> = Vec::new();
+    let mut metrics = 0usize;
+    for name in &names {
+        let base_path = Path::new(baseline_dir).join(name);
+        let cand_path = Path::new(candidate_dir).join(name);
+        let base = match load(&base_path) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(e);
+                continue;
+            }
+        };
+        if !cand_path.exists() {
+            failures.push(format!(
+                "{name}: no candidate in {candidate_dir} — did its smoke bench run?"
+            ));
+            continue;
+        }
+        let cand = match load(&cand_path) {
+            Ok(j) => j,
+            Err(e) => {
+                failures.push(e);
+                continue;
+            }
+        };
+        metrics += base.get("headline").and_then(|h| h.as_arr()).map_or(0, |a| a.len());
+        failures.extend(check_pair(name, &base, &cand, tolerance, &mut notes));
+    }
+
+    // The reverse direction: a smoke bench whose output has no committed
+    // baseline would otherwise be silently exempt from the gate forever.
+    if let Ok(entries) = std::fs::read_dir(candidate_dir) {
+        let mut ungated: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| {
+                n.starts_with("BENCH_") && n.ends_with(".json") && !names.contains(n)
+            })
+            .collect();
+        ungated.sort();
+        for n in ungated {
+            failures.push(format!(
+                "{n}: no committed baseline in {baseline_dir} — run `make bench-baseline` \
+                 and commit it so the new bench is gated"
+            ));
+        }
+    }
+
+    for n in &notes {
+        println!("{n}");
+    }
+    if failures.is_empty() {
+        println!(
+            "bench_check OK: {} files, {metrics} headline metrics within {:.0}% of baseline",
+            names.len(),
+            tolerance * 100.0
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bench_check FAILED ({} problem(s)):", failures.len());
+        for f in &failures {
+            eprintln!("  ✗ {f}");
+        }
+        eprintln!(
+            "(intentional? regenerate baselines with `make bench-baseline` and commit them)"
+        );
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(headline: &str) -> Json {
+        Json::parse(&format!(
+            "{{\"bench\":\"x\",\"stats\":{{\"a\":1,\"b\":true}},\"headline\":{headline}}}"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let j = doc("[{\"metric\":\"tps\",\"value\":100,\"higher_is_better\":true}]");
+        let mut notes = Vec::new();
+        let failures = check_pair("BENCH_x.json", &j, &j, 0.2, &mut notes);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(notes.len(), 1);
+    }
+
+    #[test]
+    fn regression_is_direction_aware() {
+        let base = doc(
+            "[{\"metric\":\"tps\",\"value\":100,\"higher_is_better\":true},\
+              {\"metric\":\"lat_ms\",\"value\":50,\"higher_is_better\":false}]",
+        );
+        // tps down 30% -> fail; lat up 10% -> fine.
+        let cand = doc(
+            "[{\"metric\":\"tps\",\"value\":70,\"higher_is_better\":true},\
+              {\"metric\":\"lat_ms\",\"value\":55,\"higher_is_better\":false}]",
+        );
+        let failures = check_pair("f", &base, &cand, 0.2, &mut Vec::new());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("tps regressed"), "{}", failures[0]);
+        // Improvements never fail, in either direction.
+        let better = doc(
+            "[{\"metric\":\"tps\",\"value\":500,\"higher_is_better\":true},\
+              {\"metric\":\"lat_ms\",\"value\":5,\"higher_is_better\":false}]",
+        );
+        assert!(check_pair("f", &base, &better, 0.2, &mut Vec::new()).is_empty());
+        // Just inside the 20% band passes.
+        let inside = doc(
+            "[{\"metric\":\"tps\",\"value\":81,\"higher_is_better\":true},\
+              {\"metric\":\"lat_ms\",\"value\":59,\"higher_is_better\":false}]",
+        );
+        assert!(check_pair("f", &base, &inside, 0.2, &mut Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn schema_drift_is_flagged_both_ways() {
+        let base = Json::parse("{\"a\":1,\"b\":{\"c\":2},\"headline\":[]}").unwrap();
+        let missing = Json::parse("{\"a\":1,\"headline\":[]}").unwrap();
+        let mut out = Vec::new();
+        schema_diff(&base, &missing, "f", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("f.b missing"), "{}", out[0]);
+        let extra = Json::parse("{\"a\":1,\"b\":{\"c\":2},\"d\":9,\"headline\":[]}").unwrap();
+        let mut out = Vec::new();
+        schema_diff(&base, &extra, "f", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("f.d is new"), "{}", out[0]);
+        let retyped = Json::parse("{\"a\":\"one\",\"b\":{\"c\":2},\"headline\":[]}").unwrap();
+        let mut out = Vec::new();
+        schema_diff(&base, &retyped, "f", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("f.a changed type"), "{}", out[0]);
+    }
+
+    #[test]
+    fn array_elements_checked_against_first_baseline_element() {
+        let base = Json::parse("{\"runs\":[{\"d\":1,\"t\":2.5}]}").unwrap();
+        let ok = Json::parse("{\"runs\":[{\"d\":8,\"t\":0.1},{\"d\":64,\"t\":9}]}").unwrap();
+        let mut out = Vec::new();
+        schema_diff(&base, &ok, "f", &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        let bad = Json::parse("{\"runs\":[{\"d\":8}]}").unwrap();
+        let mut out = Vec::new();
+        schema_diff(&base, &bad, "f", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].contains("f.runs[0].t missing"), "{}", out[0]);
+    }
+
+    #[test]
+    fn missing_headline_metric_fails() {
+        let base = doc("[{\"metric\":\"tps\",\"value\":100,\"higher_is_better\":true}]");
+        let cand = doc("[{\"metric\":\"other\",\"value\":1,\"higher_is_better\":true}]");
+        let failures = check_pair("f", &base, &cand, 0.2, &mut Vec::new());
+        assert!(
+            failures.iter().any(|f| f.contains("`tps` missing from candidate")),
+            "{failures:?}"
+        );
+    }
+
+    #[test]
+    fn zero_baseline_skips_ratio_check() {
+        let base = doc("[{\"metric\":\"drops\",\"value\":0,\"higher_is_better\":false}]");
+        let cand = doc("[{\"metric\":\"drops\",\"value\":3,\"higher_is_better\":false}]");
+        let mut notes = Vec::new();
+        let failures = check_pair("f", &base, &cand, 0.2, &mut notes);
+        assert!(failures.is_empty(), "{failures:?}");
+        assert!(notes.iter().any(|n| n.contains("skipped ratio check")));
+    }
+}

@@ -4,6 +4,8 @@
 //! times calibrated from real PJRT runs (`ModelOps::calibrate`):
 //!
 //!   caliper worker (serial, per-tx overhead)
+//!     -> [cross-shard relay hop for the `cross_shard_frac` of traffic
+//!        arriving at a non-home ingress — one simnet link latency]
 //!     -> shard endorsers (each a single-threaded FIFO server evaluating the
 //!        model — the paper's per-peer worker thread; a tx is endorsed when
 //!        the quorum-th endorsement lands)
@@ -62,6 +64,15 @@ pub struct DesConfig {
     /// consuming no endorser time — and counted in `Report::shed`.
     /// `0` models the legacy unbounded ingress queue.
     pub pool_capacity: usize,
+    /// Fraction of transactions that arrive at a *non-home* shard ingress
+    /// (misrouted clients, failed-over gateways, shard→mainchain
+    /// checkpoints) and pay one cross-shard relay hop before joining
+    /// their home shard's pipeline. `0` models the idealized direct
+    /// router the pre-relay system assumed.
+    pub cross_shard_frac: f64,
+    /// Mean one-hop relay link latency in seconds (the `network::simnet`
+    /// `LinkLatency` mean; jittered lognormally per message).
+    pub relay_hop_s: f64,
 }
 
 impl Default for DesConfig {
@@ -81,6 +92,8 @@ impl Default for DesConfig {
             worker_overhead_s: 0.01,
             worker_cpu_contention: 0.02,
             pool_capacity: 0,
+            cross_shard_frac: 0.0,
+            relay_hop_s: 0.012,
         }
     }
 }
@@ -130,13 +143,24 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
         vec![std::collections::VecDeque::new(); cfg.shards];
 
     let mut txs: Vec<Tx> = Vec::with_capacity(wl.txs);
+    let mut relay_lat_sum = 0.0f64;
     for i in 0..wl.txs {
         let sched = i as f64 / wl.send_tps.max(1e-9);
         let w = i % worker_free.len();
         let submit = sched.max(worker_free[w]) + cfg.worker_overhead_s;
         worker_free[w] = submit;
         let shard = i % cfg.shards;
-        let arrive = submit + cfg.net_hop_s;
+        let mut arrive = submit + cfg.net_hop_s;
+
+        // Cross-shard arrivals pay one relay hop before reaching their
+        // home pool (the rng draws are gated on the knob so legacy runs
+        // replay the exact pre-relay schedules).
+        if cfg.cross_shard_frac > 0.0 && rng.next_f64() < cfg.cross_shard_frac {
+            let hop = cfg.relay_hop_s * (0.25 * rng.normal()).exp();
+            arrive += hop;
+            relay_lat_sum += hop;
+            report.forwarded += 1;
+        }
 
         // Admission control: shed instantly when the shard pool is full
         // (the client got backpressure; no endorser time is consumed).
@@ -236,6 +260,9 @@ pub fn run_des(cfg: &DesConfig, wl: &Workload, seed: u64) -> Report {
     report.duration_s = (last_completion - first_send).max(1e-9);
     report.throughput = report.succeeded as f64 / report.duration_s;
     report.latency = hist;
+    if report.forwarded > 0 {
+        report.relay_lat_ms = relay_lat_sum / report.forwarded as f64 * 1e3;
+    }
     report
 }
 
@@ -373,6 +400,39 @@ mod tests {
             serial.avg_latency(),
             parallel.avg_latency()
         );
+    }
+
+    #[test]
+    fn relay_hops_add_latency_and_are_counted() {
+        let base = cfg(2);
+        let direct = run_des(&base, &wl(200, 4.0), 13);
+        let relayed_cfg =
+            DesConfig { cross_shard_frac: 1.0, relay_hop_s: 0.5, ..base };
+        let relayed = run_des(&relayed_cfg, &wl(200, 4.0), 13);
+        assert_eq!(direct.forwarded, 0);
+        assert_eq!(direct.relay_lat_ms, 0.0);
+        assert_eq!(relayed.forwarded, 200);
+        assert!(relayed.relay_lat_ms > 300.0, "{}", relayed.relay_lat_ms);
+        assert!(
+            relayed.avg_latency() > direct.avg_latency() + 0.3,
+            "direct {:.3}s relayed {:.3}s",
+            direct.avg_latency(),
+            relayed.avg_latency()
+        );
+        // Relayed runs replay exactly under a fixed seed too.
+        let again = run_des(&relayed_cfg, &wl(200, 4.0), 13);
+        assert_eq!(again.forwarded, relayed.forwarded);
+        assert!((again.relay_lat_ms - relayed.relay_lat_ms).abs() < 1e-12);
+        assert!((again.throughput - relayed.throughput).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_cross_shard_traffic_is_counted_proportionally() {
+        let c = DesConfig { cross_shard_frac: 0.25, ..cfg(2) };
+        let r = run_des(&c, &wl(400, 4.0), 17);
+        // ~25% forwarded (binomial; generous bounds).
+        assert!((50..=150).contains(&r.forwarded), "forwarded {}", r.forwarded);
+        assert!(r.relay_lat_ms > 0.0);
     }
 
     #[test]

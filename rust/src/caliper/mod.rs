@@ -9,7 +9,9 @@
 //! backpressure instead of unbounded queue growth. Per-reason counters come
 //! from `mempool::StatsSnapshot`; the commit-side `mvcc_conflicts` /
 //! `stale_dropped` columns and per-stage validation timings come from
-//! `fabric::ValidationSnapshot` (see `report`).
+//! `fabric::ValidationSnapshot`; the cross-shard columns (`forwarded`,
+//! `relay_lat_ms`) come from the mempool registry and relay snapshots
+//! (see `report`).
 //!
 //! Two execution backends:
 //! - [`real`]: a rate-targeted **open-loop** driver over the pipelined

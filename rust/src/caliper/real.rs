@@ -44,6 +44,10 @@ pub fn run_real(
     // gateway's orderer (drivers share one ordering service).
     let stats_base = gateways.first().map(|g| g.orderer.mempool().snapshot()).unwrap_or_default();
     let vstats_base = gateways.first().map(|g| g.orderer.validation_stats()).unwrap_or_default();
+    let relay_base = gateways
+        .first()
+        .and_then(|g| g.orderer.relay().map(|r| r.snapshot()))
+        .unwrap_or_default();
     let started = Instant::now();
     let next = AtomicUsize::new(0);
     let in_flight = AtomicUsize::new(0);
@@ -170,6 +174,18 @@ pub fn run_real(
     if let Some(gw) = gateways.first() {
         let stats = gw.orderer.mempool().snapshot();
         report.stale_dropped = (stats.stale_shed() - stats_base.stale_shed()) as usize;
+        report.forwarded = (stats.forwarded - stats_base.forwarded) as usize;
+        if let Some(relay) = gw.orderer.relay() {
+            // Delta from the run's start, like every other column: a
+            // reused ordering service must not leak earlier workloads'
+            // hop latencies into this report.
+            let snap = relay.snapshot();
+            let hops = snap.delivered - relay_base.delivered;
+            if hops > 0 {
+                let us = snap.hop_latency_us - relay_base.hop_latency_us;
+                report.relay_lat_ms = us as f64 / 1e3 / hops as f64;
+            }
+        }
         let vstats = gw.orderer.validation_stats();
         report.prevalidate_s = vstats.prevalidate_s() - vstats_base.prevalidate_s();
         report.apply_s = vstats.apply_s() - vstats_base.apply_s();

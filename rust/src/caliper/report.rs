@@ -13,6 +13,11 @@
 //! at commit), `stale_dropped` (transactions shed by admission/pull-time
 //! MVCC hinting before ordering), and the per-stage validation wall times
 //! (`prevalidate_s` / `apply_s`) from `fabric::ValidationSnapshot`.
+//!
+//! Since the cross-shard relay landed, reports carry its columns too:
+//! `forwarded` (transactions that entered at a non-home shard ingress and
+//! hopped to their home pool) and `relay_lat_ms` (mean simnet link
+//! latency paid per delivered hop).
 
 use crate::util::histogram::Histogram;
 use crate::util::json::Json;
@@ -38,6 +43,12 @@ pub struct Report {
     /// admission rejects (`Reject::StaleReadSet`) plus pull-time drops.
     /// Each one is an `MvccConflict` that never cost consensus bandwidth.
     pub stale_dropped: usize,
+    /// Transactions that entered at a non-home shard ingress and were
+    /// forwarded to their home pool over the cross-shard relay.
+    pub forwarded: usize,
+    /// Mean relay link latency per delivered hop, in milliseconds (0 when
+    /// nothing was forwarded or the backend has no relay).
+    pub relay_lat_ms: f64,
     /// Wall time spent in the parallel pre-validation stage (seconds,
     /// summed across replicas; 0 when the backend doesn't measure it).
     pub prevalidate_s: f64,
@@ -67,6 +78,8 @@ impl Report {
             shed: 0,
             mvcc_conflicts: 0,
             stale_dropped: 0,
+            forwarded: 0,
+            relay_lat_ms: 0.0,
             prevalidate_s: 0.0,
             apply_s: 0.0,
             send_tps: 0.0,
@@ -84,7 +97,7 @@ impl Report {
     /// One table row, Caliper-style.
     pub fn row(&self) -> String {
         format!(
-            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} mvcc={:<4} stale={:<4} sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s inflight={:<4}",
+            "{:<28} sent={:<5} ok={:<5} fail={:<4} shed={:<4} mvcc={:<4} stale={:<4} fwd={:<4} relayLat={:>6.1}ms sendTPS={:>7.2} tput={:>7.2} avgLat={:>7.3}s p95={:>7.3}s inflight={:<4}",
             self.name,
             self.sent,
             self.succeeded,
@@ -92,6 +105,8 @@ impl Report {
             self.shed,
             self.mvcc_conflicts,
             self.stale_dropped,
+            self.forwarded,
+            self.relay_lat_ms,
             self.send_tps,
             self.throughput,
             self.avg_latency(),
@@ -109,6 +124,8 @@ impl Report {
             .set("shed", self.shed)
             .set("mvcc_conflicts", self.mvcc_conflicts)
             .set("stale_dropped", self.stale_dropped)
+            .set("forwarded", self.forwarded)
+            .set("relay_lat_ms", self.relay_lat_ms)
             .set("prevalidate_s", self.prevalidate_s)
             .set("apply_s", self.apply_s)
             .set("send_tps", self.send_tps)
@@ -134,6 +151,8 @@ mod tests {
         r.shed = 5;
         r.mvcc_conflicts = 2;
         r.stale_dropped = 3;
+        r.forwarded = 7;
+        r.relay_lat_ms = 12.5;
         r.send_tps = 10.0;
         r.throughput = 9.0;
         r.latency.record(0.5);
@@ -143,12 +162,15 @@ mod tests {
         assert!(r.row().contains("shed=5"));
         assert!(r.row().contains("mvcc=2"));
         assert!(r.row().contains("stale=3"));
+        assert!(r.row().contains("fwd=7"));
         assert!(r.row().contains("inflight=32"));
         let j = r.to_json();
         assert_eq!(j.get("succeeded").unwrap().as_f64(), Some(90.0));
         assert_eq!(j.get("shed").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("mvcc_conflicts").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("stale_dropped").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("forwarded").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("relay_lat_ms").unwrap().as_f64(), Some(12.5));
         assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
         assert_eq!(j.get("in_flight_high_water").unwrap().as_f64(), Some(32.0));
     }

@@ -33,8 +33,8 @@ use crate::ledger::tx::{Envelope, Proposal, TxId};
 use crate::mempool::Reject;
 
 use super::orderer::OrderingService;
-use super::peer::{CommitEvent, Peer};
-use super::waiter::CommitWaiter;
+use super::peer::Peer;
+use super::waiter::{CommitWaiter, WaiterEvent};
 
 /// Outcome of a submitted transaction.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,11 +70,13 @@ enum HandleState {
     /// Outcome known already: resolved at submit time (endorsement failure,
     /// admission reject) or drained from the demux.
     Resolved(CommitOutcome),
-    /// Awaiting the commit event through the channel's demux (events come
-    /// stamped with their arrival time, so latency is measured to the
-    /// commit, not to whenever the handle gets drained). The handle keeps
-    /// the waiter (and its demux thread) alive until it resolves.
-    Pending { rx: mpsc::Receiver<(CommitEvent, Instant)>, waiter: Arc<CommitWaiter> },
+    /// Awaiting a [`WaiterEvent`] through the channel's demux — the commit
+    /// event, or a relay-drop rejection pushed by the orderer's relay
+    /// (events come stamped with their arrival time, so latency is
+    /// measured to the outcome, not to whenever the handle gets drained).
+    /// The handle keeps the waiter (and its demux thread) alive until it
+    /// resolves.
+    Pending { rx: mpsc::Receiver<WaiterEvent>, waiter: Arc<CommitWaiter> },
 }
 
 /// A submitted transaction whose commit outcome resolves asynchronously.
@@ -126,7 +128,7 @@ impl SubmitHandle {
             HandleState::Pending { rx, .. } => rx.try_recv(),
         };
         match res {
-            Ok((ev, at)) => Some(self.resolve_event(ev, at)),
+            Ok(ev) => Some(self.resolve(ev)),
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) => Some(self.resolve_dead()),
         }
@@ -141,7 +143,7 @@ impl SubmitHandle {
             HandleState::Pending { rx, .. } => rx.recv_timeout(timeout),
         };
         match res {
-            Ok((ev, at)) => self.resolve_event(ev, at),
+            Ok(ev) => self.resolve(ev),
             Err(mpsc::RecvTimeoutError::Timeout) => CommitOutcome::TimedOut,
             Err(mpsc::RecvTimeoutError::Disconnected) => self.resolve_dead(),
         }
@@ -154,10 +156,19 @@ impl SubmitHandle {
         self.wait_timeout(remaining)
     }
 
-    fn resolve_event(&mut self, ev: CommitEvent, at: Instant) -> CommitOutcome {
-        let out = CommitOutcome::Committed {
-            code: ev.code,
-            latency: at.saturating_duration_since(self.started),
+    fn resolve(&mut self, ev: WaiterEvent) -> CommitOutcome {
+        let out = match ev {
+            WaiterEvent::Committed(ev, at) => CommitOutcome::Committed {
+                code: ev.code,
+                latency: at.saturating_duration_since(self.started),
+            },
+            // The relay dropped the forwarded envelope before ordering:
+            // the transaction is dead, surface it as the same explicit
+            // backpressure an admission reject would be.
+            WaiterEvent::Dropped(reject, at) => CommitOutcome::Rejected {
+                reject,
+                latency: at.saturating_duration_since(self.started),
+            },
         };
         self.state = HandleState::Resolved(out.clone());
         out
@@ -185,6 +196,14 @@ pub struct Gateway {
     pub orderer: Arc<OrderingService>,
     /// Transaction timeout (paper: 30 s).
     pub timeout: Duration,
+    /// The shard ingress this gateway submits through. `None` routes
+    /// straight to each envelope's home pool (an idealized router);
+    /// `Some(channel)` models a client attached to one shard: envelopes
+    /// for other channels enter that shard's pool and ride the
+    /// cross-shard relay home, paying a simnet link latency per hop
+    /// (requires the orderer to run a relay — without one, submissions
+    /// fall back to direct routing).
+    pub ingress: Option<String>,
     /// One commit-event demux per channel this gateway has submitted on.
     waiters: Mutex<HashMap<String, Arc<CommitWaiter>>>,
 }
@@ -195,6 +214,7 @@ impl Gateway {
             endorsers,
             orderer,
             timeout: Duration::from_secs(30),
+            ingress: None,
             waiters: Mutex::new(HashMap::new()),
         }
     }
@@ -240,7 +260,11 @@ impl Gateway {
     }
 
     /// The channel's commit demux, created (with its single subscription)
-    /// on first use.
+    /// on first use. When the orderer runs a cross-shard relay, the demux
+    /// also registers as a relay drop sink: a transaction forwarded out of
+    /// an ingress pool and then dropped (home pool full, shutdown, …)
+    /// resolves its handle as `Rejected` instead of leaking an
+    /// eternally-pending waiter slot until the client's timeout.
     fn waiter(&self, channel: &str) -> Result<Arc<CommitWaiter>, String> {
         let mut waiters = self.waiters.lock().unwrap();
         if let Some(w) = waiters.get(channel) {
@@ -252,6 +276,12 @@ impl Gateway {
             .ok_or_else(|| "gateway has no endorsers".to_string())?
             .subscribe(channel)?;
         let w = Arc::new(CommitWaiter::start(channel, sub));
+        if let Some(relay) = self.orderer.relay() {
+            // Registered weakly: the sink must not keep the waiter (and
+            // its demux thread) alive after the gateway and all handles
+            // are gone — the relay prunes dead entries on its own.
+            relay.on_drop(Arc::downgrade(&w));
+        }
         waiters.insert(channel.to_string(), Arc::clone(&w));
         Ok(w)
     }
@@ -296,7 +326,7 @@ impl Gateway {
                 CommitOutcome::Rejected { reject: Reject::Duplicate, latency: started.elapsed() };
             return SubmitHandle::resolved(tx_id, started, timeout, out);
         };
-        if let Err(reject) = self.orderer.submit(envelope) {
+        if let Err(reject) = self.orderer.submit_from(self.ingress.as_deref(), envelope) {
             waiter.deregister(&tx_id);
             let out = CommitOutcome::Rejected { reject, latency: started.elapsed() };
             return SubmitHandle::resolved(tx_id, started, timeout, out);
@@ -695,6 +725,118 @@ mod tests {
         let stats = gw.orderer.mempool().snapshot();
         assert_eq!(stats.stale_read_set, 1);
         assert_eq!(stats.stale_shed(), 1);
+    }
+
+    /// A gateway bound to a foreign shard's ingress: its submissions ride
+    /// the cross-shard relay home.
+    fn relay_gateway(cfg: OrdererConfig) -> (Vec<Arc<Peer>>, Gateway) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(31);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
+        }
+        let orderer = OrderingService::start(cfg, peers.clone(), 31);
+        let mut gw = Gateway::new(peers.clone(), orderer);
+        gw.ingress = Some("edge".into());
+        (peers, gw)
+    }
+
+    fn relay_orderer_cfg() -> OrdererConfig {
+        OrdererConfig {
+            batch_timeout: Duration::from_millis(10),
+            tick: Duration::from_millis(1),
+            relay: Some(crate::mempool::RelayConfig {
+                base_latency: Duration::from_millis(4),
+                latency_spread: Duration::from_millis(4),
+                jitter: Duration::from_millis(1),
+                seed: 8,
+            }),
+            ..OrdererConfig::default()
+        }
+    }
+
+    #[test]
+    fn forwarded_submission_resolves_through_handle() {
+        let (peers, gw) = relay_gateway(relay_orderer_cfg());
+        let out = gw.submit(&prop("Put", "far", 1)).wait();
+        assert!(out.is_valid(), "{out:?}");
+        assert_eq!(peers[0].channel("ch").unwrap().query("far"), Some(b"v".to_vec()));
+        let stats = gw.orderer.mempool().snapshot();
+        assert_eq!(stats.forwarded, 1, "rode the relay, not the direct router");
+        assert_eq!(gw.orderer.relay().unwrap().snapshot().delivered, 1);
+    }
+
+    /// Regression for the Subscription/CommitWaiter leak: a transaction
+    /// forwarded out of an ingress pool and then dropped by the relay
+    /// (home pool full) must resolve its originating handle promptly as
+    /// `Rejected` — not pend until the 30 s gateway timeout with a leaked
+    /// waiter slot.
+    #[test]
+    fn relay_dropped_forward_resolves_handle() {
+        use crate::mempool::{MempoolConfig, MempoolRegistry};
+        // Home lane capacity 1 and no consensus bandwidth: whatever is in
+        // the home pool stays there, so the forwarded tx finds it full.
+        let mempool =
+            MempoolRegistry::new(MempoolConfig { lane_capacity: 1, ..Default::default() });
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(37);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+            p.install_chaincode("ch", Arc::new(PutOrFail)).unwrap();
+        }
+        let cfg = OrdererConfig {
+            batch_size: 1000,
+            batch_timeout: Duration::from_secs(60),
+            min_block_interval: Duration::from_secs(60),
+            tick: Duration::from_millis(1),
+            relay: relay_orderer_cfg().relay,
+            ..OrdererConfig::default()
+        };
+        let orderer = OrderingService::start_with_mempool(cfg, peers.clone(), 37, mempool);
+        // Occupy the home lane directly.
+        let filler_rw = peers[0].endorse(&prop("Put", "filler", 1)).unwrap().0;
+        let filler = crate::ledger::tx::Envelope {
+            proposal: prop("Put", "filler", 1),
+            rw_set: filler_rw,
+            endorsements: Vec::new(),
+        };
+        orderer.submit(filler).unwrap();
+
+        let mut gw = Gateway::new(peers.clone(), orderer);
+        gw.ingress = Some("edge".into());
+        gw.timeout = Duration::from_secs(30);
+        let started = Instant::now();
+        let h = gw.submit(&prop("Put", "doomed", 2));
+        assert!(h.is_pending(), "forward accepted at ingress, outcome pends");
+        let out = h.wait();
+        assert!(
+            matches!(out, CommitOutcome::Rejected { reject: Reject::PoolFull, .. }),
+            "{out:?}"
+        );
+        assert!(
+            started.elapsed() < Duration::from_secs(10),
+            "resolved by the relay drop, not the gateway timeout"
+        );
+        // The waiter slot was released — no leak.
+        assert_eq!(gw.in_flight(), 0);
+        let stats = gw.orderer.mempool().snapshot();
+        assert_eq!(stats.forwarded, 1);
+        assert_eq!(stats.relay_dropped, 1);
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! [`gateway::Gateway::submit`] returns a [`gateway::SubmitHandle`] and the
 //! per-channel [`waiter::CommitWaiter`] demux routes each commit event to
 //! the one handle awaiting it — thousands of transactions stay in flight
-//! per channel over a single commit-event subscription.
+//! per channel over a single commit-event subscription. A gateway bound
+//! to a shard ingress ([`gateway::Gateway::ingress`]) submits through
+//! that shard's pool; envelopes homed elsewhere ride the orderer's
+//! cross-shard relay (`crate::mempool::relay`), and relay losses resolve
+//! the handle through [`waiter::WaiterEvent::Dropped`].
 //!
 //! Channels model shards (paper §4): one channel per shard plus the
 //! mainchain channel every peer joins.
@@ -42,4 +46,4 @@ pub use gateway::{CommitOutcome, Gateway, SubmitHandle};
 pub use orderer::{OrdererConfig, OrderingService};
 pub use peer::{CommitEvent, Peer, PeerChannel, Subscription};
 pub use validator::{BlockValidator, ValidationSnapshot};
-pub use waiter::CommitWaiter;
+pub use waiter::{CommitWaiter, WaiterEvent};

@@ -19,6 +19,14 @@
 //! wires each channel's mempool to a replica's read-version oracle, so
 //! admission can shed transactions that are already guaranteed to fail
 //! MVCC at commit.
+//!
+//! With [`OrdererConfig::relay`] set, the driver also runs the
+//! cross-shard relay (`crate::mempool::relay`): gateways bound to a shard
+//! ingress ([`OrderingService::submit_from`]) feed misrouted and
+//! checkpoint traffic into that shard's pool, and the driver pumps due
+//! hops into their home pools at the top of every tick — each hop priced
+//! by a `network::simnet` link latency — so batch pulls and block cutting
+//! see realistic cross-shard arrival skew.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -30,7 +38,8 @@ use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::ConsensusNode;
 use crate::ledger::state::StateView;
 use crate::ledger::tx::Envelope;
-use crate::mempool::{MempoolConfig, MempoolRegistry, Reject};
+use crate::mempool::{MempoolConfig, MempoolRegistry, Reject, Relay, RelayConfig};
+use crate::util::clock::SystemClock;
 use crate::util::prng::Prng;
 
 use super::peer::Peer;
@@ -69,6 +78,13 @@ pub struct OrdererConfig {
     /// commit (1 = verify inline on the committer thread; the cross-peer
     /// verdict cache is shared either way).
     pub validation_workers: usize,
+    /// Cross-shard relay between the per-channel pools. `Some` lets
+    /// gateways bind to a shard ingress (`Gateway::ingress`): misrouted
+    /// envelopes and shard-produced checkpoint traffic hop to their home
+    /// pool over per-link simnet latencies, pumped by the driver each
+    /// tick so batch pulls see the skewed arrivals. `None` keeps the
+    /// idealized direct router.
+    pub relay: Option<RelayConfig>,
 }
 
 impl Default for OrdererConfig {
@@ -82,6 +98,7 @@ impl Default for OrdererConfig {
             consensus: ConsensusKind::Raft,
             tick: Duration::from_millis(2),
             validation_workers: 1,
+            relay: None,
         }
     }
 }
@@ -95,6 +112,8 @@ pub struct OrderingService {
     blocks_cut: Arc<AtomicU64>,
     /// Shared two-stage validator: worker pool + cross-peer verdict cache.
     validator: Arc<BlockValidator>,
+    /// Cross-shard relay, pumped by the driver (None = direct routing).
+    relay: Option<Arc<Relay>>,
 }
 
 impl OrderingService {
@@ -121,6 +140,10 @@ impl OrderingService {
         let shutdown = Arc::new(AtomicBool::new(false));
         let blocks_cut = Arc::new(AtomicU64::new(0));
         let validator = Arc::new(BlockValidator::new(cfg.validation_workers));
+        let relay = cfg
+            .relay
+            .clone()
+            .map(|rc| Relay::new(Arc::clone(&mempool), rc, SystemClock::shared()));
 
         // Admission-side MVCC hinting: wire every already-joined channel
         // now (covers state seeded by direct `commit_batch` before the
@@ -164,6 +187,7 @@ impl OrderingService {
         let driver = {
             let mempool = Arc::clone(&mempool);
             let stop = Arc::clone(&shutdown);
+            let relay = relay.clone();
             thread::Builder::new()
                 .name("orderer".into())
                 .spawn(move || {
@@ -176,12 +200,12 @@ impl OrderingService {
                                     Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64))
                                 })
                                 .collect();
-                            driver(cfg, mempool, stop, commit_tx, nodes)
+                            driver(cfg, mempool, stop, commit_tx, relay, nodes)
                         }
                         ConsensusKind::Pbft => {
                             let nodes: Vec<Pbft> =
                                 (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
-                            driver(cfg, mempool, stop, commit_tx, nodes)
+                            driver(cfg, mempool, stop, commit_tx, relay, nodes)
                         }
                     }
                 })
@@ -195,16 +219,34 @@ impl OrderingService {
             committer: Some(committer),
             blocks_cut,
             validator,
+            relay,
         })
     }
 
-    /// Submit an endorsed envelope for ordering. `Err` is explicit
-    /// backpressure from admission control — the envelope was *not* queued.
+    /// Submit an endorsed envelope for ordering, routed straight to its
+    /// home channel's pool. `Err` is explicit backpressure from admission
+    /// control — the envelope was *not* queued.
     pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
+        self.submit_from(None, env)
+    }
+
+    /// Submit through a shard's ingress pool. With a relay running and
+    /// `ingress` set, an envelope whose home channel differs from the
+    /// ingress is admitted for forwarding and hops home over a simnet
+    /// link latency; otherwise this is [`OrderingService::submit`].
+    pub fn submit_from(&self, ingress: Option<&str>, env: Envelope) -> Result<(), Reject> {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(Reject::Shutdown);
         }
-        self.mempool.submit(env)
+        match (&self.relay, ingress) {
+            (Some(relay), Some(local)) => relay.ingress(local, env),
+            _ => self.mempool.submit(env),
+        }
+    }
+
+    /// The cross-shard relay, when configured.
+    pub fn relay(&self) -> Option<&Arc<Relay>> {
+        self.relay.as_ref()
     }
 
     /// The ingress pools (per-channel policies, reject/overflow counters).
@@ -235,6 +277,12 @@ impl Drop for OrderingService {
         self.mempool.close_all();
         if let Some(h) = self.driver.take() {
             let _ = h.join();
+        }
+        // The driver has stopped pumping: flush in-flight relay hops as
+        // Shutdown drops so no submit handle pends forever on a hop that
+        // will never land.
+        if let Some(relay) = &self.relay {
+            relay.close();
         }
         // The driver owned the commit sender; once it exits the committer
         // drains the channel and stops.
@@ -325,6 +373,7 @@ fn driver<C: ConsensusNode>(
     mempool: Arc<MempoolRegistry>,
     shutdown: Arc<AtomicBool>,
     commit_tx: mpsc::Sender<(String, Vec<Envelope>)>,
+    relay: Option<Arc<Relay>>,
     mut nodes: Vec<C>,
 ) {
     let start = Instant::now();
@@ -341,6 +390,13 @@ fn driver<C: ConsensusNode>(
         }
         thread::sleep(cfg.tick);
         let now = start.elapsed().as_secs_f64();
+
+        // Deliver due cross-shard hops into their home pools *before*
+        // batch pulls: block cutting sees relayed arrivals at their
+        // latency-skewed times, not whenever a client happened to submit.
+        if let Some(relay) = &relay {
+            relay.pump();
+        }
 
         // Consensus housekeeping: ticks + instant message exchange.
         let mut inbox: Vec<(usize, usize, C::Msg)> = Vec::new();
@@ -770,5 +826,119 @@ mod tests {
         let env = endorsed_envelope(&peers, 7);
         orderer.submit(env.clone()).unwrap();
         assert_eq!(orderer.submit(env), Err(Reject::Duplicate));
+    }
+
+    /// Two-channel topology with the cross-shard relay enabled.
+    fn relay_network(
+        cfg: OrdererConfig,
+    ) -> (Vec<Arc<Peer>>, Arc<OrderingService>) {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(23);
+        let peers: Vec<Arc<Peer>> = (0..2)
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for p in &peers {
+            for ch in ["cha", "chb", "mainchain"] {
+                p.join_channel(ch, EndorsementPolicy::MajorityOf(members.clone()));
+                p.install_chaincode(ch, Arc::new(PutAs("kv"))).unwrap();
+                p.install_chaincode(ch, Arc::new(PutAs("catalyst"))).unwrap();
+            }
+        }
+        let orderer = OrderingService::start(cfg, peers.clone(), 23);
+        (peers, orderer)
+    }
+
+    fn relay_cfg() -> OrdererConfig {
+        OrdererConfig {
+            batch_timeout: Duration::from_millis(10),
+            tick: Duration::from_millis(1),
+            relay: Some(crate::mempool::RelayConfig {
+                base_latency: Duration::from_millis(5),
+                latency_spread: Duration::from_millis(5),
+                jitter: Duration::from_millis(1),
+                seed: 3,
+            }),
+            ..OrdererConfig::default()
+        }
+    }
+
+    /// The end-to-end acceptance path: an envelope submitted at the wrong
+    /// shard's ingress hops home over the relay (paying its link latency)
+    /// and commits exactly once on its home channel.
+    #[test]
+    fn misrouted_submission_relays_home_and_commits_once() {
+        let (peers, orderer) = relay_network(relay_cfg());
+        // Subscribe on the last replica the committer serves, so the event
+        // implies every earlier replica already applied the block.
+        let rx = peers[1].subscribe("cha").unwrap();
+        let env = endorsed_envelope_on(&peers, "cha", "kv", 1);
+        let tx_id = env.tx_id();
+        // Enters at chb's pool; its home is cha.
+        orderer.submit_from(Some("chb"), env).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(10)).expect("relayed commit");
+        assert_eq!(ev.tx_id, tx_id);
+        assert_eq!(ev.code, ValidationCode::Valid);
+        // Forwarded once, delivered once, committed once — on cha only.
+        let relay = orderer.relay().expect("relay configured");
+        let snap = relay.snapshot();
+        assert_eq!(snap.forwarded, 1);
+        assert_eq!(snap.delivered, 1);
+        assert_eq!(snap.dropped + snap.deduped, 0);
+        assert!(snap.mean_hop_latency_s() >= 0.004, "{}", snap.mean_hop_latency_s());
+        let stats = orderer.mempool().snapshot();
+        assert_eq!(stats.forwarded, 1);
+        assert_eq!(stats.txs_ordered, 1);
+        for p in &peers {
+            assert_eq!(p.channel("cha").unwrap().scan("kv-k").len(), 1);
+            assert_eq!(p.channel("chb").unwrap().height(), 0);
+        }
+    }
+
+    /// A shard-produced catalyst/checkpoint transaction entering at the
+    /// shard's ingress is relayed to the mainchain channel as a
+    /// first-class cross-shard message and commits there exactly once.
+    #[test]
+    fn shard_checkpoint_relays_to_mainchain() {
+        let (peers, orderer) = relay_network(relay_cfg());
+        let rx = peers[1].subscribe("mainchain").unwrap();
+        let env = endorsed_envelope_on(&peers, "mainchain", "catalyst", 9);
+        let tx_id = env.tx_id();
+        orderer.submit_from(Some("cha"), env).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(10)).expect("checkpoint commit");
+        assert_eq!(ev.tx_id, tx_id);
+        assert_eq!(ev.code, ValidationCode::Valid);
+        assert_eq!(&*ev.channel, "mainchain");
+        let ingress_pool = orderer.mempool().get("cha").expect("ingress pool exists");
+        assert_eq!(ingress_pool.stats().forwarded, 1);
+        for p in &peers {
+            assert_eq!(p.channel("mainchain").unwrap().scan("catalyst-k").len(), 1);
+        }
+    }
+
+    /// The same transaction gossiped through two ingress pools commits
+    /// exactly once (home-pool dedup), and both routes account for it.
+    #[test]
+    fn gossiped_duplicate_commits_exactly_once() {
+        let (peers, orderer) = relay_network(relay_cfg());
+        let rx = peers[1].subscribe("cha").unwrap();
+        let env = endorsed_envelope_on(&peers, "cha", "kv", 4);
+        orderer.submit_from(Some("chb"), env.clone()).unwrap();
+        orderer.submit_from(Some("mainchain"), env).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+        assert_eq!(ev.code, ValidationCode::Valid);
+        // No second commit event for the deduped copy.
+        assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
+        let snap = orderer.relay().unwrap().snapshot();
+        assert_eq!(snap.forwarded, 2);
+        assert_eq!(snap.delivered, 1);
+        assert_eq!(snap.deduped, 1);
+        assert_eq!(snap.dropped, 0);
+        for p in &peers {
+            assert_eq!(p.channel("cha").unwrap().scan("kv-k").len(), 1);
+        }
     }
 }

@@ -11,6 +11,14 @@
 //! their envelope reaches the orderer — a commit can never race past its
 //! waiter — and deregister on drop, so the table is sized by in-flight
 //! transactions only.
+//!
+//! A waiter can resolve through two doors, both carried by
+//! [`WaiterEvent`]: the channel's commit event (the demux thread), or a
+//! [`CommitWaiter::reject`] pushed by the cross-shard relay when a
+//! forwarded envelope is dropped before ordering. Without the second
+//! door, a handle whose transaction died in the relay would pend until
+//! its timeout with no event ever arriving — the `Subscription` /
+//! `CommitWaiter` slot leak the relay work exposed.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -19,16 +27,26 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::ledger::tx::TxId;
+use crate::mempool::Reject;
 
 use super::peer::{CommitEvent, Subscription};
 
 /// How often the demux thread re-checks the shutdown flag while idle.
 const IDLE_TICK: Duration = Duration::from_millis(25);
 
+/// What resolves a registered waiter. Events are stamped with their
+/// routing time so latency measurements reflect when the outcome *landed*,
+/// not when the handle was drained.
+pub enum WaiterEvent {
+    /// The transaction committed (any validation code).
+    Committed(CommitEvent, Instant),
+    /// The transaction died before ordering: the relay dropped its
+    /// forwarded envelope (home pool full, rate capped, shutdown, …).
+    Dropped(Reject, Instant),
+}
+
 struct WaiterTable {
-    /// Events are stamped with their routing time so latency measurements
-    /// reflect when the commit *landed*, not when the handle was drained.
-    waiters: Mutex<HashMap<TxId, mpsc::Sender<(CommitEvent, Instant)>>>,
+    waiters: Mutex<HashMap<TxId, mpsc::Sender<WaiterEvent>>>,
     high_water: AtomicUsize,
     shutdown: AtomicBool,
 }
@@ -67,7 +85,7 @@ impl CommitWaiter {
                         // ids (handle dropped, other gateways' traffic) are
                         // discarded without cloning further.
                         if let Some(tx) = table.waiters.lock().unwrap().remove(&ev.tx_id) {
-                            let _ = tx.send((ev, Instant::now()));
+                            let _ = tx.send(WaiterEvent::Committed(ev, Instant::now()));
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -81,7 +99,7 @@ impl CommitWaiter {
     /// Register a waiter for `tx_id`; must happen before the envelope is
     /// handed to the orderer. `None` means the tx is already awaited
     /// through this demux (a duplicate in-flight submission).
-    pub fn register(&self, tx_id: TxId) -> Option<mpsc::Receiver<(CommitEvent, Instant)>> {
+    pub fn register(&self, tx_id: TxId) -> Option<mpsc::Receiver<WaiterEvent>> {
         let (tx, rx) = mpsc::channel();
         let mut waiters = self.shared.waiters.lock().unwrap();
         if waiters.contains_key(&tx_id) {
@@ -96,6 +114,19 @@ impl CommitWaiter {
     /// before the commit event arrived).
     pub fn deregister(&self, tx_id: &TxId) {
         self.shared.waiters.lock().unwrap().remove(tx_id);
+    }
+
+    /// Resolve a waiter with a pre-ordering failure (relay drop): the
+    /// handle sees `CommitOutcome::Rejected` instead of pending until its
+    /// timeout. Returns whether a waiter was registered for `tx_id`.
+    pub fn reject(&self, tx_id: &TxId, reject: Reject) -> bool {
+        match self.shared.waiters.lock().unwrap().remove(tx_id) {
+            Some(tx) => {
+                let _ = tx.send(WaiterEvent::Dropped(reject, Instant::now()));
+                true
+            }
+            None => false,
+        }
     }
 
     /// Transactions currently awaiting their commit event.
@@ -115,5 +146,14 @@ impl Drop for CommitWaiter {
         // tick, drops its subscription (pruning the peer listener), and
         // exits; teardown never blocks submitters.
         self.shared.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The relay's drop-notification door: a forwarded transaction whose last
+/// in-flight copy died resolves its waiter as `Rejected` (the gateway
+/// registers each waiter with the orderer's relay, weakly).
+impl crate::mempool::relay::RelayDropSink for CommitWaiter {
+    fn relay_dropped(&self, tx_id: &TxId, reject: Reject) {
+        self.reject(tx_id, reject);
     }
 }

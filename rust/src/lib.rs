@@ -22,7 +22,12 @@
 //! pulls size-and-byte-bounded batches from the pools fairly round-robin
 //! across channels, so batch cutting, consensus, and block validation
 //! overlap and thousands of transactions ride in flight without a thread
-//! each.
+//! each. Pools are also linked by a cross-shard relay (`mempool::relay`):
+//! a gateway bound to one shard's ingress can submit traffic homed
+//! anywhere — misrouted model updates and shard→mainchain checkpoints hop
+//! to their home pool over per-link `network::simnet` latencies, pumped
+//! by the orderer driver so block cutting sees the arrival skew, with
+//! home-pool dedup guaranteeing exactly-once commit.
 //!
 //! **Commit path** (`fabric::validator` + `fabric::peer`): block
 //! validation is a two-stage pipeline — parallel endorsement-policy /

@@ -25,14 +25,28 @@
 //!    queued are dropped at batch pull (`stale_dropped`) — versions only
 //!    move forward, so both are `MvccConflict`s shed before consensus
 //!    spends bandwidth on them.
+//! 5. **Cross-shard relay / gossip** ([`relay`]): each shard's pool is an
+//!    ingress point for *any* traffic, not just its own channel's. A
+//!    transaction arriving at the wrong shard (misrouted client,
+//!    failed-over gateway) passes the local pool's forwarding admission
+//!    ([`ShardMempool::admit_forward`]) and hops to its home pool over a
+//!    `network::simnet` link latency; shard-produced checkpoint/catalyst
+//!    transactions reach the mainchain pool the same way. Dedup at the
+//!    home pool makes a transaction gossiped through several ingress
+//!    pools commit exactly once; relay losses resolve the originating
+//!    `SubmitHandle` through the gateway's drop sinks and are counted as
+//!    `forwarded` / `relay_dropped` in [`stats`].
 //!
 //! One [`ShardMempool`] serves one channel (shard chains + the mainchain);
-//! a [`MempoolRegistry`] routes by channel and aggregates counters.
+//! a [`MempoolRegistry`] routes by channel and aggregates counters; one
+//! [`Relay`] spans a registry's pools and is pumped by the orderer driver.
 
 pub mod admission;
 pub mod pool;
+pub mod relay;
 pub mod stats;
 
 pub use admission::{Reject, TokenBucket};
 pub use pool::{encoded_len, Lane, MempoolConfig, MempoolRegistry, ShardMempool};
+pub use relay::{Relay, RelayConfig, RelayDropSink, RelaySnapshot};
 pub use stats::{MempoolStats, StatsSnapshot};

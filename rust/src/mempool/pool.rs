@@ -252,49 +252,107 @@ impl ShardMempool {
             self.stats.note_reject(Reject::PoolFull);
             return Err(Reject::PoolFull);
         }
-        if let Some(rate) = self.cfg.rate_limit {
-            let burst = self.cfg.rate_burst.max(1.0);
-            let bucket = inner
-                .buckets
-                .entry(env.proposal.creator.0.clone())
-                .or_insert_with(|| TokenBucket::new(burst, now));
-            if !bucket.try_take(now, rate, burst) {
-                self.stats.note_reject(Reject::RateLimited);
-                return Err(Reject::RateLimited);
-            }
-        }
+        self.take_rate_token(&mut inner, &env.proposal.creator.0, now)?;
         // Signature / policy precheck (µs-scale HMAC): runs only for
         // envelopes that passed every load check, so floods shed cheaply
         // above.
-        if self.cfg.verify_endorsements {
-            if let Some(ca) = &self.ca {
-                let policy = self.policy.read().unwrap().clone();
-                match policy {
-                    Some(p) => {
-                        if !p.satisfied(&tx_id, &env.rw_set, &env.endorsements, ca) {
-                            self.stats.note_reject(Reject::PolicyUnsatisfiable);
-                            return Err(Reject::PolicyUnsatisfiable);
-                        }
-                    }
-                    None => {
-                        let payload = crate::ledger::tx::endorsement_payload(
-                            &tx_id,
-                            &env.rw_set.digest(),
-                        );
-                        let any_valid = env
-                            .endorsements
-                            .iter()
-                            .any(|e| ca.verify(&e.endorser, &payload, &e.signature));
-                        if !any_valid {
-                            self.stats.note_reject(Reject::BadSignature);
-                            return Err(Reject::BadSignature);
-                        }
-                    }
+        self.policy_precheck(&tx_id, &env)?;
+
+        let bytes = encoded_len(&env);
+        self.remember(&mut inner, tx_id);
+        inner.lanes[lane.index()]
+            .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
+        let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
+        self.stats.note_admitted(depth as u64);
+        Ok(())
+    }
+
+    /// The endorsement signature / policy precheck exactly as admission
+    /// runs it (a no-op without a CA handle or with verification off).
+    /// Takes the envelope's tx id precomputed: every caller already hashed
+    /// the envelope for dedup/routing, so the digest is never paid twice.
+    /// Public because the relay validates a forwarded envelope against its
+    /// *home* pool's policy before paying the hop — the local ingress pool
+    /// may serve a different committee. Rejections are counted on the pool
+    /// whose policy refused them.
+    pub fn policy_precheck(&self, tx_id: &TxId, env: &Envelope) -> Result<(), Reject> {
+        if !self.cfg.verify_endorsements {
+            return Ok(());
+        }
+        let Some(ca) = &self.ca else {
+            return Ok(());
+        };
+        let policy = self.policy.read().unwrap().clone();
+        match policy {
+            Some(p) => {
+                if !p.satisfied(tx_id, &env.rw_set, &env.endorsements, ca) {
+                    self.stats.note_reject(Reject::PolicyUnsatisfiable);
+                    return Err(Reject::PolicyUnsatisfiable);
+                }
+            }
+            None => {
+                let payload =
+                    crate::ledger::tx::endorsement_payload(tx_id, &env.rw_set.digest());
+                let any_valid = env
+                    .endorsements
+                    .iter()
+                    .any(|e| ca.verify(&e.endorser, &payload, &e.signature));
+                if !any_valid {
+                    self.stats.note_reject(Reject::BadSignature);
+                    return Err(Reject::BadSignature);
                 }
             }
         }
+        Ok(())
+    }
 
-        let bytes = encoded_len(&env);
+    /// Admission for an envelope this pool will hand to the relay instead
+    /// of enqueueing: it arrived at this shard's ingress but belongs to
+    /// another channel. Replay dedup and the per-client rate cap run
+    /// exactly as in [`ShardMempool::submit`] — gossip must not bypass
+    /// ingress limits — but no lane slot is consumed, and MVCC staleness
+    /// is left to the home pool (only its state view is authoritative).
+    /// Counted as `forwarded`.
+    pub fn admit_forward(&self, env: &Envelope) -> Result<(), Reject> {
+        let now = self.clock.now();
+        let tx_id = env.tx_id();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.open {
+            return Err(Reject::Shutdown);
+        }
+        self.evict_expired(&mut inner, now);
+        if inner.seen.contains(&tx_id) {
+            self.stats.note_reject(Reject::Duplicate);
+            return Err(Reject::Duplicate);
+        }
+        self.take_rate_token(&mut inner, &env.proposal.creator.0, now)?;
+        self.remember(&mut inner, tx_id);
+        self.stats.note_forwarded();
+        Ok(())
+    }
+
+    /// Debit one rate-cap token for `creator` (a no-op when the pool is
+    /// uncapped). Shared by [`ShardMempool::submit`] and
+    /// [`ShardMempool::admit_forward`] so gossip traffic can never bypass
+    /// a fix to the ingress limits.
+    fn take_rate_token(&self, inner: &mut Inner, creator: &str, now: f64) -> Result<(), Reject> {
+        let Some(rate) = self.cfg.rate_limit else {
+            return Ok(());
+        };
+        let burst = self.cfg.rate_burst.max(1.0);
+        let bucket = inner
+            .buckets
+            .entry(creator.to_string())
+            .or_insert_with(|| TokenBucket::new(burst, now));
+        if !bucket.try_take(now, rate, burst) {
+            self.stats.note_reject(Reject::RateLimited);
+            return Err(Reject::RateLimited);
+        }
+        Ok(())
+    }
+
+    /// Record an accepted tx id in the bounded replay-dedup window.
+    fn remember(&self, inner: &mut Inner, tx_id: TxId) {
         inner.seen.insert(tx_id);
         inner.seen_order.push_back(tx_id);
         while inner.seen_order.len() > self.cfg.dedup_window.max(1) {
@@ -302,11 +360,15 @@ impl ShardMempool {
                 inner.seen.remove(&old);
             }
         }
-        inner.lanes[lane.index()]
-            .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
-        let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
-        self.stats.note_admitted(depth as u64);
-        Ok(())
+    }
+
+    /// A forwarded envelope died in the relay (home pool refused it, link
+    /// dropped it): count the loss and forget the id in this pool's dedup
+    /// set so the client's resubmission is admitted, exactly as TTL expiry
+    /// and stale drops do.
+    pub(crate) fn forward_dropped(&self, tx_id: &TxId) {
+        self.stats.note_relay_dropped();
+        self.inner.lock().unwrap().seen.remove(tx_id);
     }
 
     /// Is a block due? Same cut rule the orderer used to own: pending count

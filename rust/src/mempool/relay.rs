@@ -1,0 +1,631 @@
+//! Cross-shard relay: gossip/forwarding between shard mempools.
+//!
+//! ScaleSFL's shards only scale independently if transactions can *reach*
+//! their home shard from wherever they enter the system: a client pinned
+//! to one shard's ingress still produces mainchain checkpoint traffic, a
+//! misconfigured (or failed-over) gateway submits model updates to the
+//! wrong pool, and layered designs route every shard aggregate through
+//! the mainchain. The relay makes that path explicit:
+//!
+//! - [`Relay::ingress`] is the per-shard entry point. An envelope whose
+//!   home channel (its `proposal.channel`, assigned by the `sharding`
+//!   module when proposals are built) matches the local pool is admitted
+//!   in place; anything else passes the local pool's forwarding admission
+//!   ([`admit_forward`](super::ShardMempool::admit_forward): dedup + rate
+//!   caps, no lane slot) and is scheduled one hop toward its home pool.
+//! - Every hop pays a [`LinkLatency`] sample for the `(src, dst)` link —
+//!   the `network::simnet` latency oracle — so cross-shard traffic
+//!   arrives with realistic skew relative to locally admitted load.
+//! - The ordering service's driver calls [`Relay::pump`] every tick,
+//!   delivering due envelopes into their home pools *before* batches are
+//!   pulled: block cutting sees the skewed arrivals, not an idealized
+//!   zero-latency router.
+//! - Delivery runs the home pool's full admission. `Reject::Duplicate` on
+//!   arrival means another copy of the transaction already made it home
+//!   (gossip from several ingress pools): the loser is counted as
+//!   `deduped` and the transaction still commits exactly once. Any other
+//!   rejection kills that copy: the source pool records `relay_dropped`
+//!   and forgets the id so a resubmission passes dedup, and once the
+//!   *last* in-flight copy dies — a surviving copy could still land and
+//!   commit — every registered [`RelayDropSink`] is notified so the
+//!   originating [`SubmitHandle`](crate::fabric::SubmitHandle) resolves
+//!   instead of waiting out its timeout. The last-copy check covers every
+//!   copy the relay has accepted (admission and hop insertion are atomic
+//!   under one lock); a copy a client has *not yet submitted* when the
+//!   notification fires is unknowable — its handle resolves `Rejected`
+//!   and, if that late copy goes on to commit, the client's resubmission
+//!   bounces as `Duplicate`, preserving exactly-once on chain.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use crate::ledger::tx::{Envelope, TxId};
+use crate::network::simnet::LinkLatency;
+use crate::util::clock::Clock;
+
+use super::admission::Reject;
+use super::pool::MempoolRegistry;
+
+/// Link-latency shape for the relay's hops (see [`LinkLatency`]).
+#[derive(Clone, Debug)]
+pub struct RelayConfig {
+    /// Floor latency of every inter-shard link.
+    pub base_latency: Duration,
+    /// Stable per-link spread above the floor (hashed per `(src, dst)`).
+    pub latency_spread: Duration,
+    /// Per-message jitter bound.
+    pub jitter: Duration,
+    /// Topology seed: same seed, same per-link means.
+    pub seed: u64,
+}
+
+impl Default for RelayConfig {
+    fn default() -> Self {
+        RelayConfig {
+            base_latency: Duration::from_millis(8),
+            latency_spread: Duration::from_millis(8),
+            jitter: Duration::from_millis(2),
+            seed: 0xCA11,
+        }
+    }
+}
+
+/// Receives relay drop notifications (a gateway's commit waiter, a test
+/// probe). Registered weakly ([`Relay::on_drop`]): the relay prunes a
+/// sink as soon as its owner is gone — no notification required — so
+/// rebuilt gateways never accumulate dead entries.
+pub trait RelayDropSink: Send + Sync {
+    /// The relay dropped the last in-flight copy of `tx_id` before
+    /// ordering; any handle awaiting it should resolve as `Rejected`.
+    fn relay_dropped(&self, tx_id: &TxId, reject: Reject);
+}
+
+/// Orderable f64 wrapper for the delivery heap.
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+struct Due(f64);
+
+impl Eq for Due {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Due {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN due time")
+    }
+}
+
+/// One forwarded envelope in flight between two pools.
+struct Hop {
+    sent: f64,
+    src: String,
+    tx_id: TxId,
+    env: Envelope,
+}
+
+#[derive(Default)]
+struct Inner {
+    heap: BinaryHeap<Reverse<(Due, u64)>>,
+    hops: std::collections::HashMap<u64, Hop>,
+    seq: u64,
+}
+
+/// Point-in-time relay counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RelaySnapshot {
+    /// Envelopes accepted for forwarding (one per scheduled hop).
+    pub forwarded: u64,
+    /// Hops that landed in their home pool's queue.
+    pub delivered: u64,
+    /// Hops refused as `Duplicate` at home: another copy already made it,
+    /// the transaction still commits exactly once.
+    pub deduped: u64,
+    /// Hops refused at home for any other reason — the transaction died.
+    pub dropped: u64,
+    /// Sum of the link latency paid by delivered hops, in microseconds.
+    pub hop_latency_us: u64,
+}
+
+impl RelaySnapshot {
+    /// Mean link latency per delivered hop, in seconds.
+    pub fn mean_hop_latency_s(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.hop_latency_us as f64 / 1e6 / self.delivered as f64
+        }
+    }
+}
+
+/// The cross-shard forwarding fabric between one registry's pools.
+pub struct Relay {
+    registry: Arc<MempoolRegistry>,
+    links: LinkLatency,
+    clock: Arc<dyn Clock>,
+    inner: Mutex<Inner>,
+    sinks: Mutex<Vec<Weak<dyn RelayDropSink>>>,
+    forwarded: AtomicU64,
+    delivered: AtomicU64,
+    deduped: AtomicU64,
+    dropped: AtomicU64,
+    hop_latency_us: AtomicU64,
+}
+
+impl Relay {
+    pub fn new(
+        registry: Arc<MempoolRegistry>,
+        cfg: RelayConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Arc<Relay> {
+        Arc::new(Relay {
+            registry,
+            links: LinkLatency::new(cfg.base_latency, cfg.latency_spread, cfg.jitter, cfg.seed),
+            clock,
+            inner: Mutex::new(Inner::default()),
+            sinks: Mutex::new(Vec::new()),
+            forwarded: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            deduped: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            hop_latency_us: AtomicU64::new(0),
+        })
+    }
+
+    /// The per-link latency oracle in use.
+    pub fn links(&self) -> &LinkLatency {
+        &self.links
+    }
+
+    /// Register a drop sink. Held weakly: once the owner drops its `Arc`
+    /// the entry is pruned on the next registration or notification, so
+    /// short-lived gateways cannot leak sinks into a long-lived relay.
+    pub fn on_drop(&self, sink: Weak<dyn RelayDropSink>) {
+        let mut sinks = self.sinks.lock().unwrap();
+        sinks.retain(|s| s.strong_count() > 0);
+        sinks.push(sink);
+    }
+
+    /// Submit an envelope at `local`'s ingress pool. Home traffic is
+    /// admitted in place; foreign traffic passes the local pool's
+    /// forwarding admission and is scheduled one latency-priced hop
+    /// toward its home channel. `Err` is explicit backpressure — the
+    /// envelope was neither queued nor forwarded.
+    pub fn ingress(&self, local: &str, env: Envelope) -> Result<(), Reject> {
+        let home = env.proposal.channel.clone();
+        if home == local {
+            return self.registry.pool(local).submit(env);
+        }
+        // Validate against the HOME policy before paying the hop: the
+        // local pool may serve a different committee, and forwarding a
+        // policy-dead envelope only wastes the link.
+        let tx_id = env.tx_id();
+        self.registry.pool(&home).policy_precheck(&tx_id, &env)?;
+        let local_pool = self.registry.pool(local);
+        let now = self.clock.now();
+        // Admission and hop insertion are atomic under `inner`: a
+        // concurrently pumped drop of another copy of this tx must either
+        // see this hop in flight (and stay silent) or run before this copy
+        // was accepted at all. Lock order is relay.inner -> pool.inner;
+        // the delivery path never holds a pool lock while taking `inner`.
+        let mut inner = self.inner.lock().unwrap();
+        local_pool.admit_forward(&env)?;
+        inner.seq += 1;
+        let seq = inner.seq;
+        let latency = self.links.sample_s(local, &home, seq);
+        inner.hops.insert(seq, Hop { sent: now, src: local.to_string(), tx_id, env });
+        inner.heap.push(Reverse((Due(now + latency), seq)));
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Deliver every due hop into its home pool; returns how many landed
+    /// in a queue. The ordering service calls this each driver tick, ahead
+    /// of batch pulls, so block cutting sees relayed arrivals.
+    pub fn pump(&self) -> usize {
+        let now = self.clock.now();
+        let mut landed = 0usize;
+        loop {
+            let hop = {
+                let mut inner = self.inner.lock().unwrap();
+                match inner.heap.peek() {
+                    Some(Reverse((Due(t), _))) if *t <= now => {
+                        let Reverse((_, seq)) = inner.heap.pop().expect("peeked");
+                        Some(inner.hops.remove(&seq).expect("hop payload"))
+                    }
+                    _ => None,
+                }
+            };
+            let Some(hop) = hop else { break };
+            if self.deliver(hop, now) {
+                landed += 1;
+            }
+        }
+        landed
+    }
+
+    /// Hand one arrived hop to its home pool; true when it was queued.
+    fn deliver(&self, hop: Hop, now: f64) -> bool {
+        let tx_id = hop.tx_id;
+        let home = hop.env.proposal.channel.clone();
+        let latency_us = ((now - hop.sent).max(0.0) * 1e6) as u64;
+        match self.registry.pool(&home).submit(hop.env) {
+            Ok(()) => {
+                self.delivered.fetch_add(1, Ordering::Relaxed);
+                self.hop_latency_us.fetch_add(latency_us, Ordering::Relaxed);
+                true
+            }
+            Err(Reject::Duplicate) => {
+                // Another copy of this tx already reached home (gossip from
+                // several ingress pools, or a direct submission): it will
+                // commit exactly once, and the commit event resolves every
+                // waiting handle. Not a loss.
+                self.deduped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            Err(reject) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                if let Some(src) = self.registry.get(&hop.src) {
+                    src.forward_dropped(&tx_id);
+                }
+                // Another gossiped copy of this tx may still be in flight
+                // and can land once the home pool drains — resolving the
+                // handles now would report Rejected for a transaction that
+                // later commits. Only the LAST copy's death notifies.
+                let another_in_flight =
+                    self.inner.lock().unwrap().hops.values().any(|h| h.tx_id == tx_id);
+                if !another_in_flight {
+                    self.notify_drop(&tx_id, reject);
+                }
+                false
+            }
+        }
+    }
+
+    fn notify_drop(&self, tx_id: &TxId, reject: Reject) {
+        // Every live sink sees every drop; a sink with no waiter for this
+        // id ignores it. Dead sinks (owner gone) are pruned in place.
+        self.sinks.lock().unwrap().retain(|weak| match weak.upgrade() {
+            Some(sink) => {
+                sink.relay_dropped(tx_id, reject);
+                true
+            }
+            None => false,
+        });
+    }
+
+    /// Forwarded envelopes still in flight between pools.
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().hops.len()
+    }
+
+    /// Flush every in-flight hop as a `Shutdown` drop (orderer teardown):
+    /// no handle is left eternally pending on a hop that will never land.
+    pub fn close(&self) {
+        let hops: Vec<Hop> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.heap.clear();
+            inner.hops.drain().map(|(_, h)| h).collect()
+        };
+        for hop in hops {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            if let Some(src) = self.registry.get(&hop.src) {
+                src.forward_dropped(&hop.tx_id);
+            }
+            self.notify_drop(&hop.tx_id, Reject::Shutdown);
+        }
+    }
+
+    pub fn snapshot(&self) -> RelaySnapshot {
+        RelaySnapshot {
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            delivered: self.delivered.load(Ordering::Relaxed),
+            deduped: self.deduped.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            hop_latency_us: self.hop_latency_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::msp::MemberId;
+    use crate::fabric::endorsement::EndorsementPolicy;
+    use crate::ledger::block::ValidationCode;
+    use crate::ledger::tx::{Proposal, RwSet};
+    use crate::mempool::MempoolConfig;
+    use crate::util::clock::VirtualClock;
+
+    /// Test sink: records every notification it receives.
+    #[derive(Default)]
+    struct RecordSink(Mutex<Vec<(TxId, Reject)>>);
+
+    impl RelayDropSink for RecordSink {
+        fn relay_dropped(&self, tx_id: &TxId, reject: Reject) {
+            self.0.lock().unwrap().push((*tx_id, reject));
+        }
+    }
+
+    impl RecordSink {
+        fn drops(&self) -> Vec<(TxId, Reject)> {
+            self.0.lock().unwrap().clone()
+        }
+    }
+
+    fn envelope(channel: &str, key: &str, nonce: u64) -> Envelope {
+        Envelope {
+            proposal: Proposal {
+                channel: channel.into(),
+                chaincode: "kv".into(),
+                function: "Put".into(),
+                args: vec![key.into()],
+                creator: MemberId::new("client"),
+                nonce,
+            },
+            rw_set: RwSet::default(),
+            endorsements: Vec::new(),
+        }
+    }
+
+    fn fixture(cfg: MempoolConfig) -> (Arc<MempoolRegistry>, Arc<Relay>, Arc<VirtualClock>) {
+        let clock = Arc::new(VirtualClock::new());
+        let registry = MempoolRegistry::with_parts(
+            cfg,
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            None,
+        );
+        let relay = Relay::new(
+            Arc::clone(&registry),
+            RelayConfig::default(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        (registry, relay, clock)
+    }
+
+    /// Advance past any possible link latency and deliver.
+    fn settle(relay: &Relay, clock: &VirtualClock) -> usize {
+        clock.advance(Duration::from_secs_f64(relay.links().max_s() + 1e-6));
+        relay.pump()
+    }
+
+    #[test]
+    fn home_traffic_is_admitted_in_place() {
+        let (registry, relay, _clock) = fixture(MempoolConfig::default());
+        relay.ingress("shard0", envelope("shard0", "k", 1)).unwrap();
+        assert_eq!(registry.pool("shard0").pending(), 1);
+        assert_eq!(relay.in_flight(), 0);
+        assert_eq!(relay.snapshot().forwarded, 0);
+        assert_eq!(registry.snapshot().forwarded, 0);
+    }
+
+    #[test]
+    fn foreign_traffic_pays_a_link_latency_hop() {
+        let (registry, relay, clock) = fixture(MempoolConfig::default());
+        relay.ingress("shard1", envelope("shard0", "k", 1)).unwrap();
+        // Forwarded, not queued locally — and not home yet.
+        assert_eq!(registry.pool("shard1").pending(), 0);
+        assert_eq!(registry.pool("shard0").pending(), 0);
+        assert_eq!(relay.in_flight(), 1);
+        assert_eq!(registry.pool("shard1").stats().forwarded, 1);
+        // The link floor is 8 ms: pumping before that delivers nothing.
+        clock.advance(Duration::from_millis(7));
+        assert_eq!(relay.pump(), 0);
+        assert_eq!(settle(&relay, &clock), 1);
+        assert_eq!(registry.pool("shard0").pending(), 1);
+        let snap = relay.snapshot();
+        assert_eq!(snap.delivered, 1);
+        assert!(snap.mean_hop_latency_s() >= 0.008, "{}", snap.mean_hop_latency_s());
+    }
+
+    #[test]
+    fn gossip_from_many_pools_commits_exactly_once() {
+        // The dedup property, concurrently: one tx injected at k ingress
+        // pools (home included) lands in the home queue exactly once and
+        // commits exactly once; every counter reconciles.
+        let k = 4usize;
+        let (registry, relay, clock) = fixture(MempoolConfig::default());
+        let env = envelope("shard0", "ctr", 9);
+        let results: Vec<Result<(), Reject>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..k)
+                .map(|i| {
+                    let relay = Arc::clone(&relay);
+                    let env = env.clone();
+                    s.spawn(move || relay.ingress(&format!("shard{i}"), env))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("ingress panicked")).collect()
+        });
+        // Every ingress accepted it: its own pool had never seen the id.
+        for r in &results {
+            assert_eq!(*r, Ok(()));
+        }
+        settle(&relay, &clock);
+        // Exactly one copy in the home queue; the k-1 forwards deduped.
+        let batch = registry.pool("shard0").take_batch(16, 0);
+        assert_eq!(batch.len(), 1);
+        let snap = relay.snapshot();
+        assert_eq!(snap.forwarded, (k - 1) as u64);
+        assert_eq!(snap.delivered + snap.deduped, (k - 1) as u64);
+        assert_eq!(snap.dropped, 0);
+        let stats = registry.snapshot();
+        assert_eq!(stats.forwarded, (k - 1) as u64);
+        assert_eq!(stats.relay_dropped, 0);
+        assert_eq!(stats.admitted, 1 + snap.delivered);
+        // ...and it commits exactly once.
+        let ca = crate::crypto::msp::CertificateAuthority::new();
+        let mut rng = crate::util::prng::Prng::new(5);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let peer = crate::fabric::Peer::new(cred, ca);
+        peer.join_channel("shard0", EndorsementPolicy::AnyOf(0, vec![]));
+        let block = peer.commit_batch("shard0", batch).unwrap();
+        let valid =
+            block.validation.iter().filter(|c| **c == ValidationCode::Valid).count();
+        assert_eq!(valid, 1);
+    }
+
+    #[test]
+    fn concurrent_distinct_forwards_all_arrive() {
+        let (registry, relay, clock) = fixture(MempoolConfig::default());
+        std::thread::scope(|s| {
+            for i in 0..16u64 {
+                let relay = Arc::clone(&relay);
+                s.spawn(move || {
+                    let src = format!("shard{}", 1 + i % 3);
+                    relay.ingress(&src, envelope("shard0", &format!("k{i}"), i)).unwrap();
+                });
+            }
+        });
+        assert_eq!(relay.in_flight(), 16);
+        assert_eq!(settle(&relay, &clock), 16);
+        assert_eq!(registry.pool("shard0").pending(), 16);
+        let snap = relay.snapshot();
+        assert_eq!(snap.forwarded, 16);
+        assert_eq!(snap.delivered, 16);
+        assert_eq!(snap.deduped + snap.dropped, 0);
+    }
+
+    #[test]
+    fn relay_drop_notifies_sinks_and_forgets_dedup() {
+        let cfg = MempoolConfig { lane_capacity: 1, ..Default::default() };
+        let (registry, relay, clock) = fixture(cfg);
+        let sink = Arc::new(RecordSink::default());
+        relay.on_drop(Arc::downgrade(&sink));
+        // Fill the home lane, then forward a second tx into the full pool.
+        registry.pool("shard0").submit(envelope("shard0", "a", 1)).unwrap();
+        let doomed = envelope("shard0", "b", 2);
+        let doomed_id = doomed.tx_id();
+        relay.ingress("shard1", doomed.clone()).unwrap();
+        settle(&relay, &clock);
+        // Dropped at home, counted on the source pool, sink notified.
+        assert_eq!(relay.snapshot().dropped, 1);
+        assert_eq!(registry.pool("shard1").stats().relay_dropped, 1);
+        assert_eq!(registry.pool("shard0").pending(), 1);
+        assert_eq!(sink.drops(), vec![(doomed_id, Reject::PoolFull)]);
+        // The source pool forgot the id: a resubmission is forwarded
+        // again, not bounced as a replay.
+        registry.pool("shard0").take_batch(16, 0);
+        relay.ingress("shard1", doomed).unwrap();
+        assert_eq!(settle(&relay, &clock), 1);
+        assert_eq!(registry.pool("shard0").pending(), 1);
+    }
+
+    #[test]
+    fn only_the_last_copys_death_notifies() {
+        // Two gossiped copies of one tx race into a full home lane in the
+        // same pump: the first drop must NOT resolve handles (the second
+        // copy was still in flight and could have landed); the second —
+        // last — drop notifies exactly once.
+        let cfg = MempoolConfig { lane_capacity: 1, ..Default::default() };
+        let (registry, relay, clock) = fixture(cfg);
+        let sink = Arc::new(RecordSink::default());
+        relay.on_drop(Arc::downgrade(&sink));
+        registry.pool("shard0").submit(envelope("shard0", "a", 1)).unwrap();
+        let gossiped = envelope("shard0", "b", 2);
+        relay.ingress("shard1", gossiped.clone()).unwrap();
+        relay.ingress("shard2", gossiped.clone()).unwrap();
+        settle(&relay, &clock);
+        assert_eq!(relay.snapshot().dropped, 2, "both copies died");
+        assert_eq!(
+            sink.drops(),
+            vec![(gossiped.tx_id(), Reject::PoolFull)],
+            "exactly one notification, from the last copy"
+        );
+    }
+
+    #[test]
+    fn dead_sinks_are_pruned_without_being_invoked() {
+        let cfg = MempoolConfig { lane_capacity: 1, ..Default::default() };
+        let (registry, relay, clock) = fixture(cfg);
+        let dead = Arc::new(RecordSink::default());
+        relay.on_drop(Arc::downgrade(&dead));
+        drop(dead);
+        // Registration prunes entries whose owner is already gone.
+        let live = Arc::new(RecordSink::default());
+        relay.on_drop(Arc::downgrade(&live));
+        assert_eq!(relay.sinks.lock().unwrap().len(), 1);
+        // Notification reaches the live sink and keeps it registered.
+        registry.pool("shard0").submit(envelope("shard0", "a", 1)).unwrap();
+        relay.ingress("shard1", envelope("shard0", "b", 2)).unwrap();
+        settle(&relay, &clock);
+        assert_eq!(relay.snapshot().dropped, 1);
+        assert_eq!(live.drops().len(), 1);
+        assert_eq!(relay.sinks.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn forward_checks_home_policy_not_local() {
+        // Registry with signature prechecks: the home pool's policy is the
+        // one that must pass, and an unsigned envelope dies at ingress —
+        // before the link is paid — not after the hop.
+        let ca = crate::crypto::msp::CertificateAuthority::new();
+        let mut rng = crate::util::prng::Prng::new(11);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let clock = Arc::new(VirtualClock::new());
+        let registry = MempoolRegistry::with_parts(
+            MempoolConfig { verify_endorsements: true, ..Default::default() },
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            Some(ca),
+        );
+        registry.set_policy("shard0", EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]));
+        let relay = Relay::new(
+            Arc::clone(&registry),
+            RelayConfig::default(),
+            Arc::clone(&clock) as Arc<dyn Clock>,
+        );
+        let unsigned = envelope("shard0", "k", 1);
+        assert_eq!(
+            relay.ingress("shard1", unsigned),
+            Err(Reject::PolicyUnsatisfiable)
+        );
+        assert_eq!(relay.in_flight(), 0);
+        assert_eq!(registry.pool("shard1").stats().forwarded, 0);
+        // A properly endorsed envelope forwards fine.
+        let mut signed = envelope("shard0", "k", 2);
+        let payload = crate::ledger::tx::endorsement_payload(
+            &signed.tx_id(),
+            &signed.rw_set.digest(),
+        );
+        signed.endorsements.push(crate::ledger::tx::Endorsement {
+            endorser: cred.member.clone(),
+            signature: cred.sign(&payload),
+        });
+        relay.ingress("shard1", signed).unwrap();
+        assert_eq!(relay.in_flight(), 1);
+    }
+
+    #[test]
+    fn close_flushes_in_flight_as_shutdown_drops() {
+        let (registry, relay, _clock) = fixture(MempoolConfig::default());
+        let sink = Arc::new(RecordSink::default());
+        relay.on_drop(Arc::downgrade(&sink));
+        let env = envelope("shard0", "k", 1);
+        let tx_id = env.tx_id();
+        relay.ingress("shard1", env).unwrap();
+        relay.close();
+        assert_eq!(relay.in_flight(), 0);
+        assert_eq!(sink.drops(), vec![(tx_id, Reject::Shutdown)]);
+        assert_eq!(registry.pool("shard1").stats().relay_dropped, 1);
+    }
+
+    #[test]
+    fn shed_and_committed_reconcile_across_shards() {
+        // Two distinct txs race into a 1-slot home lane through the relay:
+        // one lands, one is shed — and forwarded == delivered + dropped,
+        // injected == queued + deduped + dropped.
+        let cfg = MempoolConfig { lane_capacity: 1, ..Default::default() };
+        let (registry, relay, clock) = fixture(cfg);
+        relay.ingress("shard1", envelope("shard0", "x", 1)).unwrap();
+        relay.ingress("shard2", envelope("shard0", "y", 2)).unwrap();
+        settle(&relay, &clock);
+        let snap = relay.snapshot();
+        assert_eq!(snap.forwarded, 2);
+        assert_eq!(snap.delivered, 1);
+        assert_eq!(snap.dropped, 1);
+        assert_eq!(snap.deduped, 0);
+        let stats = registry.snapshot();
+        assert_eq!(stats.forwarded, 2);
+        assert_eq!(stats.relay_dropped, 1);
+        assert_eq!(stats.admitted, 1);
+        assert_eq!(registry.pool("shard0").pending(), 1);
+    }
+}

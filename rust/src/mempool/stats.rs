@@ -18,6 +18,8 @@ pub struct MempoolStats {
     policy_unsatisfiable: AtomicU64,
     stale_read_set: AtomicU64,
     stale_dropped: AtomicU64,
+    forwarded: AtomicU64,
+    relay_dropped: AtomicU64,
     expired: AtomicU64,
     batches_cut: AtomicU64,
     txs_ordered: AtomicU64,
@@ -56,6 +58,20 @@ impl MempoolStats {
         self.stale_dropped.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// An envelope was admitted at this pool's ingress but belongs to
+    /// another channel: handed to the relay for a cross-shard hop instead
+    /// of a lane slot.
+    pub fn note_forwarded(&self) {
+        self.forwarded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A forwarded envelope died in the relay (home pool refused it on
+    /// arrival, or the link dropped it) — the originating client must
+    /// resubmit.
+    pub fn note_relay_dropped(&self) {
+        self.relay_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn note_ordered(&self, txs: u64, bytes: u64) {
         self.batches_cut.fetch_add(1, Ordering::Relaxed);
         self.txs_ordered.fetch_add(txs, Ordering::Relaxed);
@@ -80,6 +96,8 @@ impl MempoolStats {
             policy_unsatisfiable: self.policy_unsatisfiable.load(Ordering::Relaxed),
             stale_read_set: self.stale_read_set.load(Ordering::Relaxed),
             stale_dropped: self.stale_dropped.load(Ordering::Relaxed),
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            relay_dropped: self.relay_dropped.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             batches_cut: self.batches_cut.load(Ordering::Relaxed),
             txs_ordered: self.txs_ordered.load(Ordering::Relaxed),
@@ -102,6 +120,12 @@ pub struct StatsSnapshot {
     pub stale_read_set: u64,
     /// Dropped at batch pull after going stale while queued.
     pub stale_dropped: u64,
+    /// Admitted at this pool's ingress and forwarded to the envelope's
+    /// home channel over a relay hop (never occupied a lane here).
+    pub forwarded: u64,
+    /// Forwarded envelopes that died in the relay instead of reaching
+    /// their home pool's queue.
+    pub relay_dropped: u64,
     pub expired: u64,
     pub batches_cut: u64,
     pub txs_ordered: u64,
@@ -143,6 +167,8 @@ impl StatsSnapshot {
         self.policy_unsatisfiable += other.policy_unsatisfiable;
         self.stale_read_set += other.stale_read_set;
         self.stale_dropped += other.stale_dropped;
+        self.forwarded += other.forwarded;
+        self.relay_dropped += other.relay_dropped;
         self.expired += other.expired;
         self.batches_cut += other.batches_cut;
         self.txs_ordered += other.txs_ordered;
@@ -160,6 +186,8 @@ impl StatsSnapshot {
             .set("rejected_policy", self.policy_unsatisfiable)
             .set("rejected_stale_read_set", self.stale_read_set)
             .set("stale_dropped", self.stale_dropped)
+            .set("forwarded", self.forwarded)
+            .set("relay_dropped", self.relay_dropped)
             .set("expired_ttl", self.expired)
             .set("batches_cut", self.batches_cut)
             .set("txs_ordered", self.txs_ordered)
@@ -185,12 +213,17 @@ mod tests {
         s.note_reject(Reject::Shutdown); // not counted
         s.note_expired();
         s.note_stale_dropped();
+        s.note_forwarded();
+        s.note_forwarded();
+        s.note_relay_dropped();
         s.note_ordered(10, 1000);
         let snap = s.snapshot();
         assert_eq!(snap.admitted, 3);
         assert_eq!(snap.shed(), 2);
         assert_eq!(snap.rejected_total(), 4);
         assert_eq!(snap.stale_shed(), 2);
+        assert_eq!(snap.forwarded, 2);
+        assert_eq!(snap.relay_dropped, 1);
         assert_eq!(snap.depth_high_water, 7);
         assert_eq!(snap.txs_ordered, 10);
         assert_eq!(snap.expired, 1);

@@ -1,7 +1,19 @@
 //! Simulated network substrate.
 //!
-//! `simnet` is the message-level transport used to drive the sans-io
-//! consensus nodes (and the fault-injection tests): per-link uniform latency,
-//! probabilistic drops, and node isolation (partitions/crashes).
+//! Two layers live here:
+//!
+//! - [`simnet::SimNet`] is the message-level transport driving the sans-io
+//!   consensus nodes and the fault-injection tests: scheduled delivery,
+//!   probabilistic drops, and node isolation (partitions/crashes).
+//! - [`simnet::LinkLatency`] is the per-link latency *oracle*: a
+//!   deterministic map from directed `(src, dst)` link names to a stable
+//!   mean plus bounded per-message jitter. It prices every hop of the
+//!   cross-shard mempool relay (`crate::mempool::relay`) — misrouted
+//!   transactions gossiping to their home shard, shard checkpoints
+//!   relaying to the mainchain. The ordering service pumps relayed
+//!   traffic each driver tick, so these latencies shape real batch-pull
+//!   arrival order, not just simulation plots.
 
 pub mod simnet;
+
+pub use simnet::{LinkLatency, SimNet};

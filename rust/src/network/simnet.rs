@@ -3,13 +3,96 @@
 //! Messages are scheduled onto a priority queue keyed by virtual delivery
 //! time; `deliver_until(now)` drains in timestamp order. Deterministic given
 //! the seed, which is what makes the consensus property tests reproducible.
+//!
+//! [`LinkLatency`] is the per-link latency *oracle*: every directed
+//! `(src, dst)` pair gets a stable mean drawn by hashing the link name
+//! under a seed, plus bounded per-message jitter. The cross-shard mempool
+//! relay (`crate::mempool::relay`) prices every forwarding hop through
+//! it, pumped by the ordering service's driver each tick.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::collections::HashSet;
+use std::time::Duration;
 
 use crate::consensus::NodeId;
 use crate::util::prng::Prng;
+
+/// Deterministic per-link latency oracle.
+///
+/// A directed link `(src, dst)` has a stable mean latency in
+/// `[base, base + spread]`, fixed by hashing the link name under `seed`
+/// (the topology: some links are simply longer than others). Each sampled
+/// message adds jitter in `[0, jitter]` derived from a caller-supplied
+/// salt, so repeated sends over one link vary but replay identically for
+/// the same salt sequence. Self-links (`src == dst`) are free.
+#[derive(Clone, Debug)]
+pub struct LinkLatency {
+    base_s: f64,
+    spread_s: f64,
+    jitter_s: f64,
+    seed: u64,
+}
+
+impl LinkLatency {
+    pub fn new(base: Duration, spread: Duration, jitter: Duration, seed: u64) -> LinkLatency {
+        LinkLatency {
+            base_s: base.as_secs_f64(),
+            spread_s: spread.as_secs_f64(),
+            jitter_s: jitter.as_secs_f64(),
+            seed,
+        }
+    }
+
+    /// An all-zero oracle: every hop is free (tests, latency-off runs).
+    pub fn zero() -> LinkLatency {
+        LinkLatency { base_s: 0.0, spread_s: 0.0, jitter_s: 0.0, seed: 0 }
+    }
+
+    /// FNV-1a over the seed and the link name.
+    fn mix(&self, src: &str, dst: &str, salt: u64) -> u64 {
+        let mut h = 0xcbf29ce484222325u64 ^ self.seed;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(src.as_bytes());
+        eat(&[0xff]);
+        eat(dst.as_bytes());
+        eat(&salt.to_le_bytes());
+        h
+    }
+
+    /// Map a hash to the unit interval.
+    fn unit(h: u64) -> f64 {
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// The link's stable mean latency in seconds (no jitter).
+    pub fn mean_s(&self, src: &str, dst: &str) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        self.base_s + Self::unit(self.mix(src, dst, 0)) * self.spread_s
+    }
+
+    /// One message's latency in seconds: the link mean plus jitter hashed
+    /// from `salt` (use a per-message sequence number).
+    pub fn sample_s(&self, src: &str, dst: &str, salt: u64) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let jitter = Self::unit(self.mix(dst, src, salt ^ 0x9e3779b97f4a7c15));
+        self.mean_s(src, dst) + jitter * self.jitter_s
+    }
+
+    /// Upper bound on any sampled latency (base + spread + jitter).
+    pub fn max_s(&self) -> f64 {
+        self.base_s + self.spread_s + self.jitter_s
+    }
+}
 
 /// Orderable f64 wrapper for the scheduling heap.
 #[derive(Clone, Copy, PartialEq, PartialOrd)]
@@ -141,6 +224,41 @@ mod tests {
         let delivered = net.deliver_until(1.0).len() as f64;
         let rate = 1.0 - delivered / 10_000.0;
         assert!((rate - 0.3).abs() < 0.03, "drop rate {rate}");
+    }
+
+    #[test]
+    fn link_oracle_is_stable_per_link_and_bounded() {
+        let links = LinkLatency::new(
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            Duration::from_millis(2),
+            42,
+        );
+        // Per-link means are stable and within [base, base + spread].
+        let m = links.mean_s("shard0", "mainchain");
+        assert_eq!(m, links.mean_s("shard0", "mainchain"));
+        assert!((0.005..=0.015).contains(&m), "mean {m}");
+        // Directed links differ (with overwhelming probability for this
+        // seed) and the topology depends on the seed.
+        let back = links.mean_s("mainchain", "shard0");
+        assert_ne!(m, back);
+        let other = LinkLatency::new(
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            Duration::from_millis(2),
+            43,
+        );
+        assert_ne!(m, other.mean_s("shard0", "mainchain"));
+        // Samples: mean + bounded jitter, reproducible per salt.
+        for salt in 0..100 {
+            let s = links.sample_s("shard0", "mainchain", salt);
+            assert!(s >= m && s <= m + 0.002 + 1e-12, "sample {s} mean {m}");
+            assert_eq!(s, links.sample_s("shard0", "mainchain", salt));
+        }
+        assert!(links.max_s() >= links.sample_s("a", "b", 7));
+        // Self-links are free; the zero oracle prices everything at 0.
+        assert_eq!(links.sample_s("shard1", "shard1", 3), 0.0);
+        assert_eq!(LinkLatency::zero().sample_s("a", "b", 1), 0.0);
     }
 
     #[test]

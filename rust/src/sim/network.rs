@@ -16,7 +16,7 @@ use crate::fabric::{EndorsementPolicy, Gateway, OrdererConfig, OrderingService, 
 use crate::fl::client::{Behavior, FlClient, LocalUpdate, TrainConfig};
 use crate::fl::datasets::{self, SynthDataset};
 use crate::fl::partition;
-use crate::mempool::{MempoolConfig, MempoolRegistry};
+use crate::mempool::{MempoolConfig, MempoolRegistry, RelayConfig};
 use crate::runtime::ops::{EvalResult, FlatParams, ModelOps};
 use crate::storage::ModelStore;
 use crate::util::prng::Prng;
@@ -134,8 +134,17 @@ pub struct ScaleSfl {
     /// Cached per-shard gateways (rebuilt only when a committee election
     /// changes the endorser set) and the mainchain gateway: their commit
     /// demuxes persist across rounds, one subscription per channel for the
-    /// whole run instead of per-round thread/listener churn.
+    /// whole run instead of per-round thread/listener churn. Each shard
+    /// gateway is bound to its own shard's ingress pool.
     shard_gateways: Vec<Arc<Gateway>>,
+    /// Per-shard gateways bound to the *neighbouring* shard's ingress:
+    /// their submissions are misrouted on purpose and gossip home over
+    /// the cross-shard relay (empty with a single shard).
+    detour_gateways: Vec<Arc<Gateway>>,
+    /// Per-shard uplinks to the mainchain: endorse with every peer (the
+    /// mainchain policy) but enter at the shard's ingress pool, so shard
+    /// aggregates reach the mainchain as relayed checkpoint messages.
+    uplink_gateways: Vec<Arc<Gateway>>,
     main_gateway: Arc<Gateway>,
     pub test_set: SynthDataset,
     pub global: FlatParams,
@@ -292,6 +301,17 @@ impl ScaleSfl {
                 // also wires each channel's mempool to a replica's state
                 // view, so stale model updates shed at admission.
                 validation_workers: 2,
+                // Cross-shard relay: misrouted model updates gossip to
+                // their home shard and shard checkpoints reach the
+                // mainchain pool over per-link simnet latencies (small
+                // ones — a LAN-scale consortium — so rounds stay fast
+                // while block cutting still sees the arrival skew).
+                relay: Some(RelayConfig {
+                    base_latency: Duration::from_millis(2),
+                    latency_spread: Duration::from_millis(3),
+                    jitter: Duration::from_millis(1),
+                    seed: cfg.seed,
+                }),
                 ..Default::default()
             },
             all_peers.clone(),
@@ -313,6 +333,8 @@ impl ScaleSfl {
             all_peers,
             orderer,
             shard_gateways: Vec::new(),
+            detour_gateways: Vec::new(),
+            uplink_gateways: Vec::new(),
             main_gateway,
             test_set,
             global,
@@ -322,9 +344,17 @@ impl ScaleSfl {
             scores: std::collections::HashMap::new(),
             committees: Vec::new(),
         };
-        let gws: Vec<Arc<Gateway>> =
-            (0..net.shards.len()).map(|s| net.make_shard_gateway(s)).collect();
-        net.shard_gateways = gws;
+        net.rebuild_shard_gateways();
+        // Uplinks never change: the mainchain endorser set is every peer.
+        let uplinks: Vec<Arc<Gateway>> = (0..net.shards.len())
+            .map(|s| {
+                let mut gw = Gateway::new(net.all_peers.clone(), Arc::clone(&net.orderer));
+                gw.timeout = net.cfg.timeout;
+                gw.ingress = Some(net.shards[s].channel.clone());
+                Arc::new(gw)
+            })
+            .collect();
+        net.uplink_gateways = uplinks;
         // Pin the initial model as round 0 on every shard so round-1
         // endorsers have a baseline for RONI/norm-bound checks.
         let (gdigest, guri) = net.store.put(net.global.clone());
@@ -355,8 +385,11 @@ impl ScaleSfl {
         }
     }
 
-    /// Build a shard's gateway from the current committee state.
-    fn make_shard_gateway(&self, s: usize) -> Arc<Gateway> {
+    /// Build a gateway endorsing with shard `s`'s current committee,
+    /// submitting through shard `ingress`'s pool. `ingress == s` is the
+    /// normal home path; anything else is a deliberately misrouted client
+    /// whose envelopes ride the cross-shard relay home.
+    fn make_shard_gateway_at(&self, s: usize, ingress: usize) -> Arc<Gateway> {
         // Restrict endorsement fan-out to this round's committee when one
         // has been elected; otherwise every shard peer endorses.
         let peers = match self.committees.get(s) {
@@ -367,7 +400,22 @@ impl ScaleSfl {
         };
         let mut gw = Gateway::new(peers, Arc::clone(&self.orderer));
         gw.timeout = self.cfg.timeout;
+        gw.ingress = Some(self.shards[ingress].channel.clone());
         Arc::new(gw)
+    }
+
+    /// (Re)build the per-shard home and detour gateways from the current
+    /// committee state.
+    fn rebuild_shard_gateways(&mut self) {
+        let n = self.shards.len();
+        let home: Vec<Arc<Gateway>> = (0..n).map(|s| self.make_shard_gateway_at(s, s)).collect();
+        let detour: Vec<Arc<Gateway>> = if n > 1 {
+            (0..n).map(|s| self.make_shard_gateway_at(s, (s + 1) % n)).collect()
+        } else {
+            Vec::new()
+        };
+        self.shard_gateways = home;
+        self.detour_gateways = detour;
     }
 
     fn shard_gateway(&self, s: usize) -> Arc<Gateway> {
@@ -409,9 +457,7 @@ impl ScaleSfl {
         }
         // The endorser sets changed: rebuild the cached shard gateways
         // (their demuxes re-subscribe on the new committees' peers).
-        let gws: Vec<Arc<Gateway>> =
-            (0..self.shards.len()).map(|s| self.make_shard_gateway(s)).collect();
-        self.shard_gateways = gws;
+        self.rebuild_shard_gateways();
     }
 
     /// Model provenance (paper §5): restore the global model pinned on the
@@ -560,7 +606,23 @@ impl ScaleSfl {
                 });
                 self.eval_invocations += endorsers as u64;
             }
-            for outcome in gw.submit_all(&proposals, proposals.len().max(1)) {
+            // Exercise the cross-shard relay every round: the first update
+            // enters at the *neighbouring* shard's ingress (a misrouted /
+            // failed-over client) and gossips home, while the rest use the
+            // home ingress. Its commit must be indistinguishable from the
+            // locally admitted ones — one extra simnet hop of latency.
+            let outcomes = if proposals.len() > 1 && !self.detour_gateways.is_empty() {
+                let detour = Arc::clone(&self.detour_gateways[s]);
+                let misrouted = detour.submit(&proposals[0]);
+                let mut all = Vec::with_capacity(proposals.len());
+                let rest = gw.submit_all(&proposals[1..], proposals.len().max(1));
+                all.push(misrouted.wait());
+                all.extend(rest);
+                all
+            } else {
+                gw.submit_all(&proposals, proposals.len().max(1))
+            };
+            for outcome in outcomes {
                 if outcome.is_valid() {
                     accepted += 1;
                 } else {
@@ -675,8 +737,11 @@ impl ScaleSfl {
                 .map(|(&i, _)| committed[i].samples)
                 .sum();
 
-            // §3.4.7 publish the shard aggregate to the mainchain
-            // (non-blocking: later shards keep working while this commits).
+            // §3.4.7 publish the shard aggregate to the mainchain as a
+            // relayed checkpoint: the tx enters at this shard's ingress
+            // pool and hops to the mainchain channel as a first-class
+            // cross-shard message (non-blocking: later shards keep
+            // working while this commits).
             let (digest, uri) = self.store.put(shard_model.clone());
             let proposal = crate::ledger::tx::Proposal {
                 channel: MAINCHAIN.into(),
@@ -692,7 +757,7 @@ impl ScaleSfl {
                 creator: self.shards[s].peers[0].member.clone(),
                 nonce: self.rng.next_u64(),
             };
-            let handle = main_gw.submit(&proposal);
+            let handle = self.uplink_gateways[s].submit(&proposal);
             pending_shard_models.push((s, shard_model, shard_samples, handle));
         }
 
@@ -799,6 +864,14 @@ mod tests {
         let main = net.all_peers[0].channel(MAINCHAIN).unwrap();
         assert!(main.query("global/00000001").is_some());
         assert!(main.query("shards/00000001/shard0").is_some());
+        // The relay carried real traffic: one misrouted update per shard
+        // per round plus every shard checkpoint — and lost none of it.
+        let stats = net.orderer.mempool().snapshot();
+        assert!(stats.forwarded >= 4, "expected relayed traffic, got {stats:?}");
+        assert_eq!(stats.relay_dropped, 0);
+        let relay = net.orderer.relay().expect("sim runs the relay").snapshot();
+        assert_eq!(relay.dropped, 0);
+        assert!(relay.delivered >= 4);
     }
 
     #[test]
