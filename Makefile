@@ -8,7 +8,7 @@
 #   make verify         - tier-1: release build + tests
 #   make bench          - full perf baselines (writes BENCH_mempool.json,
 #                         BENCH_gateway.json, BENCH_validation.json,
-#                         BENCH_relay.json)
+#                         BENCH_relay.json, BENCH_telemetry.json)
 #   make bench-smoke    - fast deterministic bench runs (seconds, fixed
 #                         seeds) into target/smoke/
 #   make bench-baseline - refresh the committed CI baselines in
@@ -36,6 +36,7 @@ bench:
 	cargo bench --bench gateway_pipeline
 	cargo bench --bench validation
 	cargo bench --bench relay
+	cargo bench --bench telemetry
 
 bench-smoke:
 	rm -rf target/smoke
@@ -43,6 +44,7 @@ bench-smoke:
 	cargo bench --bench gateway_pipeline -- --smoke
 	cargo bench --bench validation -- --smoke
 	cargo bench --bench relay -- --smoke
+	cargo bench --bench telemetry -- --smoke
 
 bench-baseline: bench-smoke
 	mkdir -p bench-baselines

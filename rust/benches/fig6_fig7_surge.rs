@@ -32,7 +32,7 @@ fn main() {
             r.failed,
             r.shed,
             r.throughput,
-            r.latency.quantile(0.95)
+            r.latency.quantile(0.95).unwrap_or(0.0)
         );
     }
     println!("# expected shape: shed load rises with tx count; committed latency stays bounded");

@@ -269,7 +269,7 @@ fn surge_2x(offered: usize) -> Json {
     println!(
         "commit latency: avg {:.3}s p95 {:.3}s max {:.3}s | blocks {} | wall {:.2}s",
         latency.mean(),
-        latency.quantile(0.95),
+        latency.quantile(0.95).unwrap_or(0.0),
         latency.max(),
         orderer.blocks_cut(),
         total_wall
@@ -292,7 +292,7 @@ fn surge_2x(offered: usize) -> Json {
         .set("depth_high_water", stats.depth_high_water)
         .set("blocks_cut", orderer.blocks_cut())
         .set("avg_commit_latency_s", latency.mean())
-        .set("p95_commit_latency_s", latency.quantile(0.95))
+        .set("p95_commit_latency_s", latency.quantile(0.95).unwrap_or(0.0))
         .set("max_commit_latency_s", latency.max())
         .set("send_wall_s", send_wall)
         .set("total_wall_s", total_wall)

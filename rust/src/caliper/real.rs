@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use crate::fabric::gateway::{CommitOutcome, Gateway, SubmitHandle};
 use crate::ledger::block::ValidationCode;
 use crate::ledger::tx::Proposal;
+use crate::telemetry;
 use crate::util::histogram::Histogram;
 
 use super::report::Report;
@@ -43,7 +44,10 @@ pub fn run_real(
     // Deltas for the validation-pipeline columns come from the first
     // gateway's orderer (drivers share one ordering service).
     let stats_base = gateways.first().map(|g| g.orderer.mempool().snapshot()).unwrap_or_default();
-    let vstats_base = gateways.first().map(|g| g.orderer.validation_stats()).unwrap_or_default();
+    // Window the tracer's per-stage histograms to this run: drain whatever
+    // earlier workloads accumulated, collect what this one produced at the
+    // end. Lifecycle counters stay monotone for the metrics registry.
+    let _ = telemetry::global().tracer().take_stage_snapshot();
     let relay_base = gateways
         .first()
         .and_then(|g| g.orderer.relay().map(|r| r.snapshot()))
@@ -186,9 +190,16 @@ pub fn run_real(
                 report.relay_lat_ms = us as f64 / 1e3 / hops as f64;
             }
         }
-        let vstats = gw.orderer.validation_stats();
-        report.prevalidate_s = vstats.prevalidate_s() - vstats_base.prevalidate_s();
-        report.apply_s = vstats.apply_s() - vstats_base.apply_s();
+    }
+    let snap = telemetry::global().tracer().take_stage_snapshot();
+    report.stages = snap
+        .stages
+        .iter()
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(st, h)| (st.name().to_string(), h.clone()))
+        .collect();
+    if snap.commit_latency.count() > 0 {
+        report.stages.push(("commit_latency".to_string(), snap.commit_latency.clone()));
     }
     report
 }

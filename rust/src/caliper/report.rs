@@ -10,9 +10,15 @@
 //!
 //! Since the staged validation pipeline landed, reports also carry the
 //! commit-side MVCC columns: `mvcc_conflicts` (read-version invalidations
-//! at commit), `stale_dropped` (transactions shed by admission/pull-time
-//! MVCC hinting before ordering), and the per-stage validation wall times
-//! (`prevalidate_s` / `apply_s`) from `fabric::ValidationSnapshot`.
+//! at commit) and `stale_dropped` (transactions shed by admission/pull-time
+//! MVCC hinting before ordering).
+//!
+//! Since the telemetry layer landed, per-stage pipeline timing comes from
+//! the lifecycle tracer instead of ad-hoc wall-time plumbing:
+//! [`Report::stages`] holds one latency histogram per visited pipeline
+//! stage (admit, relay-hop, batch-pull, prevalidate, apply, commit-event —
+//! see `telemetry::Stage`) plus the end-to-end `commit_latency`, windowed
+//! to the run by `Tracer::take_stage_snapshot`.
 //!
 //! Since the cross-shard relay landed, reports carry its columns too:
 //! `forwarded` (transactions that entered at a non-home shard ingress and
@@ -49,11 +55,11 @@ pub struct Report {
     /// Mean relay link latency per delivered hop, in milliseconds (0 when
     /// nothing was forwarded or the backend has no relay).
     pub relay_lat_ms: f64,
-    /// Wall time spent in the parallel pre-validation stage (seconds,
-    /// summed across replicas; 0 when the backend doesn't measure it).
-    pub prevalidate_s: f64,
-    /// Wall time spent in the serial MVCC + apply stage (seconds).
-    pub apply_s: f64,
+    /// Per-stage pipeline latency histograms from the lifecycle tracer
+    /// (stage name → latency from the previous visited stage, seconds),
+    /// plus the end-to-end `commit_latency`. Empty for backends that don't
+    /// trace (DES).
+    pub stages: Vec<(String, Histogram)>,
     /// Actual aggregate send rate achieved (TPS).
     pub send_tps: f64,
     /// Observed throughput: successes / makespan (TPS).
@@ -80,8 +86,7 @@ impl Report {
             stale_dropped: 0,
             forwarded: 0,
             relay_lat_ms: 0.0,
-            prevalidate_s: 0.0,
-            apply_s: 0.0,
+            stages: Vec::new(),
             send_tps: 0.0,
             throughput: 0.0,
             latency: Histogram::default(),
@@ -110,12 +115,23 @@ impl Report {
             self.send_tps,
             self.throughput,
             self.avg_latency(),
-            self.latency.quantile(0.95),
+            self.latency.quantile(0.95).unwrap_or(0.0),
             self.in_flight_high_water,
         )
     }
 
     pub fn to_json(&self) -> Json {
+        let mut stages = Json::obj();
+        for (name, h) in &self.stages {
+            stages = stages.set(
+                name.as_str(),
+                Json::obj()
+                    .set("count", h.count())
+                    .set("mean_s", h.mean())
+                    .set("p50_s", h.quantile(0.5).unwrap_or(0.0))
+                    .set("p95_s", h.quantile(0.95).unwrap_or(0.0)),
+            );
+        }
         Json::obj()
             .set("name", self.name.as_str())
             .set("sent", self.sent)
@@ -126,12 +142,11 @@ impl Report {
             .set("stale_dropped", self.stale_dropped)
             .set("forwarded", self.forwarded)
             .set("relay_lat_ms", self.relay_lat_ms)
-            .set("prevalidate_s", self.prevalidate_s)
-            .set("apply_s", self.apply_s)
+            .set("stages", stages)
             .set("send_tps", self.send_tps)
             .set("throughput", self.throughput)
             .set("avg_latency_s", self.avg_latency())
-            .set("p95_latency_s", self.latency.quantile(0.95))
+            .set("p95_latency_s", self.latency.quantile(0.95).unwrap_or(0.0))
             .set("max_latency_s", self.latency.max())
             .set("duration_s", self.duration_s)
             .set("in_flight_high_water", self.in_flight_high_water)
@@ -153,6 +168,9 @@ mod tests {
         r.stale_dropped = 3;
         r.forwarded = 7;
         r.relay_lat_ms = 12.5;
+        let mut h = Histogram::default();
+        h.record(0.002);
+        r.stages = vec![("apply".to_string(), h)];
         r.send_tps = 10.0;
         r.throughput = 9.0;
         r.latency.record(0.5);
@@ -171,6 +189,9 @@ mod tests {
         assert_eq!(j.get("stale_dropped").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("forwarded").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.get("relay_lat_ms").unwrap().as_f64(), Some(12.5));
+        let apply = j.get("stages").unwrap().get("apply").unwrap();
+        assert_eq!(apply.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(apply.get("p95_s").unwrap().as_f64(), Some(0.002));
         assert_eq!(j.get("avg_latency_s").unwrap().as_f64(), Some(0.5));
         assert_eq!(j.get("in_flight_high_water").unwrap().as_f64(), Some(32.0));
     }

@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use crate::ledger::block::ValidationCode;
 use crate::ledger::tx::{Envelope, Proposal, TxId};
 use crate::mempool::Reject;
+use crate::telemetry::{self, Stage};
 
 use super::orderer::OrderingService;
 use super::peer::Peer;
@@ -326,8 +327,14 @@ impl Gateway {
                 CommitOutcome::Rejected { reject: Reject::Duplicate, latency: started.elapsed() };
             return SubmitHandle::resolved(tx_id, started, timeout, out);
         };
+        // Lifecycle epoch: the tx is demux-registered and headed for
+        // admission control.
+        telemetry::global().stamp(&tx_id, Stage::Submit);
         if let Err(reject) = self.orderer.submit_from(self.ingress.as_deref(), envelope) {
             waiter.deregister(&tx_id);
+            // Admission rejects are fully accounted by mempool counters;
+            // free the trace slot without recording a lifecycle.
+            telemetry::global().discard(&tx_id);
             let out = CommitOutcome::Rejected { reject, latency: started.elapsed() };
             return SubmitHandle::resolved(tx_id, started, timeout, out);
         }

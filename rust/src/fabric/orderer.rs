@@ -145,6 +145,27 @@ impl OrderingService {
             .clone()
             .map(|rc| Relay::new(Arc::clone(&mempool), rc, SystemClock::shared()));
 
+        // Expose the whole pipeline through the process-wide metrics
+        // registry. Every collector captures weakly, so a torn-down
+        // network prunes itself from the registry.
+        let registry = crate::telemetry::global().registry();
+        mempool.register_telemetry(registry);
+        validator.register_telemetry(registry);
+        if let Some(relay) = &relay {
+            relay.register_telemetry(registry);
+        }
+        {
+            let weak = Arc::downgrade(&blocks_cut);
+            registry.register(move || {
+                let cut = weak.upgrade()?;
+                Some(vec![crate::telemetry::Sample::counter(
+                    "scalesfl_orderer_blocks_cut_total",
+                    Vec::new(),
+                    cut.load(Ordering::Relaxed) as f64,
+                )])
+            });
+        }
+
         // Admission-side MVCC hinting: wire every already-joined channel
         // now (covers state seeded by direct `commit_batch` before the
         // orderer saw a block); channels joined later are wired by the

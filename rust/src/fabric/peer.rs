@@ -41,6 +41,7 @@ use crate::ledger::block::{Block, ValidationCode};
 use crate::ledger::chain::Chain;
 use crate::ledger::state::{StateView, Version, WorldState};
 use crate::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
+use crate::telemetry::{self, Stage};
 
 use super::chaincode::{Chaincode, TxContext};
 use super::endorsement::EndorsementPolicy;
@@ -302,6 +303,9 @@ impl Peer {
                 ValidationCode::Valid
             };
             block.validation.push(code);
+            // First replica to decide the code stamps the apply stage
+            // (first-write-wins keeps later replicas from moving it).
+            telemetry::global().stamp(&tx_id, Stage::Apply);
             events.push(CommitEvent {
                 channel: Arc::clone(&channel_name),
                 tx_id,

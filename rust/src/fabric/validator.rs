@@ -37,6 +37,7 @@ use crate::crypto::msp::CertificateAuthority;
 use crate::crypto::Digest;
 use crate::ledger::block::ValidationCode;
 use crate::ledger::tx::Envelope;
+use crate::telemetry::{self, Sample, Stage};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
@@ -245,6 +246,13 @@ impl BlockValidator {
                 ok[i] = verdict;
                 cache.insert((keys[i], fp), verdict);
             }
+            drop(cache);
+            // Cache misses mark the crypto replica: stamping only them (and
+            // first-write-wins in the tracer) keeps replica re-validations
+            // from moving the stage forward.
+            for &(i, _) in &verdicts {
+                telemetry::global().stamp(&envs[i].tx_id(), Stage::Prevalidate);
+            }
         }
         self.stats
             .prevalidate_nanos
@@ -268,6 +276,46 @@ impl BlockValidator {
         if pol > 0 {
             self.stats.policy_failures.fetch_add(pol as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Register both stages' counters with a telemetry registry (weakly —
+    /// pruned once the owning ordering service / peer is gone).
+    pub fn register_telemetry(self: &Arc<Self>, registry: &telemetry::Registry) {
+        let weak = Arc::downgrade(self);
+        registry.register(move || {
+            let v = weak.upgrade()?;
+            let s = v.snapshot();
+            Some(vec![
+                Sample::counter("scalesfl_validator_blocks_total", Vec::new(), s.blocks as f64),
+                Sample::counter("scalesfl_validator_txs_total", Vec::new(), s.txs as f64),
+                Sample::counter(
+                    "scalesfl_validator_prevalidate_seconds_total",
+                    Vec::new(),
+                    s.prevalidate_s(),
+                ),
+                Sample::counter("scalesfl_validator_apply_seconds_total", Vec::new(), s.apply_s()),
+                Sample::counter(
+                    "scalesfl_validator_cache_hits_total",
+                    Vec::new(),
+                    s.cache_hits as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_validator_cache_misses_total",
+                    Vec::new(),
+                    s.cache_misses as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_validator_mvcc_conflicts_total",
+                    Vec::new(),
+                    s.mvcc_conflicts as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_validator_policy_failures_total",
+                    Vec::new(),
+                    s.policy_failures as f64,
+                ),
+            ])
+        });
     }
 }
 

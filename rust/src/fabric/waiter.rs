@@ -81,6 +81,10 @@ impl CommitWaiter {
                 }
                 match sub.recv_timeout(IDLE_TICK) {
                     Ok(ev) => {
+                        // Stamp the commit-event receive time and close the
+                        // lifecycle trace. First demux to see the event wins;
+                        // replica/peer fan-out makes later calls no-ops.
+                        crate::telemetry::global().complete_commit(&ev.tx_id);
                         // At most one waiter per tx id; events for unknown
                         // ids (handle dropped, other gateways' traffic) are
                         // discarded without cloning further.

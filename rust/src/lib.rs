@@ -37,10 +37,21 @@
 //! read-version check + apply under the state write lock. The mempool is
 //! wired to a replica's `ledger::StateView`, so transactions whose
 //! read-set is already stale shed at admission (`Reject::StaleReadSet`)
-//! or at batch pull instead of costing consensus bandwidth; per-stage
-//! timings and conflict tallies export via
-//! `fabric::ValidationSnapshot` and the caliper `Report`'s
-//! `mvcc_conflicts`/`stale_dropped` columns.
+//! or at batch pull instead of costing consensus bandwidth.
+//!
+//! **Observability** (`telemetry`): one vocabulary for everything the
+//! pipeline measures. Mempool, relay, validator, and orderer register
+//! weak collectors into the process-wide metrics `telemetry::Registry`
+//! (Prometheus-text / JSON exposition, `scalesfl_<subsystem>_<name>`
+//! naming with `channel=` labels); every transaction is stamped through
+//! the lock-free `telemetry::Tracer` at submit → admit → relay-hop →
+//! batch-pull → prevalidate → apply → commit-event, feeding per-stage
+//! latency histograms that the caliper `Report` and the `telemetry` CLI
+//! subcommand expose; and a flight recorder freezes anomalously slow or
+//! mid-pipeline-killed lifecycles with their full stage breakdown. The
+//! instrumentation rides the hot paths, so its overhead is itself gated
+//! by a benchmark (`benches/telemetry.rs`: admission throughput with
+//! telemetry on vs off stays within 5%).
 //!
 //! Model compute (training, endorsement-time evaluation, FedAvg aggregation,
 //! defence distance matrices) executes AOT-compiled HLO artifacts produced by
@@ -70,4 +81,5 @@ pub mod runtime;
 pub mod sharding;
 pub mod sim;
 pub mod storage;
+pub mod telemetry;
 pub mod util;

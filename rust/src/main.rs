@@ -9,7 +9,10 @@
 //!                    [--dp] [--defense none|roni|norm] [--agg none|krum|fg]
 //!   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
 //!   scalesfl calibrate                    — print DES calibration numbers
+//!   scalesfl telemetry [--txs N] [--json] — drive a small sharded pipeline
+//!                                           and dump the metrics registry
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use scalesfl::caliper::figures;
@@ -28,6 +31,16 @@ fn has_flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
 }
 
+/// `--telemetry` end-of-run dump: everything the pipeline registered into
+/// the process-wide metrics registry, plus the tracer's stage summary.
+fn dump_telemetry() {
+    let t = scalesfl::telemetry::global();
+    println!("\n# telemetry registry (end of run)");
+    print!("{}", t.registry().render_prometheus());
+    println!("# per-stage lifecycle latencies");
+    println!("{}", t.tracer().stage_snapshot().to_json());
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -37,6 +50,7 @@ fn main() {
         "train" => cmd_train(rest),
         "figures" => cmd_figures(rest),
         "calibrate" => cmd_calibrate(),
+        "telemetry" => cmd_telemetry(rest),
         _ => {
             print_help();
             0
@@ -56,6 +70,12 @@ USAGE:
                    [--defense none|roni|norm] [--agg none|krum|fg] [--pn]
   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
   scalesfl calibrate
+  scalesfl telemetry [--txs N] [--json]
+
+`telemetry` drives a small ingress->relay->order->validate->commit pipeline
+and dumps the process-wide metrics registry (Prometheus text, or JSON with
+--json) plus the per-stage lifecycle latencies from the tracer. `train` and
+`figures` accept `--telemetry` to dump the same registry when the run ends.
 
 Run `make artifacts` before anything that touches the model runtime."
     );
@@ -94,6 +114,98 @@ fn cmd_calibrate() -> i32 {
             }
         }
     }
+    0
+}
+
+/// Drive a small but complete sharded pipeline — foreign-ingress
+/// submissions hop the cross-shard relay, get ordered, validated, and
+/// committed — then dump everything the telemetry layer collected: the
+/// metrics registry (all subsystems' labelled series) and the tracer's
+/// per-stage latency summary.
+fn cmd_telemetry(args: &[String]) -> i32 {
+    use scalesfl::crypto::msp::{CertificateAuthority, MemberId};
+    use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+    use scalesfl::fabric::endorsement::EndorsementPolicy;
+    use scalesfl::fabric::orderer::{OrdererConfig, OrderingService};
+    use scalesfl::fabric::peer::Peer;
+    use scalesfl::fabric::Gateway;
+    use scalesfl::ledger::tx::Proposal;
+    use scalesfl::util::prng::Prng;
+
+    struct Put;
+    impl Chaincode for Put {
+        fn name(&self) -> &str {
+            "kv"
+        }
+        fn invoke(
+            &self,
+            ctx: &mut TxContext<'_>,
+            _f: &str,
+            args: &[String],
+        ) -> Result<Vec<u8>, String> {
+            ctx.put(&args[0], b"v".to_vec());
+            Ok(vec![])
+        }
+    }
+
+    let txs = parse(args, "--txs", 24usize).max(1);
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(7);
+    let peers: Vec<Arc<Peer>> = (0..2)
+        .map(|i| {
+            let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+            Peer::new(cred, ca.clone())
+        })
+        .collect();
+    let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+    for p in &peers {
+        p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
+        p.install_chaincode("ch", Arc::new(Put)).unwrap();
+    }
+    let cfg = OrdererConfig {
+        batch_timeout: Duration::from_millis(10),
+        tick: Duration::from_millis(1),
+        relay: Some(scalesfl::mempool::RelayConfig {
+            base_latency: Duration::from_millis(2),
+            latency_spread: Duration::from_millis(2),
+            jitter: Duration::from_millis(1),
+            seed: 7,
+        }),
+        ..OrdererConfig::default()
+    };
+    let orderer = OrderingService::start(cfg, peers.clone(), 7);
+    let mut gw = Gateway::new(peers, orderer);
+    // A foreign ingress shard, so every transaction pays a relay hop and
+    // the relay/trace series are non-trivial.
+    gw.ingress = Some("edge".into());
+    eprintln!("driving {txs} txs through edge -> relay -> ch -> commit ...");
+    for i in 0..txs as u64 {
+        let out = gw
+            .submit(&Proposal {
+                channel: "ch".into(),
+                chaincode: "kv".into(),
+                function: "Put".into(),
+                args: vec![format!("k{i}")],
+                creator: MemberId::new("client"),
+                nonce: i,
+            })
+            .wait();
+        if !out.is_valid() {
+            eprintln!("tx {i} did not commit: {out:?}");
+            return 1;
+        }
+    }
+
+    let t = scalesfl::telemetry::global();
+    if has_flag(args, "--json") {
+        println!("{}", t.registry().render_json());
+    } else {
+        print!("{}", t.registry().render_prometheus());
+    }
+    eprintln!("\n# per-stage lifecycle latencies (tracer snapshot)");
+    eprintln!("{}", t.tracer().stage_snapshot().to_json());
+    eprintln!("# flight recorder");
+    eprintln!("{}", t.flight().to_json());
     0
 }
 
@@ -181,6 +293,9 @@ fn cmd_train(args: &[String]) -> i32 {
         let eps = scalesfl::fl::dp::epsilon(q, 0.4, steps, 1e-5);
         println!("DP accountant: worst-case client {steps} steps -> epsilon ~= {eps:.2} (delta 1e-5)");
     }
+    if has_flag(args, "--telemetry") {
+        dump_telemetry();
+    }
     0
 }
 
@@ -237,6 +352,9 @@ fn cmd_figures(args: &[String]) -> i32 {
                 return 1;
             }
         }
+    }
+    if has_flag(args, "--telemetry") {
+        dump_telemetry();
     }
     0
 }

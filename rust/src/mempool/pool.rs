@@ -27,6 +27,7 @@ use crate::fabric::wire;
 use crate::ledger::codec::Writer;
 use crate::ledger::state::StateView;
 use crate::ledger::tx::{Envelope, Proposal, TxId};
+use crate::telemetry::{self, Sample, Stage};
 use crate::util::clock::{Clock, SystemClock};
 
 use super::admission::{Reject, TokenBucket};
@@ -202,6 +203,12 @@ impl ShardMempool {
         self.stats.snapshot()
     }
 
+    /// Snapshot and zero the counters — per-window deltas for successive
+    /// caliper rounds (`depth_high_water` restarts per window too).
+    pub fn snapshot_and_reset(&self) -> StatsSnapshot {
+        self.stats.snapshot_and_reset()
+    }
+
     /// Queued envelopes across all lanes.
     pub fn pending(&self) -> usize {
         let inner = self.inner.lock().unwrap();
@@ -264,6 +271,10 @@ impl ShardMempool {
             .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
         let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
         self.stats.note_admitted(depth as u64);
+        drop(inner);
+        // First-write-wins: a relayed envelope keeps its ingress-side
+        // admit time, a direct one is stamped here.
+        telemetry::global().stamp(&tx_id, Stage::Admit);
         Ok(())
     }
 
@@ -328,6 +339,10 @@ impl ShardMempool {
         self.take_rate_token(&mut inner, &env.proposal.creator.0, now)?;
         self.remember(&mut inner, tx_id);
         self.stats.note_forwarded();
+        drop(inner);
+        // Admission happened here, before any relay hop — stamp it so the
+        // lifecycle's admit → relay-hop ordering holds for forwards too.
+        telemetry::global().stamp(&tx_id, Stage::Admit);
         Ok(())
     }
 
@@ -441,6 +456,7 @@ impl ShardMempool {
                 }
                 let e = lane.pop_front().expect("front checked");
                 bytes += e.bytes;
+                telemetry::global().stamp(&e.tx_id, Stage::BatchPull);
                 out.push(e.env);
             }
             if out.len() >= max_txs.max(1) {
@@ -452,6 +468,7 @@ impl ShardMempool {
         // read-set) is admitted instead of bounced as a replay.
         for tx_id in stale {
             inner.seen.remove(&tx_id);
+            telemetry::global().abort(&tx_id, "stale_drop");
         }
         if !out.is_empty() {
             self.stats.note_ordered(out.len() as u64, bytes as u64);
@@ -507,6 +524,7 @@ impl ShardMempool {
         // window rolls past it is harmless.)
         for tx_id in dropped {
             inner.seen.remove(&tx_id);
+            telemetry::global().abort(&tx_id, "ttl_expired");
         }
     }
 }
@@ -592,6 +610,106 @@ impl MempoolRegistry {
             total.merge(&pool.stats());
         }
         total
+    }
+
+    /// Aggregate counters across every pool, zeroing each pool's window
+    /// (see [`ShardMempool::snapshot_and_reset`]).
+    pub fn snapshot_and_reset(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for pool in self.pools.read().unwrap().values() {
+            total.merge(&pool.snapshot_and_reset());
+        }
+        total
+    }
+
+    /// Register per-channel mempool metrics with a telemetry registry.
+    /// Held weakly: once the last orderer/gateway drops this registry of
+    /// pools, the collector prunes itself.
+    pub fn register_telemetry(self: &Arc<Self>, registry: &telemetry::Registry) {
+        let weak = Arc::downgrade(self);
+        registry.register(move || {
+            let reg = weak.upgrade()?;
+            let pools = reg.pools.read().unwrap();
+            let mut names: Vec<&String> = pools.keys().collect();
+            names.sort();
+            let mut out = Vec::new();
+            for name in names {
+                let pool = &pools[name];
+                let s = pool.stats();
+                let label = || Sample::channel_label(name);
+                let reason_label = |reason: &str| {
+                    vec![
+                        ("channel".to_string(), name.to_string()),
+                        ("reason".to_string(), reason.to_string()),
+                    ]
+                };
+                out.push(Sample::counter(
+                    "scalesfl_mempool_admitted_total",
+                    label(),
+                    s.admitted as f64,
+                ));
+                for (reason, n) in [
+                    ("pool_full", s.pool_full),
+                    ("rate_limited", s.rate_limited),
+                    ("duplicate", s.duplicate),
+                    ("bad_signature", s.bad_signature),
+                    ("policy", s.policy_unsatisfiable),
+                    ("stale_read_set", s.stale_read_set),
+                ] {
+                    out.push(Sample::counter(
+                        "scalesfl_mempool_rejected_total",
+                        reason_label(reason),
+                        n as f64,
+                    ));
+                }
+                out.push(Sample::counter(
+                    "scalesfl_mempool_forwarded_total",
+                    label(),
+                    s.forwarded as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_relay_dropped_total",
+                    label(),
+                    s.relay_dropped as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_stale_dropped_total",
+                    label(),
+                    s.stale_dropped as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_expired_total",
+                    label(),
+                    s.expired as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_txs_ordered_total",
+                    label(),
+                    s.txs_ordered as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_batches_cut_total",
+                    label(),
+                    s.batches_cut as f64,
+                ));
+                out.push(Sample::counter(
+                    "scalesfl_mempool_bytes_ordered_total",
+                    label(),
+                    s.bytes_ordered as f64,
+                ));
+                out.push(Sample::gauge(
+                    "scalesfl_mempool_depth",
+                    label(),
+                    pool.pending() as f64,
+                ));
+                out.push(Sample::gauge(
+                    "scalesfl_mempool_depth_high_water",
+                    label(),
+                    s.depth_high_water as f64,
+                ));
+            }
+            Some(out)
+        });
     }
 
     /// Close every pool (orderer shutdown).
@@ -998,5 +1116,39 @@ mod tests {
             registry.submit(envelope("shard1", "kv", "Put", "c", 9)),
             Err(Reject::Shutdown)
         );
+    }
+
+    #[test]
+    fn registry_snapshot_and_reset_windows() {
+        let registry = MempoolRegistry::new(MempoolConfig::default());
+        registry.submit(envelope("shard0", "kv", "Put", "c", 1)).unwrap();
+        registry.submit(envelope("shard1", "kv", "Put", "c", 2)).unwrap();
+        let w1 = registry.snapshot_and_reset();
+        assert_eq!(w1.admitted, 2);
+        assert_eq!(w1.depth_high_water, 1, "per-pool high water, merged by max");
+        // The window restarted: totals are zero until new traffic arrives.
+        assert_eq!(registry.snapshot(), StatsSnapshot::default());
+        registry.submit(envelope("shard0", "kv", "Put", "c", 3)).unwrap();
+        assert_eq!(registry.snapshot_and_reset().admitted, 1);
+    }
+
+    #[test]
+    fn telemetry_collector_emits_labelled_series_and_prunes() {
+        let registry = MempoolRegistry::new(MempoolConfig::default());
+        let treg = telemetry::Registry::new();
+        registry.register_telemetry(&treg);
+        registry.submit(envelope("shard0", "kv", "Put", "c", 1)).unwrap();
+        let text = treg.render_prometheus();
+        assert!(text.contains("scalesfl_mempool_admitted_total{channel=\"shard0\"} 1"), "{text}");
+        assert!(text.contains("scalesfl_mempool_depth{channel=\"shard0\"} 1"), "{text}");
+        assert!(
+            text.contains(
+                "scalesfl_mempool_rejected_total{channel=\"shard0\",reason=\"pool_full\"} 0"
+            ),
+            "{text}"
+        );
+        drop(registry);
+        assert!(treg.render_prometheus().is_empty(), "collector pruned with its registry");
+        assert_eq!(treg.collector_count(), 0);
     }
 }

@@ -44,6 +44,7 @@ use std::time::Duration;
 
 use crate::ledger::tx::{Envelope, TxId};
 use crate::network::simnet::LinkLatency;
+use crate::telemetry::{self, Sample};
 use crate::util::clock::Clock;
 
 use super::admission::Reject;
@@ -252,6 +253,7 @@ impl Relay {
             Ok(()) => {
                 self.delivered.fetch_add(1, Ordering::Relaxed);
                 self.hop_latency_us.fetch_add(latency_us, Ordering::Relaxed);
+                telemetry::global().stamp_hop(&tx_id);
                 true
             }
             Err(Reject::Duplicate) => {
@@ -274,6 +276,7 @@ impl Relay {
                 let another_in_flight =
                     self.inner.lock().unwrap().hops.values().any(|h| h.tx_id == tx_id);
                 if !another_in_flight {
+                    telemetry::global().abort(&tx_id, "relay_drop");
                     self.notify_drop(&tx_id, reject);
                 }
                 false
@@ -311,6 +314,7 @@ impl Relay {
             if let Some(src) = self.registry.get(&hop.src) {
                 src.forward_dropped(&hop.tx_id);
             }
+            telemetry::global().abort(&hop.tx_id, "shutdown");
             self.notify_drop(&hop.tx_id, Reject::Shutdown);
         }
     }
@@ -323,6 +327,28 @@ impl Relay {
             dropped: self.dropped.load(Ordering::Relaxed),
             hop_latency_us: self.hop_latency_us.load(Ordering::Relaxed),
         }
+    }
+
+    /// Register the relay's metrics with a telemetry registry (weakly —
+    /// pruned once the owning ordering service is gone).
+    pub fn register_telemetry(self: &Arc<Self>, registry: &telemetry::Registry) {
+        let weak = Arc::downgrade(self);
+        registry.register(move || {
+            let relay = weak.upgrade()?;
+            let snap = relay.snapshot();
+            Some(vec![
+                Sample::counter("scalesfl_relay_forwarded_total", Vec::new(), snap.forwarded as f64),
+                Sample::counter("scalesfl_relay_delivered_total", Vec::new(), snap.delivered as f64),
+                Sample::counter("scalesfl_relay_deduped_total", Vec::new(), snap.deduped as f64),
+                Sample::counter("scalesfl_relay_dropped_total", Vec::new(), snap.dropped as f64),
+                Sample::counter(
+                    "scalesfl_relay_hop_latency_seconds_total",
+                    Vec::new(),
+                    snap.hop_latency_us as f64 / 1e6,
+                ),
+                Sample::gauge("scalesfl_relay_in_flight", Vec::new(), relay.in_flight() as f64),
+            ])
+        });
     }
 }
 

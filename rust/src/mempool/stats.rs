@@ -105,6 +105,34 @@ impl MempoolStats {
             depth_high_water: self.depth_high_water.load(Ordering::Relaxed),
         }
     }
+
+    /// Snapshot-with-reset: read every counter and zero it in one atomic
+    /// swap each, so successive measurement windows (caliper rounds, the
+    /// telemetry exposition's per-round deltas) report what happened
+    /// *inside* the window instead of monotone process totals.
+    /// `depth_high_water` resets too — the next window records its own
+    /// peak. Counts noted concurrently with the swap land in exactly one
+    /// window (swap is atomic per counter; cross-counter skew is at most
+    /// one in-flight transaction).
+    pub fn snapshot_and_reset(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            admitted: self.admitted.swap(0, Ordering::Relaxed),
+            pool_full: self.pool_full.swap(0, Ordering::Relaxed),
+            rate_limited: self.rate_limited.swap(0, Ordering::Relaxed),
+            duplicate: self.duplicate.swap(0, Ordering::Relaxed),
+            bad_signature: self.bad_signature.swap(0, Ordering::Relaxed),
+            policy_unsatisfiable: self.policy_unsatisfiable.swap(0, Ordering::Relaxed),
+            stale_read_set: self.stale_read_set.swap(0, Ordering::Relaxed),
+            stale_dropped: self.stale_dropped.swap(0, Ordering::Relaxed),
+            forwarded: self.forwarded.swap(0, Ordering::Relaxed),
+            relay_dropped: self.relay_dropped.swap(0, Ordering::Relaxed),
+            expired: self.expired.swap(0, Ordering::Relaxed),
+            batches_cut: self.batches_cut.swap(0, Ordering::Relaxed),
+            txs_ordered: self.txs_ordered.swap(0, Ordering::Relaxed),
+            bytes_ordered: self.bytes_ordered.swap(0, Ordering::Relaxed),
+            depth_high_water: self.depth_high_water.swap(0, Ordering::Relaxed),
+        }
+    }
 }
 
 /// Point-in-time copy of the counters (mergeable across pools).
@@ -239,6 +267,28 @@ mod tests {
         assert_eq!(snap.batches_cut, 1);
         assert_eq!(snap.txs_ordered, 10);
         assert_eq!(snap.bytes_ordered, 1000);
+    }
+
+    #[test]
+    fn snapshot_and_reset_windows() {
+        let s = MempoolStats::default();
+        s.note_admitted(9);
+        s.note_reject(Reject::PoolFull);
+        s.note_ordered(4, 400);
+        let w1 = s.snapshot_and_reset();
+        assert_eq!(w1.admitted, 1);
+        assert_eq!(w1.pool_full, 1);
+        assert_eq!(w1.txs_ordered, 4);
+        assert_eq!(w1.depth_high_water, 9);
+        // The window boundary zeroed everything, including the high-water
+        // mark: the next window records only its own activity.
+        let empty = s.snapshot();
+        assert_eq!(empty, StatsSnapshot::default());
+        s.note_admitted(2);
+        let w2 = s.snapshot_and_reset();
+        assert_eq!(w2.admitted, 1);
+        assert_eq!(w2.depth_high_water, 2);
+        assert_eq!(w2.pool_full, 0);
     }
 
     #[test]

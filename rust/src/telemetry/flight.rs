@@ -1,0 +1,264 @@
+//! Flight recorder: retains the last N completed transaction lifecycles
+//! and freezes anomalous ones for post-mortem.
+//!
+//! Two triggers freeze a trace into the anomaly log:
+//!
+//! * **Latency anomaly** — a completed lifecycle whose commit latency
+//!   exceeds `anomaly_multiple ×` the rolling p95 of prior completions
+//!   (judged *before* the sample joins the rolling histogram, and only
+//!   once `min_samples` completions have seeded it, so startup noise
+//!   cannot self-trigger).
+//! * **Abort** — any lifecycle killed mid-pipeline (relay drop, stale
+//!   drop, shutdown flush) is always frozen with its reason.
+//!
+//! The recorder is fed exclusively by [`super::trace::Tracer`] at
+//! lifecycle completion — never on the stamp hot path — so a `Mutex` is
+//! fine here: contention is bounded by the commit rate, not the submit
+//! rate.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+use super::trace::TxTrace;
+
+/// Flight-recorder tuning knobs.
+#[derive(Clone, Debug)]
+pub struct FlightConfig {
+    /// Completed lifecycles kept in the ring (oldest evicted first).
+    pub retain: usize,
+    /// Frozen anomaly dumps kept (freezing stops at the cap; the
+    /// `scalesfl_flight_anomalies` gauge keeps counting via the cap).
+    pub max_anomalies: usize,
+    /// A completion is anomalous when its latency exceeds this multiple
+    /// of the rolling p95.
+    pub anomaly_multiple: f64,
+    /// Completions required in the rolling histogram before the latency
+    /// trigger arms.
+    pub min_samples: u64,
+}
+
+impl Default for FlightConfig {
+    fn default() -> Self {
+        FlightConfig { retain: 256, max_anomalies: 64, anomaly_multiple: 3.0, min_samples: 32 }
+    }
+}
+
+struct Inner {
+    completed: VecDeque<TxTrace>,
+    /// Rolling commit-latency distribution — never reset, so the anomaly
+    /// threshold reflects the whole run, not the last caliper window.
+    rolling: Histogram,
+    anomalies: Vec<TxTrace>,
+}
+
+/// See the module doc.
+pub struct FlightRecorder {
+    cfg: FlightConfig,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: FlightConfig) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(Inner {
+                completed: VecDeque::with_capacity(cfg.retain.min(1024)),
+                rolling: Histogram::default(),
+                anomalies: Vec::new(),
+            }),
+            cfg,
+        }
+    }
+
+    /// Record a completed lifecycle; returns whether it tripped the
+    /// latency-anomaly trigger.
+    pub(crate) fn on_complete(&self, trace: TxTrace) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let mut anomalous = false;
+        if let Some(lat) = trace.latency() {
+            if g.rolling.count() >= self.cfg.min_samples {
+                if let Some(p95) = g.rolling.quantile(0.95) {
+                    anomalous = lat > self.cfg.anomaly_multiple * p95;
+                }
+            }
+            g.rolling.record(lat);
+        }
+        if anomalous && g.anomalies.len() < self.cfg.max_anomalies {
+            g.anomalies.push(trace.clone());
+        }
+        g.completed.push_back(trace);
+        while g.completed.len() > self.cfg.retain {
+            g.completed.pop_front();
+        }
+        anomalous
+    }
+
+    /// Freeze an aborted lifecycle (always anomalous).
+    pub(crate) fn on_abort(&self, trace: TxTrace) {
+        let mut g = self.inner.lock().unwrap();
+        if g.anomalies.len() < self.cfg.max_anomalies {
+            g.anomalies.push(trace);
+        }
+    }
+
+    /// The retained completed lifecycles, oldest first.
+    pub fn completed(&self) -> Vec<TxTrace> {
+        self.inner.lock().unwrap().completed.iter().cloned().collect()
+    }
+
+    /// The frozen anomalous lifecycles, in freeze order.
+    pub fn anomalies(&self) -> Vec<TxTrace> {
+        self.inner.lock().unwrap().anomalies.clone()
+    }
+
+    pub fn retained(&self) -> usize {
+        self.inner.lock().unwrap().completed.len()
+    }
+
+    pub fn anomaly_count(&self) -> usize {
+        self.inner.lock().unwrap().anomalies.len()
+    }
+
+    /// Rolling p95 commit latency the anomaly trigger compares against.
+    pub fn rolling_p95(&self) -> Option<f64> {
+        self.inner.lock().unwrap().rolling.quantile(0.95)
+    }
+
+    /// Full dump: ring stats plus the per-trace stage breakdown of every
+    /// frozen anomaly.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let anomalies: Vec<Json> = g.anomalies.iter().map(|t| t.to_json()).collect();
+        Json::obj()
+            .set("retained", g.completed.len())
+            .set("rolling_count", g.rolling.count())
+            .set("rolling_p95_s", g.rolling.quantile(0.95).unwrap_or(0.0))
+            .set("anomaly_multiple", self.cfg.anomaly_multiple)
+            .set("anomalies", anomalies)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Digest;
+    use crate::ledger::tx::TxId;
+    use crate::telemetry::trace::{Stage, Tracer, TraceOutcome, STAGES};
+    use crate::util::clock::{Clock, VirtualClock};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn txid(n: u64) -> TxId {
+        let mut b = [0u8; 32];
+        b[..8].copy_from_slice(&n.to_le_bytes());
+        Digest(b)
+    }
+
+    fn setup() -> (Arc<VirtualClock>, Tracer) {
+        let clock = Arc::new(VirtualClock::new());
+        let tracer = Tracer::with_parts(
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            FlightConfig { min_samples: 8, ..FlightConfig::default() },
+        );
+        (clock, tracer)
+    }
+
+    /// Drive one full lifecycle with `step` between stages; returns the
+    /// completed trace.
+    fn run_lifecycle(clock: &VirtualClock, tracer: &Tracer, id: &TxId, step: Duration) -> TxTrace {
+        tracer.stamp(id, Stage::Submit);
+        clock.advance(step);
+        tracer.stamp(id, Stage::Admit);
+        clock.advance(step);
+        tracer.stamp_hop(id);
+        clock.advance(step);
+        tracer.stamp(id, Stage::BatchPull);
+        clock.advance(step);
+        tracer.stamp(id, Stage::Prevalidate);
+        clock.advance(step);
+        tracer.stamp(id, Stage::Apply);
+        clock.advance(step);
+        tracer.complete_commit(id).expect("lifecycle completed")
+    }
+
+    /// The acceptance-criteria test: a deterministic (virtual-clock) run
+    /// where one slow transaction trips the anomaly trigger, and the
+    /// frozen dump contains every pipeline stage in order.
+    #[test]
+    fn anomalous_commit_latency_freezes_full_stage_breakdown() {
+        let (clock, tracer) = setup();
+        for n in 1..=16u64 {
+            run_lifecycle(&clock, &tracer, &txid(n), Duration::from_millis(1));
+        }
+        assert_eq!(tracer.flight().anomaly_count(), 0, "baseline traffic is clean");
+        let p95 = tracer.flight().rolling_p95().expect("rolling p95 seeded");
+        assert!(p95 < 0.010, "baseline p95 {p95}");
+
+        // 100× the baseline per-stage time: latency 0.6s >> 3 × p95.
+        run_lifecycle(&clock, &tracer, &txid(999), Duration::from_millis(100));
+        let frozen = tracer.flight().anomalies();
+        assert_eq!(frozen.len(), 1);
+        let tr = &frozen[0];
+        assert_eq!(tr.tx_id, txid(999));
+        assert_eq!(tr.outcome, TraceOutcome::Completed);
+        assert_eq!(tr.hops, 1);
+        assert!(tr.is_monotone(), "{tr:?}");
+        let stages: Vec<Stage> = tr.stages().iter().map(|&(s, _)| s).collect();
+        assert_eq!(stages, STAGES.to_vec(), "dump contains all pipeline stages in order");
+        assert!((tr.latency().unwrap() - 0.6).abs() < 1e-9);
+
+        // The JSON dump names every stage.
+        let dump = tr.to_json().to_string();
+        for st in STAGES {
+            assert!(dump.contains(st.name()), "dump missing {}: {dump}", st.name());
+        }
+        let full = tracer.flight().to_json().to_string();
+        assert!(full.contains(&txid(999).hex()));
+    }
+
+    #[test]
+    fn trigger_stays_disarmed_until_min_samples() {
+        let (clock, tracer) = setup();
+        // Alternate fast/slow before the 8-sample arm point: nothing
+        // freezes, because the rolling p95 is not trusted yet.
+        for n in 1..=7u64 {
+            let step = if n % 2 == 0 { 1 } else { 40 };
+            run_lifecycle(&clock, &tracer, &txid(n), Duration::from_millis(step));
+        }
+        assert_eq!(tracer.flight().anomaly_count(), 0);
+    }
+
+    #[test]
+    fn aborts_always_freeze_with_reason() {
+        let (clock, tracer) = setup();
+        let id = txid(42);
+        tracer.stamp(&id, Stage::Submit);
+        clock.advance(Duration::from_millis(2));
+        tracer.stamp(&id, Stage::Admit);
+        let tr = tracer.abort(&id, "relay_drop").expect("tracked");
+        assert_eq!(tr.outcome, TraceOutcome::Aborted("relay_drop"));
+        let frozen = tracer.flight().anomalies();
+        assert_eq!(frozen.len(), 1);
+        assert!(frozen[0].to_json().to_string().contains("aborted:relay_drop"));
+        // The slot is freed — a late commit event is a no-op.
+        assert!(tracer.complete_commit(&id).is_none());
+    }
+
+    #[test]
+    fn ring_retains_last_n() {
+        let clock = Arc::new(VirtualClock::new());
+        let tracer = Tracer::with_parts(
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            FlightConfig { retain: 4, ..FlightConfig::default() },
+        );
+        for n in 1..=10u64 {
+            run_lifecycle(&clock, &tracer, &txid(n), Duration::from_millis(1));
+        }
+        let kept = tracer.flight().completed();
+        assert_eq!(kept.len(), 4);
+        let ids: Vec<TxId> = kept.iter().map(|t| t.tx_id).collect();
+        assert_eq!(ids, vec![txid(7), txid(8), txid(9), txid(10)], "oldest evicted first");
+    }
+}

@@ -1,0 +1,284 @@
+//! Process-wide metrics registry with pull-model collectors.
+//!
+//! Subsystems do not push samples: they `register` a closure that, when a
+//! render is requested, reads the subsystem's live atomics and returns the
+//! current [`Sample`]s. Closures capture `Weak` references to their
+//! subsystem and return `None` once it is gone, at which point the
+//! registry prunes them — so short-lived test networks and benches can
+//! register into the process-wide registry without leaking collectors.
+//!
+//! Metric names follow the convention documented in [`crate::telemetry`]:
+//! `scalesfl_<subsystem>_<name>` with `_total` for counters and a unit
+//! suffix (`_seconds`, `_bytes`) for gauges/summaries; per-shard series
+//! carry a `channel` label.
+
+use std::sync::Mutex;
+
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+/// A metric value at collection time.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Monotone total.
+    Counter(f64),
+    /// Point-in-time level.
+    Gauge(f64),
+    /// Distribution digest (from a [`Histogram`]).
+    Summary { count: u64, sum: f64, p50: f64, p95: f64, p99: f64, max: f64 },
+}
+
+/// One labelled metric sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: Value,
+}
+
+impl Sample {
+    pub fn counter(name: impl Into<String>, labels: Vec<(String, String)>, v: f64) -> Sample {
+        Sample { name: name.into(), labels, value: Value::Counter(v) }
+    }
+
+    pub fn gauge(name: impl Into<String>, labels: Vec<(String, String)>, v: f64) -> Sample {
+        Sample { name: name.into(), labels, value: Value::Gauge(v) }
+    }
+
+    pub fn summary(name: impl Into<String>, labels: Vec<(String, String)>, h: &Histogram) -> Sample {
+        Sample {
+            name: name.into(),
+            labels,
+            value: Value::Summary {
+                count: h.count(),
+                // Histogram keeps mean = sum/count exactly.
+                sum: h.mean() * h.count() as f64,
+                p50: h.quantile(0.5).unwrap_or(0.0),
+                p95: h.quantile(0.95).unwrap_or(0.0),
+                p99: h.quantile(0.99).unwrap_or(0.0),
+                max: h.max(),
+            },
+        }
+    }
+
+    /// Convenience for the ubiquitous single `channel` label.
+    pub fn channel_label(channel: &str) -> Vec<(String, String)> {
+        vec![("channel".to_string(), channel.to_string())]
+    }
+}
+
+type Collector = Box<dyn Fn() -> Option<Vec<Sample>> + Send + Sync>;
+
+/// See the module doc. Cheap to create; the process-wide instance lives in
+/// [`crate::telemetry::Telemetry::global`].
+#[derive(Default)]
+pub struct Registry {
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a collector. Return `None` (typically via a failed
+    /// `Weak::upgrade`) to be pruned.
+    pub fn register<F>(&self, f: F)
+    where
+        F: Fn() -> Option<Vec<Sample>> + Send + Sync + 'static,
+    {
+        self.collectors.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Registered (not yet pruned) collectors.
+    pub fn collector_count(&self) -> usize {
+        self.collectors.lock().unwrap().len()
+    }
+
+    /// Run every collector, prune the dead, and return all samples sorted
+    /// by (name, labels) for stable rendering.
+    fn gather(&self) -> Vec<Sample> {
+        let mut collectors = self.collectors.lock().unwrap();
+        let mut out = Vec::new();
+        collectors.retain(|c| match c() {
+            Some(mut samples) => {
+                out.append(&mut samples);
+                true
+            }
+            None => false,
+        });
+        drop(collectors);
+        out.sort_by(|a, b| (a.name.as_str(), &a.labels).cmp(&(b.name.as_str(), &b.labels)));
+        out
+    }
+
+    /// Prometheus text exposition (one `# TYPE` line per metric name;
+    /// summaries expand into `quantile`-labelled series plus `_sum` and
+    /// `_count`).
+    pub fn render_prometheus(&self) -> String {
+        let samples = self.gather();
+        let mut out = String::new();
+        let mut last: Option<&str> = None;
+        for s in &samples {
+            if last != Some(s.name.as_str()) {
+                let ty = match s.value {
+                    Value::Counter(_) => "counter",
+                    Value::Gauge(_) => "gauge",
+                    Value::Summary { .. } => "summary",
+                };
+                out.push_str("# TYPE ");
+                out.push_str(&s.name);
+                out.push(' ');
+                out.push_str(ty);
+                out.push('\n');
+                last = Some(s.name.as_str());
+            }
+            match &s.value {
+                Value::Counter(v) | Value::Gauge(v) => {
+                    out.push_str(&format!("{}{} {}\n", s.name, fmt_labels(&s.labels, None), v));
+                }
+                Value::Summary { count, sum, p50, p95, p99, max } => {
+                    for (q, v) in
+                        [("0.5", p50), ("0.95", p95), ("0.99", p99), ("1", max)]
+                    {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            s.name,
+                            fmt_labels(&s.labels, Some(("quantile", q))),
+                            v
+                        ));
+                    }
+                    out.push_str(&format!("{}_sum{} {}\n", s.name, fmt_labels(&s.labels, None), sum));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        s.name,
+                        fmt_labels(&s.labels, None),
+                        count
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON exposition: `{"metrics": [{name, type, labels, ...}, ...]}`.
+    pub fn render_json(&self) -> Json {
+        let metrics: Vec<Json> = self
+            .gather()
+            .iter()
+            .map(|s| {
+                let mut labels = Json::obj();
+                for (k, v) in &s.labels {
+                    labels = labels.set(k.as_str(), v.as_str());
+                }
+                let base = Json::obj().set("name", s.name.as_str()).set("labels", labels);
+                match &s.value {
+                    Value::Counter(v) => base.set("type", "counter").set("value", *v),
+                    Value::Gauge(v) => base.set("type", "gauge").set("value", *v),
+                    Value::Summary { count, sum, p50, p95, p99, max } => base
+                        .set("type", "summary")
+                        .set("count", *count)
+                        .set("sum", *sum)
+                        .set("p50", *p50)
+                        .set("p95", *p95)
+                        .set("p99", *p99)
+                        .set("max", *max),
+                }
+            })
+            .collect();
+        Json::obj().set("metrics", metrics)
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn collectors_prune_when_source_drops() {
+        let reg = Registry::new();
+        let src = Arc::new(AtomicU64::new(3));
+        let weak = Arc::downgrade(&src);
+        reg.register(move || {
+            let s = weak.upgrade()?;
+            Some(vec![Sample::counter(
+                "scalesfl_test_total",
+                Vec::new(),
+                s.load(Ordering::Relaxed) as f64,
+            )])
+        });
+        assert_eq!(reg.collector_count(), 1);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE scalesfl_test_total counter"), "{text}");
+        assert!(text.contains("scalesfl_test_total 3"), "{text}");
+        drop(src);
+        assert!(!reg.render_prometheus().contains("scalesfl_test_total"));
+        assert_eq!(reg.collector_count(), 0, "dead collector pruned");
+    }
+
+    #[test]
+    fn labels_and_summaries_render() {
+        let reg = Registry::new();
+        reg.register(|| {
+            let mut h = Histogram::default();
+            h.record(0.25);
+            Some(vec![
+                Sample::gauge("scalesfl_test_depth", Sample::channel_label("shard0"), 7.0),
+                Sample::summary("scalesfl_test_latency_seconds", Vec::new(), &h),
+            ])
+        });
+        let text = reg.render_prometheus();
+        assert!(text.contains("scalesfl_test_depth{channel=\"shard0\"} 7"), "{text}");
+        assert!(text.contains("# TYPE scalesfl_test_latency_seconds summary"), "{text}");
+        assert!(text.contains("scalesfl_test_latency_seconds{quantile=\"0.5\"} 0.25"), "{text}");
+        assert!(text.contains("scalesfl_test_latency_seconds{quantile=\"1\"} 0.25"), "{text}");
+        assert!(text.contains("scalesfl_test_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("scalesfl_test_latency_seconds_sum 0.25"), "{text}");
+    }
+
+    #[test]
+    fn json_exposition_mirrors_samples() {
+        let reg = Registry::new();
+        reg.register(|| {
+            Some(vec![
+                Sample::counter("scalesfl_b_total", Vec::new(), 2.0),
+                Sample::gauge("scalesfl_a_level", Sample::channel_label("ch"), 1.5),
+            ])
+        });
+        let j = reg.render_json();
+        let metrics = j.get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(metrics.len(), 2);
+        // Sorted by name: a_level first.
+        assert_eq!(metrics[0].get("name").unwrap().as_str(), Some("scalesfl_a_level"));
+        assert_eq!(metrics[0].get("labels").unwrap().get("channel").unwrap().as_str(), Some("ch"));
+        assert_eq!(metrics[1].get("value").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn summary_sample_handles_empty_histogram() {
+        let h = Histogram::default();
+        let s = Sample::summary("scalesfl_empty_seconds", Vec::new(), &h);
+        match s.value {
+            Value::Summary { count, sum, p50, .. } => {
+                assert_eq!(count, 0);
+                assert_eq!(sum, 0.0);
+                assert_eq!(p50, 0.0);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

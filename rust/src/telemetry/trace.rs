@@ -1,0 +1,771 @@
+//! Per-transaction lifecycle tracing: a lock-free, atomic-slot table that
+//! stamps every transaction at each pipeline stage it passes.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The hot path must be wait-free-ish and allocation-free.** A stamp
+//!    is a handful of relaxed/acquire atomic operations on a fixed slot
+//!    table — no locks, no heap. The admission path stamps every admitted
+//!    transaction, and the telemetry bench gates its cost at ≤ 5% of
+//!    admitted-tx throughput.
+//! 2. **Deterministic under `VirtualClock`.** All stamps read one
+//!    injectable [`Clock`], so virtual-clock tests replay stage timings
+//!    exactly.
+//! 3. **Best-effort beats blocking.** Under pathological load (more live
+//!    lifecycles than slots) the table steals a slot inside the probe
+//!    window (`evicted` counter) or, failing the steal race, drops the
+//!    stamp (`dropped` counter). Tracing never stalls the pipeline.
+//!
+//! Slot protocol: a slot's `key` is 0 when free, the first 8 bytes of the
+//! transaction id when owned, and `u64::MAX` (tombstone) while a completer
+//! extracts it. The first stamp for an unknown id claims a free slot by
+//! CAS; stage timestamps are written first-write-wins (peer replicas and
+//! relay re-deliveries must not move a stamp forward), encoded as
+//! `1 + nanoseconds` so a `VirtualClock` stamp at t=0 is distinguishable
+//! from "unset". Completion/abort tombstones the slot, reads the stamps
+//! out, and frees it. A stamp racing an extraction can leak into the
+//! slot's next occupant — accepted and documented: this is a tracing
+//! facility, not an accounting one (the accounting counters live in
+//! `mempool::stats` / `fabric::validator`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ledger::tx::TxId;
+use crate::util::clock::Clock;
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+use super::flight::{FlightConfig, FlightRecorder};
+use super::registry::{Registry, Sample};
+
+/// Pipeline stages a transaction is stamped at, in pipeline order: a
+/// monotone lifecycle visits a subset of these with non-decreasing
+/// timestamps. `RelayHop` sits between ingress admission and batch pull
+/// because a cross-shard transaction is admitted (for forwarding) at its
+/// ingress pool before any hop is scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Gateway registered the tx with the commit demux and handed it to
+    /// the orderer (`Gateway::submit`).
+    Submit = 0,
+    /// Admission control accepted the envelope — into a lane slot, or for
+    /// cross-shard forwarding at an ingress pool.
+    Admit = 1,
+    /// A cross-shard relay hop delivered the envelope toward its home
+    /// pool (`TxTrace::hops` counts them; the stamp keeps the first).
+    RelayHop = 2,
+    /// The orderer driver pulled the envelope into a proposed batch.
+    BatchPull = 3,
+    /// Endorsement-policy / signature pre-validation finished for the
+    /// envelope (stamped by the replica that did the crypto, not by
+    /// cache-hit replicas).
+    Prevalidate = 4,
+    /// MVCC check + state apply decided the validation code (first
+    /// replica wins the stamp).
+    Apply = 5,
+    /// The commit event reached a gateway's `CommitWaiter` demux — the
+    /// gateway-observed end of the lifecycle, separable from the
+    /// peer-observed `Apply` time.
+    CommitEvent = 6,
+}
+
+/// Number of distinct stages.
+pub const STAGE_COUNT: usize = 7;
+
+/// Every stage, in pipeline order.
+pub const STAGES: [Stage; STAGE_COUNT] = [
+    Stage::Submit,
+    Stage::Admit,
+    Stage::RelayHop,
+    Stage::BatchPull,
+    Stage::Prevalidate,
+    Stage::Apply,
+    Stage::CommitEvent,
+];
+
+impl Stage {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Metric-label spelling (`scalesfl_trace_stage_seconds{stage=...}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Admit => "admit",
+            Stage::RelayHop => "relay_hop",
+            Stage::BatchPull => "batch_pull",
+            Stage::Prevalidate => "prevalidate",
+            Stage::Apply => "apply",
+            Stage::CommitEvent => "commit_event",
+        }
+    }
+}
+
+/// How a recorded lifecycle ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceOutcome {
+    /// Commit event observed.
+    Completed,
+    /// Died mid-pipeline; the reason is a short static tag
+    /// (`"relay_drop"`, `"stale_drop"`, `"reject"`, ...).
+    Aborted(&'static str),
+}
+
+/// A finished (completed or aborted) transaction lifecycle.
+#[derive(Clone, Debug)]
+pub struct TxTrace {
+    pub tx_id: TxId,
+    /// Cross-shard relay hops the envelope took (0 for direct routing).
+    pub hops: u64,
+    /// Per-stage timestamps in clock seconds (`None` = stage not visited).
+    pub stamps: [Option<f64>; STAGE_COUNT],
+    pub outcome: TraceOutcome,
+}
+
+impl TxTrace {
+    /// The visited stages with their timestamps, in pipeline order.
+    pub fn stages(&self) -> Vec<(Stage, f64)> {
+        STAGES.iter().filter_map(|&st| self.stamps[st.index()].map(|t| (st, t))).collect()
+    }
+
+    pub fn begin(&self) -> Option<f64> {
+        self.stages().first().map(|&(_, t)| t)
+    }
+
+    pub fn end(&self) -> Option<f64> {
+        self.stages().last().map(|&(_, t)| t)
+    }
+
+    /// First stamp to last stamp (for completed traces: submission-side
+    /// entry to gateway-observed commit).
+    pub fn latency(&self) -> Option<f64> {
+        match (self.begin(), self.end()) {
+            (Some(b), Some(e)) => Some(e - b),
+            _ => None,
+        }
+    }
+
+    /// Timestamps non-decreasing in pipeline order?
+    pub fn is_monotone(&self) -> bool {
+        self.stages().windows(2).all(|w| w[0].1 <= w[1].1)
+    }
+
+    /// Stage breakdown dump (the flight recorder's exposition format).
+    pub fn to_json(&self) -> Json {
+        let begin = self.begin().unwrap_or(0.0);
+        let stages: Vec<Json> = self
+            .stages()
+            .iter()
+            .map(|&(st, t)| {
+                Json::obj().set("stage", st.name()).set("t_s", t).set("offset_s", t - begin)
+            })
+            .collect();
+        let outcome = match self.outcome {
+            TraceOutcome::Completed => "completed".to_string(),
+            TraceOutcome::Aborted(reason) => format!("aborted:{reason}"),
+        };
+        Json::obj()
+            .set("tx_id", self.tx_id.hex())
+            .set("outcome", outcome)
+            .set("hops", self.hops)
+            .set("latency_s", self.latency().unwrap_or(0.0))
+            .set("stages", stages)
+    }
+}
+
+/// Linear-probe distance before the table steals a slot.
+const PROBE_WINDOW: usize = 16;
+
+/// Default slot count (~8k live lifecycles; 72 B per slot).
+const DEFAULT_SLOTS: usize = 8192;
+
+/// Slot `key` value while a completer owns the slot for extraction.
+const TOMBSTONE: u64 = u64::MAX;
+
+struct Slot {
+    /// 0 = free, `TOMBSTONE` = mid-extraction, else the tx key.
+    key: AtomicU64,
+    hops: AtomicU64,
+    /// 0 = unset, else `1 + nanoseconds` on the tracer's clock.
+    stamps: [AtomicU64; STAGE_COUNT],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            key: AtomicU64::new(0),
+            hops: AtomicU64::new(0),
+            stamps: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn clear_payload(&self) {
+        self.hops.store(0, Ordering::Relaxed);
+        for s in &self.stamps {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Slot key: the first 8 bytes of the (uniform, SHA-256) transaction id.
+/// 0 is reserved for "free", so the measure-zero all-zero prefix maps to 1.
+fn key_of(id: &TxId) -> u64 {
+    let k = u64::from_le_bytes(id.0[..8].try_into().expect("8-byte prefix"));
+    if k == 0 {
+        1
+    } else {
+        k
+    }
+}
+
+struct StageHists {
+    /// `stages[i]` holds the latency from the *previous visited stage* to
+    /// stage `i` (the first visited stage is the epoch and records
+    /// nothing), fed at lifecycle completion.
+    stages: [Histogram; STAGE_COUNT],
+    /// First stamp → commit event, per completed lifecycle.
+    commit_latency: Histogram,
+}
+
+impl StageHists {
+    fn new() -> StageHists {
+        StageHists {
+            stages: std::array::from_fn(|_| Histogram::default()),
+            commit_latency: Histogram::default(),
+        }
+    }
+}
+
+struct Shared {
+    slots: Vec<Slot>,
+    clock: Arc<dyn Clock>,
+    hists: Mutex<StageHists>,
+    flight: FlightRecorder,
+    completed: AtomicU64,
+    aborted: AtomicU64,
+    evicted: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Point-in-time copy of the tracer's aggregates.
+#[derive(Clone, Debug)]
+pub struct StageSnapshot {
+    /// Per-stage arrival latencies (from the previous visited stage), all
+    /// stages in pipeline order.
+    pub stages: Vec<(Stage, Histogram)>,
+    pub commit_latency: Histogram,
+    /// Monotone lifecycle counters (never reset by `take_stage_snapshot`).
+    pub completed: u64,
+    pub aborted: u64,
+    pub evicted: u64,
+    pub dropped: u64,
+}
+
+impl StageSnapshot {
+    pub fn stage(&self, st: Stage) -> &Histogram {
+        &self.stages[st.index()].1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut stages = Json::obj();
+        for (st, h) in &self.stages {
+            stages = stages.set(
+                st.name(),
+                Json::obj()
+                    .set("count", h.count())
+                    .set("mean_s", h.mean())
+                    .set("p95_s", h.quantile(0.95).unwrap_or(0.0))
+                    .set("max_s", h.max()),
+            );
+        }
+        Json::obj()
+            .set("completed", self.completed)
+            .set("aborted", self.aborted)
+            .set("evicted", self.evicted)
+            .set("dropped", self.dropped)
+            .set("commit_latency_p95_s", self.commit_latency.quantile(0.95).unwrap_or(0.0))
+            .set("stages", stages)
+    }
+}
+
+/// The lock-free span recorder. Cheap to clone-share via its inner `Arc`;
+/// the process-wide instance lives in [`super::Telemetry::global`].
+pub struct Tracer {
+    shared: Arc<Shared>,
+}
+
+impl Tracer {
+    pub fn new(clock: Arc<dyn Clock>) -> Tracer {
+        Tracer::with_capacity(clock, DEFAULT_SLOTS, FlightConfig::default())
+    }
+
+    pub fn with_parts(clock: Arc<dyn Clock>, flight: FlightConfig) -> Tracer {
+        Tracer::with_capacity(clock, DEFAULT_SLOTS, flight)
+    }
+
+    pub fn with_capacity(clock: Arc<dyn Clock>, slots: usize, flight: FlightConfig) -> Tracer {
+        let n = slots.max(PROBE_WINDOW);
+        Tracer {
+            shared: Arc::new(Shared {
+                slots: (0..n).map(|_| Slot::new()).collect(),
+                clock,
+                hists: Mutex::new(StageHists::new()),
+                flight: FlightRecorder::new(flight),
+                completed: AtomicU64::new(0),
+                aborted: AtomicU64::new(0),
+                evicted: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.shared.flight
+    }
+
+    fn encode_now(&self) -> u64 {
+        1 + (self.shared.clock.now() * 1e9) as u64
+    }
+
+    /// Stamp `stage` for `id` now. The first stamp for an unknown id
+    /// begins its lifecycle (claims a slot); per-stage, the first write
+    /// wins.
+    pub fn stamp(&self, id: &TxId, stage: Stage) {
+        let t = self.encode_now();
+        self.stamp_at(id, stage, t, false);
+    }
+
+    /// Stamp a relay hop: first-hop timestamp plus a hop count.
+    pub fn stamp_hop(&self, id: &TxId) {
+        let t = self.encode_now();
+        self.stamp_at(id, Stage::RelayHop, t, true);
+    }
+
+    fn stamp_at(&self, id: &TxId, stage: Stage, t: u64, hop: bool) {
+        let s = &self.shared;
+        let key = key_of(id);
+        let n = s.slots.len();
+        let start = (key as usize) % n;
+        for i in 0..PROBE_WINDOW {
+            let slot = &s.slots[(start + i) % n];
+            let cur = slot.key.load(Ordering::Acquire);
+            if cur == key {
+                write_stamp(slot, stage, t, hop);
+                return;
+            }
+            if cur == 0 {
+                match slot.key.compare_exchange(0, key, Ordering::AcqRel, Ordering::Acquire) {
+                    Ok(_) => {
+                        write_stamp(slot, stage, t, hop);
+                        return;
+                    }
+                    Err(won) if won == key => {
+                        write_stamp(slot, stage, t, hop);
+                        return;
+                    }
+                    // Lost the free slot to a different tx; keep probing.
+                    Err(_) => continue,
+                }
+            }
+        }
+        // Probe window exhausted: steal the window's first slot
+        // (best-effort eviction of whatever lifecycle holds it — under
+        // synthetic open-loop load that is almost always an abandoned
+        // trace that would never complete anyway).
+        let slot = &s.slots[start];
+        let cur = slot.key.load(Ordering::Acquire);
+        if cur == key {
+            write_stamp(slot, stage, t, hop);
+        } else if cur != 0
+            && cur != TOMBSTONE
+            && slot.key.compare_exchange(cur, key, Ordering::AcqRel, Ordering::Acquire).is_ok()
+        {
+            s.evicted.fetch_add(1, Ordering::Relaxed);
+            slot.clear_payload();
+            write_stamp(slot, stage, t, hop);
+        } else {
+            s.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn find(&self, key: u64) -> Option<&Slot> {
+        let s = &self.shared;
+        let n = s.slots.len();
+        let start = (key as usize) % n;
+        (0..PROBE_WINDOW)
+            .map(|i| &s.slots[(start + i) % n])
+            .find(|slot| slot.key.load(Ordering::Acquire) == key)
+    }
+
+    /// Tombstone the slot, read the lifecycle out, and free it. `None`
+    /// when another completer won the race (or the slot was evicted).
+    fn extract(slot: &Slot, key: u64, id: TxId, outcome: TraceOutcome) -> Option<TxTrace> {
+        slot.key.compare_exchange(key, TOMBSTONE, Ordering::AcqRel, Ordering::Acquire).ok()?;
+        let mut stamps = [None; STAGE_COUNT];
+        for (i, s) in slot.stamps.iter().enumerate() {
+            let v = s.load(Ordering::Acquire);
+            if v != 0 {
+                stamps[i] = Some((v - 1) as f64 / 1e9);
+            }
+        }
+        let hops = slot.hops.load(Ordering::Relaxed);
+        slot.clear_payload();
+        slot.key.store(0, Ordering::Release);
+        Some(TxTrace { tx_id: id, hops, stamps, outcome })
+    }
+
+    /// Stamp the commit event and finish the lifecycle: feed the stage
+    /// histograms and hand the trace to the flight recorder. Unlike
+    /// [`Tracer::stamp`] this never claims a slot — a commit event for an
+    /// untracked tx (second demux on the channel, tracing enabled
+    /// mid-flight) is a silent no-op, not a garbage lifecycle.
+    pub fn complete_commit(&self, id: &TxId) -> Option<TxTrace> {
+        let key = key_of(id);
+        let slot = self.find(key)?;
+        let t = self.encode_now();
+        let _ = slot.stamps[Stage::CommitEvent.index()].compare_exchange(
+            0,
+            t,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        let trace = Tracer::extract(slot, key, *id, TraceOutcome::Completed)?;
+        self.shared.completed.fetch_add(1, Ordering::Relaxed);
+        self.record_completed(&trace);
+        Some(trace)
+    }
+
+    fn record_completed(&self, trace: &TxTrace) {
+        let mut h = self.shared.hists.lock().unwrap();
+        let mut prev: Option<f64> = None;
+        for (stage, t) in trace.stages() {
+            if let Some(p) = prev {
+                h.stages[stage.index()].record((t - p).max(0.0));
+            }
+            prev = Some(t);
+        }
+        if let Some(lat) = trace.latency() {
+            h.commit_latency.record(lat);
+        }
+        drop(h);
+        self.shared.flight.on_complete(trace.clone());
+    }
+
+    /// Kill a lifecycle mid-pipeline (relay drop, stale drop, shutdown
+    /// flush): the partial trace is frozen into the flight recorder with
+    /// `reason`. No-op for untracked ids.
+    pub fn abort(&self, id: &TxId, reason: &'static str) -> Option<TxTrace> {
+        let key = key_of(id);
+        let slot = self.find(key)?;
+        let trace = Tracer::extract(slot, key, *id, TraceOutcome::Aborted(reason))?;
+        self.shared.aborted.fetch_add(1, Ordering::Relaxed);
+        self.shared.flight.on_abort(trace.clone());
+        Some(trace)
+    }
+
+    /// Free a lifecycle without recording it anywhere. For outcomes that
+    /// are already fully accounted elsewhere and carry no latency signal
+    /// (admission rejects resolved at submit time).
+    pub fn discard(&self, id: &TxId) {
+        let key = key_of(id);
+        if let Some(slot) = self.find(key) {
+            let _ = Tracer::extract(slot, key, *id, TraceOutcome::Completed);
+        }
+    }
+
+    /// Wipe every live slot (benchmarks/tests that reuse the process-wide
+    /// tracer across measurement reps). Aggregates are untouched.
+    pub fn reset(&self) {
+        for slot in &self.shared.slots {
+            let cur = slot.key.load(Ordering::Acquire);
+            if cur != 0
+                && cur != TOMBSTONE
+                && slot
+                    .key
+                    .compare_exchange(cur, TOMBSTONE, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                slot.clear_payload();
+                slot.key.store(0, Ordering::Release);
+            }
+        }
+    }
+
+    /// Live (claimed, not yet completed) lifecycles — a table scan; for
+    /// tests and exposition, not hot paths.
+    pub fn live(&self) -> usize {
+        self.shared
+            .slots
+            .iter()
+            .filter(|s| {
+                let k = s.key.load(Ordering::Relaxed);
+                k != 0 && k != TOMBSTONE
+            })
+            .count()
+    }
+
+    /// Copy the aggregates.
+    pub fn stage_snapshot(&self) -> StageSnapshot {
+        let h = self.shared.hists.lock().unwrap();
+        self.snapshot_from(&h)
+    }
+
+    /// Copy the aggregates and reset the *histograms* for the next
+    /// measurement window (caliper rounds report per-round stage
+    /// latencies, not process totals). The lifecycle counters stay
+    /// monotone — they are exposed as Prometheus counters.
+    pub fn take_stage_snapshot(&self) -> StageSnapshot {
+        let mut h = self.shared.hists.lock().unwrap();
+        let snap = self.snapshot_from(&h);
+        *h = StageHists::new();
+        snap
+    }
+
+    fn snapshot_from(&self, h: &StageHists) -> StageSnapshot {
+        StageSnapshot {
+            stages: STAGES.iter().map(|&st| (st, h.stages[st.index()].clone())).collect(),
+            commit_latency: h.commit_latency.clone(),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            aborted: self.shared.aborted.load(Ordering::Relaxed),
+            evicted: self.shared.evicted.load(Ordering::Relaxed),
+            dropped: self.shared.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Register this tracer's metrics (lifecycle counters, per-stage
+    /// latency summaries, flight-recorder gauges) with `registry`. Weakly:
+    /// a dropped tracer's collector prunes itself at the next render.
+    pub(crate) fn register_collector(&self, registry: &Registry) {
+        let w = Arc::downgrade(&self.shared);
+        registry.register(move || {
+            let s = w.upgrade()?;
+            let mut out = vec![
+                Sample::counter(
+                    "scalesfl_trace_completed_total",
+                    Vec::new(),
+                    s.completed.load(Ordering::Relaxed) as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_trace_aborted_total",
+                    Vec::new(),
+                    s.aborted.load(Ordering::Relaxed) as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_trace_evicted_total",
+                    Vec::new(),
+                    s.evicted.load(Ordering::Relaxed) as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_trace_dropped_total",
+                    Vec::new(),
+                    s.dropped.load(Ordering::Relaxed) as f64,
+                ),
+            ];
+            {
+                let h = s.hists.lock().unwrap();
+                for st in STAGES {
+                    out.push(Sample::summary(
+                        "scalesfl_trace_stage_seconds",
+                        vec![("stage".to_string(), st.name().to_string())],
+                        &h.stages[st.index()],
+                    ));
+                }
+                out.push(Sample::summary(
+                    "scalesfl_trace_commit_latency_seconds",
+                    Vec::new(),
+                    &h.commit_latency,
+                ));
+            }
+            out.push(Sample::gauge(
+                "scalesfl_flight_retained",
+                Vec::new(),
+                s.flight.retained() as f64,
+            ));
+            out.push(Sample::gauge(
+                "scalesfl_flight_anomalies",
+                Vec::new(),
+                s.flight.anomaly_count() as f64,
+            ));
+            out.push(Sample::gauge(
+                "scalesfl_flight_rolling_p95_seconds",
+                Vec::new(),
+                s.flight.rolling_p95().unwrap_or(0.0),
+            ));
+            Some(out)
+        });
+    }
+}
+
+fn write_stamp(slot: &Slot, stage: Stage, t: u64, hop: bool) {
+    // First write wins: replicas / re-deliveries must not move a stage
+    // stamp forward, so the stage list stays monotone at completion.
+    let _ = slot.stamps[stage.index()].compare_exchange(0, t, Ordering::AcqRel, Ordering::Acquire);
+    if hop {
+        slot.hops.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Digest;
+    use crate::util::clock::VirtualClock;
+    use std::time::Duration;
+
+    fn txid(n: u64) -> TxId {
+        let mut b = [0u8; 32];
+        b[..8].copy_from_slice(&n.to_le_bytes());
+        Digest(b)
+    }
+
+    fn virtual_tracer() -> (Arc<VirtualClock>, Tracer) {
+        let clock = Arc::new(VirtualClock::new());
+        let tracer = Tracer::with_parts(
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            FlightConfig { retain: 2048, ..FlightConfig::default() },
+        );
+        (clock, tracer)
+    }
+
+    #[test]
+    fn lifecycle_records_all_stages_in_order() {
+        let (clock, tracer) = virtual_tracer();
+        let id = txid(7);
+        tracer.stamp(&id, Stage::Submit);
+        clock.advance(Duration::from_millis(1));
+        tracer.stamp(&id, Stage::Admit);
+        clock.advance(Duration::from_millis(2));
+        tracer.stamp_hop(&id);
+        clock.advance(Duration::from_millis(3));
+        tracer.stamp(&id, Stage::BatchPull);
+        clock.advance(Duration::from_millis(4));
+        tracer.stamp(&id, Stage::Prevalidate);
+        clock.advance(Duration::from_millis(5));
+        tracer.stamp(&id, Stage::Apply);
+        clock.advance(Duration::from_millis(6));
+        let trace = tracer.complete_commit(&id).expect("completed");
+        assert_eq!(trace.outcome, TraceOutcome::Completed);
+        assert_eq!(trace.hops, 1);
+        let stages: Vec<Stage> = trace.stages().iter().map(|&(s, _)| s).collect();
+        assert_eq!(stages, STAGES.to_vec());
+        assert!(trace.is_monotone(), "{trace:?}");
+        assert!((trace.latency().unwrap() - 0.021).abs() < 1e-9);
+        // Slot freed: a second completion finds nothing.
+        assert!(tracer.complete_commit(&id).is_none());
+        assert_eq!(tracer.live(), 0);
+        let snap = tracer.stage_snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.stage(Stage::Admit).count(), 1);
+        assert_eq!(snap.stage(Stage::Admit).quantile(0.5), Some(0.001));
+        assert_eq!(snap.stage(Stage::CommitEvent).quantile(0.5), Some(0.006));
+        assert_eq!(snap.commit_latency.count(), 1);
+    }
+
+    #[test]
+    fn first_stamp_wins_per_stage() {
+        let (clock, tracer) = virtual_tracer();
+        let id = txid(9);
+        tracer.stamp(&id, Stage::Apply);
+        clock.advance(Duration::from_secs(1));
+        tracer.stamp(&id, Stage::Apply); // replica re-stamp: ignored
+        let trace = tracer.complete_commit(&id).unwrap();
+        assert_eq!(trace.stamps[Stage::Apply.index()], Some(0.0));
+    }
+
+    #[test]
+    fn untracked_completion_and_abort_are_noops() {
+        let (_clock, tracer) = virtual_tracer();
+        assert!(tracer.complete_commit(&txid(1)).is_none());
+        assert!(tracer.abort(&txid(2), "reject").is_none());
+        assert_eq!(tracer.live(), 0);
+        let snap = tracer.stage_snapshot();
+        assert_eq!((snap.completed, snap.aborted), (0, 0));
+    }
+
+    #[test]
+    fn discard_frees_without_recording() {
+        let (_clock, tracer) = virtual_tracer();
+        let id = txid(3);
+        tracer.stamp(&id, Stage::Submit);
+        assert_eq!(tracer.live(), 1);
+        tracer.discard(&id);
+        assert_eq!(tracer.live(), 0);
+        let snap = tracer.stage_snapshot();
+        assert_eq!((snap.completed, snap.aborted), (0, 0));
+        assert!(tracer.flight().completed().is_empty());
+    }
+
+    #[test]
+    fn full_window_steals_a_slot() {
+        let clock = Arc::new(VirtualClock::new());
+        // Capacity == probe window: any 17th live lifecycle must steal.
+        let tracer =
+            Tracer::with_capacity(Arc::clone(&clock) as Arc<dyn Clock>, 16, FlightConfig::default());
+        for n in 1..=16u64 {
+            tracer.stamp(&txid(n), Stage::Submit);
+        }
+        assert_eq!(tracer.live(), 16);
+        tracer.stamp(&txid(1000), Stage::Submit);
+        let snap = tracer.stage_snapshot();
+        assert_eq!(snap.evicted, 1);
+        assert_eq!(tracer.live(), 16, "stolen, not grown");
+        assert!(tracer.complete_commit(&txid(1000)).is_some(), "newcomer is tracked");
+    }
+
+    #[test]
+    fn reset_clears_live_lifecycles() {
+        let (_clock, tracer) = virtual_tracer();
+        for n in 1..=10u64 {
+            tracer.stamp(&txid(n), Stage::Admit);
+        }
+        assert_eq!(tracer.live(), 10);
+        tracer.reset();
+        assert_eq!(tracer.live(), 0);
+        assert!(tracer.complete_commit(&txid(5)).is_none());
+    }
+
+    /// The satellite coverage requirement: ≥ 4 threads hammering the slot
+    /// table under `VirtualClock` — no lifecycle lost or duplicated, and
+    /// every recorded trace has monotone stage timestamps.
+    #[test]
+    fn concurrent_lifecycles_none_lost_or_duplicated() {
+        let (clock, tracer) = virtual_tracer();
+        let threads = 4usize;
+        let per = 200usize;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let tracer = &tracer;
+                let clock = &clock;
+                s.spawn(move || {
+                    for i in 0..per {
+                        let id = txid(1 + (t * per + i) as u64);
+                        for st in
+                            [Stage::Submit, Stage::Admit, Stage::BatchPull, Stage::Prevalidate, Stage::Apply]
+                        {
+                            tracer.stamp(&id, st);
+                            clock.advance(Duration::from_micros(7));
+                        }
+                        let trace = tracer.complete_commit(&id).expect("lifecycle completed");
+                        assert_eq!(trace.tx_id, id);
+                    }
+                });
+            }
+        });
+        let snap = tracer.stage_snapshot();
+        assert_eq!(snap.completed, (threads * per) as u64, "every lifecycle completed once");
+        assert_eq!(snap.dropped, 0);
+        assert_eq!(snap.evicted, 0);
+        assert_eq!(tracer.live(), 0, "no slot leaked");
+        let done = tracer.flight().completed();
+        assert_eq!(done.len(), threads * per);
+        let mut seen = std::collections::HashSet::new();
+        for tr in &done {
+            assert!(seen.insert(tr.tx_id), "duplicated lifecycle {}", tr.tx_id.hex());
+            assert!(tr.is_monotone(), "non-monotone stamps: {tr:?}");
+            assert_eq!(tr.stages().len(), 6, "all stamped stages present: {tr:?}");
+            assert_eq!(tr.outcome, TraceOutcome::Completed);
+        }
+    }
+}

@@ -81,24 +81,33 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (bucket upper edge), q in [0, 1].
-    pub fn quantile(&self, q: f64) -> f64 {
+    /// Approximate quantile (bucket upper edge, clamped into the observed
+    /// `[min, max]` range so degenerate distributions stay exact: a
+    /// single-sample p50 is that sample, never a bucket boundary above
+    /// it), q in [0, 1]. `None` when nothing has been recorded.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
         if self.total == 0 {
-            return 0.0;
+            return None;
         }
         let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
         let mut seen = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target.max(1) {
-                return self.base * self.gamma.powi(i as i32 + 1);
+                let edge = self.base * self.gamma.powi(i as i32 + 1);
+                return Some(edge.clamp(self.min, self.max));
             }
         }
-        self.max
+        Some(self.max)
     }
 
+    /// Bucket-wise aggregation; panics when the two histograms were built
+    /// with different bucket layouts (base/gamma/bucket count), because
+    /// merging those would silently misfile every count.
     pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(self.counts.len(), other.counts.len());
+        assert_eq!(self.counts.len(), other.counts.len(), "merge: bucket counts differ");
+        assert_eq!(self.base.to_bits(), other.base.to_bits(), "merge: bases differ");
+        assert_eq!(self.gamma.to_bits(), other.gamma.to_bits(), "merge: gammas differ");
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -118,7 +127,27 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.count(), 0);
         assert_eq!(h.mean(), 0.0);
-        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(0.99), None);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_the_sample() {
+        let mut h = Histogram::default();
+        h.record(0.123);
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(h.quantile(q), Some(0.123), "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantiles_clamp_into_observed_range() {
+        let mut h = Histogram::default();
+        h.record(0.1);
+        h.record(0.2);
+        let p99 = h.quantile(0.99).unwrap();
+        assert!((0.1..=0.2).contains(&p99), "p99 {p99}");
+        assert_eq!(h.quantile(1.0), Some(0.2));
     }
 
     #[test]
@@ -139,9 +168,9 @@ mod tests {
         for _ in 0..50_000 {
             h.record(0.001 + 0.999 * r.next_f64()); // U(1ms, 1s)
         }
-        let p50 = h.quantile(0.5);
+        let p50 = h.quantile(0.5).unwrap();
         assert!((p50 - 0.5).abs() < 0.06, "p50 {p50}");
-        let p99 = h.quantile(0.99);
+        let p99 = h.quantile(0.99).unwrap();
         assert!((p99 - 0.99).abs() < 0.08, "p99 {p99}");
     }
 
@@ -154,5 +183,15 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!((a.mean() - 0.2).abs() < 1e-12);
+        assert_eq!(a.min(), 0.1);
+        assert_eq!(a.max(), 0.3);
+    }
+
+    #[test]
+    #[should_panic(expected = "bases differ")]
+    fn merge_rejects_mismatched_layout() {
+        let mut a = Histogram::new(1e-6, 1.05, 512);
+        let b = Histogram::new(1e-3, 1.05, 512);
+        a.merge(&b);
     }
 }
