@@ -47,6 +47,16 @@ pub fn run_real(
     // Window the tracer's per-stage histograms to this run: drain whatever
     // earlier workloads accumulated, collect what this one produced at the
     // end. Lifecycle counters stay monotone for the metrics registry.
+    //
+    // The tracer is process-global, so this windowing is best-effort:
+    // concurrent run_real calls (e.g. parallel `cargo test` harnesses)
+    // drain each other's samples, and a timed-out tx from a *previous* run
+    // whose commit event lands late is attributed to this window. The
+    // drivers in sim/ and main.rs run workloads sequentially against one
+    // pipeline, where the window is exact; `Report.stages` is stage-level
+    // attribution for them, not an isolation boundary. (The per-orderer
+    // mempool/relay deltas below are unaffected — they diff per-instance
+    // snapshots.)
     let _ = telemetry::global().tracer().take_stage_snapshot();
     let relay_base = gateways
         .first()

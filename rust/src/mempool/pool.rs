@@ -271,9 +271,12 @@ impl ShardMempool {
             .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
         let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
         self.stats.note_admitted(depth as u64);
-        drop(inner);
-        // First-write-wins: a relayed envelope keeps its ingress-side
-        // admit time, a direct one is stamped here.
+        // Stamped before the lock drops (the stamp itself is lock-free and
+        // cheap): once `inner` is released a concurrent `pull_batch` may
+        // pop this entry and stamp BatchPull, and Admit must already be in
+        // place for the trace to stay monotone. First-write-wins: a relayed
+        // envelope keeps its ingress-side admit time, a direct one is
+        // stamped here.
         telemetry::global().stamp(&tx_id, Stage::Admit);
         Ok(())
     }

@@ -29,8 +29,11 @@ use super::trace::TxTrace;
 pub struct FlightConfig {
     /// Completed lifecycles kept in the ring (oldest evicted first).
     pub retain: usize,
-    /// Frozen anomaly dumps kept (freezing stops at the cap; the
-    /// `scalesfl_flight_anomalies` gauge keeps counting via the cap).
+    /// Frozen anomaly dumps kept. Freezing stops at the cap, but the
+    /// monotone [`FlightRecorder::anomaly_count`] (exported as the
+    /// `scalesfl_flight_anomalies` metric) keeps counting past it, so
+    /// anomalies beyond the cap are tallied even though their traces are
+    /// not retained.
     pub max_anomalies: usize,
     /// A completion is anomalous when its latency exceeds this multiple
     /// of the rolling p95.
@@ -52,6 +55,9 @@ struct Inner {
     /// threshold reflects the whole run, not the last caliper window.
     rolling: Histogram,
     anomalies: Vec<TxTrace>,
+    /// Monotone count of every anomaly seen, including those past the
+    /// `max_anomalies` freeze cap whose traces were not retained.
+    total_anomalies: u64,
 }
 
 /// See the module doc.
@@ -67,6 +73,7 @@ impl FlightRecorder {
                 completed: VecDeque::with_capacity(cfg.retain.min(1024)),
                 rolling: Histogram::default(),
                 anomalies: Vec::new(),
+                total_anomalies: 0,
             }),
             cfg,
         }
@@ -85,8 +92,11 @@ impl FlightRecorder {
             }
             g.rolling.record(lat);
         }
-        if anomalous && g.anomalies.len() < self.cfg.max_anomalies {
-            g.anomalies.push(trace.clone());
+        if anomalous {
+            g.total_anomalies += 1;
+            if g.anomalies.len() < self.cfg.max_anomalies {
+                g.anomalies.push(trace.clone());
+            }
         }
         g.completed.push_back(trace);
         while g.completed.len() > self.cfg.retain {
@@ -98,6 +108,7 @@ impl FlightRecorder {
     /// Freeze an aborted lifecycle (always anomalous).
     pub(crate) fn on_abort(&self, trace: TxTrace) {
         let mut g = self.inner.lock().unwrap();
+        g.total_anomalies += 1;
         if g.anomalies.len() < self.cfg.max_anomalies {
             g.anomalies.push(trace);
         }
@@ -117,7 +128,14 @@ impl FlightRecorder {
         self.inner.lock().unwrap().completed.len()
     }
 
-    pub fn anomaly_count(&self) -> usize {
+    /// Monotone anomaly tally: unlike [`FlightRecorder::anomalies`], this
+    /// keeps incrementing after the `max_anomalies` freeze cap is hit.
+    pub fn anomaly_count(&self) -> u64 {
+        self.inner.lock().unwrap().total_anomalies
+    }
+
+    /// How many anomalous traces are actually frozen (≤ `max_anomalies`).
+    pub fn frozen_count(&self) -> usize {
         self.inner.lock().unwrap().anomalies.len()
     }
 
@@ -133,6 +151,7 @@ impl FlightRecorder {
         let anomalies: Vec<Json> = g.anomalies.iter().map(|t| t.to_json()).collect();
         Json::obj()
             .set("retained", g.completed.len())
+            .set("anomalies_total", g.total_anomalies)
             .set("rolling_count", g.rolling.count())
             .set("rolling_p95_s", g.rolling.quantile(0.95).unwrap_or(0.0))
             .set("anomaly_multiple", self.cfg.anomaly_multiple)
@@ -244,6 +263,25 @@ mod tests {
         assert!(frozen[0].to_json().to_string().contains("aborted:relay_drop"));
         // The slot is freed — a late commit event is a no-op.
         assert!(tracer.complete_commit(&id).is_none());
+    }
+
+    #[test]
+    fn anomaly_tally_keeps_counting_past_freeze_cap() {
+        let clock = Arc::new(VirtualClock::new());
+        let tracer = Tracer::with_parts(
+            Arc::clone(&clock) as Arc<dyn Clock>,
+            FlightConfig { max_anomalies: 2, ..FlightConfig::default() },
+        );
+        for n in 1..=5u64 {
+            let id = txid(n);
+            tracer.stamp(&id, Stage::Submit);
+            clock.advance(Duration::from_millis(1));
+            tracer.abort(&id, "relay_drop").expect("tracked");
+        }
+        // Only the first two traces freeze, but the tally is monotone.
+        assert_eq!(tracer.flight().frozen_count(), 2);
+        assert_eq!(tracer.flight().anomalies().len(), 2);
+        assert_eq!(tracer.flight().anomaly_count(), 5);
     }
 
     #[test]
