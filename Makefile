@@ -8,7 +8,8 @@
 #   make verify         - tier-1: release build + tests
 #   make bench          - full perf baselines (writes BENCH_mempool.json,
 #                         BENCH_gateway.json, BENCH_validation.json,
-#                         BENCH_relay.json, BENCH_telemetry.json)
+#                         BENCH_relay.json, BENCH_telemetry.json,
+#                         BENCH_durability.json)
 #   make bench-smoke    - fast deterministic bench runs (seconds, fixed
 #                         seeds) into target/smoke/
 #   make bench-baseline - refresh the committed CI baselines in
@@ -37,6 +38,7 @@ bench:
 	cargo bench --bench validation
 	cargo bench --bench relay
 	cargo bench --bench telemetry
+	cargo bench --bench durability
 
 bench-smoke:
 	rm -rf target/smoke
@@ -45,6 +47,7 @@ bench-smoke:
 	cargo bench --bench validation -- --smoke
 	cargo bench --bench relay -- --smoke
 	cargo bench --bench telemetry -- --smoke
+	cargo bench --bench durability -- --smoke
 
 bench-baseline: bench-smoke
 	mkdir -p bench-baselines

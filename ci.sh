@@ -28,7 +28,7 @@ cargo test -q
 # configuration (seconds, fixed seeds) into target/smoke/, then
 # bench_check fails the build if a headline metric regressed >20% against
 # the committed bench-baselines/ or the JSON schema drifted.
-echo "==> bench smoke runs (mempool, gateway_pipeline, validation, relay, telemetry)"
+echo "==> bench smoke runs (mempool, gateway_pipeline, validation, relay, telemetry, durability)"
 # Stale outputs (e.g. restored from a CI target/ cache, or left by a
 # removed bench) must not reach bench_check.
 rm -rf target/smoke
@@ -37,6 +37,7 @@ cargo bench --bench gateway_pipeline -- --smoke
 cargo bench --bench validation -- --smoke
 cargo bench --bench relay -- --smoke
 cargo bench --bench telemetry -- --smoke
+cargo bench --bench durability -- --smoke
 
 echo "==> bench_check bench-baselines target/smoke"
 cargo run --quiet --release --bin bench_check -- bench-baselines target/smoke

@@ -1,0 +1,279 @@
+//! Durability bench: committed throughput under each [`DurabilityMode`]
+//! (`Off` / `Group` / `Strict`) and cold-start recovery rate vs chain
+//! length. Emits the baseline to `BENCH_durability.json` (or
+//! `target/smoke/BENCH_durability.json` in `--smoke` mode — the fast
+//! deterministic configuration the CI bench gate runs and compares
+//! against `bench-baselines/`).
+//!
+//! Endorsement happens up front, so the timed loop is exactly the commit
+//! path the durability mode taxes: serial validate + apply + log append
+//! (+ fsync per the mode, + periodic snapshot writes). `Group` pays one
+//! final `sync()` inside the timed region so its number includes the
+//! cost of making the tail durable; `Off` keeps its never-fsync contract.
+//! Recovery timing measures `Peer::attach_store` on a fresh peer — full
+//! log replay through the validator, and the snapshot-anchored variant
+//! that only replays the suffix.
+//!
+//!     cargo bench --bench durability [-- --smoke]    (or `make bench`)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use scalesfl::crypto::msp::{CertificateAuthority, Credential, MemberId};
+use scalesfl::fabric::chaincode::{Chaincode, TxContext};
+use scalesfl::fabric::endorsement::EndorsementPolicy;
+use scalesfl::fabric::peer::Peer;
+use scalesfl::ledger::store::{DurabilityMode, LedgerConfig};
+use scalesfl::ledger::tx::{Envelope, Proposal};
+use scalesfl::util::json::Json;
+use scalesfl::util::prng::Prng;
+use scalesfl::util::tempdir::TempDir;
+
+const BATCH: usize = 8;
+const GROUP_WINDOW_MS: u64 = 5;
+const SNAPSHOT_EVERY: u64 = 16;
+
+struct PutCc;
+impl Chaincode for PutCc {
+    fn name(&self) -> &str {
+        "kv"
+    }
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        _f: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        ctx.put(&args[0], b"v".to_vec());
+        Ok(vec![])
+    }
+}
+
+/// Single-peer rig: the bench isolates the per-replica commit/persist
+/// path, so one peer with an `AnyOf(1)` policy is the whole network.
+fn rig(seed: u64) -> (CertificateAuthority, Credential) {
+    let ca = CertificateAuthority::new();
+    let mut rng = Prng::new(seed);
+    let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+    (ca, cred)
+}
+
+fn spawn_peer(ca: &CertificateAuthority, cred: &Credential) -> Arc<Peer> {
+    let p = Peer::new(cred.clone(), ca.clone());
+    p.join_channel("ch", EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]));
+    p.install_chaincode("ch", Arc::new(PutCc)).unwrap();
+    p
+}
+
+/// Pre-endorsed batches of `BATCH` distinct-key Puts per block.
+fn build_batches(peer: &Peer, prefix: &str, blocks: usize, nonce: &mut u64) -> Vec<Vec<Envelope>> {
+    (0..blocks)
+        .map(|b| {
+            (0..BATCH)
+                .map(|i| {
+                    *nonce += 1;
+                    let prop = Proposal {
+                        channel: "ch".into(),
+                        chaincode: "kv".into(),
+                        function: "Put".into(),
+                        args: vec![format!("{prefix}{b}x{i}")],
+                        creator: MemberId::new("bench-client"),
+                        nonce: *nonce,
+                    };
+                    let (rw_set, endorsement, _) = peer.endorse(&prop).unwrap();
+                    Envelope { proposal: prop, rw_set, endorsements: vec![endorsement] }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn mode_tag(mode: DurabilityMode) -> &'static str {
+    match mode {
+        DurabilityMode::Off => "off",
+        DurabilityMode::Group(_) => "group",
+        DurabilityMode::Strict => "strict",
+    }
+}
+
+/// Committed TPS for one durability mode: time `blocks` back-to-back
+/// `commit_batch` calls against a store in that mode.
+fn commit_scenario(mode: DurabilityMode, blocks: usize, seed: u64) -> (f64, Json) {
+    let tag = mode_tag(mode);
+    let tmp = TempDir::new(&format!("dur-bench-{tag}"));
+    let (ca, cred) = rig(seed);
+    let peer = spawn_peer(&ca, &cred);
+    let lcfg = LedgerConfig {
+        dir: tmp.path().to_path_buf(),
+        durability: mode,
+        snapshot_every: SNAPSHOT_EVERY,
+    };
+    peer.attach_store("ch", &lcfg).unwrap();
+    let mut nonce = 0u64;
+    let batches = build_batches(&peer, tag, blocks, &mut nonce);
+    let ch = peer.channel("ch").unwrap();
+    let store = ch.store().unwrap();
+
+    let t0 = Instant::now();
+    for envs in batches {
+        peer.commit_batch("ch", envs).unwrap();
+    }
+    if matches!(mode, DurabilityMode::Group(_)) {
+        store.sync();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    assert_eq!(ch.height(), blocks as u64, "every batch must commit one block");
+    assert_eq!(store.height(), ch.height(), "log must track the chain");
+    let s = store.stats();
+    let tps = (blocks * BATCH) as f64 / secs;
+    println!(
+        "mode={tag:<6} blocks={blocks:<5} tps={tps:>9.0} fsyncs={:<5} \
+         fsync_mean={:.3}ms snapshots={}",
+        s.fsyncs,
+        s.fsync_mean_s * 1e3,
+        s.snapshots_written
+    );
+    let json = Json::obj()
+        .set("mode", tag)
+        .set("blocks", blocks)
+        .set("batch", BATCH)
+        .set("committed_tps", tps)
+        .set("wall_s", secs)
+        .set("fsyncs", s.fsyncs)
+        .set("fsync_mean_ms", s.fsync_mean_s * 1e3)
+        .set("snapshots_written", s.snapshots_written);
+    (tps, json)
+}
+
+/// Cold-start recovery rate: persist a chain of `blocks` blocks, kill the
+/// peer, and time `attach_store` on a fresh one. `snapshot_every = 0`
+/// forces a full log replay; a nonzero cadence recovers from the latest
+/// snapshot plus a short suffix.
+fn recovery_scenario(blocks: usize, snapshot_every: u64, seed: u64) -> (f64, Json) {
+    let tmp = TempDir::new("dur-bench-recover");
+    let (ca, cred) = rig(seed);
+    let lcfg = LedgerConfig {
+        dir: tmp.path().to_path_buf(),
+        durability: DurabilityMode::Off,
+        snapshot_every,
+    };
+    {
+        let peer = spawn_peer(&ca, &cred);
+        peer.attach_store("ch", &lcfg).unwrap();
+        let mut nonce = 0u64;
+        for envs in build_batches(&peer, "r", blocks, &mut nonce) {
+            peer.commit_batch("ch", envs).unwrap();
+        }
+    }
+
+    let peer = spawn_peer(&ca, &cred);
+    let t0 = Instant::now();
+    let rep = peer.attach_store("ch", &lcfg).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+
+    assert_eq!(rep.height, blocks as u64, "recovery must reach the full height");
+    assert_eq!(rep.truncated_bytes, 0, "clean log must not be truncated");
+    let rate = blocks as f64 / secs;
+    println!(
+        "recover blocks={blocks:<5} snapshot_every={snapshot_every:<3} \
+         in {:>7.1}ms ({rate:>8.0} blocks/s, snapshot at {}, replayed {})",
+        secs * 1e3,
+        rep.snapshot_height,
+        rep.replayed_blocks
+    );
+    let json = Json::obj()
+        .set("chain_blocks", blocks)
+        .set("snapshot_every", snapshot_every)
+        .set("recover_ms", secs * 1e3)
+        .set("blocks_per_s", rate)
+        .set("snapshot_height", rep.snapshot_height)
+        .set("replayed_blocks", rep.replayed_blocks);
+    (rate, json)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let commit_blocks = if smoke { 24 } else { 256 };
+    let recovery_lens: &[usize] = if smoke { &[64] } else { &[256, 1024] };
+    println!(
+        "# durability bench{} — {BATCH} txs/block, {commit_blocks} blocks/mode, \
+         group window {GROUP_WINDOW_MS} ms, snapshot every {SNAPSHOT_EVERY}\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let modes = [
+        DurabilityMode::Off,
+        DurabilityMode::Group(Duration::from_millis(GROUP_WINDOW_MS)),
+        DurabilityMode::Strict,
+    ];
+    let mut commit_scenarios: Vec<Json> = Vec::new();
+    let mut tps_by_mode = [0.0f64; 3];
+    for (i, &mode) in modes.iter().enumerate() {
+        let (tps, json) = commit_scenario(mode, commit_blocks, 11 + i as u64);
+        tps_by_mode[i] = tps;
+        commit_scenarios.push(json);
+    }
+
+    println!();
+    let mut recovery_scenarios: Vec<Json> = Vec::new();
+    let mut headline_recovery = 0.0f64;
+    for (i, &len) in recovery_lens.iter().enumerate() {
+        // Full replay first (the headline), then the snapshot-anchored run.
+        let (rate, json) = recovery_scenario(len, 0, 31 + i as u64);
+        if i == 0 {
+            headline_recovery = rate;
+        }
+        recovery_scenarios.push(json);
+        let (_, json) = recovery_scenario(len, SNAPSHOT_EVERY, 41 + i as u64);
+        recovery_scenarios.push(json);
+    }
+
+    println!(
+        "\nverdict: group commit holds {:.0}% of Off throughput (strict: {:.0}%), \
+         full-replay recovery at {headline_recovery:.0} blocks/s",
+        100.0 * tps_by_mode[1] / tps_by_mode[0],
+        100.0 * tps_by_mode[2] / tps_by_mode[0],
+    );
+
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "commit_tps_off")
+            .set("value", tps_by_mode[0])
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "commit_tps_group")
+            .set("value", tps_by_mode[1])
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "commit_tps_strict")
+            .set("value", tps_by_mode[2])
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "recovery_blocks_per_s")
+            .set("value", headline_recovery)
+            .set("higher_is_better", true),
+    ]);
+    let out = Json::obj()
+        .set("bench", "durability")
+        .set("mode", if smoke { "smoke" } else { "full" })
+        .set(
+            "config",
+            Json::obj()
+                .set("batch", BATCH)
+                .set("commit_blocks", commit_blocks)
+                .set("group_window_ms", GROUP_WINDOW_MS)
+                .set("snapshot_every", SNAPSHOT_EVERY),
+        )
+        .set("commit", Json::Arr(commit_scenarios))
+        .set("recovery", Json::Arr(recovery_scenarios))
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_durability.json"
+    } else {
+        "BENCH_durability.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_durability.json");
+    println!("wrote {path}");
+}

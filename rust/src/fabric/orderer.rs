@@ -37,6 +37,7 @@ use crate::consensus::pbft::{Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::ConsensusNode;
 use crate::ledger::state::StateView;
+use crate::ledger::store::LedgerConfig;
 use crate::ledger::tx::Envelope;
 use crate::mempool::{MempoolConfig, MempoolRegistry, Reject, Relay, RelayConfig};
 use crate::util::clock::SystemClock;
@@ -85,6 +86,12 @@ pub struct OrdererConfig {
     /// tick so batch pulls see the skewed arrivals. `None` keeps the
     /// idealized direct router.
     pub relay: Option<RelayConfig>,
+    /// Durable ledger (`crate::ledger::store`). `Some` attaches a
+    /// per-peer, per-channel block log + snapshot store to every joined
+    /// channel at startup — recovering previously persisted state by
+    /// replay — and persists each committed block. `None` keeps replicas
+    /// purely in-memory (the historical behavior).
+    pub ledger: Option<LedgerConfig>,
 }
 
 impl Default for OrdererConfig {
@@ -99,6 +106,7 @@ impl Default for OrdererConfig {
             tick: Duration::from_millis(2),
             validation_workers: 1,
             relay: None,
+            ledger: None,
         }
     }
 }
@@ -110,6 +118,10 @@ pub struct OrderingService {
     driver: Option<thread::JoinHandle<()>>,
     committer: Option<thread::JoinHandle<()>>,
     blocks_cut: Arc<AtomicU64>,
+    /// Committed consensus payloads that failed to decode (satellite of
+    /// the durability work: a committed-but-undeliverable batch is data
+    /// loss and must be visible, not an `eprintln!` in the void).
+    bad_batches: Arc<AtomicU64>,
     /// Shared two-stage validator: worker pool + cross-peer verdict cache.
     validator: Arc<BlockValidator>,
     /// Cross-shard relay, pumped by the driver (None = direct routing).
@@ -139,7 +151,21 @@ impl OrderingService {
     ) -> Arc<OrderingService> {
         let shutdown = Arc::new(AtomicBool::new(false));
         let blocks_cut = Arc::new(AtomicU64::new(0));
+        let bad_batches = Arc::new(AtomicU64::new(0));
         let validator = Arc::new(BlockValidator::new(cfg.validation_workers));
+
+        // Durable ledger: attach each peer's per-channel store before any
+        // thread starts committing, so recovery-by-replay runs on quiescent
+        // replicas and every subsequent commit is persisted.
+        if let Some(lcfg) = &cfg.ledger {
+            for p in &peers {
+                for name in p.channel_names() {
+                    if let Err(e) = p.attach_store(&name, lcfg) {
+                        eprintln!("orderer: attach store {}/{name}: {e}", p.member);
+                    }
+                }
+            }
+        }
         let relay = cfg
             .relay
             .clone()
@@ -162,6 +188,17 @@ impl OrderingService {
                     "scalesfl_orderer_blocks_cut_total",
                     Vec::new(),
                     cut.load(Ordering::Relaxed) as f64,
+                )])
+            });
+        }
+        {
+            let weak = Arc::downgrade(&bad_batches);
+            registry.register(move || {
+                let bad = weak.upgrade()?;
+                Some(vec![crate::telemetry::Sample::counter(
+                    "scalesfl_orderer_bad_batches_total",
+                    Vec::new(),
+                    bad.load(Ordering::Relaxed) as f64,
                 )])
             });
         }
@@ -209,6 +246,7 @@ impl OrderingService {
             let mempool = Arc::clone(&mempool);
             let stop = Arc::clone(&shutdown);
             let relay = relay.clone();
+            let bad = Arc::clone(&bad_batches);
             thread::Builder::new()
                 .name("orderer".into())
                 .spawn(move || {
@@ -221,12 +259,12 @@ impl OrderingService {
                                     Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64))
                                 })
                                 .collect();
-                            driver(cfg, mempool, stop, commit_tx, relay, nodes)
+                            driver(cfg, mempool, stop, commit_tx, relay, bad, nodes)
                         }
                         ConsensusKind::Pbft => {
                             let nodes: Vec<Pbft> =
                                 (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
-                            driver(cfg, mempool, stop, commit_tx, relay, nodes)
+                            driver(cfg, mempool, stop, commit_tx, relay, bad, nodes)
                         }
                     }
                 })
@@ -239,6 +277,7 @@ impl OrderingService {
             driver: Some(driver),
             committer: Some(committer),
             blocks_cut,
+            bad_batches,
             validator,
             relay,
         })
@@ -277,6 +316,12 @@ impl OrderingService {
 
     pub fn blocks_cut(&self) -> u64 {
         self.blocks_cut.load(Ordering::Relaxed)
+    }
+
+    /// Committed consensus payloads that failed to decode (each one is a
+    /// batch the peers never saw — should stay 0 outside fault injection).
+    pub fn bad_batches(&self) -> u64 {
+        self.bad_batches.load(Ordering::Relaxed)
     }
 
     /// The shared block validator (worker pool + verdict cache) the
@@ -389,12 +434,32 @@ fn exchange<C: ConsensusNode>(
     }
 }
 
+/// Hand one committed consensus payload to the committer. A payload that
+/// fails to decode is *counted* (and logged) instead of silently dropped —
+/// a committed-but-undeliverable batch is data loss the operator must see.
+/// Returns `false` only when the committer is gone (shutdown).
+fn deliver_committed(
+    data: &[u8],
+    commit_tx: &mpsc::Sender<(String, Vec<Envelope>)>,
+    bad_batches: &AtomicU64,
+) -> bool {
+    match wire::decode_batch(data) {
+        Ok(pair) => commit_tx.send(pair).is_ok(),
+        Err(e) => {
+            bad_batches.fetch_add(1, Ordering::Relaxed);
+            eprintln!("orderer: bad batch payload: {e}");
+            true
+        }
+    }
+}
+
 fn driver<C: ConsensusNode>(
     cfg: OrdererConfig,
     mempool: Arc<MempoolRegistry>,
     shutdown: Arc<AtomicBool>,
     commit_tx: mpsc::Sender<(String, Vec<Envelope>)>,
     relay: Option<Arc<Relay>>,
+    bad_batches: Arc<AtomicU64>,
     mut nodes: Vec<C>,
 ) {
     let start = Instant::now();
@@ -470,13 +535,8 @@ fn driver<C: ConsensusNode>(
         for c in nodes[0].take_committed() {
             debug_assert_eq!(c.seq, delivered_seq + 1);
             delivered_seq = c.seq;
-            match wire::decode_batch(&c.data) {
-                Ok(pair) => {
-                    if commit_tx.send(pair).is_err() {
-                        return;
-                    }
-                }
-                Err(e) => eprintln!("orderer: bad batch payload: {e}"),
+            if !deliver_committed(&c.data, &commit_tx, &bad_batches) {
+                return;
             }
         }
     }
@@ -839,6 +899,54 @@ mod tests {
         // Fair interleaving finishes both within ~1 interval; the per-tick
         // rotation bug drained one channel completely first (~6 intervals).
         assert!(gap <= 3 * min_interval, "unfair channel service: gap {gap:?}");
+    }
+
+    #[test]
+    fn corrupt_committed_payload_is_counted_not_lost() {
+        let (tx, rx) = mpsc::channel();
+        let bad = AtomicU64::new(0);
+        let good = wire::encode_batch("ch", &[]);
+        // Valid payload: delivered, nothing counted.
+        assert!(deliver_committed(&good, &tx, &bad));
+        assert_eq!(rx.try_recv().unwrap().0, "ch");
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+        // Truncated payload: counted and skipped, but the driver keeps
+        // running (true) — one poisoned batch must not stall the pipeline.
+        assert!(deliver_committed(&good[..good.len() - 1], &tx, &bad));
+        assert!(rx.try_recv().is_err());
+        assert_eq!(bad.load(Ordering::Relaxed), 1);
+        // A valid payload with the committer gone means shutdown.
+        drop(rx);
+        assert!(!deliver_committed(&good, &tx, &bad));
+        assert_eq!(bad.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn durable_orderer_attaches_stores_and_persists_commits() {
+        use crate::ledger::store::{DurabilityMode, LedgerConfig};
+        use crate::util::tempdir::TempDir;
+
+        let dir = TempDir::new("orderer-ledger");
+        let mut lcfg = LedgerConfig::new(dir.path().to_path_buf());
+        lcfg.durability = DurabilityMode::Off;
+        let cfg = OrdererConfig { ledger: Some(lcfg), ..OrdererConfig::default() };
+        let (peers, orderer) = network(2, cfg);
+        let rx = peers[1].subscribe("ch").unwrap();
+        for nonce in 0..5 {
+            orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+        }
+        for _ in 0..5 {
+            rx.recv_timeout(Duration::from_secs(10)).expect("commit");
+        }
+        assert_eq!(orderer.bad_batches(), 0);
+        drop(orderer); // drains the committer: every replica fully applied
+        for p in &peers {
+            let ch = p.channel("ch").unwrap();
+            let store = ch.store().expect("store attached at startup");
+            assert!(ch.height() > 0);
+            assert_eq!(store.height(), ch.height());
+            assert_eq!(store.stats().blocks_appended, ch.height());
+        }
     }
 
     #[test]

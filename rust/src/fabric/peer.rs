@@ -37,9 +37,12 @@ use std::sync::{mpsc, Arc, Mutex, RwLock, Weak};
 use std::time::Instant;
 
 use crate::crypto::msp::{CertificateAuthority, Credential, MemberId};
+use crate::crypto::Digest;
 use crate::ledger::block::{Block, ValidationCode};
 use crate::ledger::chain::Chain;
+use crate::ledger::snapshot::{self, Snapshot};
 use crate::ledger::state::{StateView, Version, WorldState};
+use crate::ledger::store::{LedgerConfig, LedgerStore};
 use crate::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
 use crate::telemetry::{self, Stage};
 
@@ -114,6 +117,9 @@ pub struct PeerChannel {
     policy: RwLock<EndorsementPolicy>,
     committed_ids: Mutex<HashSet<TxId>>,
     listeners: Mutex<Vec<Listener>>,
+    /// Durable block log for this replica, if [`Peer::attach_store`] ran.
+    /// `None` keeps the channel purely in-memory (the historical behavior).
+    store: Mutex<Option<Arc<LedgerStore>>>,
 }
 
 impl PeerChannel {
@@ -126,6 +132,7 @@ impl PeerChannel {
             policy: RwLock::new(policy),
             committed_ids: Mutex::new(HashSet::new()),
             listeners: Mutex::new(Vec::new()),
+            store: Mutex::new(None),
         }
     }
 
@@ -157,6 +164,19 @@ impl PeerChannel {
         self.chain.lock().unwrap().height()
     }
 
+    /// Merkle root over the replica's current world state (the same root a
+    /// [`Snapshot`] of this state would carry). Two replicas agree on
+    /// every key, value, and version iff their roots match — the
+    /// recovery acceptance check.
+    pub fn state_root(&self) -> Digest {
+        snapshot::state_root(&self.state.read().unwrap().entries())
+    }
+
+    /// The attached durable store, if any.
+    pub fn store(&self) -> Option<Arc<LedgerStore>> {
+        self.store.lock().unwrap().clone()
+    }
+
     /// Live commit-event listeners (dead entries are pruned first). The
     /// gateway demux keeps this O(channels), not O(in-flight transactions):
     /// tests assert on it.
@@ -177,6 +197,25 @@ impl StateView for PeerChannel {
     fn seq(&self) -> u64 {
         self.state.read().unwrap().seq()
     }
+}
+
+/// What [`Peer::attach_store`] did to bring a channel replica back: where
+/// recovery started, how much it replayed, and the resulting tip.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    /// Height the restored snapshot covered (0 = no snapshot, full replay).
+    pub snapshot_height: u64,
+    /// Blocks replayed from the log through the validator path.
+    pub replayed_blocks: u64,
+    /// Torn-tail bytes truncated off the log.
+    pub truncated_bytes: u64,
+    /// A snapshot file existed but was unusable; recovery fell back to
+    /// replaying the whole log.
+    pub snapshot_fallback: bool,
+    /// Chain height after recovery.
+    pub height: u64,
+    /// State Merkle root after recovery.
+    pub state_root: Digest,
 }
 
 /// A network peer (holds ledgers, endorses, validates).
@@ -313,14 +352,148 @@ impl Peer {
                 code,
             });
         }
-        chain.append(block.clone())?;
+        chain.append(block.clone()).map_err(|e| e.to_string())?;
+        // Persist while still under the commit locks so log order always
+        // equals chain order; the snapshot cut is captured here too, but
+        // its (fsync-heavy) write happens after the locks drop.
+        let store = ch.store.lock().unwrap().clone();
+        let mut pending_snapshot = None;
+        if let Some(store) = &store {
+            store.append(&block).map_err(|e| format!("ledger append: {e}"))?;
+            if store.should_snapshot(chain.height()) {
+                pending_snapshot = Some(Snapshot::capture(
+                    chain.height(),
+                    chain.tip_hash(),
+                    &state,
+                    committed_ids.iter().cloned(),
+                ));
+            }
+        }
         drop((chain, state, committed_ids));
+        if let (Some(store), Some(snap)) = (&store, pending_snapshot) {
+            if let Err(e) = store.write_snapshot(&snap) {
+                eprintln!("{}: snapshot write failed: {e}", self.member);
+            }
+        }
         validator.note_apply(t_apply.elapsed().as_nanos() as u64, &block.validation);
         let mut listeners = ch.listeners.lock().unwrap();
         listeners.retain(|l| {
             l.alive.strong_count() > 0 && events.iter().all(|e| l.tx.send(e.clone()).is_ok())
         });
         Ok(block)
+    }
+
+    /// Attach a durable [`LedgerStore`] to a joined channel, recovering
+    /// whatever a previous process durably persisted.
+    ///
+    /// Recovery order (module docs in `ledger`): load the latest valid
+    /// snapshot, restore world state / dedup set / chain base from it,
+    /// then replay the block-log suffix through the regular validation
+    /// path — recomputed validation codes must match the logged ones
+    /// block-for-block, and the hash chain is re-verified by
+    /// `Chain::append` as each block lands. Torn log tails were already
+    /// truncated by `LedgerStore::open`.
+    ///
+    /// Must run on an *empty* channel (fresh `join_channel`), before the
+    /// replica starts committing; calling it again once attached is a
+    /// no-op that reports the current tip. Replay checks endorsements
+    /// against the channel's *current* policy, so restore the same policy
+    /// the blocks were committed under.
+    pub fn attach_store(
+        &self,
+        channel: &str,
+        cfg: &LedgerConfig,
+    ) -> Result<RecoveryReport, String> {
+        let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
+        if ch.store.lock().unwrap().is_some() {
+            return Ok(RecoveryReport {
+                snapshot_height: 0,
+                replayed_blocks: 0,
+                truncated_bytes: 0,
+                snapshot_fallback: false,
+                height: ch.height(),
+                state_root: ch.state_root(),
+            });
+        }
+        if ch.height() != 0 || ch.state.read().unwrap().seq() != 0 {
+            return Err(format!("attach_store: channel {channel} is not empty"));
+        }
+        let dir = cfg.dir.join(self.member.0.as_str()).join(channel);
+        let (store, recovery) = LedgerStore::open(
+            &dir,
+            channel,
+            self.member.0.as_str(),
+            cfg.durability,
+            cfg.snapshot_every,
+        )?;
+        let mut snapshot_height = 0;
+        if let Some(snap) = &recovery.snapshot {
+            snapshot_height = snap.height;
+            *ch.state.write().unwrap() =
+                WorldState::from_entries(snap.entries.iter().cloned(), snap.seq);
+            *ch.chain.lock().unwrap() = Chain::with_base(snap.height, snap.tip_hash);
+            *ch.committed_ids.lock().unwrap() = snap.committed_ids.iter().cloned().collect();
+        }
+        for block in &recovery.replay {
+            self.replay_block(&ch, block)?;
+        }
+        let report = RecoveryReport {
+            snapshot_height,
+            replayed_blocks: recovery.replay.len() as u64,
+            truncated_bytes: recovery.truncated_bytes,
+            snapshot_fallback: recovery.snapshot_fallback,
+            height: ch.height(),
+            state_root: ch.state_root(),
+        };
+        // Attach only after replay so replayed blocks aren't re-appended
+        // to the very log they came from.
+        *ch.store.lock().unwrap() = Some(store);
+        Ok(report)
+    }
+
+    /// Re-commit one logged block during recovery: same two-stage path as
+    /// [`Peer::commit_batch_with`] (policy prevalidation, then serial
+    /// duplicate → policy → MVCC → apply), but the verdicts are *checked*
+    /// against the logged codes instead of being the source of truth, and
+    /// no commit events or telemetry stamps fire.
+    fn replay_block(&self, ch: &PeerChannel, block: &Block) -> Result<(), String> {
+        let policy = ch.policy();
+        let envs = Arc::new(block.txs.clone());
+        let policy_ok = self.validator.prevalidate(&policy, &self.ca, &envs);
+        let mut chain = ch.chain.lock().unwrap();
+        let mut state = ch.state.write().unwrap();
+        let mut committed_ids = ch.committed_ids.lock().unwrap();
+        let number = block.header.number;
+        if number != chain.height() {
+            return Err(format!(
+                "replay out of order: block {number} at height {}",
+                chain.height()
+            ));
+        }
+        let mut recomputed = Vec::with_capacity(block.txs.len());
+        for (i, env) in block.txs.iter().enumerate() {
+            let tx_id = env.tx_id();
+            let code = if committed_ids.contains(&tx_id) {
+                ValidationCode::DuplicateTxId
+            } else if !policy_ok[i] {
+                ValidationCode::EndorsementPolicyFailure
+            } else if !state.mvcc_valid(&env.rw_set) {
+                ValidationCode::MvccConflict
+            } else {
+                state.apply(&env.rw_set, Version { block: number, tx: i as u32 });
+                committed_ids.insert(tx_id);
+                ValidationCode::Valid
+            };
+            recomputed.push(code);
+        }
+        if recomputed != block.validation {
+            return Err(format!(
+                "replay diverged at block {number}: logged {:?}, recomputed {recomputed:?}",
+                block.validation
+            ));
+        }
+        chain.append(block.clone()).map_err(|e| format!("replay block {number}: {e}"))?;
+        Ok(())
     }
 
     /// Subscribe to commit events on a channel. Dead listeners left behind
@@ -594,6 +767,93 @@ mod tests {
         let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
         peers[0].commit_batch("ch", vec![env]).unwrap();
         assert!(s3.try_recv().is_ok());
+    }
+
+    #[test]
+    fn attach_store_persists_and_recovers_channel() {
+        use crate::ledger::store::{DurabilityMode, LedgerConfig};
+        use crate::util::tempdir::TempDir;
+
+        let dir = TempDir::new("peer-store");
+        let mut cfg = LedgerConfig::new(dir.path().to_path_buf());
+        cfg.durability = DurabilityMode::Strict;
+        cfg.snapshot_every = 4;
+
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(7);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let policy = EndorsementPolicy::MajorityOf(vec![cred.member.clone()]);
+
+        let make_peer = || {
+            let p = Peer::new(cred.clone(), ca.clone());
+            p.join_channel("ch", policy.clone());
+            p.install_chaincode("ch", Arc::new(KvChaincode)).unwrap();
+            p
+        };
+
+        let peer = make_peer();
+        let rep = peer.attach_store("ch", &cfg).unwrap();
+        assert_eq!(rep.height, 0);
+        let peers = vec![peer];
+        for i in 0..5u64 {
+            let env =
+                endorse_and_wrap(&peers, &proposal("Put", &[&format!("k{i}"), "v"], i));
+            peers[0].commit_batch("ch", vec![env]).unwrap();
+        }
+        // Commit one policy failure so replay must reproduce a non-Valid
+        // code (exercises the code-comparison path).
+        let prop = proposal("Put", &["reject", "v"], 99);
+        let env = Envelope {
+            proposal: prop.clone(),
+            rw_set: RwSet { reads: vec![], writes: vec![("reject".into(), None)] },
+            endorsements: vec![],
+        };
+        let b = peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert_eq!(b.validation, vec![ValidationCode::EndorsementPolicyFailure]);
+
+        let ch = peers[0].channel("ch").unwrap();
+        let (tip, height, root) =
+            (ch.chain.lock().unwrap().tip_hash(), ch.height(), ch.state_root());
+        assert_eq!(height, 6);
+        drop(ch);
+        drop(peers);
+
+        // "Restart": fresh peer, same credential and CA, same directory.
+        let revived = make_peer();
+        let rep = revived.attach_store("ch", &cfg).unwrap();
+        assert_eq!(rep.height, 6);
+        assert_eq!(rep.snapshot_height, 4, "snapshot_every = 4, height reached 6");
+        assert_eq!(rep.replayed_blocks, 2);
+        assert_eq!(rep.state_root, root);
+        let ch = revived.channel("ch").unwrap();
+        assert_eq!(ch.chain.lock().unwrap().tip_hash(), tip);
+        assert_eq!(ch.query("k3"), Some(b"v".to_vec()));
+        assert_eq!(ch.query("reject"), None);
+        // Idempotent second attach reports the same tip.
+        let again = revived.attach_store("ch", &cfg).unwrap();
+        assert_eq!(again.height, height);
+
+        // The recovered replica keeps committing on top of the old chain.
+        let revived_peers = vec![revived];
+        let env = endorse_and_wrap(&revived_peers, &proposal("Put", &["after", "v"], 1000));
+        let block = revived_peers[0].commit_batch("ch", vec![env]).unwrap();
+        assert_eq!(block.header.number, 6);
+        assert_eq!(block.header.prev_hash, tip);
+    }
+
+    #[test]
+    fn attach_store_rejects_non_empty_channel() {
+        use crate::ledger::store::LedgerConfig;
+        use crate::util::tempdir::TempDir;
+
+        let (_ca, peers, _) = setup(1);
+        let env = endorse_and_wrap(&peers, &proposal("Put", &["k", "v"], 1));
+        peers[0].commit_batch("ch", vec![env]).unwrap();
+        let dir = TempDir::new("peer-nonempty");
+        let err = peers[0]
+            .attach_store("ch", &LedgerConfig::new(dir.path().to_path_buf()))
+            .unwrap_err();
+        assert!(err.contains("not empty"), "{err}");
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Binary wire format for envelopes and block payloads — what the ordering
-//! service replicates through consensus.
+//! service replicates through consensus, and (block-framed) what the
+//! durable ledger (`crate::ledger::store`) persists per record.
 
 use crate::crypto::msp::{MemberId, Signature};
+use crate::crypto::Digest;
+use crate::ledger::block::{Block, BlockHeader, ValidationCode};
 use crate::ledger::codec::{Reader, Writer};
 use crate::ledger::state::Version;
 use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet};
@@ -121,6 +124,70 @@ pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<Envelope>), String> {
     Ok((channel, envs))
 }
 
+fn code_to_u8(c: ValidationCode) -> u8 {
+    match c {
+        ValidationCode::Valid => 0,
+        ValidationCode::MvccConflict => 1,
+        ValidationCode::EndorsementPolicyFailure => 2,
+        ValidationCode::DuplicateTxId => 3,
+    }
+}
+
+fn code_from_u8(b: u8) -> Result<ValidationCode, String> {
+    match b {
+        0 => Ok(ValidationCode::Valid),
+        1 => Ok(ValidationCode::MvccConflict),
+        2 => Ok(ValidationCode::EndorsementPolicyFailure),
+        3 => Ok(ValidationCode::DuplicateTxId),
+        other => Err(format!("unknown validation code {other}")),
+    }
+}
+
+fn digest(r: &mut Reader<'_>) -> Result<Digest, String> {
+    let b: [u8; 32] =
+        r.bytes()?.try_into().map_err(|_| "bad digest length".to_string())?;
+    Ok(Digest(b))
+}
+
+/// Serialize a committed block: header fields, ordered envelopes, and the
+/// commit-time validation codes (one byte per tx). The header digests are
+/// stored as written — not recomputed on decode — so a tampered payload
+/// still fails `Block::verify_data_hash` after a roundtrip.
+pub fn encode_block(b: &Block, w: &mut Writer) {
+    w.u64(b.header.number);
+    w.bytes(&b.header.prev_hash.0);
+    w.bytes(&b.header.data_hash.0);
+    w.u32(b.txs.len() as u32);
+    for e in &b.txs {
+        encode_envelope(e, w);
+    }
+    w.u32(b.validation.len() as u32);
+    for c in &b.validation {
+        w.u8(code_to_u8(*c));
+    }
+}
+
+/// Deserialize one block (inverse of [`encode_block`]).
+pub fn decode_block(r: &mut Reader<'_>) -> Result<Block, String> {
+    let number = r.u64()?;
+    let prev_hash = digest(r)?;
+    let data_hash = digest(r)?;
+    let ntxs = r.u32()? as usize;
+    let mut txs = Vec::with_capacity(ntxs);
+    for _ in 0..ntxs {
+        txs.push(decode_envelope(r)?);
+    }
+    let ncodes = r.u32()? as usize;
+    if ncodes != ntxs {
+        return Err(format!("{ncodes} validation codes for {ntxs} txs"));
+    }
+    let mut validation = Vec::with_capacity(ncodes);
+    for _ in 0..ncodes {
+        validation.push(code_from_u8(r.u8()?)?);
+    }
+    Ok(Block { header: BlockHeader { number, prev_hash, data_hash }, txs, validation })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +264,64 @@ mod tests {
         let (ch, back) = decode_batch(&buf).unwrap();
         assert_eq!(ch, "shard3");
         assert_eq!(back, envs);
+    }
+
+    fn random_block(rng: &mut Prng, number: u64) -> Block {
+        let txs: Vec<Envelope> = (0..1 + rng.below(4)).map(|_| random_envelope(rng)).collect();
+        let mut b = Block::new(number, Digest([rng.below(256) as u8; 32]), txs);
+        b.validation = (0..b.txs.len())
+            .map(|_| match rng.below(4) {
+                0 => ValidationCode::Valid,
+                1 => ValidationCode::MvccConflict,
+                2 => ValidationCode::EndorsementPolicyFailure,
+                _ => ValidationCode::DuplicateTxId,
+            })
+            .collect();
+        b
+    }
+
+    #[test]
+    fn property_block_roundtrip() {
+        check("block-roundtrip", 32, |rng| {
+            let b = random_block(rng, rng.next_u64() % 1000);
+            let mut w = Writer::new();
+            encode_block(&b, &mut w);
+            let buf = w.finish();
+            let mut r = Reader::new(&buf);
+            let back = decode_block(&mut r).unwrap();
+            assert!(r.done());
+            assert_eq!(back, b);
+            assert_eq!(back.hash(), b.hash());
+            assert!(back.verify_data_hash());
+        });
+    }
+
+    #[test]
+    fn block_decode_rejects_tamper_and_truncation() {
+        let mut rng = Prng::new(9);
+        let b = random_block(&mut rng, 3);
+        let mut w = Writer::new();
+        encode_block(&b, &mut w);
+        let buf = w.finish();
+        // Truncation at any point errors instead of panicking.
+        for cut in [0, 1, buf.len() / 2, buf.len() - 1] {
+            assert!(decode_block(&mut Reader::new(&buf[..cut])).is_err(), "cut at {cut}");
+        }
+        // A flipped payload byte still decodes, but the stored data hash
+        // no longer matches the envelopes — the tamper check moves to
+        // `verify_data_hash`, exactly as for an in-memory block.
+        let mut flipped = buf.clone();
+        // Header is 80 bytes (number + 2 length-prefixed digests); byte 85
+        // sits inside the first envelope's payload.
+        flipped[85] ^= 0xFF;
+        if let Ok(back) = decode_block(&mut Reader::new(&flipped)) {
+            assert!(!back.verify_data_hash());
+        }
+        // An unknown validation code errors.
+        let mut bad_code = buf;
+        let last = bad_code.len() - 1;
+        bad_code[last] = 99;
+        assert!(decode_block(&mut Reader::new(&bad_code)).is_err());
     }
 
     #[test]

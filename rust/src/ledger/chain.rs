@@ -1,12 +1,60 @@
 //! The append-only block chain per channel, with integrity verification.
+//!
+//! A chain can be *anchored* at a snapshot boundary
+//! ([`Chain::with_base`]): blocks below the base height live only in the
+//! durable block log, and the in-memory suffix chains off the recorded
+//! base tip hash. Integrity failures are typed ([`ChainError`]) so the
+//! recovery path can branch on the failure kind — a torn log tail
+//! surfaces as `NumberMismatch`/`PrevHashMismatch` at a known block and
+//! is truncated, while `DataHash` on a live append is a hard fault.
 
 use crate::crypto::Digest;
 use crate::ledger::block::Block;
 
+/// Why a block failed the chain's integrity checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChainError {
+    /// Block numbering broke: `got` arrived where `expected` was next.
+    NumberMismatch { expected: u64, got: u64 },
+    /// `prev_hash` of block `number` does not match the predecessor's hash.
+    PrevHashMismatch { number: u64 },
+    /// Block `number`'s payload no longer matches its merkle data hash.
+    DataHash { number: u64 },
+}
+
+impl std::fmt::Display for ChainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChainError::NumberMismatch { expected, got } => {
+                write!(f, "block number {got} != expected {expected}")
+            }
+            ChainError::PrevHashMismatch { number } => {
+                write!(f, "block {number} prev_hash mismatch")
+            }
+            ChainError::DataHash { number } => {
+                write!(f, "block {number} data hash mismatch")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ChainError {}
+
 /// A channel's chain of committed blocks.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Chain {
     blocks: Vec<Block>,
+    /// Blocks below this height were pruned to the block log (snapshot
+    /// recovery); 0 for a genesis-rooted chain.
+    base_height: u64,
+    /// Hash of block `base_height - 1` (`Digest::ZERO` at genesis).
+    base_tip: Digest,
+}
+
+impl Default for Chain {
+    fn default() -> Self {
+        Chain { blocks: Vec::new(), base_height: 0, base_tip: Digest::ZERO }
+    }
 }
 
 impl Chain {
@@ -14,16 +62,29 @@ impl Chain {
         Self::default()
     }
 
+    /// A chain resuming from a snapshot boundary: the next append must be
+    /// block `height` chaining off `tip` (hash of block `height - 1`).
+    pub fn with_base(height: u64, tip: Digest) -> Self {
+        Chain { blocks: Vec::new(), base_height: height, base_tip: tip }
+    }
+
     pub fn height(&self) -> u64 {
-        self.blocks.len() as u64
+        self.base_height + self.blocks.len() as u64
+    }
+
+    /// Height below which blocks live only in the durable log.
+    pub fn base_height(&self) -> u64 {
+        self.base_height
     }
 
     pub fn tip_hash(&self) -> Digest {
-        self.blocks.last().map(|b| b.hash()).unwrap_or(Digest::ZERO)
+        self.blocks.last().map(|b| b.hash()).unwrap_or(self.base_tip)
     }
 
+    /// Block by number (None if below the base or beyond the tip).
     pub fn get(&self, number: u64) -> Option<&Block> {
-        self.blocks.get(number as usize)
+        let idx = number.checked_sub(self.base_height)?;
+        self.blocks.get(idx as usize)
     }
 
     pub fn last(&self) -> Option<&Block> {
@@ -31,43 +92,45 @@ impl Chain {
     }
 
     /// Append a block; enforces numbering and prev-hash linkage.
-    pub fn append(&mut self, block: Block) -> Result<(), String> {
-        if block.header.number != self.height() {
-            return Err(format!(
-                "block number {} != expected {}",
-                block.header.number,
-                self.height()
-            ));
+    pub fn append(&mut self, block: Block) -> Result<(), ChainError> {
+        let number = block.header.number;
+        if number != self.height() {
+            return Err(ChainError::NumberMismatch { expected: self.height(), got: number });
         }
         if block.header.prev_hash != self.tip_hash() {
-            return Err("prev_hash mismatch".into());
+            return Err(ChainError::PrevHashMismatch { number });
         }
         if !block.verify_data_hash() {
-            return Err("data hash mismatch".into());
+            return Err(ChainError::DataHash { number });
         }
         self.blocks.push(block);
         Ok(())
     }
 
-    /// Full-chain integrity verification.
-    pub fn verify(&self) -> Result<(), String> {
-        let mut prev = Digest::ZERO;
+    /// Integrity verification of the in-memory suffix (everything above
+    /// the base anchor; pruned blocks were verified when recovered).
+    pub fn verify(&self) -> Result<(), ChainError> {
+        let mut prev = self.base_tip;
         for (i, b) in self.blocks.iter().enumerate() {
-            if b.header.number != i as u64 {
-                return Err(format!("block {i} has number {}", b.header.number));
+            let number = self.base_height + i as u64;
+            if b.header.number != number {
+                return Err(ChainError::NumberMismatch {
+                    expected: number,
+                    got: b.header.number,
+                });
             }
             if b.header.prev_hash != prev {
-                return Err(format!("block {i} prev_hash mismatch"));
+                return Err(ChainError::PrevHashMismatch { number });
             }
             if !b.verify_data_hash() {
-                return Err(format!("block {i} data tampered"));
+                return Err(ChainError::DataHash { number });
             }
             prev = b.hash();
         }
         Ok(())
     }
 
-    /// Total committed (valid) transactions across all blocks.
+    /// Total committed (valid) transactions across the in-memory blocks.
     pub fn total_valid_txs(&self) -> usize {
         self.blocks.iter().map(|b| b.valid_tx_count()).sum()
     }
@@ -113,8 +176,22 @@ mod tests {
     fn rejects_bad_number_and_prev() {
         let mut chain = Chain::new();
         chain.append(Block::new(0, Digest::ZERO, vec![])).unwrap();
-        assert!(chain.append(Block::new(2, chain.tip_hash(), vec![])).is_err());
-        assert!(chain.append(Block::new(1, Digest::ZERO, vec![])).is_err());
+        assert_eq!(
+            chain.append(Block::new(2, chain.tip_hash(), vec![])),
+            Err(ChainError::NumberMismatch { expected: 1, got: 2 })
+        );
+        assert_eq!(
+            chain.append(Block::new(1, Digest::ZERO, vec![])),
+            Err(ChainError::PrevHashMismatch { number: 1 })
+        );
+    }
+
+    #[test]
+    fn rejects_tampered_data_hash() {
+        let mut chain = Chain::new();
+        let mut b = Block::new(0, Digest::ZERO, vec![env(1)]);
+        b.txs[0].proposal.nonce = 9;
+        assert_eq!(chain.append(b), Err(ChainError::DataHash { number: 0 }));
     }
 
     #[test]
@@ -124,6 +201,33 @@ mod tests {
             chain.append(Block::new(n, chain.tip_hash(), vec![env(n)])).unwrap();
         }
         chain.blocks[2].txs[0].proposal.nonce = 777;
-        assert!(chain.verify().is_err());
+        assert_eq!(chain.verify(), Err(ChainError::DataHash { number: 2 }));
+    }
+
+    #[test]
+    fn based_chain_resumes_from_snapshot_boundary() {
+        // Build the "pre-crash" chain to learn the tip at height 3.
+        let mut full = Chain::new();
+        for n in 0..3u64 {
+            full.append(Block::new(n, full.tip_hash(), vec![env(n)])).unwrap();
+        }
+        let tip = full.tip_hash();
+        let mut resumed = Chain::with_base(3, tip);
+        assert_eq!(resumed.height(), 3);
+        assert_eq!(resumed.base_height(), 3);
+        assert_eq!(resumed.tip_hash(), tip);
+        assert!(resumed.get(0).is_none(), "pruned blocks are log-only");
+        // Appends must chain off the anchored tip, not ZERO.
+        assert_eq!(
+            resumed.append(Block::new(3, Digest::ZERO, vec![])),
+            Err(ChainError::PrevHashMismatch { number: 3 })
+        );
+        resumed.append(Block::new(3, tip, vec![env(3)])).unwrap();
+        resumed.verify().unwrap();
+        assert_eq!(resumed.height(), 4);
+        assert_eq!(resumed.get(3).unwrap().header.number, 3);
+        // The resumed suffix reaches the same tip as the genesis chain.
+        full.append(Block::new(3, tip, vec![env(3)])).unwrap();
+        assert_eq!(resumed.tip_hash(), full.tip_hash());
     }
 }

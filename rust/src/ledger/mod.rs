@@ -1,14 +1,52 @@
 //! Permissioned-ledger substrate: transactions with read/write sets, blocks,
-//! hash chains, and an MVCC-versioned world state — the Fabric-style
-//! execute–order–validate data model ScaleSFL's chaincodes run on.
+//! hash chains, an MVCC-versioned world state — the Fabric-style
+//! execute–order–validate data model ScaleSFL's chaincodes run on — and
+//! the durable store that lets all of it survive a crash.
+//!
+//! # Store / snapshot / recovery lifecycle
+//!
+//! In-memory structures ([`Chain`], [`WorldState`]) stay the source of
+//! truth on the hot path; durability hangs off the commit pipeline:
+//!
+//! 1. **Append** — after a block passes validation and lands on the
+//!    chain, the committing peer appends it (CRC-framed, via
+//!    `fabric::wire::encode_block`) to the channel's append-only
+//!    [`store::LedgerStore`] block log, still under the chain lock so log
+//!    order always equals chain order. Fsync cost follows the configured
+//!    [`DurabilityMode`] (table below).
+//! 2. **Snapshot** — every [`store::LedgerConfig::snapshot_every`] blocks
+//!    the peer captures a consistent cut ([`snapshot::Snapshot`]): sorted
+//!    key/value/version entries stamped with a Merkle **state root**
+//!    (`crypto::merkle`), the chain tip (height + hash), the MVCC write
+//!    sequence, and the committed-txid dedup set. Written atomically
+//!    (tmp + rename), after the commit locks are released.
+//! 3. **Recover** — on restart, `Peer::attach_store` loads the latest
+//!    *valid* snapshot (CRC + recomputed state root), anchors the chain
+//!    at its boundary ([`Chain::with_base`]), replays the block-log
+//!    suffix through the regular `BlockValidator` path (recomputed
+//!    validation codes must match the logged ones), and truncates any
+//!    torn tail instead of failing. A corrupt snapshot degrades to full
+//!    log replay; a torn log degrades to the longest verified prefix.
+//!
+//! # `DurabilityMode` tradeoffs
+//!
+//! | mode | append cost | crash-loss window | use when |
+//! |------|-------------|-------------------|----------|
+//! | `Off` | memory write only | unbounded (page cache) | pure simulation runs |
+//! | `Group(t)` | write + amortized fsync (≤ 1 per `t`) | ≤ `t` of blocks | the default: near-`Off` throughput, bounded loss |
+//! | `Strict` | write + inline `fdatasync` | none | durability benchmarks, adversarial scenarios |
 
 pub mod block;
 pub mod chain;
 pub mod codec;
+pub mod snapshot;
 pub mod state;
+pub mod store;
 pub mod tx;
 
 pub use block::{Block, BlockHeader, ValidationCode};
-pub use chain::Chain;
+pub use chain::{Chain, ChainError};
+pub use snapshot::Snapshot;
 pub use state::{StateView, Version, WorldState};
+pub use store::{DurabilityMode, LedgerConfig, LedgerStore, Recovery, StoreSnapshot};
 pub use tx::{Endorsement, Envelope, Proposal, ReadSet, RwSet, TxId, WriteSet};

@@ -1,0 +1,267 @@
+//! Point-in-time `WorldState` snapshots for the durable ledger.
+//!
+//! A snapshot freezes everything the commit pipeline needs to resume a
+//! channel without replaying from genesis: the sorted key/value/version
+//! entries (stamped with a Merkle **state root** over them, reusing
+//! `crypto::merkle`), the chain tip (height + tip hash) the state
+//! corresponds to, the MVCC write sequence, and the committed-txid dedup
+//! set (so a replayed `DuplicateTxId` verdict recomputes identically).
+//!
+//! On disk a snapshot is one CRC-framed record written atomically: encode
+//! to a `.tmp` sibling, fsync, then `rename` over the live file — a crash
+//! mid-write leaves the previous snapshot intact, and a torn/corrupt file
+//! is detected by the CRC + recomputed state root and simply ignored
+//! (recovery falls back to replaying the block log from its start).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::crypto::{merkle, sha256_parts, Digest};
+use crate::ledger::codec::{Reader, Writer};
+use crate::ledger::state::{Version, WorldState};
+use crate::ledger::store::{crc32, FRAME_BYTES};
+use crate::ledger::tx::TxId;
+
+/// Merkle root over sorted (key, value, version) entries: one leaf per
+/// entry, each a length-delimited hash of its fields. Two states agree on
+/// every key, value, and version iff their roots match.
+pub fn state_root(entries: &[(&str, &[u8], Version)]) -> Digest {
+    let leaves: Vec<Digest> = entries
+        .iter()
+        .map(|(k, v, ver)| {
+            sha256_parts(&[k.as_bytes(), v, &ver.block.to_le_bytes(), &ver.tx.to_le_bytes()])
+        })
+        .collect();
+    merkle::root(&leaves)
+}
+
+/// A consistent cut of one channel's replica, as persisted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Chain height the cut was taken at (number of committed blocks).
+    pub height: u64,
+    /// Hash of block `height - 1` (`Digest::ZERO` for an empty chain).
+    pub tip_hash: Digest,
+    /// [`state_root`] over `entries`; verified on load.
+    pub state_root: Digest,
+    /// MVCC write sequence at the cut.
+    pub seq: u64,
+    /// World state entries, sorted by key.
+    pub entries: Vec<(String, Vec<u8>, Version)>,
+    /// Committed transaction ids (sorted; the duplicate-txid dedup set).
+    pub committed_ids: Vec<TxId>,
+}
+
+impl Snapshot {
+    /// Capture a snapshot from live replica structures. The caller must
+    /// hold the channel's commit locks so chain, state, and dedup set are
+    /// one consistent cut.
+    pub fn capture(
+        height: u64,
+        tip_hash: Digest,
+        state: &WorldState,
+        committed_ids: impl IntoIterator<Item = TxId>,
+    ) -> Snapshot {
+        let borrowed = state.entries();
+        let root = state_root(&borrowed);
+        let entries =
+            borrowed.into_iter().map(|(k, v, ver)| (k.to_string(), v.to_vec(), ver)).collect();
+        let mut ids: Vec<TxId> = committed_ids.into_iter().collect();
+        ids.sort_by(|a, b| a.0.cmp(&b.0));
+        Snapshot {
+            height,
+            tip_hash,
+            state_root: root,
+            seq: state.seq(),
+            entries,
+            committed_ids: ids,
+        }
+    }
+
+    /// Recompute the state root from the entries and compare with the
+    /// stored one (load-time integrity check).
+    pub fn verify(&self) -> bool {
+        let borrowed: Vec<(&str, &[u8], Version)> =
+            self.entries.iter().map(|(k, v, ver)| (k.as_str(), v.as_slice(), *ver)).collect();
+        state_root(&borrowed) == self.state_root
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.height);
+        w.bytes(&self.tip_hash.0);
+        w.bytes(&self.state_root.0);
+        w.u64(self.seq);
+        w.u32(self.entries.len() as u32);
+        for (k, v, ver) in &self.entries {
+            w.str(k).bytes(v).u64(ver.block).u32(ver.tx);
+        }
+        w.u32(self.committed_ids.len() as u32);
+        for id in &self.committed_ids {
+            w.bytes(&id.0);
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Snapshot, String> {
+        let mut r = Reader::new(buf);
+        let height = r.u64()?;
+        let tip_hash = digest(&mut r)?;
+        let state_root = digest(&mut r)?;
+        let seq = r.u64()?;
+        let nentries = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(nentries);
+        for _ in 0..nentries {
+            let k = r.str()?;
+            let v = r.bytes()?.to_vec();
+            let ver = Version { block: r.u64()?, tx: r.u32()? };
+            entries.push((k, v, ver));
+        }
+        let nids = r.u32()? as usize;
+        let mut committed_ids = Vec::with_capacity(nids);
+        for _ in 0..nids {
+            committed_ids.push(digest(&mut r)?);
+        }
+        if !r.done() {
+            return Err("trailing bytes in snapshot".into());
+        }
+        Ok(Snapshot { height, tip_hash, state_root, seq, entries, committed_ids })
+    }
+}
+
+fn digest(r: &mut Reader<'_>) -> Result<Digest, String> {
+    let b: [u8; 32] = r.bytes()?.try_into().map_err(|_| "bad digest length".to_string())?;
+    Ok(Digest(b))
+}
+
+/// Atomically replace the snapshot at `path`: CRC-framed payload into
+/// `path.tmp`, fsync, rename. The rename is the commit point.
+pub fn write_atomic(path: &Path, snap: &Snapshot) -> Result<(), String> {
+    let payload = snap.encode();
+    let mut framed = Vec::with_capacity(FRAME_BYTES + payload.len());
+    framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    framed.extend_from_slice(&crc32(&payload).to_le_bytes());
+    framed.extend_from_slice(&payload);
+    let tmp = path.with_extension("tmp");
+    let mut f = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&tmp)
+        .map_err(|e| format!("open {}: {e}", tmp.display()))?;
+    f.write_all(&framed).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    f.sync_data().map_err(|e| format!("sync {}: {e}", tmp.display()))?;
+    drop(f);
+    fs::rename(&tmp, path).map_err(|e| format!("rename {}: {e}", path.display()))?;
+    // Persist the rename itself where the platform allows directory syncs.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Load the snapshot at `path`. `None` means "no usable snapshot" —
+/// missing file, torn frame, CRC mismatch, undecodable payload, or a
+/// state root that no longer matches the entries. Recovery treats all of
+/// those identically: fall back to full log replay.
+pub fn load(path: &Path) -> Option<Snapshot> {
+    let buf = fs::read(path).ok()?;
+    if buf.len() < FRAME_BYTES {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let payload = buf.get(FRAME_BYTES..FRAME_BYTES + len)?;
+    if crc32(payload) != crc {
+        return None;
+    }
+    let snap = Snapshot::decode(payload).ok()?;
+    if !snap.verify() {
+        return None;
+    }
+    Some(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::tx::RwSet;
+    use crate::util::tempdir::TempDir;
+
+    fn state_with(keys: &[&str]) -> WorldState {
+        let mut s = WorldState::new();
+        for (i, k) in keys.iter().enumerate() {
+            let rw = RwSet {
+                reads: vec![],
+                writes: vec![(k.to_string(), Some(k.as_bytes().to_vec()))],
+            };
+            s.apply(&rw, Version { block: 1, tx: i as u32 });
+        }
+        s
+    }
+
+    #[test]
+    fn state_root_is_order_canonical_and_content_sensitive() {
+        // Insertion order does not matter — entries are key-sorted.
+        let v = Version { block: 1, tx: 0 };
+        let fwd = vec![
+            ("x".to_string(), b"v".to_vec(), v),
+            ("y".to_string(), b"w".to_vec(), v),
+        ];
+        let rev: Vec<_> = fwd.iter().rev().cloned().collect();
+        assert_eq!(
+            state_root(&WorldState::from_entries(fwd, 2).entries()),
+            state_root(&WorldState::from_entries(rev, 2).entries())
+        );
+        // Same keys, different versions (apply order) → different roots.
+        let a = state_with(&["x", "y", "z"]);
+        let b = state_with(&["z", "x", "y"]);
+        assert_ne!(state_root(&a.entries()), state_root(&b.entries()));
+        assert_eq!(state_root(&[]), Digest::ZERO);
+    }
+
+    #[test]
+    fn roundtrip_and_verify() {
+        let s = state_with(&["a", "b"]);
+        let ids = vec![Digest([1; 32]), Digest([2; 32])];
+        let snap = Snapshot::capture(5, Digest([9; 32]), &s, ids.clone());
+        assert!(snap.verify());
+        assert_eq!(snap.seq, 2);
+        assert_eq!(snap.committed_ids, ids);
+        let back = Snapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back, snap);
+        // Tampering a value breaks the root check.
+        let mut bad = back;
+        bad.entries[0].1 = b"other".to_vec();
+        assert!(!bad.verify());
+    }
+
+    #[test]
+    fn atomic_write_load_and_corruption_fallback() {
+        let dir = TempDir::new("snap");
+        let path = dir.join("state.snap");
+        assert!(load(&path).is_none(), "missing file is not an error");
+        let s = state_with(&["k1", "k2", "k3"]);
+        let snap = Snapshot::capture(3, Digest([7; 32]), &s, vec![Digest([4; 32])]);
+        write_atomic(&path, &snap).unwrap();
+        assert_eq!(load(&path), Some(snap.clone()));
+        // Overwrite is atomic: the tmp sibling never lingers.
+        let s2 = state_with(&["k1", "k2", "k3", "k4"]);
+        let snap2 = Snapshot::capture(4, Digest([8; 32]), &s2, vec![Digest([4; 32])]);
+        write_atomic(&path, &snap2).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        assert_eq!(load(&path).unwrap().height, 4);
+        // Flip one payload byte: the CRC (or root) check rejects the file.
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_none());
+        // Truncation is also just "no snapshot".
+        fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(load(&path).is_none());
+    }
+}

@@ -157,6 +157,30 @@ impl WorldState {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// Every (key, value, version) entry sorted by key — the canonical
+    /// order the snapshot state root is computed over
+    /// (`crate::ledger::snapshot`).
+    pub fn entries(&self) -> Vec<(&str, &[u8], Version)> {
+        let mut out: Vec<(&str, &[u8], Version)> = self
+            .map
+            .iter()
+            .map(|(k, (v, ver))| (k.as_str(), v.as_slice(), *ver))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(b.0));
+        out
+    }
+
+    /// Rebuild a state from snapshot entries at the recorded write
+    /// sequence (recovery-only entry point; versions are restored as
+    /// stamped at commit time, not re-derived).
+    pub fn from_entries(
+        entries: impl IntoIterator<Item = (String, Vec<u8>, Version)>,
+        seq: u64,
+    ) -> WorldState {
+        let map = entries.into_iter().map(|(k, v, ver)| (k, (v, ver))).collect();
+        WorldState { map, seq }
+    }
 }
 
 impl StateView for WorldState {
@@ -282,6 +306,22 @@ mod tests {
             assert_eq!(*v, k.as_bytes());
         }
         assert!(s.scan_prefix("zzz").is_empty());
+    }
+
+    #[test]
+    fn entries_roundtrip_through_from_entries() {
+        let mut s = WorldState::new();
+        for (i, k) in ["b", "a", "c"].iter().enumerate() {
+            s.apply(&w(k, k.as_bytes()), Version { block: 1, tx: i as u32 });
+        }
+        let entries = s.entries();
+        assert_eq!(entries.iter().map(|(k, _, _)| *k).collect::<Vec<_>>(), vec!["a", "b", "c"]);
+        let owned: Vec<(String, Vec<u8>, Version)> =
+            entries.iter().map(|(k, v, ver)| (k.to_string(), v.to_vec(), *ver)).collect();
+        let back = WorldState::from_entries(owned, s.seq());
+        assert_eq!(back.seq(), s.seq());
+        assert_eq!(back.entries(), s.entries());
+        assert_eq!(back.read_version("a"), Some(Version { block: 1, tx: 1 }));
     }
 
     #[test]

@@ -39,6 +39,19 @@
 //! read-set is already stale shed at admission (`Reject::StaleReadSet`)
 //! or at batch pull instead of costing consensus bandwidth.
 //!
+//! **Durability** (`ledger::store` + `ledger::snapshot`): each peer
+//! channel can own a crash-safe ledger (`Peer::attach_store`, wired
+//! network-wide through `OrdererConfig::ledger`). Commits append
+//! CRC-framed blocks to an append-only log — fsync cost set by
+//! `ledger::DurabilityMode` (`Off` / group commit / `Strict`) — and every
+//! N blocks the world state is checkpointed to an atomically-replaced
+//! snapshot stamped with a Merkle state root and the chain tip. Restart
+//! recovery loads the latest valid snapshot, replays the log suffix
+//! through the regular validation path, and truncates torn tails, so a
+//! killed replica returns with an identical tip hash and state root (see
+//! `ledger` module docs for the mode tradeoff table, and
+//! `benches/durability.rs` for the throughput/recovery baselines).
+//!
 //! **Observability** (`telemetry`): one vocabulary for everything the
 //! pipeline measures. Mempool, relay, validator, and orderer register
 //! weak collectors into the process-wide metrics `telemetry::Registry`

@@ -10,7 +10,11 @@
 //!   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
 //!   scalesfl calibrate                    — print DES calibration numbers
 //!   scalesfl telemetry [--txs N] [--json] — drive a small sharded pipeline
-//!                                           and dump the metrics registry
+//!            [--ledger DIR]                 and dump the metrics registry;
+//!            [--durability off|group|strict]  with --ledger, commits are
+//!                                           persisted under DIR and the
+//!                                           run recovers whatever a
+//!                                           previous run left there
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -70,12 +74,16 @@ USAGE:
                    [--defense none|roni|norm] [--agg none|krum|fg] [--pn]
   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
   scalesfl calibrate
-  scalesfl telemetry [--txs N] [--json]
+  scalesfl telemetry [--txs N] [--json] [--ledger DIR] [--durability off|group|strict]
 
 `telemetry` drives a small ingress->relay->order->validate->commit pipeline
 and dumps the process-wide metrics registry (Prometheus text, or JSON with
 --json) plus the per-stage lifecycle latencies from the tracer. `train` and
 `figures` accept `--telemetry` to dump the same registry when the run ends.
+With `--ledger DIR` every committed block is persisted to an append-only
+log (plus periodic Merkle-rooted state snapshots) under DIR, and a rerun
+against the same DIR first recovers the previous run's chain by replay —
+so driving it twice demonstrates crash recovery end to end.
 
 Run `make artifacts` before anything that touches the model runtime."
     );
@@ -148,7 +156,21 @@ fn cmd_telemetry(args: &[String]) -> i32 {
         }
     }
 
+    use scalesfl::ledger::store::{DurabilityMode, LedgerConfig};
+
     let txs = parse(args, "--txs", 24usize).max(1);
+    // --ledger DIR: persist commits under DIR; reruns recover from it.
+    // The CA seed is fixed, so credentials are identical across runs and
+    // logged endorsements verify on replay.
+    let ledger = arg_value(args, "--ledger").map(|dir| {
+        let mut lc = LedgerConfig::new(dir);
+        lc.durability = match arg_value(args, "--durability").as_deref() {
+            Some("off") => DurabilityMode::Off,
+            Some("strict") => DurabilityMode::Strict,
+            _ => lc.durability, // group commit
+        };
+        lc
+    });
     let ca = CertificateAuthority::new();
     let mut rng = Prng::new(7);
     let peers: Vec<Arc<Peer>> = (0..2)
@@ -162,6 +184,24 @@ fn cmd_telemetry(args: &[String]) -> i32 {
         p.join_channel("ch", EndorsementPolicy::MajorityOf(members.clone()));
         p.install_chaincode("ch", Arc::new(Put)).unwrap();
     }
+    if let Some(lc) = &ledger {
+        for p in &peers {
+            match p.attach_store("ch", lc) {
+                Ok(rep) => eprintln!(
+                    "{}: recovered height {} (snapshot {}, replayed {}, root {})",
+                    p.member,
+                    rep.height,
+                    rep.snapshot_height,
+                    rep.replayed_blocks,
+                    rep.state_root.short()
+                ),
+                Err(e) => {
+                    eprintln!("{}: ledger attach failed: {e}", p.member);
+                    return 1;
+                }
+            }
+        }
+    }
     let cfg = OrdererConfig {
         batch_timeout: Duration::from_millis(10),
         tick: Duration::from_millis(1),
@@ -171,13 +211,18 @@ fn cmd_telemetry(args: &[String]) -> i32 {
             jitter: Duration::from_millis(1),
             seed: 7,
         }),
+        ledger: ledger.clone(),
         ..OrdererConfig::default()
     };
     let orderer = OrderingService::start(cfg, peers.clone(), 7);
-    let mut gw = Gateway::new(peers, orderer);
+    let mut gw = Gateway::new(peers.clone(), orderer);
     // A foreign ingress shard, so every transaction pays a relay hop and
     // the relay/trace series are non-trivial.
     gw.ingress = Some("edge".into());
+    // Key/nonce space offset by the recovered height, so a rerun against
+    // the same --ledger DIR submits fresh transactions instead of
+    // tripping the recovered duplicate-txid set.
+    let base = peers[0].channel("ch").map(|ch| ch.height()).unwrap_or(0) * 10_000;
     eprintln!("driving {txs} txs through edge -> relay -> ch -> commit ...");
     for i in 0..txs as u64 {
         let out = gw
@@ -185,14 +230,23 @@ fn cmd_telemetry(args: &[String]) -> i32 {
                 channel: "ch".into(),
                 chaincode: "kv".into(),
                 function: "Put".into(),
-                args: vec![format!("k{i}")],
+                args: vec![format!("k{}", base + i)],
                 creator: MemberId::new("client"),
-                nonce: i,
+                nonce: base + i,
             })
             .wait();
         if !out.is_valid() {
             eprintln!("tx {i} did not commit: {out:?}");
             return 1;
+        }
+    }
+
+    if ledger.is_some() {
+        eprintln!("\n# ledger stores");
+        for p in &peers {
+            if let Some(store) = p.channel("ch").and_then(|ch| ch.store()) {
+                eprintln!("{}: height {} {}", p.member, store.height(), store.stats().to_json());
+            }
         }
     }
 

@@ -9,6 +9,7 @@ pub mod clock;
 pub mod histogram;
 pub mod json;
 pub mod prng;
+pub mod tempdir;
 pub mod threadpool;
 
 /// Round `x` up to the next multiple of `m`.

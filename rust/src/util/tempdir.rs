@@ -1,0 +1,66 @@
+//! Hermetic scratch directories for disk-touching tests and benches.
+//!
+//! Every instance gets a process-unique path (pid + atomic counter), so
+//! parallel test threads never share a directory, and the tree is removed
+//! on drop — a failed assertion mid-test still cleans up, because the
+//! unwind runs destructors. Hand-rolled because `tempfile` is not in the
+//! offline vendor set.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::{env, fs, process};
+
+static NEXT: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely named directory under the system temp dir, deleted on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `"$TMPDIR/scalesfl-<prefix>-<pid>-<n>"`. Panics if the
+    /// directory cannot be created — a scratch dir that silently fails to
+    /// exist would turn every downstream assertion into noise.
+    pub fn new(prefix: &str) -> TempDir {
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        let path =
+            env::temp_dir().join(format!("scalesfl-{prefix}-{}-{n}", process::id()));
+        fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory (not created).
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        // Best-effort: a vanished tree (e.g. the test removed it) is fine.
+        let _ = fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_created_and_removed_on_drop() {
+        let a = TempDir::new("t");
+        let b = TempDir::new("t");
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir() && b.path().is_dir());
+        let kept = a.path().to_path_buf();
+        fs::write(a.join("f"), b"x").unwrap();
+        drop(a);
+        assert!(!kept.exists(), "dropped dir must be cleaned up");
+        assert!(b.path().is_dir());
+    }
+}
