@@ -69,14 +69,16 @@ pub struct ModelsChaincode {
 impl ModelsChaincode {
     /// Locate the latest finalised global model pinned on this shard chain
     /// (written by the workflow when a round closes) for baseline checks.
-    fn prev_global(&self, ctx: &mut TxContext<'_>, round: u64) -> Option<Vec<f32>> {
+    /// Returns the store's own `Arc` — every endorsement that needs the
+    /// baseline bumps a refcount instead of copying the parameter vector.
+    fn prev_global(&self, ctx: &mut TxContext<'_>, round: u64) -> Option<Arc<Vec<f32>>> {
         if round == 0 {
             return None;
         }
         let raw = ctx.get(&format!("global/{:08}", round - 1))?;
         let meta = ModelMeta::decode(&raw).ok()?;
         let digest = Digest::from_hex(&meta.hash)?;
-        self.store.get_verified(&meta.uri, &digest).ok().map(|b| (*b).clone())
+        self.store.get_verified(&meta.uri, &digest).ok()
     }
 
     fn create_model_update(
@@ -115,7 +117,7 @@ impl ModelsChaincode {
             ops: &self.ops,
             eval_x: &self.eval_data.x,
             eval_y: &self.eval_data.y,
-            prev_global: prev_global.as_deref(),
+            prev_global: prev_global.as_ref().map(|g| g.as_slice()),
             baseline,
         };
         self.defense.verdict(&verdict_ctx)?;

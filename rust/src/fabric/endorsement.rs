@@ -52,6 +52,20 @@ impl EndorsementPolicy {
         ca: &CertificateAuthority,
     ) -> bool {
         let payload = endorsement_payload(tx_id, &rw_set.digest());
+        self.satisfied_prehashed(&payload, endorsements, ca)
+    }
+
+    /// [`EndorsementPolicy::satisfied`] with the endorsement payload
+    /// (tx_id ‖ rw-digest) already computed — the hot path for callers
+    /// holding cached envelope views, skipping the rw-set re-hash. One
+    /// registry lock covers all signature checks for the envelope.
+    pub fn satisfied_prehashed(
+        &self,
+        payload: &[u8],
+        endorsements: &[Endorsement],
+        ca: &CertificateAuthority,
+    ) -> bool {
+        let verifier = ca.batch_verifier();
         let mut seen: Vec<&MemberId> = Vec::new();
         let mut valid = 0usize;
         for e in endorsements {
@@ -61,7 +75,7 @@ impl EndorsementPolicy {
             if !self.members().contains(&e.endorser) {
                 continue; // not in the policy set
             }
-            if ca.verify(&e.endorser, &payload, &e.signature) {
+            if verifier.verify(&e.endorser, payload, &e.signature) {
                 seen.push(&e.endorser);
                 valid += 1;
             }

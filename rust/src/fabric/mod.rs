@@ -28,6 +28,24 @@
 //! cross-shard relay (`crate::mempool::relay`), and relay losses resolve
 //! the handle through [`waiter::WaiterEvent::Dropped`].
 //!
+//! **One encode, refcounts everywhere.** An envelope is serialized to its
+//! canonical wire bytes exactly once, when it enters the pipeline; from
+//! then on every stage passes a [`crate::ledger::envelope::SharedEnvelope`]
+//! — an `Arc`'d buffer with lazily-decoded, cached views (tx id, rw-set
+//! digest, envelope digest, decoded body). The mempool queues hold
+//! refcounts, the relay forwards the same buffer across hops, batch pull
+//! and block cutting move handles, consensus payloads and the durable
+//! ledger splice the buffer bytes straight into their frames
+//! ([`wire::encode_batch`] / [`wire::encode_block`]), and
+//! [`wire::decode_shared`] carves the envelopes of an incoming payload
+//! back out as zero-copy spans of the one allocation. Validation hashes
+//! are cached-view reads, so [`validator::BlockValidator`] worker threads
+//! and replica peers share verdict keys without re-hashing — and its
+//! (envelope digest, policy fingerprint) verdict cache is shared with
+//! mempool admission (`BlockValidator::admission_verify`), so a
+//! transaction crypto-verified when it entered the pool prevalidates for
+//! free when its block commits.
+//!
 //! Channels model shards (paper §4): one channel per shard plus the
 //! mainchain channel every peer joins.
 

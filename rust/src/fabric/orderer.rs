@@ -37,6 +37,7 @@ use crate::consensus::pbft::{Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::ConsensusNode;
 use crate::ledger::state::StateView;
+use crate::ledger::envelope::SharedEnvelope;
 use crate::ledger::store::LedgerConfig;
 use crate::ledger::tx::Envelope;
 use crate::mempool::{MempoolConfig, MempoolRegistry, Reject, Relay, RelayConfig};
@@ -217,7 +218,7 @@ impl OrderingService {
         // Pipeline stage 3: validation/commit runs off the consensus
         // thread, through the shared two-stage validator (parallel policy
         // pre-validation once per block, serial MVCC+apply per replica).
-        let (commit_tx, commit_rx) = mpsc::channel::<(String, Vec<Envelope>)>();
+        let (commit_tx, commit_rx) = mpsc::channel::<(String, Vec<SharedEnvelope>)>();
         let committer = {
             let counter = Arc::clone(&blocks_cut);
             let validator = Arc::clone(&validator);
@@ -440,7 +441,7 @@ fn exchange<C: ConsensusNode>(
 /// Returns `false` only when the committer is gone (shutdown).
 fn deliver_committed(
     data: &[u8],
-    commit_tx: &mpsc::Sender<(String, Vec<Envelope>)>,
+    commit_tx: &mpsc::Sender<(String, Vec<SharedEnvelope>)>,
     bad_batches: &AtomicU64,
 ) -> bool {
     match wire::decode_batch(data) {
@@ -457,7 +458,7 @@ fn driver<C: ConsensusNode>(
     cfg: OrdererConfig,
     mempool: Arc<MempoolRegistry>,
     shutdown: Arc<AtomicBool>,
-    commit_tx: mpsc::Sender<(String, Vec<Envelope>)>,
+    commit_tx: mpsc::Sender<(String, Vec<SharedEnvelope>)>,
     relay: Option<Arc<Relay>>,
     bad_batches: Arc<AtomicU64>,
     mut nodes: Vec<C>,

@@ -40,10 +40,11 @@ use crate::crypto::msp::{CertificateAuthority, Credential, MemberId};
 use crate::crypto::Digest;
 use crate::ledger::block::{Block, ValidationCode};
 use crate::ledger::chain::Chain;
+use crate::ledger::envelope::SharedEnvelope;
 use crate::ledger::snapshot::{self, Snapshot};
 use crate::ledger::state::{StateView, Version, WorldState};
 use crate::ledger::store::{LedgerConfig, LedgerStore};
-use crate::ledger::tx::{endorsement_payload, Endorsement, Envelope, Proposal, RwSet, TxId};
+use crate::ledger::tx::{endorsement_payload, Endorsement, Proposal, RwSet, TxId};
 use crate::telemetry::{self, Stage};
 
 use super::chaincode::{Chaincode, TxContext};
@@ -289,7 +290,11 @@ impl Peer {
     /// Validate + commit an ordered batch as the next block on `channel`
     /// using this peer's private serial validator. Kept for direct callers
     /// and tests; the pipelined path is [`Peer::commit_batch_with`].
-    pub fn commit_batch(&self, channel: &str, envelopes: Vec<Envelope>) -> Result<Block, String> {
+    pub fn commit_batch<E: Into<SharedEnvelope>>(
+        &self,
+        channel: &str,
+        envelopes: Vec<E>,
+    ) -> Result<Block, String> {
         let validator = Arc::clone(&self.validator);
         self.commit_batch_with(&validator, channel, envelopes)
     }
@@ -301,21 +306,21 @@ impl Peer {
     /// Deterministic: validation codes are assigned in the same priority
     /// order as the historical serial loop (duplicate-txid, endorsement
     /// policy, MVCC read-version, apply), whatever the worker count.
-    pub fn commit_batch_with(
+    pub fn commit_batch_with<E: Into<SharedEnvelope>>(
         &self,
         validator: &BlockValidator,
         channel: &str,
-        envelopes: Vec<Envelope>,
+        envelopes: Vec<E>,
     ) -> Result<Block, String> {
         let ch = self.channel(channel).ok_or_else(|| format!("not joined: {channel}"))?;
         let policy = ch.policy();
 
         // Stage 1 — lock-free fan-out (and cross-peer verdict reuse).
-        let envs = Arc::new(envelopes);
-        let policy_ok = validator.prevalidate(&policy, &self.ca, &envs);
-        // The workers are done with the Arc; reclaim the envelopes without
-        // cloning (the fallback clone only runs if a caller leaked a ref).
-        let envelopes = Arc::try_unwrap(envs).unwrap_or_else(|shared| (*shared).clone());
+        // Envelopes arriving from the orderer are already shared buffers;
+        // `into` is a move. Workers hold refcounts, never payload clones.
+        let envelopes: Vec<SharedEnvelope> =
+            envelopes.into_iter().map(Into::into).collect();
+        let policy_ok = validator.prevalidate(&policy, &self.ca, &envelopes);
 
         // Stage 2 — serial MVCC + apply under the block-commit locks.
         let mut chain = ch.chain.lock().unwrap();
@@ -334,10 +339,10 @@ impl Peer {
                 ValidationCode::DuplicateTxId
             } else if !policy_ok[i] {
                 ValidationCode::EndorsementPolicyFailure
-            } else if !state.mvcc_valid(&env.rw_set) {
+            } else if !state.mvcc_valid(env.rw_set()) {
                 ValidationCode::MvccConflict
             } else {
-                state.apply(&env.rw_set, Version { block: number, tx: i as u32 });
+                state.apply(env.rw_set(), Version { block: number, tx: i as u32 });
                 committed_ids.insert(tx_id);
                 ValidationCode::Valid
             };
@@ -458,8 +463,7 @@ impl Peer {
     /// no commit events or telemetry stamps fire.
     fn replay_block(&self, ch: &PeerChannel, block: &Block) -> Result<(), String> {
         let policy = ch.policy();
-        let envs = Arc::new(block.txs.clone());
-        let policy_ok = self.validator.prevalidate(&policy, &self.ca, &envs);
+        let policy_ok = self.validator.prevalidate(&policy, &self.ca, &block.txs);
         let mut chain = ch.chain.lock().unwrap();
         let mut state = ch.state.write().unwrap();
         let mut committed_ids = ch.committed_ids.lock().unwrap();
@@ -477,10 +481,10 @@ impl Peer {
                 ValidationCode::DuplicateTxId
             } else if !policy_ok[i] {
                 ValidationCode::EndorsementPolicyFailure
-            } else if !state.mvcc_valid(&env.rw_set) {
+            } else if !state.mvcc_valid(env.rw_set()) {
                 ValidationCode::MvccConflict
             } else {
-                state.apply(&env.rw_set, Version { block: number, tx: i as u32 });
+                state.apply(env.rw_set(), Version { block: number, tx: i as u32 });
                 committed_ids.insert(tx_id);
                 ValidationCode::Valid
             };
@@ -514,6 +518,7 @@ impl Peer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ledger::tx::Envelope;
     use crate::util::prng::Prng;
 
     /// Toy chaincode: Put(k, v) writes, Get(k) reads, Fail errors.

@@ -36,7 +36,8 @@ use std::time::Instant;
 use crate::crypto::msp::CertificateAuthority;
 use crate::crypto::Digest;
 use crate::ledger::block::ValidationCode;
-use crate::ledger::tx::Envelope;
+use crate::ledger::envelope::SharedEnvelope;
+use crate::ledger::tx::endorsement_payload;
 use crate::telemetry::{self, Sample, Stage};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -60,6 +61,8 @@ struct ValidationStats {
     cache_misses: AtomicU64,
     mvcc_conflicts: AtomicU64,
     policy_failures: AtomicU64,
+    admit_txs: AtomicU64,
+    admit_cache_hits: AtomicU64,
 }
 
 /// Point-in-time copy of a validator's counters. Times are cumulative
@@ -82,6 +85,11 @@ pub struct ValidationSnapshot {
     pub mvcc_conflicts: u64,
     /// Transactions invalidated by the endorsement policy.
     pub policy_failures: u64,
+    /// Transactions crypto-verified on behalf of mempool admission
+    /// (verdicts land in the same cache the commit path probes).
+    pub admit_txs: u64,
+    /// Admission verdicts answered from the shared cache.
+    pub admit_cache_hits: u64,
 }
 
 impl ValidationSnapshot {
@@ -103,6 +111,8 @@ impl ValidationSnapshot {
             .set("cache_misses", self.cache_misses)
             .set("mvcc_conflicts", self.mvcc_conflicts)
             .set("policy_failures", self.policy_failures)
+            .set("admit_txs", self.admit_txs)
+            .set("admit_cache_hits", self.admit_cache_hits)
     }
 }
 
@@ -151,20 +161,62 @@ impl BlockValidator {
             cache_misses: self.stats.cache_misses.load(Ordering::Relaxed),
             mvcc_conflicts: self.stats.mvcc_conflicts.load(Ordering::Relaxed),
             policy_failures: self.stats.policy_failures.load(Ordering::Relaxed),
+            admit_txs: self.stats.admit_txs.load(Ordering::Relaxed),
+            admit_cache_hits: self.stats.admit_cache_hits.load(Ordering::Relaxed),
         }
     }
 
     /// Stage 1: policy/signature verdict per envelope, in block order.
-    /// Lock-free with respect to chain and state; callers pass the
-    /// envelopes behind an `Arc` so worker threads can borrow them without
-    /// cloning transaction payloads.
+    /// Lock-free with respect to chain and state; envelopes are
+    /// [`SharedEnvelope`]s, so worker threads hold refcounts (never
+    /// payload clones) and every hash below is a cached-view read.
     pub fn prevalidate(
         &self,
         policy: &EndorsementPolicy,
         ca: &CertificateAuthority,
-        envs: &Arc<Vec<Envelope>>,
+        envs: &[SharedEnvelope],
     ) -> Vec<bool> {
         let t0 = Instant::now();
+        let (ok, verified) = self.verdicts(policy, ca, envs, false);
+        // Cache misses mark the crypto replica: stamping only them (and
+        // first-write-wins in the tracer) keeps replica re-validations
+        // from moving the stage forward.
+        for &i in &verified {
+            telemetry::global().stamp(&envs[i].tx_id(), Stage::Prevalidate);
+        }
+        self.stats
+            .prevalidate_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        ok
+    }
+
+    /// Crypto verdicts on behalf of mempool admission: same worker
+    /// fan-out, same (envelope digest, policy fingerprint) cache — so a
+    /// transaction verified once at admission is a pure cache hit when
+    /// its block later prevalidates, and vice versa. Does not stamp the
+    /// `Prevalidate` lifecycle stage or touch the commit-path counters;
+    /// admission work is tallied separately (`admit_txs`,
+    /// `admit_cache_hits`).
+    pub fn admission_verify(
+        &self,
+        policy: &EndorsementPolicy,
+        ca: &CertificateAuthority,
+        envs: &[SharedEnvelope],
+    ) -> Vec<bool> {
+        let (ok, _) = self.verdicts(policy, ca, envs, true);
+        ok
+    }
+
+    /// Shared verdict core: probe the cache, fan the misses out over the
+    /// worker pool, insert the fresh verdicts. Returns the per-envelope
+    /// verdicts plus the indices that actually ran crypto.
+    fn verdicts(
+        &self,
+        policy: &EndorsementPolicy,
+        ca: &CertificateAuthority,
+        envs: &[SharedEnvelope],
+        admission: bool,
+    ) -> (Vec<bool>, Vec<usize>) {
         let fp = policy.fingerprint();
         let n = envs.len();
         let mut ok = vec![false; n];
@@ -179,85 +231,78 @@ impl BlockValidator {
                 }
             }
         }
-        self.stats.cache_hits.fetch_add((n - misses.len()) as u64, Ordering::Relaxed);
-        self.stats.cache_misses.fetch_add(misses.len() as u64, Ordering::Relaxed);
-
-        if !misses.is_empty() {
-            let verdicts: Vec<(usize, bool)> = match &self.pool {
-                Some(pool) if misses.len() > 1 => {
-                    // Chunk the misses across the workers; each chunk sends
-                    // its verdicts back over a per-call channel, so
-                    // concurrent prevalidate calls never wait on each
-                    // other's jobs.
-                    let per_chunk = misses.len().div_ceil(self.workers);
-                    let (tx, rx) = mpsc::channel::<Vec<(usize, bool)>>();
-                    let mut jobs = 0usize;
-                    for chunk in misses.chunks(per_chunk) {
-                        let chunk = chunk.to_vec();
-                        let envs = Arc::clone(envs);
-                        let policy = policy.clone();
-                        let ca = ca.clone();
-                        let tx = tx.clone();
-                        jobs += 1;
-                        pool.execute(move || {
-                            let out: Vec<(usize, bool)> = chunk
-                                .into_iter()
-                                .map(|i| {
-                                    let e = &envs[i];
-                                    let sat = policy.satisfied(
-                                        &e.tx_id(),
-                                        &e.rw_set,
-                                        &e.endorsements,
-                                        &ca,
-                                    );
-                                    (i, sat)
-                                })
-                                .collect();
-                            // Release the envelope ref *before* signalling
-                            // completion: the caller reclaims the Vec with
-                            // Arc::try_unwrap once every chunk has reported,
-                            // which must not race this closure's teardown.
-                            drop(envs);
-                            let _ = tx.send(out);
-                        });
-                    }
-                    drop(tx);
-                    let mut all = Vec::with_capacity(misses.len());
-                    for _ in 0..jobs {
-                        all.extend(rx.recv().expect("validation worker dropped its result"));
-                    }
-                    all
-                }
-                _ => misses
-                    .iter()
-                    .map(|&i| {
-                        let e = &envs[i];
-                        (i, policy.satisfied(&e.tx_id(), &e.rw_set, &e.endorsements, ca))
-                    })
-                    .collect(),
-            };
-            let mut cache = self.cache.lock().unwrap();
-            if cache.len() + verdicts.len() > CACHE_CAP {
-                // Crude but bounded: committed blocks never revalidate, so
-                // a cold cache only costs the in-flight replicas one redo.
-                cache.clear();
-            }
-            for &(i, verdict) in &verdicts {
-                ok[i] = verdict;
-                cache.insert((keys[i], fp), verdict);
-            }
-            drop(cache);
-            // Cache misses mark the crypto replica: stamping only them (and
-            // first-write-wins in the tracer) keeps replica re-validations
-            // from moving the stage forward.
-            for &(i, _) in &verdicts {
-                telemetry::global().stamp(&envs[i].tx_id(), Stage::Prevalidate);
-            }
+        if admission {
+            self.stats.admit_txs.fetch_add(n as u64, Ordering::Relaxed);
+            self.stats
+                .admit_cache_hits
+                .fetch_add((n - misses.len()) as u64, Ordering::Relaxed);
+        } else {
+            self.stats.cache_hits.fetch_add((n - misses.len()) as u64, Ordering::Relaxed);
+            self.stats.cache_misses.fetch_add(misses.len() as u64, Ordering::Relaxed);
         }
-        self.stats
-            .prevalidate_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        ok
+
+        if misses.is_empty() {
+            return (ok, misses);
+        }
+        let verify = |e: &SharedEnvelope| {
+            let payload = endorsement_payload(&e.tx_id(), &e.rw_digest());
+            policy.satisfied_prehashed(&payload, e.endorsements(), ca)
+        };
+        let verdicts: Vec<(usize, bool)> = match &self.pool {
+            Some(pool) if misses.len() > 1 => {
+                // Chunk the misses across the workers; each chunk sends
+                // its verdicts back over a per-call channel, so
+                // concurrent calls never wait on each other's jobs.
+                let per_chunk = misses.len().div_ceil(self.workers);
+                let (tx, rx) = mpsc::channel::<Vec<(usize, bool)>>();
+                let mut jobs = 0usize;
+                for chunk in misses.chunks(per_chunk) {
+                    // Refcount bumps only: each worker owns handles to the
+                    // shared buffers, not copies of the payloads.
+                    let chunk: Vec<(usize, SharedEnvelope)> =
+                        chunk.iter().map(|&i| (i, envs[i].clone())).collect();
+                    let policy = policy.clone();
+                    let ca = ca.clone();
+                    let tx = tx.clone();
+                    jobs += 1;
+                    pool.execute(move || {
+                        let out: Vec<(usize, bool)> = chunk
+                            .into_iter()
+                            .map(|(i, e)| {
+                                let payload =
+                                    endorsement_payload(&e.tx_id(), &e.rw_digest());
+                                let sat = policy.satisfied_prehashed(
+                                    &payload,
+                                    e.endorsements(),
+                                    &ca,
+                                );
+                                (i, sat)
+                            })
+                            .collect();
+                        let _ = tx.send(out);
+                    });
+                }
+                drop(tx);
+                let mut all = Vec::with_capacity(misses.len());
+                for _ in 0..jobs {
+                    all.extend(rx.recv().expect("validation worker dropped its result"));
+                }
+                all
+            }
+            _ => misses.iter().map(|&i| (i, verify(&envs[i]))).collect(),
+        };
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() + verdicts.len() > CACHE_CAP {
+            // Crude but bounded: committed blocks never revalidate, so
+            // a cold cache only costs the in-flight replicas one redo.
+            cache.clear();
+        }
+        for &(i, verdict) in &verdicts {
+            ok[i] = verdict;
+            cache.insert((keys[i], fp), verdict);
+        }
+        drop(cache);
+        (ok, misses)
     }
 
     /// Stage-2 report from a peer: serial-stage wall time plus the block's
@@ -314,6 +359,16 @@ impl BlockValidator {
                     Vec::new(),
                     s.policy_failures as f64,
                 ),
+                Sample::counter(
+                    "scalesfl_validator_admit_txs_total",
+                    Vec::new(),
+                    s.admit_txs as f64,
+                ),
+                Sample::counter(
+                    "scalesfl_validator_admit_cache_hits_total",
+                    Vec::new(),
+                    s.admit_cache_hits as f64,
+                ),
             ])
         });
     }
@@ -323,7 +378,7 @@ impl BlockValidator {
 mod tests {
     use super::*;
     use crate::crypto::msp::MemberId;
-    use crate::ledger::tx::{endorsement_payload, Endorsement, Proposal, RwSet};
+    use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet};
     use crate::util::prng::Prng;
 
     fn signed_envelopes(
@@ -369,7 +424,7 @@ mod tests {
         // Corrupt a few: drop endorsements on 3, forge a signature on 7.
         envs[3].endorsements.truncate(1);
         envs[7].endorsements[0].signature.0[0] ^= 0xFF;
-        let envs = Arc::new(envs);
+        let envs: Vec<SharedEnvelope> = envs.into_iter().map(Into::into).collect();
         let serial = BlockValidator::serial();
         let parallel = BlockValidator::new(4);
         let a = serial.prevalidate(&policy, &ca, &envs);
@@ -383,7 +438,7 @@ mod tests {
     fn cache_shares_verdicts_across_replicas() {
         let ca = CertificateAuthority::new();
         let (policy, envs) = signed_envelopes(&ca, 8, 3);
-        let envs = Arc::new(envs);
+        let envs: Vec<SharedEnvelope> = envs.into_iter().map(Into::into).collect();
         let v = BlockValidator::new(2);
         let first = v.prevalidate(&policy, &ca, &envs);
         let snap = v.snapshot();
@@ -398,10 +453,31 @@ mod tests {
     }
 
     #[test]
+    fn admission_verdicts_prime_the_commit_cache() {
+        let ca = CertificateAuthority::new();
+        let (policy, envs) = signed_envelopes(&ca, 6, 3);
+        let envs: Vec<SharedEnvelope> = envs.into_iter().map(Into::into).collect();
+        let v = BlockValidator::new(2);
+        let at_admission = v.admission_verify(&policy, &ca, &envs);
+        assert!(at_admission.iter().all(|&b| b));
+        let snap = v.snapshot();
+        assert_eq!(snap.admit_txs, 6);
+        assert_eq!(snap.admit_cache_hits, 0);
+        assert_eq!(snap.cache_misses, 0, "commit counters untouched by admission");
+        // The block later prevalidates entirely from cached admission
+        // verdicts — the crypto ran once, at the pool boundary.
+        let at_commit = v.prevalidate(&policy, &ca, &envs);
+        assert_eq!(at_admission, at_commit);
+        let snap = v.snapshot();
+        assert_eq!(snap.cache_hits, 6);
+        assert_eq!(snap.cache_misses, 0);
+    }
+
+    #[test]
     fn policy_change_invalidates_cached_verdicts() {
         let ca = CertificateAuthority::new();
         let (policy, envs) = signed_envelopes(&ca, 2, 3);
-        let envs = Arc::new(envs);
+        let envs: Vec<SharedEnvelope> = envs.into_iter().map(Into::into).collect();
         let v = BlockValidator::serial();
         assert!(v.prevalidate(&policy, &ca, &envs).iter().all(|&b| b));
         // A stricter policy (more required signers than exist) must not be

@@ -1,122 +1,51 @@
 //! Binary wire format for envelopes and block payloads — what the ordering
 //! service replicates through consensus, and (block-framed) what the
 //! durable ledger (`crate::ledger::store`) persists per record.
+//!
+//! The per-envelope codec lives in `crate::ledger::envelope` (re-exported
+//! here) because the canonical encoding *is* the in-memory representation:
+//! a [`SharedEnvelope`] carries its wire bytes, so batch and block
+//! serialization splice those buffers (`Writer::raw`) instead of
+//! re-encoding field by field, and decoding a payload yields
+//! `SharedEnvelope`s whose buffers are sub-slices copied straight out of
+//! the payload with the decoded form pre-seeded.
 
-use crate::crypto::msp::{MemberId, Signature};
 use crate::crypto::Digest;
 use crate::ledger::block::{Block, BlockHeader, ValidationCode};
 use crate::ledger::codec::{Reader, Writer};
-use crate::ledger::state::Version;
-use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet};
+use crate::ledger::envelope::SharedEnvelope;
 
-/// Serialize one envelope.
-pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
-    let p = &env.proposal;
-    w.str(&p.channel).str(&p.chaincode).str(&p.function);
-    w.u32(p.args.len() as u32);
-    for a in &p.args {
-        w.str(a);
-    }
-    w.str(&p.creator.0).u64(p.nonce);
+pub use crate::ledger::envelope::{decode_envelope, encode_envelope};
 
-    w.u32(env.rw_set.reads.len() as u32);
-    for (k, ver) in &env.rw_set.reads {
-        w.str(k);
-        match ver {
-            Some(v) => {
-                w.u8(1).u64(v.block).u32(v.tx);
-            }
-            None => {
-                w.u8(0);
-            }
-        }
-    }
-    w.u32(env.rw_set.writes.len() as u32);
-    for (k, val) in &env.rw_set.writes {
-        w.str(k);
-        match val {
-            Some(v) => {
-                w.u8(1).bytes(v);
-            }
-            None => {
-                w.u8(0);
-            }
-        }
-    }
-    w.u32(env.endorsements.len() as u32);
-    for e in &env.endorsements {
-        w.str(&e.endorser.0);
-        w.bytes(&e.signature.0);
-    }
+/// Decode one envelope out of a larger payload, carving its canonical
+/// byte span into a fresh [`SharedEnvelope`] (decoded form pre-seeded, so
+/// nothing downstream re-parses).
+fn decode_shared(r: &mut Reader<'_>) -> Result<SharedEnvelope, String> {
+    let start = r.pos();
+    let env = decode_envelope(r)?;
+    let bytes = r.underlying()[start..r.pos()].to_vec();
+    Ok(SharedEnvelope::from_wire_decoded(bytes, env))
 }
 
-/// Deserialize one envelope.
-pub fn decode_envelope(r: &mut Reader<'_>) -> Result<Envelope, String> {
-    let channel = r.str()?;
-    let chaincode = r.str()?;
-    let function = r.str()?;
-    let nargs = r.u32()? as usize;
-    let mut args = Vec::with_capacity(nargs);
-    for _ in 0..nargs {
-        args.push(r.str()?);
-    }
-    let creator = MemberId::new(r.str()?);
-    let nonce = r.u64()?;
-
-    let nreads = r.u32()? as usize;
-    let mut reads = Vec::with_capacity(nreads);
-    for _ in 0..nreads {
-        let k = r.str()?;
-        let ver = match r.u8()? {
-            1 => Some(Version { block: r.u64()?, tx: r.u32()? }),
-            _ => None,
-        };
-        reads.push((k, ver));
-    }
-    let nwrites = r.u32()? as usize;
-    let mut writes = Vec::with_capacity(nwrites);
-    for _ in 0..nwrites {
-        let k = r.str()?;
-        let val = match r.u8()? {
-            1 => Some(r.bytes()?.to_vec()),
-            _ => None,
-        };
-        writes.push((k, val));
-    }
-    let nend = r.u32()? as usize;
-    let mut endorsements = Vec::with_capacity(nend);
-    for _ in 0..nend {
-        let endorser = MemberId::new(r.str()?);
-        let sig_bytes = r.bytes()?;
-        let sig: [u8; 32] =
-            sig_bytes.try_into().map_err(|_| "bad signature length".to_string())?;
-        endorsements.push(Endorsement { endorser, signature: Signature(sig) });
-    }
-    Ok(Envelope {
-        proposal: Proposal { channel, chaincode, function, args, creator, nonce },
-        rw_set: RwSet { reads, writes },
-        endorsements,
-    })
-}
-
-/// A consensus payload: one cut batch for one channel.
-pub fn encode_batch(channel: &str, envs: &[Envelope]) -> Vec<u8> {
+/// A consensus payload: one cut batch for one channel. Envelope buffers
+/// are spliced, not re-encoded.
+pub fn encode_batch(channel: &str, envs: &[SharedEnvelope]) -> Vec<u8> {
     let mut w = Writer::new();
     w.str(channel).u32(envs.len() as u32);
     for e in envs {
-        encode_envelope(e, &mut w);
+        e.write_to(&mut w);
     }
     w.finish()
 }
 
 /// Decode a consensus payload into (channel, envelopes).
-pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<Envelope>), String> {
+pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<SharedEnvelope>), String> {
     let mut r = Reader::new(buf);
     let channel = r.str()?;
     let n = r.u32()? as usize;
-    let mut envs = Vec::with_capacity(n);
+    let mut envs = Vec::with_capacity(n.min(4096));
     for _ in 0..n {
-        envs.push(decode_envelope(&mut r)?);
+        envs.push(decode_shared(&mut r)?);
     }
     if !r.done() {
         return Err("trailing bytes in batch".into());
@@ -149,7 +78,8 @@ fn digest(r: &mut Reader<'_>) -> Result<Digest, String> {
     Ok(Digest(b))
 }
 
-/// Serialize a committed block: header fields, ordered envelopes, and the
+/// Serialize a committed block: header fields, ordered envelopes (spliced
+/// canonical buffers — the single copy into the ledger store), and the
 /// commit-time validation codes (one byte per tx). The header digests are
 /// stored as written — not recomputed on decode — so a tampered payload
 /// still fails `Block::verify_data_hash` after a roundtrip.
@@ -159,7 +89,7 @@ pub fn encode_block(b: &Block, w: &mut Writer) {
     w.bytes(&b.header.data_hash.0);
     w.u32(b.txs.len() as u32);
     for e in &b.txs {
-        encode_envelope(e, w);
+        e.write_to(w);
     }
     w.u32(b.validation.len() as u32);
     for c in &b.validation {
@@ -173,9 +103,9 @@ pub fn decode_block(r: &mut Reader<'_>) -> Result<Block, String> {
     let prev_hash = digest(r)?;
     let data_hash = digest(r)?;
     let ntxs = r.u32()? as usize;
-    let mut txs = Vec::with_capacity(ntxs);
+    let mut txs = Vec::with_capacity(ntxs.min(4096));
     for _ in 0..ntxs {
-        txs.push(decode_envelope(r)?);
+        txs.push(decode_shared(r)?);
     }
     let ncodes = r.u32()? as usize;
     if ncodes != ntxs {
@@ -191,6 +121,9 @@ pub fn decode_block(r: &mut Reader<'_>) -> Result<Block, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::msp::{MemberId, Signature};
+    use crate::ledger::state::Version;
+    use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet};
     use crate::util::check::check;
     use crate::util::prng::Prng;
 
@@ -259,11 +192,17 @@ mod tests {
     #[test]
     fn batch_roundtrip_preserves_order() {
         let mut rng = Prng::new(5);
-        let envs: Vec<Envelope> = (0..7).map(|_| random_envelope(&mut rng)).collect();
+        let envs: Vec<SharedEnvelope> =
+            (0..7).map(|_| random_envelope(&mut rng).into()).collect();
         let buf = encode_batch("shard3", &envs);
         let (ch, back) = decode_batch(&buf).unwrap();
         assert_eq!(ch, "shard3");
         assert_eq!(back, envs);
+        // Decoded envelopes carry the exact same canonical bytes.
+        for (a, b) in back.iter().zip(&envs) {
+            assert_eq!(a.as_bytes(), b.as_bytes());
+            assert_eq!(a.envelope(), b.envelope());
+        }
     }
 
     fn random_block(rng: &mut Prng, number: u64) -> Block {
@@ -307,9 +246,10 @@ mod tests {
         for cut in [0, 1, buf.len() / 2, buf.len() - 1] {
             assert!(decode_block(&mut Reader::new(&buf[..cut])).is_err(), "cut at {cut}");
         }
-        // A flipped payload byte still decodes, but the stored data hash
-        // no longer matches the envelopes — the tamper check moves to
-        // `verify_data_hash`, exactly as for an in-memory block.
+        // A flipped payload byte either fails to decode or decodes to a
+        // block whose stored data hash no longer matches the envelopes —
+        // the tamper check moves to `verify_data_hash`, exactly as for an
+        // in-memory block.
         let mut flipped = buf.clone();
         // Header is 80 bytes (number + 2 length-prefixed digests); byte 85
         // sits inside the first envelope's payload.
@@ -327,7 +267,7 @@ mod tests {
     #[test]
     fn corrupt_batch_errors() {
         let mut rng = Prng::new(6);
-        let buf = encode_batch("c", &[random_envelope(&mut rng)]);
+        let buf = encode_batch("c", &[random_envelope(&mut rng).into()]);
         assert!(decode_batch(&buf[..buf.len() - 2]).is_err());
         let mut extra = buf.clone();
         extra.push(0);

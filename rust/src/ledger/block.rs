@@ -2,7 +2,7 @@
 //! and per-transaction validation metadata set by the commit-time validator.
 
 use crate::crypto::{merkle, sha256_parts, Digest};
-use crate::ledger::tx::Envelope;
+use crate::ledger::envelope::SharedEnvelope;
 
 /// Why a transaction was (in)validated at commit time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,17 +32,24 @@ impl BlockHeader {
 }
 
 /// A block of ordered envelopes plus commit-time validation flags.
+///
+/// Transactions are held as [`SharedEnvelope`] refcounts: cutting a block
+/// never copies envelope payloads, the merkle leaves reuse each envelope's
+/// cached digest, and serializing the block splices the canonical buffers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Block {
     pub header: BlockHeader,
-    pub txs: Vec<Envelope>,
+    pub txs: Vec<SharedEnvelope>,
     /// Parallel to `txs`; empty until the validator commits the block.
     pub validation: Vec<ValidationCode>,
 }
 
 impl Block {
-    /// Assemble a block from ordered envelopes.
-    pub fn new(number: u64, prev_hash: Digest, txs: Vec<Envelope>) -> Block {
+    /// Assemble a block from ordered envelopes (anything convertible into
+    /// a [`SharedEnvelope`]; plain [`crate::ledger::tx::Envelope`]s are
+    /// encoded once on the way in).
+    pub fn new<E: Into<SharedEnvelope>>(number: u64, prev_hash: Digest, txs: Vec<E>) -> Block {
+        let txs: Vec<SharedEnvelope> = txs.into_iter().map(Into::into).collect();
         let leaves: Vec<Digest> = txs.iter().map(|e| e.digest()).collect();
         Block {
             header: BlockHeader { number, prev_hash, data_hash: merkle::root(&leaves) },
@@ -70,7 +77,7 @@ impl Block {
 mod tests {
     use super::*;
     use crate::crypto::msp::MemberId;
-    use crate::ledger::tx::{Proposal, RwSet};
+    use crate::ledger::tx::{Envelope, Proposal, RwSet};
 
     fn envelope(nonce: u64) -> Envelope {
         Envelope {
@@ -92,7 +99,7 @@ mod tests {
         let b = Block::new(1, Digest::ZERO, vec![envelope(1), envelope(2)]);
         assert!(b.verify_data_hash());
         let mut tampered = b.clone();
-        tampered.txs[0].proposal.nonce = 99;
+        tampered.txs[0] = envelope(99).into();
         assert!(!tampered.verify_data_hash());
     }
 
@@ -106,7 +113,7 @@ mod tests {
 
     #[test]
     fn empty_block_is_fine() {
-        let b = Block::new(0, Digest::ZERO, vec![]);
+        let b = Block::new(0, Digest::ZERO, Vec::<Envelope>::new());
         assert!(b.verify_data_hash());
         assert_eq!(b.valid_tx_count(), 0);
     }

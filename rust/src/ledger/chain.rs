@@ -175,13 +175,13 @@ mod tests {
     #[test]
     fn rejects_bad_number_and_prev() {
         let mut chain = Chain::new();
-        chain.append(Block::new(0, Digest::ZERO, vec![])).unwrap();
+        chain.append(Block::new(0, Digest::ZERO, Vec::<Envelope>::new())).unwrap();
         assert_eq!(
-            chain.append(Block::new(2, chain.tip_hash(), vec![])),
+            chain.append(Block::new(2, chain.tip_hash(), Vec::<Envelope>::new())),
             Err(ChainError::NumberMismatch { expected: 1, got: 2 })
         );
         assert_eq!(
-            chain.append(Block::new(1, Digest::ZERO, vec![])),
+            chain.append(Block::new(1, Digest::ZERO, Vec::<Envelope>::new())),
             Err(ChainError::PrevHashMismatch { number: 1 })
         );
     }
@@ -190,7 +190,7 @@ mod tests {
     fn rejects_tampered_data_hash() {
         let mut chain = Chain::new();
         let mut b = Block::new(0, Digest::ZERO, vec![env(1)]);
-        b.txs[0].proposal.nonce = 9;
+        b.txs[0] = env(9).into();
         assert_eq!(chain.append(b), Err(ChainError::DataHash { number: 0 }));
     }
 
@@ -200,7 +200,7 @@ mod tests {
         for n in 0..4u64 {
             chain.append(Block::new(n, chain.tip_hash(), vec![env(n)])).unwrap();
         }
-        chain.blocks[2].txs[0].proposal.nonce = 777;
+        chain.blocks[2].txs[0] = env(777).into();
         assert_eq!(chain.verify(), Err(ChainError::DataHash { number: 2 }));
     }
 
@@ -219,7 +219,7 @@ mod tests {
         assert!(resumed.get(0).is_none(), "pruned blocks are log-only");
         // Appends must chain off the anchored tip, not ZERO.
         assert_eq!(
-            resumed.append(Block::new(3, Digest::ZERO, vec![])),
+            resumed.append(Block::new(3, Digest::ZERO, Vec::<Envelope>::new())),
             Err(ChainError::PrevHashMismatch { number: 3 })
         );
         resumed.append(Block::new(3, tip, vec![env(3)])).unwrap();

@@ -43,6 +43,15 @@ impl Writer {
         self.bytes(v.as_bytes())
     }
 
+    /// Append pre-encoded bytes verbatim (no length prefix). This is what
+    /// makes shared-buffer serialization a memcpy: a payload already in
+    /// canonical form (e.g. a [`crate::ledger::envelope::SharedEnvelope`]
+    /// buffer) is spliced in without re-encoding.
+    pub fn raw(&mut self, v: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(v);
+        self
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -96,6 +105,20 @@ impl<'a> Reader<'a> {
 
     pub fn done(&self) -> bool {
         self.pos == self.buf.len()
+    }
+
+    /// Current cursor offset into the underlying buffer. Lets callers
+    /// record section boundaries (e.g. to hash or splice a sub-slice of
+    /// the encoding without copying it out).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// The whole underlying buffer (cursor-independent). Paired with
+    /// [`Reader::pos`] to carve out the exact byte span of a decoded
+    /// value.
+    pub fn underlying(&self) -> &'a [u8] {
+        self.buf
     }
 }
 

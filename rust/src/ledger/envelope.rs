@@ -1,0 +1,598 @@
+//! Shared immutable envelope representation: the canonical wire encoding
+//! behind an `Arc`, with lazily-computed, cached views.
+//!
+//! The hot path used to deep-clone [`Envelope`] structs through gateway →
+//! mempool → relay → batch pull → validator, re-encoding at every
+//! serialization point and re-hashing tx_id / rw-set digests at every hop.
+//! [`SharedEnvelope`] replaces that with one canonical buffer:
+//!
+//! - **Clone = refcount bump.** Every pipeline stage holds an `Arc` to the
+//!   same bytes; the only copy left is the final splice into a consensus
+//!   payload or the ledger store (`Writer::raw`).
+//! - **Hashes computed once, zero-copy.** `tx_id`, the rw-set digest and
+//!   the envelope digest are derived directly from buffer slices (the wire
+//!   layout is byte-identical to the digest preimages) and cached.
+//! - **Decoding is lazy and fail-closed.** A buffer that arrived off the
+//!   wire is not trusted until first access: every view returns
+//!   `Err` on a corrupt buffer instead of panicking or yielding garbage.
+//!   Buffers built from an in-memory [`Envelope`] pre-seed the decoded
+//!   form, so trusted-path accessors never re-parse.
+//!
+//! The envelope wire codec itself ([`encode_envelope`] /
+//! [`decode_envelope`]) lives here too; `fabric::wire` re-exports it and
+//! splices pre-encoded buffers into batch and block payloads.
+
+use std::ops::Range;
+use std::sync::{Arc, OnceLock};
+
+use sha2::{Digest as _, Sha256};
+
+use crate::crypto::msp::{MemberId, Signature};
+use crate::crypto::Digest;
+use crate::ledger::codec::{Reader, Writer};
+use crate::ledger::state::Version;
+use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet, TxId};
+
+/// Serialize one envelope in canonical wire form.
+pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
+    let p = &env.proposal;
+    w.str(&p.channel).str(&p.chaincode).str(&p.function);
+    w.u32(p.args.len() as u32);
+    for a in &p.args {
+        w.str(a);
+    }
+    w.str(&p.creator.0).u64(p.nonce);
+
+    w.u32(env.rw_set.reads.len() as u32);
+    for (k, ver) in &env.rw_set.reads {
+        w.str(k);
+        match ver {
+            Some(v) => {
+                w.u8(1).u64(v.block).u32(v.tx);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+    w.u32(env.rw_set.writes.len() as u32);
+    for (k, val) in &env.rw_set.writes {
+        w.str(k);
+        match val {
+            Some(v) => {
+                w.u8(1).bytes(v);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+    w.u32(env.endorsements.len() as u32);
+    for e in &env.endorsements {
+        w.str(&e.endorser.0);
+        w.bytes(&e.signature.0);
+    }
+}
+
+/// Deserialize one envelope. Rejects non-canonical encodings (unknown
+/// read/write tags, wrong signature length) so that decode acceptance
+/// matches the zero-copy view parser exactly.
+pub fn decode_envelope(r: &mut Reader<'_>) -> Result<Envelope, String> {
+    let channel = r.str()?;
+    let chaincode = r.str()?;
+    let function = r.str()?;
+    let nargs = r.u32()? as usize;
+    let mut args = Vec::with_capacity(nargs.min(64));
+    for _ in 0..nargs {
+        args.push(r.str()?);
+    }
+    let creator = MemberId::new(r.str()?);
+    let nonce = r.u64()?;
+
+    let nreads = r.u32()? as usize;
+    let mut reads = Vec::with_capacity(nreads.min(64));
+    for _ in 0..nreads {
+        let k = r.str()?;
+        let ver = match r.u8()? {
+            1 => Some(Version { block: r.u64()?, tx: r.u32()? }),
+            0 => None,
+            t => return Err(format!("bad read-version tag {t}")),
+        };
+        reads.push((k, ver));
+    }
+    let nwrites = r.u32()? as usize;
+    let mut writes = Vec::with_capacity(nwrites.min(64));
+    for _ in 0..nwrites {
+        let k = r.str()?;
+        let val = match r.u8()? {
+            1 => Some(r.bytes()?.to_vec()),
+            0 => None,
+            t => return Err(format!("bad write-value tag {t}")),
+        };
+        writes.push((k, val));
+    }
+    let nend = r.u32()? as usize;
+    let mut endorsements = Vec::with_capacity(nend.min(64));
+    for _ in 0..nend {
+        let endorser = MemberId::new(r.str()?);
+        let sig_bytes = r.bytes()?;
+        let sig: [u8; 32] =
+            sig_bytes.try_into().map_err(|_| "bad signature length".to_string())?;
+        endorsements.push(Endorsement { endorser, signature: Signature(sig) });
+    }
+    Ok(Envelope {
+        proposal: Proposal { channel, chaincode, function, args, creator, nonce },
+        rw_set: RwSet { reads, writes },
+        endorsements,
+    })
+}
+
+/// The hash views over one canonical buffer, computed in a single pass
+/// without decoding (no allocation beyond the endorsement range list).
+#[derive(Clone, Debug)]
+struct Views {
+    tx_id: TxId,
+    rw_digest: Digest,
+    digest: Digest,
+    /// Byte range of the creator id inside the buffer.
+    creator: Range<usize>,
+}
+
+/// Read a length-prefixed string field as a borrowed slice, validating
+/// UTF-8 (matching `Reader::str` acceptance) without allocating.
+fn str_slice<'a>(r: &mut Reader<'a>) -> Result<&'a [u8], String> {
+    let b = r.bytes()?;
+    std::str::from_utf8(b).map_err(|e| e.to_string())?;
+    Ok(b)
+}
+
+/// Hash one `sha256_parts`-style part: u64-le length prefix, then bytes.
+fn hash_part(h: &mut Sha256, part: &[u8]) {
+    h.update((part.len() as u64).to_le_bytes());
+    h.update(part);
+}
+
+/// Walk a canonical envelope buffer once, computing every cached view
+/// directly from the wire bytes.
+///
+/// This leans on a deliberate layout identity: the wire encoding of the
+/// read/write sections (minus their u32 counts) is byte-for-byte the
+/// preimage `RwSet::digest` hashes, and the proposal fields appear in
+/// exactly the order `Proposal::tx_id` feeds to `sha256_parts`. Accepts
+/// precisely the buffers [`decode_envelope`] accepts (plus requiring the
+/// buffer to end where the envelope does), so a corrupt buffer fails
+/// closed at the first view access.
+fn parse_views(bytes: &[u8]) -> Result<Views, String> {
+    let mut r = Reader::new(bytes);
+
+    // Proposal → tx_id (streamed sha256_parts over borrowed slices).
+    let mut tx = Sha256::new();
+    hash_part(&mut tx, str_slice(&mut r)?); // channel
+    hash_part(&mut tx, str_slice(&mut r)?); // chaincode
+    hash_part(&mut tx, str_slice(&mut r)?); // function
+    let nargs = r.u32()? as usize;
+    for _ in 0..nargs {
+        hash_part(&mut tx, str_slice(&mut r)?);
+    }
+    let creator_bytes = str_slice(&mut r)?;
+    let creator = r.pos() - creator_bytes.len()..r.pos();
+    let nonce = r.u64()?;
+    hash_part(&mut tx, creator_bytes);
+    hash_part(&mut tx, &nonce.to_le_bytes());
+    let tx_id = Digest(tx.finalize().into());
+
+    // Read/write sections → rw-set digest over raw wire slices.
+    let nreads = r.u32()? as usize;
+    let reads_start = r.pos();
+    for _ in 0..nreads {
+        str_slice(&mut r)?;
+        match r.u8()? {
+            1 => {
+                r.u64()?;
+                r.u32()?;
+            }
+            0 => {}
+            t => return Err(format!("bad read-version tag {t}")),
+        }
+    }
+    let reads_end = r.pos();
+    let nwrites = r.u32()? as usize;
+    let writes_start = r.pos();
+    for _ in 0..nwrites {
+        str_slice(&mut r)?;
+        match r.u8()? {
+            1 => {
+                r.bytes()?;
+            }
+            0 => {}
+            t => return Err(format!("bad write-value tag {t}")),
+        }
+    }
+    let writes_end = r.pos();
+    let rw_len = (reads_end - reads_start) + 1 + (writes_end - writes_start);
+    let mut rw = Sha256::new();
+    rw.update((rw_len as u64).to_le_bytes());
+    rw.update(&bytes[reads_start..reads_end]);
+    rw.update([0xFFu8]);
+    rw.update(&bytes[writes_start..writes_end]);
+    let rw_digest = Digest(rw.finalize().into());
+
+    // Endorsements → envelope digest.
+    let nend = r.u32()? as usize;
+    let mut ends: Vec<(Range<usize>, Range<usize>)> = Vec::with_capacity(nend.min(64));
+    for _ in 0..nend {
+        let endorser = str_slice(&mut r)?;
+        let e_range = r.pos() - endorser.len()..r.pos();
+        let sig = r.bytes()?;
+        if sig.len() != 32 {
+            return Err("bad signature length".to_string());
+        }
+        let s_range = r.pos() - 32..r.pos();
+        ends.push((e_range, s_range));
+    }
+    if !r.done() {
+        return Err("trailing bytes after envelope".to_string());
+    }
+    let total = 64 + ends.iter().map(|(e, s)| e.len() + s.len()).sum::<usize>();
+    let mut h = Sha256::new();
+    h.update((total as u64).to_le_bytes());
+    h.update(tx_id.0);
+    h.update(rw_digest.0);
+    for (e, s) in &ends {
+        h.update(&bytes[e.clone()]);
+        h.update(&bytes[s.clone()]);
+    }
+    let digest = Digest(h.finalize().into());
+
+    Ok(Views { tx_id, rw_digest, digest, creator })
+}
+
+struct Inner {
+    bytes: Vec<u8>,
+    views: OnceLock<Result<Views, String>>,
+    decoded: OnceLock<Result<Envelope, String>>,
+}
+
+/// An envelope as the pipeline actually holds it: one canonical encoded
+/// buffer behind an `Arc`, plus cached views. Cloning bumps a refcount;
+/// serialization splices the buffer; hashes are computed once.
+#[derive(Clone)]
+pub struct SharedEnvelope {
+    inner: Arc<Inner>,
+}
+
+impl SharedEnvelope {
+    /// Wrap raw wire bytes without validating them. Every view is lazy and
+    /// fails closed on first access if the buffer is corrupt.
+    pub fn from_wire(bytes: Vec<u8>) -> SharedEnvelope {
+        SharedEnvelope {
+            inner: Arc::new(Inner {
+                bytes,
+                views: OnceLock::new(),
+                decoded: OnceLock::new(),
+            }),
+        }
+    }
+
+    /// Wrap raw wire bytes and validate them eagerly (full decode + view
+    /// pass), so downstream trusted accessors cannot fail.
+    pub fn from_wire_checked(bytes: Vec<u8>) -> Result<SharedEnvelope, String> {
+        let se = SharedEnvelope::from_wire(bytes);
+        se.validate()?;
+        Ok(se)
+    }
+
+    /// Wrap a canonical byte span whose decode already succeeded (batch /
+    /// block payload decoding), pre-seeding the decoded form.
+    pub(crate) fn from_wire_decoded(bytes: Vec<u8>, env: Envelope) -> SharedEnvelope {
+        let inner = Inner { bytes, views: OnceLock::new(), decoded: OnceLock::new() };
+        let _ = inner.decoded.set(Ok(env));
+        SharedEnvelope { inner: Arc::new(inner) }
+    }
+
+    /// The canonical wire encoding.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.inner.bytes
+    }
+
+    /// Wire size — what batch byte budgets and forwarding stats count.
+    /// A field read, not a re-encode.
+    pub fn encoded_len(&self) -> usize {
+        self.inner.bytes.len()
+    }
+
+    /// Splice the canonical encoding into a writer (buffer copy, no
+    /// re-encode).
+    pub fn write_to(&self, w: &mut Writer) {
+        w.raw(&self.inner.bytes);
+    }
+
+    fn views(&self) -> Result<&Views, String> {
+        self.inner
+            .views
+            .get_or_init(|| parse_views(&self.inner.bytes))
+            .as_ref()
+            .map_err(|e| e.clone())
+    }
+
+    /// Force both the view pass and the full decode; `Ok` means every
+    /// trusted accessor below is infallible from here on.
+    pub fn validate(&self) -> Result<(), String> {
+        self.views()?;
+        self.try_envelope()?;
+        Ok(())
+    }
+
+    /// Transaction id (cached; computed zero-copy from the buffer).
+    pub fn try_tx_id(&self) -> Result<TxId, String> {
+        Ok(self.views()?.tx_id)
+    }
+
+    /// Read/write-set digest (cached; the endorsement-payload component).
+    pub fn try_rw_digest(&self) -> Result<Digest, String> {
+        Ok(self.views()?.rw_digest)
+    }
+
+    /// Full envelope digest (cached; merkle leaf / verdict-cache key).
+    pub fn try_digest(&self) -> Result<Digest, String> {
+        Ok(self.views()?.digest)
+    }
+
+    /// Creator id as a borrowed view into the buffer.
+    pub fn try_creator(&self) -> Result<&str, String> {
+        let range = self.views()?.creator.clone();
+        std::str::from_utf8(&self.inner.bytes[range]).map_err(|e| e.to_string())
+    }
+
+    /// Decoded envelope; parses (once) on first access.
+    pub fn try_envelope(&self) -> Result<&Envelope, String> {
+        self.inner
+            .decoded
+            .get_or_init(|| {
+                let mut r = Reader::new(&self.inner.bytes);
+                let env = decode_envelope(&mut r)?;
+                if !r.done() {
+                    return Err("trailing bytes after envelope".to_string());
+                }
+                Ok(env)
+            })
+            .as_ref()
+            .map_err(|e| e.clone())
+    }
+
+    // Trusted accessors: valid on every envelope built from an in-memory
+    // `Envelope` or admitted through `from_wire_checked` — i.e. everything
+    // past a pipeline boundary. Panic on an unvalidated corrupt buffer.
+
+    pub fn tx_id(&self) -> TxId {
+        self.try_tx_id().expect("corrupt envelope buffer past validation boundary")
+    }
+
+    pub fn rw_digest(&self) -> Digest {
+        self.try_rw_digest().expect("corrupt envelope buffer past validation boundary")
+    }
+
+    pub fn digest(&self) -> Digest {
+        self.try_digest().expect("corrupt envelope buffer past validation boundary")
+    }
+
+    pub fn envelope(&self) -> &Envelope {
+        self.try_envelope().expect("corrupt envelope buffer past validation boundary")
+    }
+
+    pub fn proposal(&self) -> &Proposal {
+        &self.envelope().proposal
+    }
+
+    pub fn rw_set(&self) -> &RwSet {
+        &self.envelope().rw_set
+    }
+
+    pub fn endorsements(&self) -> &[Endorsement] {
+        &self.envelope().endorsements
+    }
+
+    /// Recover an owned [`Envelope`]. Moves the decoded form out when this
+    /// is the last refcount; otherwise clones it (the only place a deep
+    /// clone can still happen, at the very end of the pipeline).
+    pub fn into_envelope(self) -> Envelope {
+        match Arc::try_unwrap(self.inner) {
+            Ok(inner) => match inner.decoded.into_inner() {
+                Some(Ok(env)) => env,
+                _ => {
+                    let mut r = Reader::new(&inner.bytes);
+                    decode_envelope(&mut r).expect("corrupt envelope buffer past validation boundary")
+                }
+            },
+            Err(shared) => SharedEnvelope { inner: shared }.envelope().clone(),
+        }
+    }
+}
+
+impl From<Envelope> for SharedEnvelope {
+    /// Encode once; the decoded form is pre-seeded so no accessor ever
+    /// re-parses.
+    fn from(env: Envelope) -> Self {
+        let mut w = Writer::new();
+        encode_envelope(&env, &mut w);
+        let inner =
+            Inner { bytes: w.finish(), views: OnceLock::new(), decoded: OnceLock::new() };
+        let _ = inner.decoded.set(Ok(env));
+        SharedEnvelope { inner: Arc::new(inner) }
+    }
+}
+
+impl From<&Envelope> for SharedEnvelope {
+    fn from(env: &Envelope) -> Self {
+        SharedEnvelope::from(env.clone())
+    }
+}
+
+impl PartialEq for SharedEnvelope {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner) || self.inner.bytes == other.inner.bytes
+    }
+}
+
+impl Eq for SharedEnvelope {}
+
+impl std::fmt::Debug for SharedEnvelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.try_tx_id() {
+            Ok(id) => write!(f, "SharedEnvelope(tx {})", id.short()),
+            Err(_) => write!(f, "SharedEnvelope({} corrupt bytes)", self.encoded_len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::prng::Prng;
+
+    fn random_envelope(rng: &mut Prng) -> Envelope {
+        let nargs = rng.below(4);
+        Envelope {
+            proposal: Proposal {
+                channel: format!("shard{}", rng.below(8)),
+                chaincode: "models".into(),
+                function: "CreateModelUpdate".into(),
+                args: (0..nargs).map(|i| format!("arg{i}-{}", rng.next_u64())).collect(),
+                creator: MemberId::new(format!("org{}.client", rng.below(8))),
+                nonce: rng.next_u64(),
+            },
+            rw_set: RwSet {
+                reads: (0..rng.below(4))
+                    .map(|i| {
+                        let ver = if rng.below(2) == 0 {
+                            None
+                        } else {
+                            Some(Version {
+                                block: rng.next_u64() % 100,
+                                tx: rng.below(10) as u32,
+                            })
+                        };
+                        (format!("rk{i}"), ver)
+                    })
+                    .collect(),
+                writes: (0..rng.below(4))
+                    .map(|i| {
+                        let val = if rng.below(4) == 0 {
+                            None
+                        } else {
+                            Some(rng.next_u64().to_le_bytes().to_vec())
+                        };
+                        (format!("wk{i}"), val)
+                    })
+                    .collect(),
+            },
+            endorsements: (0..rng.below(4))
+                .map(|i| {
+                    let mut sig = [0u8; 32];
+                    for c in sig.chunks_mut(8) {
+                        c.copy_from_slice(&rng.next_u64().to_le_bytes()[..c.len()]);
+                    }
+                    Endorsement {
+                        endorser: MemberId::new(format!("org{i}.peer")),
+                        signature: Signature(sig),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Satellite: every lazily-decoded view must equal the eager decode,
+    /// for arbitrary valid envelopes.
+    #[test]
+    fn property_lazy_views_match_eager_decode() {
+        check("lazy-views-match-eager", 60, |rng| {
+            let env = random_envelope(rng);
+            let mut w = Writer::new();
+            encode_envelope(&env, &mut w);
+            // The untrusted path: raw bytes, nothing pre-seeded.
+            let se = SharedEnvelope::from_wire(w.finish());
+            assert_eq!(se.try_tx_id().unwrap(), env.tx_id());
+            assert_eq!(se.try_rw_digest().unwrap(), env.rw_set.digest());
+            assert_eq!(se.try_digest().unwrap(), env.digest());
+            assert_eq!(se.try_creator().unwrap(), env.proposal.creator.0);
+            assert_eq!(se.try_envelope().unwrap(), &env);
+            assert_eq!(se.encoded_len(), se.as_bytes().len());
+            // And the trusted path agrees with itself.
+            let trusted = SharedEnvelope::from(env.clone());
+            assert_eq!(trusted, se);
+            assert_eq!(trusted.tx_id(), env.tx_id());
+            assert_eq!(trusted.digest(), env.digest());
+        });
+    }
+
+    /// Satellite: corrupt buffers fail closed at first access — every
+    /// truncation point errors on every view, and structural corruption
+    /// (bad tags, bad signature length, trailing bytes) errors too.
+    #[test]
+    fn property_corrupt_buffers_fail_closed() {
+        check("corrupt-fails-closed", 20, |rng| {
+            let env = random_envelope(rng);
+            let mut w = Writer::new();
+            encode_envelope(&env, &mut w);
+            let buf = w.finish();
+            for cut in 0..buf.len() {
+                let se = SharedEnvelope::from_wire(buf[..cut].to_vec());
+                assert!(se.try_tx_id().is_err() || se.validate().is_err(), "cut {cut}");
+                assert!(se.try_envelope().is_err(), "decode at cut {cut}");
+                assert!(SharedEnvelope::from_wire_checked(buf[..cut].to_vec()).is_err());
+            }
+            // Trailing garbage is rejected even though the prefix parses.
+            let mut extra = buf.clone();
+            extra.push(0);
+            let se = SharedEnvelope::from_wire(extra);
+            assert!(se.try_digest().is_err());
+            assert!(se.try_envelope().is_err());
+        });
+    }
+
+    #[test]
+    fn view_and_decode_acceptance_agree_under_mutation() {
+        // Flip each byte in turn: the zero-copy view parser and the full
+        // decoder must agree on whether the buffer is acceptable, and when
+        // both accept, the views must match the decode's recomputed hashes.
+        let mut rng = Prng::new(11);
+        let env = random_envelope(&mut rng);
+        let mut w = Writer::new();
+        encode_envelope(&env, &mut w);
+        let buf = w.finish();
+        for i in 0..buf.len() {
+            let mut mutated = buf.clone();
+            mutated[i] ^= 0x01;
+            let se = SharedEnvelope::from_wire(mutated);
+            match (se.try_envelope().is_ok(), se.try_digest().is_ok()) {
+                (true, true) => {
+                    let back = se.try_envelope().unwrap();
+                    assert_eq!(se.try_tx_id().unwrap(), back.tx_id(), "byte {i}");
+                    assert_eq!(se.try_digest().unwrap(), back.digest(), "byte {i}");
+                    assert_eq!(se.try_rw_digest().unwrap(), back.rw_set.digest(), "byte {i}");
+                }
+                (dec, view) => assert_eq!(dec, view, "acceptance diverged at byte {i}"),
+            }
+        }
+    }
+
+    #[test]
+    fn clone_shares_the_buffer() {
+        let mut rng = Prng::new(3);
+        let se = SharedEnvelope::from(random_envelope(&mut rng));
+        let c = se.clone();
+        assert!(std::ptr::eq(se.as_bytes().as_ptr(), c.as_bytes().as_ptr()));
+        assert_eq!(se, c);
+    }
+
+    #[test]
+    fn into_envelope_moves_or_clones() {
+        let mut rng = Prng::new(4);
+        let env = random_envelope(&mut rng);
+        let se = SharedEnvelope::from(env.clone());
+        let other = se.clone();
+        assert_eq!(se.into_envelope(), env); // shared: clones
+        assert_eq!(other.into_envelope(), env); // last ref: moves
+    }
+}

@@ -39,6 +39,7 @@
 pub mod block;
 pub mod chain;
 pub mod codec;
+pub mod envelope;
 pub mod snapshot;
 pub mod state;
 pub mod store;
@@ -46,6 +47,7 @@ pub mod tx;
 
 pub use block::{Block, BlockHeader, ValidationCode};
 pub use chain::{Chain, ChainError};
+pub use envelope::SharedEnvelope;
 pub use snapshot::Snapshot;
 pub use state::{StateView, Version, WorldState};
 pub use store::{DurabilityMode, LedgerConfig, LedgerStore, Recovery, StoreSnapshot};

@@ -1,11 +1,41 @@
 //! The per-shard transaction pool and the per-channel registry the
 //! ordering service drains.
 //!
-//! Ingress path: gateway/client → [`ShardMempool::submit`] (admission
-//! control, bounded priority lanes, explicit backpressure) → the orderer
-//! driver pulls size-and-byte-bounded batches with [`ShardMempool::take_batch`].
+//! Ingress path: gateway/client → [`ShardMempool::submit`] /
+//! [`ShardMempool::submit_batch`] (admission control, bounded priority
+//! lanes, explicit backpressure) → the orderer driver pulls
+//! size-and-byte-bounded batches with [`ShardMempool::take_batch`].
 //! The pool owns all batching state, so batch cutting, consensus, and
 //! validation pipeline against each other.
+//!
+//! **Shared-buffer envelopes**: every queued entry holds a
+//! [`SharedEnvelope`] — the envelope's canonical wire bytes behind an
+//! `Arc`, with tx id / rw digest / decoded form computed once and cached.
+//! Admission reads the cached views (no re-hash), the byte bound for
+//! block cutting is the buffer length (no re-encode), and handing a batch
+//! to the orderer moves refcounts, not bytes. The single copy of envelope
+//! bytes after admission happens when a block is framed for the wire or
+//! the durable store (`fabric::wire` splices the buffers).
+//!
+//! **Striped admission**: there is no big pool mutex. Each priority lane
+//! has its own queue lock, the replay-dedup window is striped into
+//! [`SEEN_SHARDS`] independently locked shards keyed by tx id, and the
+//! rate-limit buckets sit behind their own lock. A submission claims its
+//! dedup slot, reserves lane capacity, pays the rate token, runs the
+//! (lock-free) crypto precheck, and only then takes the lane lock again
+//! to enqueue — so concurrent submitters on different transactions touch
+//! disjoint locks, and signature verification never serializes behind the
+//! queue. Every check that fails after the claim rolls the claim back, so
+//! rejected transactions are never remembered (exactly as before).
+//!
+//! **Batched admission crypto**: [`ShardMempool::submit_batch`] admits a
+//! whole pull in three phases — per-envelope load checks, then *one*
+//! batched signature/policy pass over all survivors (through the shared
+//! [`BlockValidator`] verdict cache when wired with
+//! [`ShardMempool::set_validator`], amortizing MSP/policy lookups across
+//! the batch and pre-seeding commit-time prevalidation), then the lane
+//! pushes. Verdicts are identical to the serial path: both funnel into
+//! the same per-envelope predicate.
 //!
 //! **MVCC hinting**: when a channel's pool is wired to a replica's
 //! [`StateView`] (the ordering service does this for every channel its
@@ -13,20 +43,19 @@
 //! rejected at admission ([`Reject::StaleReadSet`]), and transactions that
 //! went stale *while queued* are dropped at batch pull — both before the
 //! orderer spends consensus bandwidth on a guaranteed `MvccConflict`.
-//! Versions only move forward, so neither shed changes any commit outcome;
-//! the pull-time re-check is gated on the state's write sequence, so an
-//! idle channel costs one integer compare per pulled transaction.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::crypto::msp::CertificateAuthority;
 use crate::fabric::endorsement::EndorsementPolicy;
-use crate::fabric::wire;
+use crate::fabric::validator::BlockValidator;
 use crate::ledger::codec::Writer;
+use crate::ledger::envelope::SharedEnvelope;
 use crate::ledger::state::StateView;
-use crate::ledger::tx::{Envelope, Proposal, TxId};
+use crate::ledger::tx::{endorsement_payload, Envelope, Proposal, TxId};
 use crate::telemetry::{self, Sample, Stage};
 use crate::util::clock::{Clock, SystemClock};
 
@@ -78,6 +107,11 @@ impl Lane {
     }
 }
 
+/// Dedup stripes. Sixteen shards keep the claim lock uncontended at any
+/// realistic submitter count while the per-shard window (`dedup_window /
+/// 16`) still spans thousands of transactions.
+const SEEN_SHARDS: usize = 16;
+
 /// Pool sizing and admission-control knobs.
 #[derive(Clone, Debug)]
 pub struct MempoolConfig {
@@ -110,8 +144,9 @@ impl Default for MempoolConfig {
 }
 
 struct Entry {
-    env: Envelope,
+    env: SharedEnvelope,
     tx_id: TxId,
+    /// Wire size — the envelope's canonical buffer length (no re-encode).
     bytes: usize,
     enqueued: f64,
     /// State write sequence at which this entry's read-set was last known
@@ -120,19 +155,28 @@ struct Entry {
     checked_seq: u64,
 }
 
-struct Inner {
-    lanes: [VecDeque<Entry>; Lane::COUNT],
-    seen: HashSet<TxId>,
-    seen_order: VecDeque<TxId>,
-    buckets: HashMap<String, TokenBucket>,
-    open: bool,
+/// One priority lane's queue plus in-flight capacity reservations:
+/// admission reserves a slot before the (lock-free) crypto phase and
+/// converts it to a real entry afterwards, so concurrent submitters can
+/// never overshoot `lane_capacity` between check and push.
+#[derive(Default)]
+struct LaneQueue {
+    q: VecDeque<Entry>,
+    reserved: usize,
+}
+
+/// One stripe of the replay-dedup window.
+#[derive(Default)]
+struct SeenShard {
+    set: HashSet<TxId>,
+    order: VecDeque<TxId>,
 }
 
 /// Wire-encoded size of an envelope (what consensus replicates; the byte
 /// bound for block cutting).
 pub fn encoded_len(env: &Envelope) -> usize {
     let mut w = Writer::new();
-    wire::encode_envelope(env, &mut w);
+    crate::ledger::envelope::encode_envelope(env, &mut w);
     w.finish().len()
 }
 
@@ -142,10 +186,20 @@ pub struct ShardMempool {
     cfg: MempoolConfig,
     clock: Arc<dyn Clock>,
     ca: Option<CertificateAuthority>,
-    policy: RwLock<Option<EndorsementPolicy>>,
+    policy: RwLock<Option<Arc<EndorsementPolicy>>>,
+    /// Shared verdict cache for admission crypto: when wired, batched
+    /// admission runs through [`BlockValidator::admission_verify`], so an
+    /// envelope verified at admission is a cache hit at commit.
+    validator: RwLock<Option<Arc<BlockValidator>>>,
     /// Read-version oracle for MVCC hinting (None = hinting off).
     state_view: RwLock<Option<Arc<dyn StateView>>>,
-    inner: Mutex<Inner>,
+    lanes: [Mutex<LaneQueue>; Lane::COUNT],
+    seen: [Mutex<SeenShard>; SEEN_SHARDS],
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+    open: AtomicBool,
+    /// Queued entries across all lanes (kept for the admission-time
+    /// high-water mark without summing three lane locks per submit).
+    depth: AtomicUsize,
     stats: MempoolStats,
 }
 
@@ -166,14 +220,13 @@ impl ShardMempool {
             clock,
             ca,
             policy: RwLock::new(None),
+            validator: RwLock::new(None),
             state_view: RwLock::new(None),
-            inner: Mutex::new(Inner {
-                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
-                seen: HashSet::new(),
-                seen_order: VecDeque::new(),
-                buckets: HashMap::new(),
-                open: true,
-            }),
+            lanes: std::array::from_fn(|_| Mutex::new(LaneQueue::default())),
+            seen: std::array::from_fn(|_| Mutex::new(SeenShard::default())),
+            buckets: Mutex::new(HashMap::new()),
+            open: AtomicBool::new(true),
+            depth: AtomicUsize::new(0),
             stats: MempoolStats::default(),
         }
     }
@@ -181,7 +234,14 @@ impl ShardMempool {
     /// Install/replace the endorsement policy used by the admission
     /// precheck (e.g. after a committee re-election).
     pub fn set_policy(&self, policy: EndorsementPolicy) {
-        *self.policy.write().unwrap() = Some(policy);
+        *self.policy.write().unwrap() = Some(Arc::new(policy));
+    }
+
+    /// Route admission crypto through a block validator's verdict cache:
+    /// signatures verified here are cache hits at commit prevalidation,
+    /// and batched submissions fan out over the validator's worker pool.
+    pub fn set_validator(&self, validator: Arc<BlockValidator>) {
+        *self.validator.write().unwrap() = Some(validator);
     }
 
     /// Wire the channel's read-version oracle (usually one replica's
@@ -211,113 +271,280 @@ impl ShardMempool {
 
     /// Queued envelopes across all lanes.
     pub fn pending(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
-        inner.lanes.iter().map(|l| l.len()).sum()
+        self.lanes.iter().map(|l| l.lock().unwrap().q.len()).sum()
     }
 
     /// Admission control + enqueue. Every `Err` is explicit backpressure
     /// the caller can act on (retry later, slow down, drop).
     ///
-    /// The MVCC staleness hint runs first, *outside* the pool lock (it
-    /// probes the channel state's read lock, and holding `inner` across
-    /// that would serialize admission and batch pulls behind a concurrent
-    /// block apply). The remaining checks are cheapest-first so overload
-    /// floods shed without wasting work: replay dedup, lane capacity,
-    /// rate cap (tokens are only debited once the envelope would
-    /// otherwise fit), then the HMAC signature/policy precheck, and only
-    /// then wire-encoding for the byte accounting.
+    /// Wraps the envelope into its canonical shared buffer once (hashing
+    /// and encoding it), then runs [`ShardMempool::submit_shared`].
+    /// Callers that already hold a [`SharedEnvelope`] (relay deliveries,
+    /// gateways) should submit it directly — no re-encode.
     pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
-        let now = self.clock.now();
-        let tx_id = env.tx_id();
-        let lane = Lane::classify(&env.proposal);
+        self.submit_shared(env.into())
+    }
 
+    /// Admission control + enqueue for an envelope already in shared-buffer
+    /// form. Checks run cheapest-first so overload floods shed without
+    /// wasting work: MVCC staleness (outside all pool locks), replay-dedup
+    /// claim, lane-capacity reservation, rate cap (tokens are only debited
+    /// once the envelope would otherwise fit), the HMAC signature/policy
+    /// precheck, and finally the lane push. Any failure after the dedup
+    /// claim rolls the claim (and reservation) back.
+    pub fn submit_shared(&self, env: SharedEnvelope) -> Result<(), Reject> {
+        let now = self.clock.now();
+        let (lane, checked_seq) = self.admit_load(&env, now)?;
+        if let Err(r) = self.policy_precheck(&env) {
+            self.unreserve(lane);
+            self.forget(&env.tx_id());
+            return Err(r);
+        }
+        self.push_entry(env, lane, checked_seq, now);
+        Ok(())
+    }
+
+    /// Batched admission: one verified-admission pass for a whole pull.
+    ///
+    /// Three phases: (1) per-envelope load admission — staleness, dedup
+    /// claim, capacity reservation, rate cap; (2) one batched
+    /// signature/policy pass over every survivor (a single verdict-cache
+    /// probe and one fan-out over the validator's workers when wired);
+    /// (3) lane pushes. Per-envelope results are positional. Verdicts are
+    /// byte-for-byte identical to submitting the same envelopes serially:
+    /// both paths evaluate the same predicate per envelope.
+    pub fn submit_batch(
+        &self,
+        envs: impl IntoIterator<Item = SharedEnvelope>,
+    ) -> Vec<Result<(), Reject>> {
+        let now = self.clock.now();
+        let mut results: Vec<Result<(), Reject>> = Vec::new();
+        let mut live: Vec<(usize, SharedEnvelope, Lane, u64)> = Vec::new();
+        for (i, env) in envs.into_iter().enumerate() {
+            match self.admit_load(&env, now) {
+                Ok((lane, seq)) => {
+                    results.push(Ok(()));
+                    live.push((i, env, lane, seq));
+                }
+                Err(r) => results.push(Err(r)),
+            }
+        }
+        if live.is_empty() {
+            return results;
+        }
+        let shared: Vec<SharedEnvelope> = live.iter().map(|(_, e, _, _)| e.clone()).collect();
+        let verdicts = self.crypto_verdicts(&shared);
+        for ((i, env, lane, seq), verdict) in live.into_iter().zip(verdicts) {
+            match verdict {
+                Ok(()) => self.push_entry(env, lane, seq, now),
+                Err(r) => {
+                    self.unreserve(lane);
+                    self.forget(&env.tx_id());
+                    results[i] = Err(r);
+                }
+            }
+        }
+        results
+    }
+
+    /// Phase-1 admission: everything except crypto. On success the dedup
+    /// claim and a lane-capacity reservation are held; the caller must
+    /// either push the entry or roll both back.
+    fn admit_load(&self, env: &SharedEnvelope, now: f64) -> Result<(Lane, u64), Reject> {
+        let r = self.admit_load_inner(env, now);
+        if let Err(rej) = r {
+            self.stats.note_reject(rej);
+        }
+        r
+    }
+
+    fn admit_load_inner(&self, env: &SharedEnvelope, now: f64) -> Result<(Lane, u64), Reject> {
         // Racing a commit here is fine: the verdict is only a hint, and
         // the batch pull re-checks under the entry's recorded sequence.
+        // Runs outside every pool lock: it probes the channel state's read
+        // lock, and holding a lane lock across that would serialize
+        // admission behind a concurrent block apply.
         let mut checked_seq = 0u64;
-        if !env.rw_set.reads.is_empty() {
+        if !env.rw_set().reads.is_empty() {
             let view = self.state_view.read().unwrap().clone();
             if let Some(view) = view {
                 checked_seq = view.seq();
-                if view.any_stale(&env.rw_set.reads) {
-                    self.stats.note_reject(Reject::StaleReadSet);
+                if view.any_stale(&env.rw_set().reads) {
                     return Err(Reject::StaleReadSet);
                 }
             }
         }
-
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.open {
+        if !self.open.load(Ordering::Acquire) {
             return Err(Reject::Shutdown);
         }
-        self.evict_expired(&mut inner, now);
-
-        if inner.seen.contains(&tx_id) {
-            self.stats.note_reject(Reject::Duplicate);
-            return Err(Reject::Duplicate);
+        let tx_id = env.tx_id();
+        let lane = Lane::classify(env.proposal());
+        self.claim(&tx_id, lane, now)?;
+        if let Err(r) = self.reserve(lane, now) {
+            self.forget(&tx_id);
+            return Err(r);
         }
-        if inner.lanes[lane.index()].len() >= self.cfg.lane_capacity.max(1) {
-            self.stats.note_reject(Reject::PoolFull);
-            return Err(Reject::PoolFull);
+        if let Err(r) = self.take_rate_token(&env.proposal().creator.0, now) {
+            self.unreserve(lane);
+            self.forget(&tx_id);
+            return Err(r);
         }
-        self.take_rate_token(&mut inner, &env.proposal.creator.0, now)?;
-        // Signature / policy precheck (µs-scale HMAC): runs only for
-        // envelopes that passed every load check, so floods shed cheaply
-        // above.
-        self.policy_precheck(&tx_id, &env)?;
+        Ok((lane, checked_seq))
+    }
 
-        let bytes = encoded_len(&env);
-        self.remember(&mut inner, tx_id);
-        inner.lanes[lane.index()]
-            .push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
-        let depth: usize = inner.lanes.iter().map(|l| l.len()).sum();
+    /// Convert a reservation into a queued entry. The Admit stamp lands
+    /// before the lane lock drops: once it is released a concurrent
+    /// `take_batch` may pop this entry and stamp BatchPull, and Admit must
+    /// already be in place for the trace to stay monotone.
+    fn push_entry(&self, env: SharedEnvelope, lane: Lane, checked_seq: u64, now: f64) {
+        let tx_id = env.tx_id();
+        let bytes = env.encoded_len();
+        let mut q = self.lanes[lane.index()].lock().unwrap();
+        q.reserved -= 1;
+        q.q.push_back(Entry { env, tx_id, bytes, enqueued: now, checked_seq });
+        let depth = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
         self.stats.note_admitted(depth as u64);
-        // Stamped before the lock drops (the stamp itself is lock-free and
-        // cheap): once `inner` is released a concurrent `pull_batch` may
-        // pop this entry and stamp BatchPull, and Admit must already be in
-        // place for the trace to stay monotone. First-write-wins: a relayed
-        // envelope keeps its ingress-side admit time, a direct one is
-        // stamped here.
         telemetry::global().stamp(&tx_id, Stage::Admit);
-        Ok(())
+    }
+
+    fn seen_shard(&self, tx_id: &TxId) -> &Mutex<SeenShard> {
+        &self.seen[tx_id.0[0] as usize % SEEN_SHARDS]
+    }
+
+    /// Claim `tx_id` in the striped dedup window. A claim that collides
+    /// with an entry that TTL-expired in place evicts the lane and retries
+    /// once, so expiry always frees the id for resubmission.
+    fn claim(&self, tx_id: &TxId, lane: Lane, now: f64) -> Result<(), Reject> {
+        if self.try_claim(tx_id) {
+            return Ok(());
+        }
+        self.evict_lane(lane, now);
+        if self.try_claim(tx_id) {
+            return Ok(());
+        }
+        Err(Reject::Duplicate)
+    }
+
+    fn try_claim(&self, tx_id: &TxId) -> bool {
+        let mut shard = self.seen_shard(tx_id).lock().unwrap();
+        if !shard.set.insert(*tx_id) {
+            return false;
+        }
+        shard.order.push_back(*tx_id);
+        let window = (self.cfg.dedup_window.max(1) / SEEN_SHARDS).max(1);
+        while shard.order.len() > window {
+            if let Some(old) = shard.order.pop_front() {
+                shard.set.remove(&old);
+            }
+        }
+        true
+    }
+
+    /// Drop a dedup claim (rejection rollback, TTL expiry, stale drop, relay
+    /// death) so a resubmission of the id passes dedup.
+    fn forget(&self, tx_id: &TxId) {
+        self.seen_shard(tx_id).lock().unwrap().set.remove(tx_id);
+    }
+
+    /// Reserve one slot in `lane`, evicting TTL-expired entries at its
+    /// front first (same lock acquisition) so capacity is measured against
+    /// live entries only.
+    fn reserve(&self, lane: Lane, now: f64) -> Result<(), Reject> {
+        let mut expired = Vec::new();
+        let ok = {
+            let mut q = self.lanes[lane.index()].lock().unwrap();
+            self.drain_expired(&mut q.q, now, &mut expired);
+            if q.q.len() + q.reserved >= self.cfg.lane_capacity.max(1) {
+                false
+            } else {
+                q.reserved += 1;
+                true
+            }
+        };
+        self.finish_expired(expired);
+        if ok {
+            Ok(())
+        } else {
+            Err(Reject::PoolFull)
+        }
+    }
+
+    fn unreserve(&self, lane: Lane) {
+        self.lanes[lane.index()].lock().unwrap().reserved -= 1;
     }
 
     /// The endorsement signature / policy precheck exactly as admission
     /// runs it (a no-op without a CA handle or with verification off).
-    /// Takes the envelope's tx id precomputed: every caller already hashed
-    /// the envelope for dedup/routing, so the digest is never paid twice.
-    /// Public because the relay validates a forwarded envelope against its
-    /// *home* pool's policy before paying the hop — the local ingress pool
-    /// may serve a different committee. Rejections are counted on the pool
-    /// whose policy refused them.
-    pub fn policy_precheck(&self, tx_id: &TxId, env: &Envelope) -> Result<(), Reject> {
+    /// Reads the envelope's cached tx id and rw digest — nothing is
+    /// re-hashed. Public because the relay validates a forwarded envelope
+    /// against its *home* pool's policy before paying the hop — the local
+    /// ingress pool may serve a different committee. Rejections are
+    /// counted on the pool whose policy refused them.
+    pub fn policy_precheck(&self, env: &SharedEnvelope) -> Result<(), Reject> {
         if !self.cfg.verify_endorsements {
             return Ok(());
         }
+        self.crypto_verdicts(std::slice::from_ref(env)).remove(0)
+    }
+
+    /// One signature/policy pass over a slice of envelopes. With a policy
+    /// installed and a validator wired, verdicts come from the shared
+    /// (digest, policy-fingerprint) cache — missing entries are verified
+    /// over the validator's worker set and inserted, so commit-time
+    /// prevalidation of the same envelopes is pure cache hits.
+    fn crypto_verdicts(&self, envs: &[SharedEnvelope]) -> Vec<Result<(), Reject>> {
+        if !self.cfg.verify_endorsements || envs.is_empty() {
+            return vec![Ok(()); envs.len()];
+        }
         let Some(ca) = &self.ca else {
-            return Ok(());
+            return vec![Ok(()); envs.len()];
         };
         let policy = self.policy.read().unwrap().clone();
         match policy {
             Some(p) => {
-                if !p.satisfied(tx_id, &env.rw_set, &env.endorsements, ca) {
-                    self.stats.note_reject(Reject::PolicyUnsatisfiable);
-                    return Err(Reject::PolicyUnsatisfiable);
-                }
+                let validator = self.validator.read().unwrap().clone();
+                let oks: Vec<bool> = match validator {
+                    Some(v) => v.admission_verify(&p, ca, envs),
+                    None => envs
+                        .iter()
+                        .map(|e| {
+                            let payload = endorsement_payload(&e.tx_id(), &e.rw_digest());
+                            p.satisfied_prehashed(&payload, e.endorsements(), ca)
+                        })
+                        .collect(),
+                };
+                oks.into_iter()
+                    .map(|ok| {
+                        if ok {
+                            Ok(())
+                        } else {
+                            self.stats.note_reject(Reject::PolicyUnsatisfiable);
+                            Err(Reject::PolicyUnsatisfiable)
+                        }
+                    })
+                    .collect()
             }
             None => {
-                let payload =
-                    crate::ledger::tx::endorsement_payload(tx_id, &env.rw_set.digest());
-                let any_valid = env
-                    .endorsements
-                    .iter()
-                    .any(|e| ca.verify(&e.endorser, &payload, &e.signature));
-                if !any_valid {
-                    self.stats.note_reject(Reject::BadSignature);
-                    return Err(Reject::BadSignature);
-                }
+                // No policy installed: any valid signature from an enrolled
+                // member admits. One registry lock covers the whole slice.
+                let verifier = ca.batch_verifier();
+                envs.iter()
+                    .map(|e| {
+                        let payload = endorsement_payload(&e.tx_id(), &e.rw_digest());
+                        let any = e
+                            .endorsements()
+                            .iter()
+                            .any(|en| verifier.verify(&en.endorser, &payload, &en.signature));
+                        if any {
+                            Ok(())
+                        } else {
+                            self.stats.note_reject(Reject::BadSignature);
+                            Err(Reject::BadSignature)
+                        }
+                    })
+                    .collect()
             }
         }
-        Ok(())
     }
 
     /// Admission for an envelope this pool will hand to the relay instead
@@ -327,22 +554,23 @@ impl ShardMempool {
     /// ingress limits — but no lane slot is consumed, and MVCC staleness
     /// is left to the home pool (only its state view is authoritative).
     /// Counted as `forwarded`.
-    pub fn admit_forward(&self, env: &Envelope) -> Result<(), Reject> {
+    pub fn admit_forward(&self, env: &SharedEnvelope) -> Result<(), Reject> {
         let now = self.clock.now();
-        let tx_id = env.tx_id();
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.open {
+        if !self.open.load(Ordering::Acquire) {
             return Err(Reject::Shutdown);
         }
-        self.evict_expired(&mut inner, now);
-        if inner.seen.contains(&tx_id) {
-            self.stats.note_reject(Reject::Duplicate);
-            return Err(Reject::Duplicate);
+        let tx_id = env.tx_id();
+        let lane = Lane::classify(env.proposal());
+        if let Err(r) = self.claim(&tx_id, lane, now) {
+            self.stats.note_reject(r);
+            return Err(r);
         }
-        self.take_rate_token(&mut inner, &env.proposal.creator.0, now)?;
-        self.remember(&mut inner, tx_id);
+        if let Err(r) = self.take_rate_token(&env.proposal().creator.0, now) {
+            self.forget(&tx_id);
+            self.stats.note_reject(r);
+            return Err(r);
+        }
         self.stats.note_forwarded();
-        drop(inner);
         // Admission happened here, before any relay hop — stamp it so the
         // lifecycle's admit → relay-hop ordering holds for forwards too.
         telemetry::global().stamp(&tx_id, Stage::Admit);
@@ -353,31 +581,19 @@ impl ShardMempool {
     /// uncapped). Shared by [`ShardMempool::submit`] and
     /// [`ShardMempool::admit_forward`] so gossip traffic can never bypass
     /// a fix to the ingress limits.
-    fn take_rate_token(&self, inner: &mut Inner, creator: &str, now: f64) -> Result<(), Reject> {
+    fn take_rate_token(&self, creator: &str, now: f64) -> Result<(), Reject> {
         let Some(rate) = self.cfg.rate_limit else {
             return Ok(());
         };
         let burst = self.cfg.rate_burst.max(1.0);
-        let bucket = inner
-            .buckets
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets
             .entry(creator.to_string())
             .or_insert_with(|| TokenBucket::new(burst, now));
         if !bucket.try_take(now, rate, burst) {
-            self.stats.note_reject(Reject::RateLimited);
             return Err(Reject::RateLimited);
         }
         Ok(())
-    }
-
-    /// Record an accepted tx id in the bounded replay-dedup window.
-    fn remember(&self, inner: &mut Inner, tx_id: TxId) {
-        inner.seen.insert(tx_id);
-        inner.seen_order.push_back(tx_id);
-        while inner.seen_order.len() > self.cfg.dedup_window.max(1) {
-            if let Some(old) = inner.seen_order.pop_front() {
-                inner.seen.remove(&old);
-            }
-        }
     }
 
     /// A forwarded envelope died in the relay (home pool refused it, link
@@ -386,7 +602,7 @@ impl ShardMempool {
     /// and stale drops do.
     pub(crate) fn forward_dropped(&self, tx_id: &TxId) {
         self.stats.note_relay_dropped();
-        self.inner.lock().unwrap().seen.remove(tx_id);
+        self.forget(tx_id);
     }
 
     /// Is a block due? Same cut rule the orderer used to own: pending count
@@ -394,27 +610,33 @@ impl ShardMempool {
     /// `batch_timeout`.
     pub fn ready(&self, batch_size: usize, batch_timeout: Duration) -> bool {
         let now = self.clock.now();
-        let mut inner = self.inner.lock().unwrap();
-        self.evict_expired(&mut inner, now);
-        let pending: usize = inner.lanes.iter().map(|l| l.len()).sum();
+        let mut expired = Vec::new();
+        let mut pending = 0usize;
+        let mut oldest = f64::INFINITY;
+        for lane in &self.lanes {
+            let mut q = lane.lock().unwrap();
+            self.drain_expired(&mut q.q, now, &mut expired);
+            pending += q.q.len();
+            if let Some(e) = q.q.front() {
+                oldest = oldest.min(e.enqueued);
+            }
+        }
+        self.finish_expired(expired);
         if pending == 0 {
             return false;
         }
         if pending >= batch_size.max(1) {
             return true;
         }
-        let oldest = inner
-            .lanes
-            .iter()
-            .filter_map(|l| l.front().map(|e| e.enqueued))
-            .fold(f64::INFINITY, f64::min);
         now - oldest >= batch_timeout.as_secs_f64()
     }
 
     /// Pull the next block's worth of envelopes: priority lanes drained in
     /// order, bounded by `max_txs` and `max_bytes` (`max_bytes == 0` means
     /// unbounded). A lone envelope larger than `max_bytes` still ships
-    /// (blocks never starve on the byte bound alone).
+    /// (blocks never starve on the byte bound alone). The returned
+    /// envelopes are refcount moves of the queued shared buffers — the
+    /// orderer serializes them by splicing, never re-encoding.
     ///
     /// With a state view wired, entries whose read-set went stale while
     /// queued are dropped here (counted as `stale_dropped`) instead of
@@ -428,27 +650,28 @@ impl ShardMempool {
     /// immediately, so re-endorsing and resubmitting works at once;
     /// contended read-modify-write workloads should pair hinting with
     /// modest client timeouts.
-    pub fn take_batch(&self, max_txs: usize, max_bytes: usize) -> Vec<Envelope> {
+    pub fn take_batch(&self, max_txs: usize, max_bytes: usize) -> Vec<SharedEnvelope> {
         let now = self.clock.now();
         let view = self.state_view.read().unwrap().clone();
         let cur_seq = view.as_ref().map(|v| v.seq()).unwrap_or(0);
-        let mut inner = self.inner.lock().unwrap();
-        self.evict_expired(&mut inner, now);
         let mut out = Vec::new();
         let mut bytes = 0usize;
         let mut stale: Vec<TxId> = Vec::new();
-        'lanes: for lane in inner.lanes.iter_mut() {
+        let mut expired: Vec<TxId> = Vec::new();
+        'lanes: for lane in &self.lanes {
+            let mut q = lane.lock().unwrap();
+            self.drain_expired(&mut q.q, now, &mut expired);
             while out.len() < max_txs.max(1) {
-                let front = match lane.front() {
+                let front = match q.q.front() {
                     Some(e) => e,
                     None => break,
                 };
                 if let Some(view) = &view {
                     if front.checked_seq != cur_seq
-                        && !front.env.rw_set.reads.is_empty()
-                        && view.any_stale(&front.env.rw_set.reads)
+                        && !front.env.rw_set().reads.is_empty()
+                        && view.any_stale(&front.env.rw_set().reads)
                     {
-                        let e = lane.pop_front().expect("front checked");
+                        let e = q.q.pop_front().expect("front checked");
                         self.stats.note_stale_dropped();
                         stale.push(e.tx_id);
                         continue;
@@ -457,7 +680,7 @@ impl ShardMempool {
                 if !out.is_empty() && max_bytes > 0 && bytes + front.bytes > max_bytes {
                     break 'lanes;
                 }
-                let e = lane.pop_front().expect("front checked");
+                let e = q.q.pop_front().expect("front checked");
                 bytes += e.bytes;
                 telemetry::global().stamp(&e.tx_id, Stage::BatchPull);
                 out.push(e.env);
@@ -466,13 +689,17 @@ impl ShardMempool {
                 break;
             }
         }
+        if out.len() + stale.len() > 0 {
+            self.depth.fetch_sub(out.len() + stale.len(), Ordering::Relaxed);
+        }
         // A stale-dropped envelope was never ordered: forget it in the
         // dedup set so the client's re-endorsed retry (same tx id, fresh
         // read-set) is admitted instead of bounced as a replay.
         for tx_id in stale {
-            inner.seen.remove(&tx_id);
+            self.forget(&tx_id);
             telemetry::global().abort(&tx_id, "stale_drop");
         }
+        self.finish_expired(expired);
         if !out.is_empty() {
             self.stats.note_ordered(out.len() as u64, bytes as u64);
         }
@@ -481,53 +708,71 @@ impl ShardMempool {
 
     /// Put a taken batch back (consensus proposal failed, e.g. leadership
     /// moved); order is preserved at the lane fronts.
-    pub fn restore(&self, envs: Vec<Envelope>) {
+    pub fn restore(&self, envs: Vec<SharedEnvelope>) {
         if envs.is_empty() {
             return;
         }
         let now = self.clock.now();
         let mut total_bytes = 0u64;
         let n = envs.len() as u64;
-        let mut inner = self.inner.lock().unwrap();
         for env in envs.into_iter().rev() {
-            let lane = Lane::classify(&env.proposal);
+            let lane = Lane::classify(env.proposal());
             let tx_id = env.tx_id();
-            let bytes = encoded_len(&env);
+            let bytes = env.encoded_len();
             total_bytes += bytes as u64;
             // checked_seq 0 forces a fresh staleness check on the next
             // pull: versions may have moved while the batch was out.
-            inner.lanes[lane.index()]
+            self.lanes[lane.index()]
+                .lock()
+                .unwrap()
+                .q
                 .push_front(Entry { env, tx_id, bytes, enqueued: now, checked_seq: 0 });
+            self.depth.fetch_add(1, Ordering::Relaxed);
         }
         self.stats.note_restored(n, total_bytes);
     }
 
     /// Refuse all further submissions (orderer shutdown).
     pub fn close(&self) {
-        self.inner.lock().unwrap().open = false;
+        self.open.store(false, Ordering::Release);
     }
 
-    fn evict_expired(&self, inner: &mut Inner, now: f64) {
+    /// Pop TTL-expired entries off a lane front into `out` (caller holds
+    /// the lane lock; dedup forgetting happens in [`Self::finish_expired`]
+    /// after it drops — the seen-shard locks are never nested inside a
+    /// lane lock).
+    fn drain_expired(&self, q: &mut VecDeque<Entry>, now: f64, out: &mut Vec<TxId>) {
         let ttl = self.cfg.ttl.as_secs_f64();
         if ttl <= 0.0 {
             return;
         }
-        let mut dropped: Vec<TxId> = Vec::new();
-        for lane in inner.lanes.iter_mut() {
-            while lane.front().is_some_and(|e| now - e.enqueued > ttl) {
-                if let Some(e) = lane.pop_front() {
-                    dropped.push(e.tx_id);
-                }
-                self.stats.note_expired();
+        while q.front().is_some_and(|e| now - e.enqueued > ttl) {
+            if let Some(e) = q.pop_front() {
+                out.push(e.tx_id);
             }
+            self.stats.note_expired();
         }
-        // An expired envelope was never ordered: forget it in the dedup set
-        // so the client's retry is admitted instead of rejected as a replay.
-        // (Its id may linger in `seen_order`; the redundant remove when the
-        // window rolls past it is harmless.)
-        for tx_id in dropped {
-            inner.seen.remove(&tx_id);
-            telemetry::global().abort(&tx_id, "ttl_expired");
+    }
+
+    fn evict_lane(&self, lane: Lane, now: f64) {
+        let mut expired = Vec::new();
+        {
+            let mut q = self.lanes[lane.index()].lock().unwrap();
+            self.drain_expired(&mut q.q, now, &mut expired);
+        }
+        self.finish_expired(expired);
+    }
+
+    /// An expired envelope was never ordered: forget it in the dedup set
+    /// so the client's retry is admitted instead of rejected as a replay.
+    fn finish_expired(&self, expired: Vec<TxId>) {
+        if expired.is_empty() {
+            return;
+        }
+        self.depth.fetch_sub(expired.len(), Ordering::Relaxed);
+        for tx_id in &expired {
+            self.forget(tx_id);
+            telemetry::global().abort(tx_id, "ttl_expired");
         }
     }
 }
@@ -592,6 +837,12 @@ impl MempoolRegistry {
     /// Install the admission policy for a channel's pool.
     pub fn set_policy(&self, channel: &str, policy: EndorsementPolicy) {
         self.pool(channel).set_policy(policy);
+    }
+
+    /// Route a channel's admission crypto through a shared block-validator
+    /// verdict cache (creating the pool if needed).
+    pub fn set_validator(&self, channel: &str, validator: Arc<BlockValidator>) {
+        self.pool(channel).set_validator(validator);
     }
 
     /// Wire a channel's read-version oracle for MVCC staleness hinting
@@ -777,9 +1028,9 @@ mod tests {
         pool.submit(envelope("ch", "catalyst", "SubmitShardModel", "c", 3)).unwrap();
         let batch = pool.take_batch(10, 0);
         assert_eq!(batch.len(), 3);
-        assert_eq!(batch[0].proposal.chaincode, "catalyst");
-        assert_eq!(batch[1].proposal.function, "CreateModelUpdate");
-        assert_eq!(batch[2].proposal.function, "Get");
+        assert_eq!(batch[0].proposal().chaincode, "catalyst");
+        assert_eq!(batch[1].proposal().function, "CreateModelUpdate");
+        assert_eq!(batch[2].proposal().function, "Get");
         assert_eq!(pool.pending(), 0);
     }
 
@@ -846,7 +1097,7 @@ mod tests {
         // nonce 1 is now 6 s old (> 5 s TTL); nonce 2 is 3 s old.
         let batch = pool.take_batch(10, 0);
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].proposal.nonce, 2);
+        assert_eq!(batch[0].proposal().nonce, 2);
         assert_eq!(pool.stats().expired, 1);
     }
 
@@ -933,7 +1184,7 @@ mod tests {
         let batch = pool.take_batch(3, 0);
         pool.restore(batch);
         let again = pool.take_batch(10, 0);
-        let nonces: Vec<u64> = again.iter().map(|e| e.proposal.nonce).collect();
+        let nonces: Vec<u64> = again.iter().map(|e| e.proposal().nonce).collect();
         assert_eq!(nonces, vec![0, 1, 2, 3]);
         let snap = pool.stats();
         assert_eq!(snap.txs_ordered, 4);
@@ -1153,5 +1404,153 @@ mod tests {
         drop(registry);
         assert!(treg.render_prometheus().is_empty(), "collector pruned with its registry");
         assert_eq!(treg.collector_count(), 0);
+    }
+
+    /// Contention proof for the striped pool: many threads hammer the same
+    /// pool with an overlapping envelope set. No admission may be lost
+    /// (every distinct tx admitted exactly once across all threads) and
+    /// none duplicated (the drained queue holds each id exactly once).
+    #[test]
+    fn striped_pool_no_lost_or_duplicated_admissions_under_contention() {
+        const THREADS: usize = 8;
+        const TXS: usize = 200;
+        let pool = Arc::new(ShardMempool::new("ch", MempoolConfig::default()));
+        let envs: Vec<SharedEnvelope> =
+            (0..TXS).map(|n| SharedEnvelope::from(query_env(n as u64))).collect();
+        let admitted: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let pool = Arc::clone(&pool);
+                    let envs = envs.clone();
+                    s.spawn(move || {
+                        // Each thread walks the set from a different offset
+                        // (and half the threads use the batch path), so
+                        // every tx is contended by several threads at once.
+                        if t % 2 == 0 {
+                            (0..TXS)
+                                .filter(|i| {
+                                    let e = envs[(i + t * 17) % TXS].clone();
+                                    pool.submit_shared(e).is_ok()
+                                })
+                                .count()
+                        } else {
+                            let rotated: Vec<SharedEnvelope> = (0..TXS)
+                                .map(|i| envs[(i + t * 17) % TXS].clone())
+                                .collect();
+                            pool.submit_batch(rotated)
+                                .into_iter()
+                                .filter(|r| r.is_ok())
+                                .count()
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("submitter panicked")).collect()
+        });
+        let total_admitted: usize = admitted.iter().sum();
+        assert_eq!(total_admitted, TXS, "each tx admitted exactly once across threads");
+        let drained = pool.take_batch(TXS * 2, 0);
+        assert_eq!(drained.len(), TXS);
+        let mut ids: Vec<[u8; 32]> = drained.iter().map(|e| e.tx_id().0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), TXS, "no duplicated entries in the queue");
+        let snap = pool.stats();
+        assert_eq!(snap.admitted, TXS as u64);
+        assert_eq!(snap.duplicate, (THREADS * TXS - TXS) as u64);
+    }
+
+    /// Serial and batched admission must produce byte-for-byte identical
+    /// verdicts for the same envelope sequence — including crypto failures.
+    #[test]
+    fn batched_admission_verdicts_match_serial() {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(7);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let outsider = ca.enroll(MemberId::new("mallory"), &mut rng);
+        let make_pool = || {
+            let cfg = MempoolConfig {
+                verify_endorsements: true,
+                lane_capacity: 4,
+                ..Default::default()
+            };
+            let pool =
+                ShardMempool::with_parts("ch", cfg, SystemClock::shared(), Some(ca.clone()));
+            pool.set_policy(EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]));
+            pool
+        };
+        let endorse = |mut env: Envelope, cred: &crate::crypto::msp::Credential| {
+            let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+            env.endorsements
+                .push(Endorsement { endorser: cred.member.clone(), signature: cred.sign(&payload) });
+            env
+        };
+        // Mix of outcomes: valid, unsigned, outsider-signed, duplicate,
+        // valid beyond lane capacity.
+        let mut envs: Vec<SharedEnvelope> = Vec::new();
+        for n in 0..4 {
+            envs.push(endorse(query_env(n), &cred).into());
+        }
+        envs.push(query_env(10).into()); // unsigned
+        envs.push(endorse(query_env(11), &outsider).into()); // wrong signer
+        envs.push(envs[0].clone()); // duplicate
+        envs.push(endorse(query_env(12), &cred).into()); // lane full
+
+        let serial_pool = make_pool();
+        let serial: Vec<Result<(), Reject>> =
+            envs.iter().map(|e| serial_pool.submit_shared(e.clone())).collect();
+        let batch_pool = make_pool();
+        let batched = batch_pool.submit_batch(envs.clone());
+        assert_eq!(serial, batched);
+        assert_eq!(serial_pool.stats(), batch_pool.stats());
+        // And the queues drained in the same order with identical bytes.
+        let a = serial_pool.take_batch(16, 0);
+        let b = batch_pool.take_batch(16, 0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.as_bytes(), y.as_bytes());
+        }
+    }
+
+    /// Admission crypto through a wired validator pre-seeds the shared
+    /// verdict cache *and* rejects exactly as the direct path does.
+    #[test]
+    fn validator_wired_admission_matches_direct() {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(13);
+        let cred = ca.enroll(MemberId::new("org0.peer"), &mut rng);
+        let cfg = MempoolConfig { verify_endorsements: true, ..Default::default() };
+        let pool = ShardMempool::with_parts(
+            "ch",
+            cfg,
+            SystemClock::shared(),
+            Some(ca.clone()),
+        );
+        pool.set_policy(EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]));
+        let validator = Arc::new(BlockValidator::serial());
+        pool.set_validator(Arc::clone(&validator));
+        let endorse = |mut env: Envelope| {
+            let payload = endorsement_payload(&env.tx_id(), &env.rw_set.digest());
+            env.endorsements
+                .push(Endorsement { endorser: cred.member.clone(), signature: cred.sign(&payload) });
+            env
+        };
+        let good: Vec<SharedEnvelope> =
+            (0..5).map(|n| SharedEnvelope::from(endorse(query_env(n)))).collect();
+        let mut batch = good.clone();
+        batch.push(query_env(50).into()); // unsigned → rejected
+        let results = pool.submit_batch(batch);
+        assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 5);
+        assert_eq!(results[5], Err(Reject::PolicyUnsatisfiable));
+        // The validator's verdict cache was primed by admission.
+        let snap = validator.snapshot();
+        assert_eq!(snap.admit_txs, 6);
+        assert_eq!(snap.admit_cache_hits, 0);
+        let policy = EndorsementPolicy::AnyOf(1, vec![cred.member.clone()]);
+        let verdicts = validator.prevalidate(&policy, &ca, &good);
+        assert!(verdicts.iter().all(|v| *v));
+        let snap = validator.snapshot();
+        assert_eq!(snap.cache_hits, 5, "commit prevalidation hit the admission verdicts");
+        assert_eq!(snap.cache_misses, 0);
     }
 }

@@ -35,6 +35,12 @@
 //!   notification fires is unknowable — its handle resolves `Rejected`
 //!   and, if that late copy goes on to commit, the client's resubmission
 //!   bounces as `Duplicate`, preserving exactly-once on chain.
+//!
+//! A forwarded envelope is a [`SharedEnvelope`]: each hop moves one
+//! refcount on the envelope's canonical buffer — ingress encodes (at
+//! most) once, and delivery hands the same buffer to the home pool. The
+//! relay's `forwarded_bytes` counter measures the wire bytes those hops
+//! represent without any per-hop re-encode.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -42,7 +48,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
 
-use crate::ledger::tx::{Envelope, TxId};
+use crate::ledger::envelope::SharedEnvelope;
+use crate::ledger::tx::TxId;
 use crate::network::simnet::LinkLatency;
 use crate::telemetry::{self, Sample};
 use crate::util::clock::Clock;
@@ -101,7 +108,7 @@ struct Hop {
     sent: f64,
     src: String,
     tx_id: TxId,
-    env: Envelope,
+    env: SharedEnvelope,
 }
 
 #[derive(Default)]
@@ -116,6 +123,9 @@ struct Inner {
 pub struct RelaySnapshot {
     /// Envelopes accepted for forwarding (one per scheduled hop).
     pub forwarded: u64,
+    /// Wire bytes those hops moved (the envelopes' canonical buffer
+    /// lengths — one refcount bump each, never a re-encode).
+    pub forwarded_bytes: u64,
     /// Hops that landed in their home pool's queue.
     pub delivered: u64,
     /// Hops refused as `Duplicate` at home: another copy already made it,
@@ -146,6 +156,7 @@ pub struct Relay {
     inner: Mutex<Inner>,
     sinks: Mutex<Vec<Weak<dyn RelayDropSink>>>,
     forwarded: AtomicU64,
+    forwarded_bytes: AtomicU64,
     delivered: AtomicU64,
     deduped: AtomicU64,
     dropped: AtomicU64,
@@ -165,6 +176,7 @@ impl Relay {
             inner: Mutex::new(Inner::default()),
             sinks: Mutex::new(Vec::new()),
             forwarded: AtomicU64::new(0),
+            forwarded_bytes: AtomicU64::new(0),
             delivered: AtomicU64::new(0),
             deduped: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
@@ -191,22 +203,28 @@ impl Relay {
     /// forwarding admission and is scheduled one latency-priced hop
     /// toward its home channel. `Err` is explicit backpressure — the
     /// envelope was neither queued nor forwarded.
-    pub fn ingress(&self, local: &str, env: Envelope) -> Result<(), Reject> {
-        let home = env.proposal.channel.clone();
+    pub fn ingress(
+        &self,
+        local: &str,
+        env: impl Into<SharedEnvelope>,
+    ) -> Result<(), Reject> {
+        let env: SharedEnvelope = env.into();
+        let home = env.proposal().channel.clone();
         if home == local {
-            return self.registry.pool(local).submit(env);
+            return self.registry.pool(local).submit_shared(env);
         }
         // Validate against the HOME policy before paying the hop: the
         // local pool may serve a different committee, and forwarding a
         // policy-dead envelope only wastes the link.
         let tx_id = env.tx_id();
-        self.registry.pool(&home).policy_precheck(&tx_id, &env)?;
+        self.registry.pool(&home).policy_precheck(&env)?;
         let local_pool = self.registry.pool(local);
         let now = self.clock.now();
+        let bytes = env.encoded_len() as u64;
         // Admission and hop insertion are atomic under `inner`: a
         // concurrently pumped drop of another copy of this tx must either
         // see this hop in flight (and stay silent) or run before this copy
-        // was accepted at all. Lock order is relay.inner -> pool.inner;
+        // was accepted at all. Lock order is relay.inner -> pool locks;
         // the delivery path never holds a pool lock while taking `inner`.
         let mut inner = self.inner.lock().unwrap();
         local_pool.admit_forward(&env)?;
@@ -216,6 +234,7 @@ impl Relay {
         inner.hops.insert(seq, Hop { sent: now, src: local.to_string(), tx_id, env });
         inner.heap.push(Reverse((Due(now + latency), seq)));
         self.forwarded.fetch_add(1, Ordering::Relaxed);
+        self.forwarded_bytes.fetch_add(bytes, Ordering::Relaxed);
         Ok(())
     }
 
@@ -247,9 +266,9 @@ impl Relay {
     /// Hand one arrived hop to its home pool; true when it was queued.
     fn deliver(&self, hop: Hop, now: f64) -> bool {
         let tx_id = hop.tx_id;
-        let home = hop.env.proposal.channel.clone();
+        let home = hop.env.proposal().channel.clone();
         let latency_us = ((now - hop.sent).max(0.0) * 1e6) as u64;
-        match self.registry.pool(&home).submit(hop.env) {
+        match self.registry.pool(&home).submit_shared(hop.env) {
             Ok(()) => {
                 self.delivered.fetch_add(1, Ordering::Relaxed);
                 self.hop_latency_us.fetch_add(latency_us, Ordering::Relaxed);
@@ -322,6 +341,7 @@ impl Relay {
     pub fn snapshot(&self) -> RelaySnapshot {
         RelaySnapshot {
             forwarded: self.forwarded.load(Ordering::Relaxed),
+            forwarded_bytes: self.forwarded_bytes.load(Ordering::Relaxed),
             delivered: self.delivered.load(Ordering::Relaxed),
             deduped: self.deduped.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
@@ -338,6 +358,11 @@ impl Relay {
             let snap = relay.snapshot();
             Some(vec![
                 Sample::counter("scalesfl_relay_forwarded_total", Vec::new(), snap.forwarded as f64),
+                Sample::counter(
+                    "scalesfl_relay_forwarded_bytes_total",
+                    Vec::new(),
+                    snap.forwarded_bytes as f64,
+                ),
                 Sample::counter("scalesfl_relay_delivered_total", Vec::new(), snap.delivered as f64),
                 Sample::counter("scalesfl_relay_deduped_total", Vec::new(), snap.deduped as f64),
                 Sample::counter("scalesfl_relay_dropped_total", Vec::new(), snap.dropped as f64),
@@ -358,7 +383,7 @@ mod tests {
     use crate::crypto::msp::MemberId;
     use crate::fabric::endorsement::EndorsementPolicy;
     use crate::ledger::block::ValidationCode;
-    use crate::ledger::tx::{Proposal, RwSet};
+    use crate::ledger::tx::{Envelope, Proposal, RwSet};
     use crate::mempool::MempoolConfig;
     use crate::util::clock::VirtualClock;
 
@@ -427,12 +452,15 @@ mod tests {
     #[test]
     fn foreign_traffic_pays_a_link_latency_hop() {
         let (registry, relay, clock) = fixture(MempoolConfig::default());
-        relay.ingress("shard1", envelope("shard0", "k", 1)).unwrap();
+        let env = envelope("shard0", "k", 1);
+        let wire_len = SharedEnvelope::from(&env).encoded_len() as u64;
+        relay.ingress("shard1", env).unwrap();
         // Forwarded, not queued locally — and not home yet.
         assert_eq!(registry.pool("shard1").pending(), 0);
         assert_eq!(registry.pool("shard0").pending(), 0);
         assert_eq!(relay.in_flight(), 1);
         assert_eq!(registry.pool("shard1").stats().forwarded, 1);
+        assert_eq!(relay.snapshot().forwarded_bytes, wire_len, "hop bytes counted at ingress");
         // The link floor is 8 ms: pumping before that delivers nothing.
         clock.advance(Duration::from_millis(7));
         assert_eq!(relay.pump(), 0);
