@@ -9,7 +9,7 @@
 #   make bench          - full perf baselines (writes BENCH_mempool.json,
 #                         BENCH_gateway.json, BENCH_validation.json,
 #                         BENCH_relay.json, BENCH_telemetry.json,
-#                         BENCH_durability.json)
+#                         BENCH_durability.json, BENCH_consensus.json)
 #   make bench-smoke    - fast deterministic bench runs (seconds, fixed
 #                         seeds) into target/smoke/
 #   make bench-baseline - refresh the committed CI baselines in
@@ -39,6 +39,7 @@ bench:
 	cargo bench --bench relay
 	cargo bench --bench telemetry
 	cargo bench --bench durability
+	cargo bench --bench consensus
 
 bench-smoke:
 	rm -rf target/smoke
@@ -48,6 +49,7 @@ bench-smoke:
 	cargo bench --bench relay -- --smoke
 	cargo bench --bench telemetry -- --smoke
 	cargo bench --bench durability -- --smoke
+	cargo bench --bench consensus -- --smoke
 
 bench-baseline: bench-smoke
 	mkdir -p bench-baselines

@@ -1,0 +1,440 @@
+//! Consensus bench: replica clusters driven over the simulated network in
+//! virtual time. Emits `BENCH_consensus.json` (or
+//! `target/smoke/BENCH_consensus.json` in `--smoke` mode — the fast
+//! deterministic configuration the CI bench gate runs and compares against
+//! `bench-baselines/`).
+//!
+//! Because every scenario advances a virtual clock through the
+//! `consensus::transport` latency oracle, the reported numbers are
+//! *simulated* seconds — a function of link latency, election timers, and
+//! protocol round-trips, not of host speed. That makes the headlines
+//! machine-independent and tight enough to gate at 20%:
+//!
+//! * steady-state commit latency vs shard count (independent Raft shards on
+//!   WAN links — the paper's claim that sharding scales throughput while
+//!   per-shard latency stays flat),
+//! * leader-crash-mid-surge recovery time (election + re-proposal until the
+//!   first post-crash commit),
+//! * a PBFT fault sweep at f of 3f+1: crashed backups, a crashed primary
+//!   (view-change recovery), an equivocating primary (containment), and the
+//!   f+1 over-budget stall that must *not* commit.
+//!
+//! Every scenario also proves the zero-loss transport invariant: sent =
+//! delivered + fault_dropped + in_flight, i.e. the driver never drops a
+//! replica message on the floor.
+//!
+//!     cargo bench --bench consensus [-- --smoke]    (or `make bench`)
+
+use std::collections::HashSet;
+
+use scalesfl::consensus::pbft::{self, Pbft, PbftConfig};
+use scalesfl::consensus::raft::{Raft, RaftConfig};
+use scalesfl::consensus::{Cluster, ClusterStats, ConsensusNode, Fault, FaultPlan, TransportConfig};
+use scalesfl::util::json::Json;
+use scalesfl::util::prng::Prng;
+
+const SEED: u64 = 0xC0D5EED;
+/// Virtual driver tick, mirroring the orderer's real 2ms cadence but in
+/// simulated time.
+const TICK_S: f64 = 0.005;
+
+fn raft_cluster(n: usize, seed: u64, net: &TransportConfig, plan: &FaultPlan) -> Cluster<Raft> {
+    let mut rng = Prng::new(seed);
+    let nodes: Vec<Raft> = (0..n)
+        .map(|i| Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64)))
+        .collect();
+    Cluster::new(nodes, net, plan)
+}
+
+fn pbft_cluster(n: usize, net: &TransportConfig, plan: &FaultPlan) -> Cluster<Pbft> {
+    let nodes: Vec<Pbft> = (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
+    let mut cluster = Cluster::new(nodes, net, plan);
+    if plan.has_equivocation() {
+        cluster.set_mutator(Box::new(pbft::equivocate));
+    }
+    cluster
+}
+
+struct Outcome {
+    /// Unique scheduled payloads that committed.
+    committed: usize,
+    /// Committed payloads that were never scheduled (an equivocator's
+    /// forged variants — contained garbage, counted but not delivered).
+    alien: usize,
+    commit_p95_ms: f64,
+    /// Time from `mark` until the cluster has a usable leader again after
+    /// losing it — the election / view-change window itself, which is far
+    /// more stable to gate on than commit gaps (entries already in flight
+    /// at a crash can still commit moments later). 0 when leadership was
+    /// never lost after the mark (steady rows, the over-budget stall).
+    recovery_s: f64,
+    /// Virtual time of the last scheduled commit.
+    last_commit_s: f64,
+    stats: ClusterStats,
+}
+
+/// Drive one cluster through a submission schedule in virtual time,
+/// mimicking the orderer driver: queue while leaderless (broadcasting the
+/// request so PBFT backups' timers run), propose when a leader exists, and
+/// re-propose everything uncommitted after an epoch change. Duplicate
+/// commits from re-proposals are deduped exactly like the committer's
+/// DuplicateTxId verdicts collapse replays.
+fn drive<C: ConsensusNode>(
+    cluster: &mut Cluster<C>,
+    channel: &str,
+    schedule: &[(f64, Vec<u8>)],
+    until: f64,
+    mark: f64,
+) -> Outcome {
+    let scheduled: HashSet<Vec<u8>> = schedule.iter().map(|(_, p)| p.clone()).collect();
+    let mut committed: HashSet<Vec<u8>> = HashSet::new();
+    let mut alien = 0usize;
+    let mut recovery_s = 0.0f64;
+    let mut leader_was_absent = false;
+    let mut last_commit_s = 0.0f64;
+    let mut next = 0usize;
+    let mut unproposed: Vec<Vec<u8>> = Vec::new();
+    let mut proposed: Vec<Vec<u8>> = Vec::new();
+    let mut reproposed_epoch = 0u64;
+
+    let mut now = 0.0f64;
+    while now <= until {
+        now += TICK_S;
+        cluster.tick(now);
+        while next < schedule.len() && schedule[next].0 <= now {
+            unproposed.push(schedule[next].1.clone());
+            next += 1;
+        }
+        if now >= mark && recovery_s == 0.0 {
+            if cluster.leader().is_none() {
+                leader_was_absent = true;
+            } else if leader_was_absent {
+                recovery_s = now - mark;
+            }
+        }
+        let epoch = cluster.epoch();
+        if epoch > reproposed_epoch {
+            // Leadership moved: everything accepted-but-uncommitted goes
+            // back through propose on the new leader.
+            unproposed.append(&mut proposed);
+            reproposed_epoch = epoch;
+        }
+        if cluster.leader().is_some() {
+            while let Some(payload) = unproposed.first().cloned() {
+                if cluster.propose(channel, payload.clone(), now).is_err() {
+                    break;
+                }
+                unproposed.remove(0);
+                proposed.push(payload);
+            }
+        } else {
+            // Client broadcast: lets PBFT backups see the pending request
+            // (their timers force the view change); Raft replicas ignore it.
+            for payload in &unproposed {
+                cluster.broadcast_request(channel, payload.clone(), now);
+            }
+        }
+        for data in cluster.take_committed(now) {
+            if !scheduled.contains(&data) {
+                alien += 1;
+                continue;
+            }
+            if committed.insert(data.clone()) {
+                last_commit_s = now;
+                unproposed.retain(|p| *p != data);
+                proposed.retain(|p| *p != data);
+            }
+        }
+        if committed.len() == scheduled.len() && next == schedule.len() {
+            break;
+        }
+    }
+
+    let stats = cluster.stats();
+    assert_eq!(stats.driver_lost(), 0, "transport lost messages: {stats:?}");
+    assert_eq!(stats.divergence, 0, "replicas diverged on a committed slot: {stats:?}");
+    Outcome {
+        committed: committed.len(),
+        alien,
+        commit_p95_ms: cluster.commit_latency_p95(channel).unwrap_or(0.0) * 1e3,
+        recovery_s,
+        last_commit_s,
+        stats,
+    }
+}
+
+fn paced(label: &str, n: usize, start: f64, gap: f64) -> Vec<(f64, Vec<u8>)> {
+    (0..n)
+        .map(|i| (start + gap * i as f64, format!("tx-{label}-{i}").into_bytes()))
+        .collect()
+}
+
+/// Steady-state: `shards` independent 5-node Raft shards on WAN links, each
+/// ordering its own paced stream. Latency is per-shard (flat in the shard
+/// count); simulated throughput scales with it.
+fn sharding_row(shards: usize, per_shard: usize) -> (f64, f64, Json) {
+    let mut worst_p95 = 0.0f64;
+    let mut last_commit = 0.0f64;
+    let mut sent = 0u64;
+    let mut lost = 0u64;
+    for s in 0..shards {
+        let seed = SEED ^ (s as u64).wrapping_mul(0x9E37);
+        let net = TransportConfig::wan(seed);
+        let mut cluster = raft_cluster(5, seed, &net, &FaultPlan::default());
+        let schedule = paced(&format!("s{shards}x{s}"), per_shard, 0.5, 0.05);
+        let out = drive(&mut cluster, "shard", &schedule, 30.0, f64::INFINITY);
+        assert_eq!(out.committed, per_shard, "shard {s}/{shards} lost transactions");
+        worst_p95 = worst_p95.max(out.commit_p95_ms);
+        last_commit = last_commit.max(out.last_commit_s);
+        sent += out.stats.transport.sent;
+        lost += out.stats.driver_lost();
+    }
+    let tps = (shards * per_shard) as f64 / last_commit;
+    println!(
+        "shards={shards:<2} txs={:<4} worst p95={worst_p95:>6.1}ms sim_tps={tps:>7.1} sent={sent}",
+        shards * per_shard
+    );
+    let row = Json::obj()
+        .set("shards", shards)
+        .set("nodes_per_shard", 5usize)
+        .set("txs", shards * per_shard)
+        .set("commit_p95_ms", worst_p95)
+        .set("sim_tps", tps)
+        .set("messages_sent", sent)
+        .set("driver_lost", lost);
+    (worst_p95, tps, row)
+}
+
+/// Leader crash in the middle of a paced surge: recovery time is the
+/// window from the crash until the survivors elect a usable leader again;
+/// the tail of the surge (plus everything stranded uncommitted in the dead
+/// leader's log) must still commit through re-proposal.
+fn leader_crash_row(txs: usize) -> (f64, Json) {
+    let crash_at = 1.0;
+    let net = TransportConfig::wan(SEED ^ 0xCAFE);
+    let plan = FaultPlan::new(SEED).at(crash_at, Fault::CrashLeader);
+    let mut cluster = raft_cluster(5, SEED ^ 0xCAFE, &net, &plan);
+    let schedule = paced("crash", txs, 0.3, 0.025);
+    let out = drive(&mut cluster, "surge", &schedule, 30.0, crash_at);
+    assert_eq!(out.committed, txs, "surge transactions lost across the crash");
+    assert!(out.stats.epoch_changes >= 2, "crash must force a new election: {:?}", out.stats);
+    assert!(out.recovery_s > 0.0, "leadership was never observed lost after the crash");
+    println!(
+        "leader-crash n=5 txs={txs:<3} recovery={:>5.3}s p95={:>6.1}ms elections={}",
+        out.recovery_s,
+        out.commit_p95_ms,
+        out.stats.epoch_changes
+    );
+    let recovery = out.recovery_s;
+    let row = Json::obj()
+        .set("scenario", "leader_crash_mid_surge")
+        .set("nodes", 5usize)
+        .set("txs", txs)
+        .set("committed", out.committed)
+        .set("recovery_s", recovery)
+        .set("commit_p95_ms", out.commit_p95_ms)
+        .set("epoch_changes", out.stats.epoch_changes)
+        .set("driver_lost", out.stats.driver_lost());
+    (recovery, row)
+}
+
+struct PbftCase {
+    scenario: &'static str,
+    n: usize,
+    crash: Vec<Fault>,
+    equivocate: bool,
+    txs: usize,
+    expect_commit: bool,
+}
+
+/// One PBFT fault-sweep row. Crashes land at t=0.3 (before any ordering at
+/// the 0.35 submission start), so recovery always measures the protocol's
+/// way back, not a lucky pre-fault commit.
+fn pbft_row(case: &PbftCase) -> (f64, f64, Json) {
+    let f = (case.n - 1) / 3;
+    let mark = 0.35;
+    let mut plan = FaultPlan::new(SEED ^ case.n as u64);
+    if case.equivocate {
+        plan = plan.at(0.0, Fault::Equivocate(0));
+    }
+    for fault in &case.crash {
+        plan = plan.at(0.3, fault.clone());
+    }
+    let crashed = case.crash.len();
+    let net = TransportConfig::lan(SEED ^ 0x9B ^ case.n as u64);
+    let mut cluster = pbft_cluster(case.n, &net, &plan);
+    let schedule = paced(case.scenario, case.txs, mark, 0.05);
+    let out = drive(&mut cluster, "pbft", &schedule, 12.0, mark);
+    if case.expect_commit {
+        assert_eq!(out.committed, case.txs, "{}: transactions lost", case.scenario);
+    } else {
+        assert_eq!(out.committed, 0, "{}: committed past the f fault budget", case.scenario);
+    }
+    println!(
+        "pbft {:<18} n={} f={f} crashed={crashed} committed={:<3} p95={:>7.1}ms \
+         recovery={:>5.3}s view_changes={}",
+        case.scenario,
+        case.n,
+        out.committed,
+        out.commit_p95_ms,
+        out.recovery_s,
+        out.stats.epoch_changes
+    );
+    let row = Json::obj()
+        .set("scenario", case.scenario)
+        .set("n", case.n)
+        .set("f", f)
+        .set("crashed", crashed)
+        .set("txs", case.txs)
+        .set("committed", out.committed)
+        .set("alien", out.alien)
+        .set("commit_p95_ms", out.commit_p95_ms)
+        .set("recovery_s", out.recovery_s)
+        .set("view_changes", out.stats.epoch_changes)
+        .set("driver_lost", out.stats.driver_lost());
+    (out.commit_p95_ms, out.recovery_s, row)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let shard_counts: &[usize] = if smoke { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let per_shard = if smoke { 12 } else { 40 };
+    let surge_txs = if smoke { 30 } else { 60 };
+    let pbft_txs = if smoke { 8 } else { 20 };
+    println!(
+        "# consensus bench{} — virtual-time clusters over simnet links, \
+         tick {:.0}ms, seed {SEED:#x}\n",
+        if smoke { " (smoke)" } else { "" },
+        TICK_S * 1e3
+    );
+
+    let mut sharding_rows: Vec<Json> = Vec::new();
+    let mut steady_p95 = 0.0f64;
+    let mut steady_tps = 0.0f64;
+    for &shards in shard_counts {
+        let (p95, tps, row) = sharding_row(shards, per_shard);
+        steady_p95 = p95; // headline: the largest shard count in this mode
+        steady_tps = tps;
+        sharding_rows.push(row);
+    }
+
+    println!();
+    let (crash_recovery, crash_row) = leader_crash_row(surge_txs);
+
+    println!();
+    let mut cases = vec![
+        PbftCase {
+            scenario: "crash_f_backups",
+            n: 4,
+            crash: vec![Fault::Crash(3)],
+            equivocate: false,
+            txs: pbft_txs,
+            expect_commit: true,
+        },
+        PbftCase {
+            scenario: "crash_primary",
+            n: 4,
+            crash: vec![Fault::Crash(0)],
+            equivocate: false,
+            txs: pbft_txs,
+            expect_commit: true,
+        },
+        PbftCase {
+            scenario: "equivocating_primary",
+            n: 4,
+            crash: vec![],
+            equivocate: true,
+            txs: pbft_txs.min(6),
+            expect_commit: true,
+        },
+        PbftCase {
+            scenario: "crash_over_budget",
+            n: 4,
+            crash: vec![Fault::Crash(2), Fault::Crash(3)],
+            equivocate: false,
+            txs: pbft_txs.min(4),
+            expect_commit: false,
+        },
+    ];
+    if !smoke {
+        cases.push(PbftCase {
+            scenario: "crash_f_backups_n7",
+            n: 7,
+            crash: vec![Fault::Crash(5), Fault::Crash(6)],
+            equivocate: false,
+            txs: pbft_txs,
+            expect_commit: true,
+        });
+    }
+    let mut pbft_rows: Vec<Json> = Vec::new();
+    let mut pbft_f1_p95 = 0.0f64;
+    let mut view_change_recovery = 0.0f64;
+    for case in &cases {
+        let (p95, recovery, row) = pbft_row(case);
+        if case.scenario == "crash_f_backups" {
+            pbft_f1_p95 = p95;
+        }
+        if case.scenario == "crash_primary" {
+            view_change_recovery = recovery;
+        }
+        pbft_rows.push(row);
+    }
+
+    println!(
+        "\nverdict: steady p95 {steady_p95:.1}ms at {} shards ({steady_tps:.0} sim tps), \
+         leader-crash recovery {crash_recovery:.3}s, \
+         pbft view-change recovery {view_change_recovery:.3}s, zero driver loss",
+        shard_counts.last().unwrap()
+    );
+
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "steady_commit_p95_ms")
+            .set("value", steady_p95)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "sim_throughput_tps")
+            .set("value", steady_tps)
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "leader_crash_recovery_s")
+            .set("value", crash_recovery)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "pbft_f1_commit_p95_ms")
+            .set("value", pbft_f1_p95)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "pbft_view_change_recovery_s")
+            .set("value", view_change_recovery)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "driver_lost_messages")
+            .set("value", 0.0)
+            .set("higher_is_better", false),
+    ]);
+    let out = Json::obj()
+        .set("bench", "consensus")
+        .set("mode", if smoke { "smoke" } else { "full" })
+        .set(
+            "config",
+            Json::obj()
+                .set("tick_ms", TICK_S * 1e3)
+                .set("per_shard_txs", per_shard)
+                .set("surge_txs", surge_txs)
+                .set("pbft_txs", pbft_txs)
+                .set("seed", SEED),
+        )
+        .set("sharding", Json::Arr(sharding_rows))
+        .set("raft_faults", Json::Arr(vec![crash_row]))
+        .set("pbft", Json::Arr(pbft_rows))
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_consensus.json"
+    } else {
+        "BENCH_consensus.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_consensus.json");
+    println!("wrote {path}");
+}

@@ -1,0 +1,281 @@
+//! Deterministic fault injection for consensus clusters.
+//!
+//! A [`FaultPlan`] is *data*: a seed plus a time-ordered schedule of
+//! [`Fault`]s. The schedule is applied by the consensus
+//! [`Transport`](super::transport::Transport) as virtual (or driver) time
+//! passes — crash/restart a replica, partition the cluster, drop or delay
+//! a fraction of messages per link, or mark a replica Byzantine so the
+//! transport's protocol-specific mutator equivocates its broadcasts.
+//! Because the plan is plain data (`Clone + Debug`), it travels inside
+//! `OrdererConfig` and bench configs, and a failing scenario replays from
+//! its seed alone (`SCALESFL_TEST_SEED`, see [`crate::util::check`]).
+//!
+//! All probabilistic choices (message drops) come from a `Prng` forked
+//! from the plan seed, so two runs of the same plan over the same message
+//! sequence make identical drop decisions.
+
+use std::collections::{HashMap, HashSet};
+
+use super::NodeId;
+use crate::util::prng::Prng;
+
+/// One injectable fault. Times live in the surrounding [`FaultPlan`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Take a replica down: it stops ticking and every message to or from
+    /// it (including in-flight) is dropped.
+    Crash(NodeId),
+    /// Crash whichever replica is the leader/primary when the event
+    /// fires (falls back to node 0 if no leader is known) — the
+    /// "leader crash mid-surge" scenario without hardcoding an id.
+    CrashLeader,
+    /// Bring a crashed replica back with its in-memory state (models a
+    /// restart from durable consensus state).
+    Restart(NodeId),
+    /// Split the cluster: traffic flows only between nodes that share a
+    /// group; a node in no group is isolated from everyone.
+    Partition(Vec<Vec<NodeId>>),
+    /// Remove the active partition.
+    Heal,
+    /// Drop this fraction of all messages, iid per message.
+    Drop { frac: f64 },
+    /// Drop this fraction of messages on one directed link.
+    LinkDrop { src: NodeId, dst: NodeId, frac: f64 },
+    /// Multiply every sampled link latency by `factor` (1.0 = nominal).
+    Delay { factor: f64 },
+    /// Mark a replica Byzantine: the transport's mutator (e.g.
+    /// [`pbft::equivocate`](super::pbft::equivocate)) rewrites its
+    /// outbound broadcasts per destination.
+    Equivocate(NodeId),
+    /// Clear a replica's Byzantine flag.
+    Honest(NodeId),
+}
+
+/// A seeded, time-ordered schedule of [`Fault`]s (see the module doc).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    events: Vec<(f64, Fault)>,
+}
+
+impl FaultPlan {
+    /// An empty plan whose drop decisions derive from `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, events: Vec::new() }
+    }
+
+    /// Schedule `fault` at time `at` (seconds on the driving clock).
+    pub fn at(mut self, at: f64, fault: Fault) -> FaultPlan {
+        self.events.push((at, fault));
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Does any scheduled event mark a replica Byzantine? (The orderer
+    /// uses this to decide whether to install the protocol's
+    /// equivocation mutator.)
+    pub fn has_equivocation(&self) -> bool {
+        self.events.iter().any(|(_, f)| matches!(f, Fault::Equivocate(_)))
+    }
+
+    fn sorted_events(&self) -> Vec<(f64, Fault)> {
+        let mut ev = self.events.clone();
+        ev.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN fault time"));
+        ev
+    }
+}
+
+/// Runtime state of an applied [`FaultPlan`] — owned by the transport.
+pub(crate) struct FaultState {
+    events: Vec<(f64, Fault)>,
+    next: usize,
+    rng: Prng,
+    crashed: HashSet<NodeId>,
+    partition: Option<Vec<HashSet<NodeId>>>,
+    drop_frac: f64,
+    link_drop: HashMap<(NodeId, NodeId), f64>,
+    delay_factor: f64,
+    equivocating: HashSet<NodeId>,
+}
+
+impl FaultState {
+    pub fn new(plan: &FaultPlan) -> FaultState {
+        FaultState {
+            events: plan.sorted_events(),
+            next: 0,
+            rng: Prng::new(plan.seed ^ 0xFA117),
+            crashed: HashSet::new(),
+            partition: None,
+            drop_frac: 0.0,
+            link_drop: HashMap::new(),
+            delay_factor: 1.0,
+            equivocating: HashSet::new(),
+        }
+    }
+
+    /// Apply every event due at `now`; `leader` resolves
+    /// [`Fault::CrashLeader`]. Returns the applied faults (resolved).
+    pub fn advance(&mut self, now: f64, leader: Option<NodeId>) -> Vec<Fault> {
+        let mut applied = Vec::new();
+        while self.next < self.events.len() && self.events[self.next].0 <= now {
+            let fault = match self.events[self.next].1.clone() {
+                Fault::CrashLeader => Fault::Crash(leader.unwrap_or(0)),
+                f => f,
+            };
+            self.next += 1;
+            match &fault {
+                Fault::Crash(n) => {
+                    self.crashed.insert(*n);
+                }
+                Fault::Restart(n) => {
+                    self.crashed.remove(n);
+                }
+                Fault::Partition(groups) => {
+                    self.partition =
+                        Some(groups.iter().map(|g| g.iter().copied().collect()).collect());
+                }
+                Fault::Heal => self.partition = None,
+                Fault::Drop { frac } => self.drop_frac = *frac,
+                Fault::LinkDrop { src, dst, frac } => {
+                    self.link_drop.insert((*src, *dst), *frac);
+                }
+                Fault::Delay { factor } => self.delay_factor = *factor,
+                Fault::Equivocate(n) => {
+                    self.equivocating.insert(*n);
+                }
+                Fault::Honest(n) => {
+                    self.equivocating.remove(n);
+                }
+                Fault::CrashLeader => unreachable!("resolved above"),
+            }
+            applied.push(fault);
+        }
+        applied
+    }
+
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.crashed.contains(&node)
+    }
+
+    /// Is the directed link currently usable (both ends up, same side of
+    /// any partition)?
+    pub fn link_up(&self, src: NodeId, dst: NodeId) -> bool {
+        if self.crashed.contains(&src) || self.crashed.contains(&dst) {
+            return false;
+        }
+        match &self.partition {
+            None => true,
+            Some(groups) => groups.iter().any(|g| g.contains(&src) && g.contains(&dst)),
+        }
+    }
+
+    /// Deterministically decide whether to drop one message on the link.
+    pub fn should_drop(&mut self, src: NodeId, dst: NodeId) -> bool {
+        let frac = self
+            .link_drop
+            .get(&(src, dst))
+            .copied()
+            .unwrap_or(0.0)
+            .max(self.drop_frac);
+        frac > 0.0 && self.rng.next_f64() < frac
+    }
+
+    pub fn delay_factor(&self) -> f64 {
+        self.delay_factor
+    }
+
+    pub fn is_equivocating(&self, node: NodeId) -> bool {
+        self.equivocating.contains(&node)
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_apply_in_time_order_and_resolve_leader() {
+        let plan = FaultPlan::new(1)
+            .at(2.0, Fault::Restart(3))
+            .at(1.0, Fault::CrashLeader)
+            .at(1.5, Fault::Crash(3));
+        let mut st = FaultState::new(&plan);
+        assert!(st.advance(0.5, Some(2)).is_empty());
+        // CrashLeader resolves against the leader at fire time.
+        assert_eq!(st.advance(1.0, Some(2)), vec![Fault::Crash(2)]);
+        assert!(st.is_crashed(2));
+        assert!(!st.link_up(0, 2) && !st.link_up(2, 0));
+        // Later events apply together once due; restart clears the crash.
+        assert_eq!(st.advance(3.0, None), vec![Fault::Crash(3), Fault::Restart(3)]);
+        assert!(!st.is_crashed(3));
+        assert!(st.link_up(0, 3));
+    }
+
+    #[test]
+    fn partition_blocks_cross_group_links_only() {
+        let plan = FaultPlan::new(2).at(0.0, Fault::Partition(vec![vec![0, 1], vec![2, 3]]));
+        let mut st = FaultState::new(&plan);
+        st.advance(0.0, None);
+        assert!(st.link_up(0, 1) && st.link_up(2, 3));
+        assert!(!st.link_up(0, 2) && !st.link_up(3, 1));
+        // Node 4 is in no group: isolated from everyone.
+        assert!(!st.link_up(4, 0) && !st.link_up(1, 4));
+        st.advance(1.0, None);
+        let healed = FaultPlan::new(2)
+            .at(0.0, Fault::Partition(vec![vec![0, 1], vec![2, 3]]))
+            .at(1.0, Fault::Heal);
+        let mut st = FaultState::new(&healed);
+        st.advance(1.0, None);
+        assert!(st.link_up(0, 2));
+    }
+
+    #[test]
+    fn drop_decisions_replay_identically_for_one_seed() {
+        let plan = FaultPlan::new(7)
+            .at(0.0, Fault::Drop { frac: 0.3 })
+            .at(0.0, Fault::LinkDrop { src: 0, dst: 1, frac: 0.9 });
+        let decide = || {
+            let mut st = FaultState::new(&plan);
+            st.advance(0.0, None);
+            (0..200).map(|i| st.should_drop(i % 3, 1)).collect::<Vec<bool>>()
+        };
+        let a = decide();
+        assert_eq!(a, decide(), "same plan seed must make identical drop choices");
+        // The per-link override dominates the global fraction.
+        let dropped_on_link = a.iter().step_by(3).filter(|&&d| d).count();
+        assert!(dropped_on_link > 50, "0.9 link drop should fire often: {dropped_on_link}/67");
+        assert_ne!(a, {
+            let mut st = FaultState::new(&FaultPlan { seed: 8, ..plan.clone() });
+            st.advance(0.0, None);
+            (0..200).map(|i| st.should_drop(i % 3, 1)).collect::<Vec<bool>>()
+        });
+    }
+
+    #[test]
+    fn equivocation_and_delay_flags_toggle() {
+        let plan = FaultPlan::new(3)
+            .at(0.0, Fault::Equivocate(2))
+            .at(0.0, Fault::Delay { factor: 4.0 })
+            .at(5.0, Fault::Honest(2))
+            .at(5.0, Fault::Delay { factor: 1.0 });
+        assert!(plan.has_equivocation());
+        let mut st = FaultState::new(&plan);
+        st.advance(0.0, None);
+        assert!(st.is_equivocating(2));
+        assert_eq!(st.delay_factor(), 4.0);
+        st.advance(5.0, None);
+        assert!(!st.is_equivocating(2));
+        assert_eq!(st.delay_factor(), 1.0);
+    }
+}

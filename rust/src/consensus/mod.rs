@@ -1,14 +1,59 @@
-//! Consensus substrates for the ordering service.
+//! Consensus substrates for the ordering service: sans-io replicas, a
+//! simnet-routed transport, and deterministic fault injection.
 //!
 //! The paper runs a Raft orderer for its Fabric test network and calls out
-//! PBFT as the shard-level alternative for byzantine settings (§3.2); both
-//! are implemented here as *sans-io state machines*: they consume
-//! `(time, message)` inputs and emit outbound messages, so the same code is
-//! driven deterministically by the test/DES harness and in real time by the
-//! ordering service threads.
+//! PBFT as the shard-level alternative for byzantine settings (§3.2). Both
+//! live here as *sans-io state machines* ([`raft`], [`pbft`]): they consume
+//! `(time, message)` inputs and emit `(dst, msg)` outputs, never touching a
+//! socket or a clock. That interface is what makes the rest of this module
+//! possible — the same state machines are driven in real time by the
+//! orderer and in virtual time by tests and benches, deterministically.
+//!
+//! # Lifecycle
+//!
+//! A [`cluster::Cluster`] wires N replicas to a [`transport::Transport`]:
+//!
+//! 1. **Tick.** The driver calls [`cluster::Cluster::tick`] with the
+//!    current time. Due fault-plan events are applied first (crashes,
+//!    partitions, restarts — a restarted replica gets
+//!    [`ConsensusNode::restarted`]); then every alive replica's
+//!    [`ConsensusNode::tick`] timers fire and their outbound messages are
+//!    queued on the transport.
+//! 2. **Transit.** Each `(src, dst, msg)` is priced by the
+//!    [`LinkLatency`](crate::network::simnet::LinkLatency) oracle — stable
+//!    per-directed-link means plus per-message jitter — so elections,
+//!    heartbeats, and PBFT phases see realistic delay *and reordering*.
+//!    Messages not yet due stay queued across ticks; the transport never
+//!    drops traffic on its own (the old driver's "8 instant rounds, then
+//!    discard" bug is structurally gone, and
+//!    [`transport::TransportStats::lost`] asserts it stays gone).
+//! 3. **Fault injection.** A [`faults::FaultPlan`] — plain, `Clone`able
+//!    data scheduled on the same clock — can crash/restart replicas,
+//!    partition the cluster, drop or delay message fractions per link,
+//!    and mark a replica Byzantine so the transport rewrites its
+//!    broadcasts per destination ([`pbft::equivocate`] forges
+//!    per-destination pre-prepares). Every probabilistic choice derives
+//!    from the plan's seed: a failing scenario replays from
+//!    `SCALESFL_TEST_SEED` alone.
+//! 4. **Commit.** [`cluster::Cluster::take_committed`] merges the
+//!    replicas' executed streams into one exactly-once sequence (from
+//!    whichever replica executes first, so a crashed replica can't stall
+//!    delivery) and checks cross-replica agreement per sequence.
+//!
+//! Observability rides along: the cluster exports the
+//! `scalesfl_consensus_*` family (elections/view changes, current
+//! leader/epoch, per-channel commit-latency summaries, message-flow
+//! accounting) documented in [`crate::telemetry`].
 
+pub mod cluster;
+pub mod faults;
 pub mod pbft;
 pub mod raft;
+pub mod transport;
+
+pub use cluster::{Cluster, ClusterStats, ConsensusTelemetry};
+pub use faults::{Fault, FaultPlan};
+pub use transport::{Transport, TransportConfig, TransportStats};
 
 /// Node identifier inside a consensus group.
 pub type NodeId = usize;
@@ -42,6 +87,27 @@ pub trait ConsensusNode {
     /// Is this node currently the leader/primary?
     fn is_leader(&self) -> bool;
     fn node_id(&self) -> NodeId;
+
+    /// Current election epoch: Raft term / PBFT view. Monotone; the
+    /// orderer driver re-proposes outstanding payloads when it moves.
+    fn epoch(&self) -> u64 {
+        0
+    }
+    /// Elections started (Raft) / views entered (PBFT) on this replica —
+    /// monotone, feeds `scalesfl_consensus_{elections,view_changes}_total`.
+    fn epoch_changes(&self) -> u64 {
+        0
+    }
+    /// Client-style request notification on a *non-leader* replica: the
+    /// replica learns the request exists so it can force a view change if
+    /// the leader never orders it (PBFT's client timer). Protocols whose
+    /// followers play no part in request liveness ignore it (Raft — the
+    /// driver's epoch-change re-proposal covers leader loss there).
+    fn note_request(&mut self, _data: &[u8], _now: f64) {}
+    /// The fault plan restarted this replica after a crash: state is
+    /// retained (modelling recovery from durable consensus state) but any
+    /// leadership claim must be re-earned and timers re-anchored to `now`.
+    fn restarted(&mut self, _now: f64) {}
 }
 
 /// Proposal rejected: this node is not the current leader.

@@ -14,6 +14,27 @@ use std::collections::{BTreeMap, HashMap, HashSet};
 
 use super::{Committed, ConsensusNode, NodeId, NotLeader};
 use crate::crypto::{sha256, Digest};
+use crate::util::prng::Prng;
+
+/// Where the replica stands in the protocol (the sawtooth-pbft node-state
+/// shape): `Normal` three-phase operation vs. voting a primary out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PbftMode {
+    Normal,
+    ViewChanging,
+}
+
+/// Phase of the *next-to-execute* sequence in the current view — the
+/// observable answer to "what is this replica waiting on right now".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PbftPhase {
+    /// No in-progress slot at the execution frontier.
+    Idle,
+    /// Pre-prepare accepted; collecting prepare votes.
+    Preparing,
+    /// Prepared; collecting commit votes.
+    Committing,
+}
 
 /// PBFT wire messages.
 #[derive(Clone, Debug)]
@@ -59,6 +80,9 @@ pub struct Pbft {
     cfg: PbftConfig,
 
     view: u64,
+    mode: PbftMode,
+    /// Views this replica has entered (monotone; telemetry).
+    view_changes: u64,
     next_seq: u64,
     slots: BTreeMap<(u64, u64), SlotState>,
     /// Executed (delivered) in seq order.
@@ -85,6 +109,8 @@ impl Pbft {
             f,
             cfg,
             view: 0,
+            mode: PbftMode::Normal,
+            view_changes: 0,
             next_seq: 0,
             slots: BTreeMap::new(),
             executed: Vec::new(),
@@ -97,8 +123,36 @@ impl Pbft {
         }
     }
 
+    /// Start at `view` instead of 0 — rotates the initial primary to
+    /// `view % n` (fault-sweep tests crash every possible primary).
+    pub fn with_view(mut self, view: u64) -> Self {
+        self.view = view;
+        self
+    }
+
     pub fn view(&self) -> u64 {
         self.view
+    }
+
+    pub fn mode(&self) -> PbftMode {
+        self.mode
+    }
+
+    /// Views entered by this replica.
+    pub fn view_changes(&self) -> u64 {
+        self.view_changes
+    }
+
+    /// Phase of the execution frontier (seq `exec_upto + 1`) in the
+    /// current view; see [`PbftPhase`].
+    pub fn phase(&self) -> PbftPhase {
+        match self.slots.get(&(self.view, self.exec_upto + 1)) {
+            None => PbftPhase::Idle,
+            Some(s) if s.committed => PbftPhase::Idle,
+            Some(s) if s.prepared => PbftPhase::Committing,
+            Some(s) if s.digest.is_some() => PbftPhase::Preparing,
+            Some(_) => PbftPhase::Idle,
+        }
     }
 
     fn primary(&self) -> NodeId {
@@ -166,6 +220,7 @@ impl Pbft {
 
     fn start_view_change(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
         let new_view = self.view + 1;
+        self.mode = PbftMode::ViewChanging;
         self.progress_deadline = now + self.cfg.view_timeout;
         let msg = Msg::ViewChange {
             new_view,
@@ -211,6 +266,8 @@ impl Pbft {
 
     fn enter_view(&mut self, view: u64, now: f64) {
         self.view = view;
+        self.mode = PbftMode::Normal;
+        self.view_changes += 1;
         self.next_seq = self.exec_upto;
         self.view_votes.retain(|v, _| *v > view);
         self.progress_deadline = now + self.cfg.view_timeout;
@@ -323,10 +380,10 @@ impl ConsensusNode for Pbft {
         if self.primary() != self.id {
             return Err(NotLeader { hint: Some(self.primary()) });
         }
-        let _msgs = self.propose_internal(data, now);
         // Sans-io contract: propose() cannot emit; the orderer drains
         // outbound via `take_outbound` below.
-        self.outbound_buffer.extend(_msgs);
+        let msgs = self.propose_internal(data, now);
+        self.outbound_buffer.extend(msgs);
         Ok(())
     }
 
@@ -347,6 +404,49 @@ impl ConsensusNode for Pbft {
 
     fn node_id(&self) -> NodeId {
         self.id
+    }
+
+    fn epoch(&self) -> u64 {
+        self.view
+    }
+
+    fn epoch_changes(&self) -> u64 {
+        self.view_changes
+    }
+
+    /// PBFT's client timer: a backup that learns a request exists starts
+    /// expecting execution; if the primary never orders it, the pending
+    /// entry makes the progress timeout vote for a view change — this is
+    /// what gives liveness when the primary dies *before* its
+    /// pre-prepares deliver (no backup would otherwise hold any evidence
+    /// the request was ever made).
+    fn note_request(&mut self, data: &[u8], _now: f64) {
+        if !self.pending.iter().any(|p| p == data) {
+            self.pending.push(data.to_vec());
+        }
+    }
+
+    /// Back up with protocol state retained; the progress timer restarts
+    /// from `now` so a stale deadline can't fire instantly on revival.
+    fn restarted(&mut self, now: f64) {
+        self.mode = PbftMode::Normal;
+        self.progress_deadline = now + self.cfg.view_timeout;
+    }
+}
+
+/// Byzantine primary equivocation (a [`Mutator`](super::transport::Mutator)
+/// for [`Transport::set_mutator`](super::transport::Transport::set_mutator)):
+/// each destination receives a *different* pre-prepare for the same slot —
+/// payload perturbed per destination, digest recomputed so it passes the
+/// replica's digest check. Honest replicas then hold conflicting digests
+/// for one `(view, seq)`, no variant can gather a 2f+1 prepare quorum, and
+/// the stalled slot forces a view change; any perturbed payload that later
+/// commits is garbage the orderer counts as a `bad_batch` (the wire codec
+/// rejects trailing bytes). Non-pre-prepare messages pass untouched.
+pub fn equivocate(src: NodeId, dst: NodeId, msg: &mut Msg, rng: &mut Prng) {
+    if let Msg::PrePrepare { digest, data, .. } = msg {
+        data.extend_from_slice(&[0xEB, src as u8, dst as u8, rng.next_u64() as u8]);
+        *digest = sha256(data);
     }
 }
 

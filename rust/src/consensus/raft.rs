@@ -29,8 +29,9 @@ pub enum Msg {
     AppendResp { term: Term, success: bool, match_index: u64 },
 }
 
+/// Explicit mode tracking (observable for fault scenarios and telemetry).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Role {
+pub enum Role {
     Follower,
     Candidate,
     Leader,
@@ -73,6 +74,8 @@ pub struct Raft {
 
     role: Role,
     leader_hint: Option<NodeId>,
+    /// Elections this replica has started (monotone; telemetry).
+    elections: u64,
     votes: HashSet<NodeId>,
     next_index: HashMap<NodeId, u64>,
     match_index: HashMap<NodeId, u64>,
@@ -98,6 +101,7 @@ impl Raft {
             delivered: 0,
             role: Role::Follower,
             leader_hint: None,
+            elections: 0,
             votes: HashSet::new(),
             next_index: HashMap::new(),
             match_index: HashMap::new(),
@@ -116,6 +120,20 @@ impl Raft {
 
     pub fn commit_index(&self) -> u64 {
         self.commit
+    }
+
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    /// Best-known current leader (self when leading).
+    pub fn leader_hint(&self) -> Option<NodeId> {
+        self.leader_hint
+    }
+
+    /// Elections this replica has started.
+    pub fn elections(&self) -> u64 {
+        self.elections
     }
 
     fn peers(&self) -> impl Iterator<Item = NodeId> + '_ {
@@ -145,6 +163,7 @@ impl Raft {
 
     fn start_election(&mut self, now: f64) -> Vec<(NodeId, Msg)> {
         self.term += 1;
+        self.elections += 1;
         self.role = Role::Candidate;
         self.voted_for = Some(self.id);
         self.votes = HashSet::from([self.id]);
@@ -375,6 +394,25 @@ impl ConsensusNode for Raft {
 
     fn node_id(&self) -> NodeId {
         self.id
+    }
+
+    fn epoch(&self) -> u64 {
+        self.term
+    }
+
+    fn epoch_changes(&self) -> u64 {
+        self.elections
+    }
+
+    /// Back up with durable state (term, vote, log) retained: leadership
+    /// is dropped and must be re-earned, election timer re-anchored.
+    /// `voted_for` is deliberately kept — forgetting a vote cast in the
+    /// current term could elect two leaders for one term.
+    fn restarted(&mut self, now: f64) {
+        self.role = Role::Follower;
+        self.votes.clear();
+        self.leader_hint = None;
+        self.reset_election_deadline(now);
     }
 }
 

@@ -1,0 +1,340 @@
+//! Simnet-routed message transport for one consensus cluster.
+//!
+//! The sans-io state machines in [`raft`](super::raft) / [`pbft`](super::pbft)
+//! emit `(dst, msg)` pairs; previously the orderer driver handed those to the
+//! destination in the same instant ("8 instant rounds and drop the rest").
+//! [`Transport`] replaces that: every message is priced through the
+//! [`LinkLatency`](crate::network::simnet::LinkLatency) oracle — stable
+//! per-directed-link means plus per-message jitter, so elections, heartbeats
+//! and PBFT phases see realistic delay *and reordering* — and queued on a
+//! delivery heap. Messages not yet due simply stay queued for the next tick;
+//! the transport never discards traffic on its own. The only ways a message
+//! dies are fault-plan actions (crash, partition, probabilistic drop), and
+//! those are counted in [`TransportStats::fault_dropped`], so
+//! [`TransportStats::lost`] is an invariant the driver asserts at zero.
+//!
+//! A [`FaultPlan`] (see [`super::faults`]) is applied here as time passes:
+//! crashed nodes send/receive nothing (including in-flight traffic), a
+//! partition blocks cross-group links, `Drop`/`LinkDrop` kill a seeded
+//! fraction of messages, `Delay` scales every sampled latency, and
+//! `Equivocate` routes a Byzantine node's outbound messages through a
+//! protocol-specific [`Mutator`] (e.g. [`pbft::equivocate`](super::pbft::equivocate))
+//! that can rewrite each copy per destination.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Duration;
+
+use super::faults::{Fault, FaultPlan, FaultState};
+use super::NodeId;
+use crate::network::simnet::LinkLatency;
+use crate::util::prng::Prng;
+
+/// Latency profile for intra-cluster replica links.
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    /// Minimum one-way link latency.
+    pub base: Duration,
+    /// Stable per-link spread on top of `base` (hashed per directed link).
+    pub spread: Duration,
+    /// Per-message jitter bound.
+    pub jitter: Duration,
+    /// Seed for the link topology and jitter.
+    pub seed: u64,
+}
+
+impl TransportConfig {
+    /// Free links: every message delivers on the next tick (tests).
+    pub fn zero() -> TransportConfig {
+        TransportConfig {
+            base: Duration::ZERO,
+            spread: Duration::ZERO,
+            jitter: Duration::ZERO,
+            seed: 0,
+        }
+    }
+
+    /// Same-rack orderers: ~0.5–2.5 ms per hop. The orderer default.
+    pub fn lan(seed: u64) -> TransportConfig {
+        TransportConfig {
+            base: Duration::from_micros(500),
+            spread: Duration::from_millis(2),
+            jitter: Duration::from_micros(500),
+            seed,
+        }
+    }
+
+    /// Geo-distributed orderers: ~10–35 ms per hop (benches).
+    pub fn wan(seed: u64) -> TransportConfig {
+        TransportConfig {
+            base: Duration::from_millis(10),
+            spread: Duration::from_millis(20),
+            jitter: Duration::from_millis(5),
+            seed,
+        }
+    }
+
+    fn oracle(&self) -> LinkLatency {
+        LinkLatency::new(self.base, self.spread, self.jitter, self.seed)
+    }
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig::lan(0x5CA1E5F1)
+    }
+}
+
+/// Message-flow counters; see [`TransportStats::lost`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Messages handed to [`Transport::send`].
+    pub sent: u64,
+    /// Messages delivered to their destination.
+    pub delivered: u64,
+    /// Messages killed by the fault plan (crash/partition/drop), at send
+    /// time or in flight.
+    pub fault_dropped: u64,
+    /// Messages currently queued on the delivery heap.
+    pub in_flight: u64,
+}
+
+impl TransportStats {
+    /// Messages unaccounted for. The transport's contract is that this is
+    /// **always zero**: undelivered traffic stays queued, and every
+    /// fault-plan kill is counted. The orderer driver asserts it.
+    pub fn lost(&self) -> u64 {
+        self.sent - self.delivered - self.fault_dropped - self.in_flight
+    }
+}
+
+/// Per-destination message rewrite hook for Byzantine senders
+/// (installed via [`Transport::set_mutator`]).
+pub type Mutator<M> = Box<dyn FnMut(NodeId, NodeId, &mut M, &mut Prng) + Send>;
+
+/// Orderable f64 wrapper for the delivery heap.
+#[derive(Clone, Copy, PartialEq)]
+struct Time(f64);
+
+impl Eq for Time {}
+
+impl PartialOrd for Time {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time")
+    }
+}
+
+/// The cluster message fabric (see the module doc).
+pub struct Transport<M> {
+    links: LinkLatency,
+    heap: BinaryHeap<Reverse<(Time, u64, NodeId, NodeId)>>,
+    payloads: HashMap<u64, M>,
+    seq: u64,
+    faults: FaultState,
+    mutator: Option<Mutator<M>>,
+    sent: u64,
+    delivered: u64,
+    fault_dropped: u64,
+}
+
+impl<M> Transport<M> {
+    pub fn new(config: &TransportConfig, plan: &FaultPlan) -> Transport<M> {
+        Transport {
+            links: config.oracle(),
+            heap: BinaryHeap::new(),
+            payloads: HashMap::new(),
+            seq: 0,
+            faults: FaultState::new(plan),
+            mutator: None,
+            sent: 0,
+            delivered: 0,
+            fault_dropped: 0,
+        }
+    }
+
+    /// Install the protocol-specific equivocation hook; it runs on every
+    /// message sent while the source is marked [`Fault::Equivocate`].
+    pub fn set_mutator(&mut self, m: Mutator<M>) {
+        self.mutator = Some(m);
+    }
+
+    /// Apply fault-plan events due at `now`; `leader` resolves
+    /// [`Fault::CrashLeader`]. Returns the faults applied this call so the
+    /// cluster can react (e.g. notify a restarted node).
+    pub fn advance_faults(&mut self, now: f64, leader: Option<NodeId>) -> Vec<Fault> {
+        self.faults.advance(now, leader)
+    }
+
+    pub fn is_crashed(&self, node: NodeId) -> bool {
+        self.faults.is_crashed(node)
+    }
+
+    pub fn is_equivocating(&self, node: NodeId) -> bool {
+        self.faults.is_equivocating(node)
+    }
+
+    fn link_name(node: NodeId) -> String {
+        format!("node{node}")
+    }
+
+    /// Queue one message; it will be deliverable after the sampled link
+    /// latency. Fault-plan kills (down link, seeded drop) are counted in
+    /// `fault_dropped` — never silent.
+    pub fn send(&mut self, from: NodeId, to: NodeId, mut msg: M, now: f64) {
+        self.sent += 1;
+        if !self.faults.link_up(from, to) || self.faults.should_drop(from, to) {
+            self.fault_dropped += 1;
+            return;
+        }
+        if self.faults.is_equivocating(from) {
+            if let Some(mutate) = self.mutator.as_mut() {
+                mutate(from, to, &mut msg, self.faults.rng_mut());
+            }
+        }
+        self.seq += 1;
+        let latency = self.links.sample_s(&Self::link_name(from), &Self::link_name(to), self.seq)
+            * self.faults.delay_factor();
+        self.payloads.insert(self.seq, msg);
+        self.heap.push(Reverse((Time(now + latency), self.seq, from, to)));
+    }
+
+    /// Pop every message whose delivery time has arrived, in timestamp
+    /// order. Messages still in the future stay queued — the next tick
+    /// picks them up. A link that went down while a message was in flight
+    /// kills it (counted).
+    pub fn deliver_due(&mut self, now: f64) -> Vec<(NodeId, NodeId, M)> {
+        let mut out = Vec::new();
+        while let Some(&Reverse((Time(t), seq, from, to))) = self.heap.peek() {
+            if t > now {
+                break;
+            }
+            self.heap.pop();
+            let msg = self.payloads.remove(&seq).expect("payload");
+            if !self.faults.link_up(from, to) {
+                self.fault_dropped += 1;
+                continue;
+            }
+            self.delivered += 1;
+            out.push((from, to, msg));
+        }
+        out
+    }
+
+    /// Earliest queued delivery time, if any (virtual-time drivers use it
+    /// to jump the clock instead of polling).
+    pub fn next_due(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse((Time(t), ..))| *t)
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            sent: self.sent,
+            delivered: self.delivered,
+            fault_dropped: self.fault_dropped,
+            in_flight: self.heap.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lan() -> TransportConfig {
+        TransportConfig::lan(7)
+    }
+
+    #[test]
+    fn undelivered_messages_stay_queued_not_dropped() {
+        let mut t: Transport<u32> = Transport::new(&lan(), &FaultPlan::default());
+        for i in 0..100 {
+            t.send(0, 1, i, 0.0);
+        }
+        // Far too early: nothing due yet, but nothing lost either.
+        assert!(t.deliver_due(0.0001).is_empty());
+        let s = t.stats();
+        assert_eq!(s.in_flight, 100);
+        assert_eq!(s.lost(), 0);
+        // Eventually everything arrives; accounting closes.
+        let got = t.deliver_due(1.0);
+        assert_eq!(got.len(), 100);
+        let s = t.stats();
+        assert_eq!((s.delivered, s.in_flight, s.lost()), (100, 0, 0));
+    }
+
+    #[test]
+    fn delivery_respects_per_link_latency_and_orders_by_time() {
+        let mut t: Transport<u32> = Transport::new(&lan(), &FaultPlan::default());
+        t.send(0, 1, 1, 0.0);
+        t.send(2, 3, 2, 0.0);
+        t.send(1, 0, 3, 0.0);
+        assert!(t.next_due().unwrap() >= 0.0005, "base latency applies");
+        let got = t.deliver_due(1.0);
+        assert_eq!(got.len(), 3);
+        // Distinct links have distinct stable means, so arrival order is a
+        // function of the topology, not send order. Just check it's sorted
+        // by redelivery: heap pops in time order by construction; verify
+        // the messages all arrived intact.
+        let mut payloads: Vec<u32> = got.iter().map(|&(_, _, m)| m).collect();
+        payloads.sort_unstable();
+        assert_eq!(payloads, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn crash_kills_in_flight_and_future_traffic_counted() {
+        let plan = FaultPlan::new(1).at(0.5, Fault::Crash(1));
+        let mut t: Transport<u32> = Transport::new(&lan(), &plan);
+        t.send(0, 1, 1, 0.0); // arrives before the crash
+        assert_eq!(t.deliver_due(0.4).len(), 1);
+        t.send(0, 1, 2, 0.4); // in flight when the crash lands
+        t.advance_faults(0.5, None);
+        t.send(0, 1, 3, 0.6); // sent to a dead node
+        t.send(1, 0, 4, 0.6); // sent from a dead node
+        assert!(t.deliver_due(2.0).is_empty());
+        let s = t.stats();
+        assert_eq!(s.fault_dropped, 3);
+        assert_eq!(s.lost(), 0, "every undelivered message is accounted");
+    }
+
+    #[test]
+    fn delay_factor_scales_latency() {
+        let plan = FaultPlan::new(2).at(0.0, Fault::Delay { factor: 10.0 });
+        let mut nominal: Transport<u32> = Transport::new(&lan(), &FaultPlan::default());
+        let mut slowed: Transport<u32> = Transport::new(&lan(), &plan);
+        slowed.advance_faults(0.0, None);
+        nominal.send(0, 1, 1, 0.0);
+        slowed.send(0, 1, 1, 0.0);
+        let t0 = nominal.next_due().unwrap();
+        let t1 = slowed.next_due().unwrap();
+        assert!((t1 - t0 * 10.0).abs() < 1e-12, "{t1} vs 10x{t0}");
+    }
+
+    #[test]
+    fn mutator_runs_only_for_equivocating_sender() {
+        let plan = FaultPlan::new(3).at(0.0, Fault::Equivocate(0));
+        let mut t: Transport<Vec<u8>> = Transport::new(&lan(), &plan);
+        t.set_mutator(Box::new(|_, dst, msg, _| msg.push(dst as u8)));
+        t.advance_faults(0.0, None);
+        t.send(0, 1, vec![9], 0.0);
+        t.send(0, 2, vec![9], 0.0);
+        t.send(1, 2, vec![9], 0.0); // honest sender: untouched
+        let mut got = t.deliver_due(1.0);
+        got.sort_by_key(|&(from, to, _)| (from, to));
+        assert_eq!(got[0].2, vec![9, 1]);
+        assert_eq!(got[1].2, vec![9, 2]);
+        assert_eq!(got[2].2, vec![9]);
+    }
+
+    #[test]
+    fn zero_config_delivers_immediately() {
+        let mut t: Transport<u32> = Transport::new(&TransportConfig::zero(), &FaultPlan::default());
+        t.send(0, 1, 5, 1.0);
+        assert_eq!(t.deliver_due(1.0).len(), 1);
+    }
+}

@@ -1,6 +1,19 @@
 //! The ordering service: batches endorsed envelopes into blocks through a
-//! Raft cluster (the paper's orderer) and delivers committed blocks to every
-//! peer on the batch's channel.
+//! Raft or PBFT replica cluster (the paper's orderer) and delivers committed
+//! blocks to every peer on the batch's channel.
+//!
+//! Replica messaging is no longer an instant in-memory exchange: the driver
+//! owns a [`Cluster`](crate::consensus::Cluster) whose messages ride
+//! `network::simnet` links via [`crate::consensus::Transport`], with
+//! per-link latency, reordering, and — when
+//! [`OrdererConfig::consensus_faults`] is set — scheduled crashes,
+//! partitions, message loss, and Byzantine equivocation from a seeded
+//! [`FaultPlan`]. The driver re-proposes uncommitted payloads after every
+//! epoch change (leader election / view change), and when no leader is
+//! reachable it plays the PBFT client: due batches are broadcast to the
+//! replicas as pending requests (then returned to the pool) so a dead
+//! primary's backups still trigger the view change. Replayed payloads
+//! validate as `DuplicateTxId` on every replica, keeping chains identical.
 //!
 //! Ingress goes through the sharded mempool (`crate::mempool`): `submit`
 //! routes envelopes into the per-channel pool (admission control, priority
@@ -28,14 +41,16 @@
 //! by a `network::simnet` link latency — so batch pulls and block cutting
 //! see realistic cross-shard arrival skew.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::consensus::pbft::{Pbft, PbftConfig};
+use crate::consensus::pbft::{self, Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
-use crate::consensus::ConsensusNode;
+use crate::consensus::{Cluster, ClusterStats, ConsensusNode, FaultPlan, TransportConfig};
+use crate::crypto::{sha256, Digest};
 use crate::ledger::state::StateView;
 use crate::ledger::envelope::SharedEnvelope;
 use crate::ledger::store::LedgerConfig;
@@ -74,6 +89,15 @@ pub struct OrdererConfig {
     pub consensus_nodes: usize,
     /// Ordering protocol.
     pub consensus: ConsensusKind,
+    /// Latency profile for the replica-to-replica links. Consensus
+    /// messages (elections, heartbeats, PBFT phases) are queued through a
+    /// `network::simnet` link oracle instead of exchanging instantly;
+    /// defaults to a same-rack profile (~0.5–2.5 ms per hop).
+    pub consensus_net: TransportConfig,
+    /// Scheduled fault injection for the consensus cluster (crashes,
+    /// partitions, message drops/delays, Byzantine equivocation), timed
+    /// on the driver's clock. `None` = fault-free.
+    pub consensus_faults: Option<FaultPlan>,
     /// Driver loop granularity.
     pub tick: Duration,
     /// Worker threads for the parallel pre-validation stage of block
@@ -104,6 +128,8 @@ impl Default for OrdererConfig {
             min_block_interval: Duration::ZERO,
             consensus_nodes: 1,
             consensus: ConsensusKind::Raft,
+            consensus_net: TransportConfig::default(),
+            consensus_faults: None,
             tick: Duration::from_millis(2),
             validation_workers: 1,
             relay: None,
@@ -127,6 +153,8 @@ pub struct OrderingService {
     validator: Arc<BlockValidator>,
     /// Cross-shard relay, pumped by the driver (None = direct routing).
     relay: Option<Arc<Relay>>,
+    /// Live consensus bookkeeping, refreshed by the driver every tick.
+    consensus_stats: Arc<Mutex<ClusterStats>>,
 }
 
 impl OrderingService {
@@ -243,16 +271,20 @@ impl OrderingService {
                 .expect("spawn orderer committer")
         };
 
+        let consensus_stats = Arc::new(Mutex::new(ClusterStats::default()));
         let driver = {
             let mempool = Arc::clone(&mempool);
             let stop = Arc::clone(&shutdown);
             let relay = relay.clone();
             let bad = Arc::clone(&bad_batches);
+            let stats_out = Arc::clone(&consensus_stats);
             thread::Builder::new()
                 .name("orderer".into())
                 .spawn(move || {
                     let n = cfg.consensus_nodes.max(1);
                     let mut rng = Prng::new(seed);
+                    let plan = cfg.consensus_faults.clone().unwrap_or_default();
+                    let registry = crate::telemetry::global().registry();
                     match cfg.consensus {
                         ConsensusKind::Raft => {
                             let nodes: Vec<Raft> = (0..n)
@@ -260,12 +292,21 @@ impl OrderingService {
                                     Raft::new(i, n, RaftConfig::default(), rng.fork(i as u64))
                                 })
                                 .collect();
-                            driver(cfg, mempool, stop, commit_tx, relay, bad, nodes)
+                            let cluster = Cluster::new(nodes, &cfg.consensus_net, &plan);
+                            cluster.telemetry().register(registry, "raft");
+                            driver(cfg, mempool, stop, commit_tx, relay, bad, stats_out, cluster)
                         }
                         ConsensusKind::Pbft => {
                             let nodes: Vec<Pbft> =
                                 (0..n).map(|i| Pbft::new(i, n, PbftConfig::default())).collect();
-                            driver(cfg, mempool, stop, commit_tx, relay, bad, nodes)
+                            let mut cluster = Cluster::new(nodes, &cfg.consensus_net, &plan);
+                            if plan.has_equivocation() {
+                                // The scheduled Byzantine replica forges a
+                                // per-destination variant of each pre-prepare.
+                                cluster.set_mutator(Box::new(pbft::equivocate));
+                            }
+                            cluster.telemetry().register(registry, "pbft");
+                            driver(cfg, mempool, stop, commit_tx, relay, bad, stats_out, cluster)
                         }
                     }
                 })
@@ -281,6 +322,7 @@ impl OrderingService {
             bad_batches,
             validator,
             relay,
+            consensus_stats,
         })
     }
 
@@ -335,6 +377,14 @@ impl OrderingService {
     /// cache hit rate, and commit-time conflict tallies.
     pub fn validation_stats(&self) -> ValidationSnapshot {
         self.validator.snapshot()
+    }
+
+    /// Snapshot of the consensus cluster: epoch/leader churn, commit and
+    /// divergence tallies, and the transport's message accounting. The
+    /// driver refreshes it every tick; `driver_lost()` staying 0 is the
+    /// transport's no-silent-drops invariant.
+    pub fn consensus_stats(&self) -> ClusterStats {
+        self.consensus_stats.lock().unwrap().clone()
     }
 }
 
@@ -415,26 +465,6 @@ impl ChannelCursor {
     }
 }
 
-/// Run up to 8 rounds of instant message exchange between consensus nodes.
-fn exchange<C: ConsensusNode>(
-    nodes: &mut [C],
-    inbox: &mut Vec<(usize, usize, C::Msg)>,
-    now: f64,
-) {
-    for _ in 0..8 {
-        if inbox.is_empty() {
-            break;
-        }
-        let mut next = Vec::new();
-        for (from, to, m) in inbox.drain(..) {
-            for (dest, out) in nodes[to].handle(from, m, now) {
-                next.push((to, dest, out));
-            }
-        }
-        *inbox = next;
-    }
-}
-
 /// Hand one committed consensus payload to the committer. A payload that
 /// fails to decode is *counted* (and logged) instead of silently dropped —
 /// a committed-but-undeliverable batch is data loss the operator must see.
@@ -461,15 +491,24 @@ fn driver<C: ConsensusNode>(
     commit_tx: mpsc::Sender<(String, Vec<SharedEnvelope>)>,
     relay: Option<Arc<Relay>>,
     bad_batches: Arc<AtomicU64>,
-    mut nodes: Vec<C>,
+    stats_out: Arc<Mutex<ClusterStats>>,
+    mut cluster: Cluster<C>,
 ) {
     let start = Instant::now();
-    let mut delivered_seq = 0u64;
     let mut last_cut = f64::NEG_INFINITY;
+    let mut last_nudge = f64::NEG_INFINITY;
     let min_interval = cfg.min_block_interval.as_secs_f64();
     // Round-robin service across channels; advances only on actual cuts so
     // a saturated channel cannot starve the others under throttling.
     let mut cursor = ChannelCursor::default();
+    // Proposed-but-uncommitted payloads, keyed by digest. A leader crash
+    // (or PBFT view change) can strand an accepted proposal in the dead
+    // leader's log, so after every epoch change the survivors get the
+    // whole set again. Re-proposing an already-committed payload is safe:
+    // the replayed envelopes validate as DuplicateTxId and every replica
+    // applies the same verdicts, so chains stay identical.
+    let mut outstanding: HashMap<Digest, (String, Vec<u8>)> = HashMap::new();
+    let mut reproposed_epoch = 0u64;
 
     loop {
         if shutdown.load(Ordering::Relaxed) {
@@ -485,19 +524,26 @@ fn driver<C: ConsensusNode>(
             relay.pump();
         }
 
-        // Consensus housekeeping: ticks + instant message exchange.
-        let mut inbox: Vec<(usize, usize, C::Msg)> = Vec::new();
-        for node in nodes.iter_mut() {
-            for (to, m) in node.tick(now) {
-                inbox.push((node.node_id(), to, m));
+        // Consensus housekeeping: fault schedule, node ticks, and
+        // delivery of replica messages that have served their link latency.
+        cluster.tick(now);
+
+        // Leadership moved: re-propose everything still uncommitted. Only
+        // advance the watermark when the whole set went through, so a
+        // propose refused mid-handover is retried next tick.
+        let epoch = cluster.epoch();
+        if epoch > reproposed_epoch {
+            let all_ok = outstanding
+                .values()
+                .all(|(channel, payload)| cluster.propose(channel, payload.clone(), now).is_ok());
+            if all_ok {
+                reproposed_epoch = epoch;
             }
         }
-        exchange(&mut nodes, &mut inbox, now);
 
         // Pull due batches from the per-channel pools and propose them,
         // round-robin across channels.
-        let leader = nodes.iter().position(|nd| nd.is_leader());
-        if let Some(l) = leader {
+        if cluster.leader().is_some() {
             let channels = mempool.channels();
             'channels: for idx in cursor.order(&channels) {
                 let channel = &channels[idx];
@@ -515,37 +561,59 @@ fn driver<C: ConsensusNode>(
                         break;
                     }
                     let payload = wire::encode_batch(channel, &envs);
-                    if nodes[l].propose(payload, now).is_err() {
+                    if cluster.propose(channel, payload.clone(), now).is_err() {
                         // Leadership moved; re-queue and retry next tick.
                         pool.restore(envs);
                         break 'channels;
                     }
+                    outstanding.insert(sha256(&payload), (channel.clone(), payload));
                     last_cut = now;
                     cursor.served(channel);
-                    // Protocols that broadcast at proposal time (PBFT).
-                    for (to, m) in nodes[l].take_outbound() {
-                        inbox.push((l, to, m));
-                    }
-                    exchange(&mut nodes, &mut inbox, now);
                 }
+            }
+        } else if now - last_nudge >= cfg.batch_timeout.as_secs_f64() {
+            // No usable leader. Play the PBFT client: show every alive
+            // replica the next due batch so their request timers run — a
+            // crashed primary only gets voted out if the backups know work
+            // is waiting — then put the envelopes back. They are proposed
+            // for real (and tracked in `outstanding`) once a leader exists;
+            // the planted copy, if a view change commits it first, replays
+            // as DuplicateTxId. Raft replicas ignore the nudge entirely;
+            // their election timers alone restore a leader.
+            last_nudge = now;
+            let channels = mempool.channels();
+            for idx in cursor.order(&channels) {
+                let channel = &channels[idx];
+                let Some(pool) = mempool.get(channel) else { continue };
+                if !pool.ready(cfg.batch_size, cfg.batch_timeout) {
+                    continue;
+                }
+                let envs = pool.take_batch(cfg.batch_size, cfg.batch_bytes);
+                if envs.is_empty() {
+                    continue;
+                }
+                let payload = wire::encode_batch(channel, &envs);
+                cluster.broadcast_request(channel, payload, now);
+                pool.restore(envs);
             }
         }
 
         // Hand committed batches to the committer thread (pipeline overlap:
         // the next tick's consensus work proceeds while peers validate).
-        for c in nodes[0].take_committed() {
-            debug_assert_eq!(c.seq, delivered_seq + 1);
-            delivered_seq = c.seq;
-            if !deliver_committed(&c.data, &commit_tx, &bad_batches) {
+        for data in cluster.take_committed(now) {
+            outstanding.remove(&sha256(&data));
+            if !deliver_committed(&data, &commit_tx, &bad_batches) {
                 return;
             }
         }
+        *stats_out.lock().unwrap() = cluster.stats();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::consensus::Fault;
     use crate::crypto::msp::{CertificateAuthority, MemberId};
     use crate::fabric::chaincode::{Chaincode, TxContext};
     use crate::fabric::endorsement::EndorsementPolicy;
@@ -737,6 +805,182 @@ mod tests {
             let ev = rx.recv_timeout(Duration::from_secs(10)).expect("commit");
             assert_eq!(ev.code, ValidationCode::Valid);
         }
+        // The replica exchange now rides the simulated network: traffic
+        // must have flowed, and the driver must not have lost any of it.
+        let stats = orderer.consensus_stats();
+        assert!(stats.transport.sent > 0, "replicas exchanged messages: {stats:?}");
+        assert_eq!(stats.driver_lost(), 0, "no driver-dropped messages: {stats:?}");
+        assert_eq!(stats.divergence, 0);
+    }
+
+    /// Tentpole integration scenario: a five-replica Raft orderer loses its
+    /// leader in the middle of a 60-tx surge. Every transaction must still
+    /// commit exactly once as Valid (re-proposals replay as DuplicateTxId),
+    /// the survivors must re-elect, and all peers must end on byte-identical
+    /// chains — the paper's safety claim, end to end through the mempool,
+    /// simnet transport, fault injector, and parallel committer.
+    #[test]
+    fn leader_crash_mid_surge_commits_identical_chains() {
+        crate::util::check::fault_scenario("leader-crash-mid-surge", 0xC2A54, |seed| {
+            use std::collections::HashSet;
+            let cfg = OrdererConfig {
+                consensus_nodes: 5,
+                batch_size: 5,
+                // Throttle cutting so the surge is still in flight when the
+                // fault fires at t=0.5s.
+                min_block_interval: Duration::from_millis(25),
+                consensus_net: crate::consensus::TransportConfig::lan(seed),
+                consensus_faults: Some(FaultPlan::new(seed).at(0.5, Fault::CrashLeader)),
+                ..OrdererConfig::default()
+            };
+            let (peers, orderer) = network(3, cfg);
+            let rx = peers[2].subscribe("ch").unwrap();
+            for nonce in 0..60 {
+                orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+            }
+            let mut valid: HashSet<crate::ledger::tx::TxId> = HashSet::new();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while valid.len() < 60 && Instant::now() < deadline {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    // Epoch-change re-proposals may replay committed batches;
+                    // those replays must verdict DuplicateTxId, never Valid.
+                    Ok(ev) if ev.code == ValidationCode::Valid => {
+                        assert!(valid.insert(ev.tx_id), "tx committed Valid twice");
+                    }
+                    Ok(ev) => assert_eq!(ev.code, ValidationCode::DuplicateTxId),
+                    Err(_) => break,
+                }
+            }
+            assert_eq!(valid.len(), 60, "every tx survives the leader crash");
+            // The re-election is observable even if the surge finished first:
+            // the dead leader stops heartbeating, so the survivors' election
+            // timers fire regardless. Wait for the term to advance.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while orderer.consensus_stats().epoch < 2 && Instant::now() < deadline {
+                thread::sleep(Duration::from_millis(10));
+            }
+            let stats = orderer.consensus_stats();
+            assert!(stats.epoch >= 2, "survivors re-elected: {stats:?}");
+            assert!(stats.epoch_changes >= 2, "crash forced a new election: {stats:?}");
+            assert_eq!(stats.divergence, 0, "no replica disagreed on a slot");
+            assert_eq!(stats.driver_lost(), 0, "transport accounted for every message");
+            assert_eq!(orderer.bad_batches(), 0);
+            let text = crate::telemetry::global().registry().render_prometheus();
+            assert!(text.contains("scalesfl_consensus_commits_total"), "metrics exported");
+            assert!(text.contains("protocol=\"raft\""));
+            drop(orderer); // joins driver + committer: chains are final
+            let chains: Vec<Vec<crate::crypto::Digest>> = peers
+                .iter()
+                .map(|p| {
+                    let ch = p.channel("ch").unwrap();
+                    let chain = ch.chain.lock().unwrap();
+                    chain.verify().unwrap();
+                    chain.iter().map(|b| b.hash()).collect()
+                })
+                .collect();
+            assert!(!chains[0].is_empty());
+            assert_eq!(chains[0], chains[1], "replica 1 diverged");
+            assert_eq!(chains[0], chains[2], "replica 2 diverged");
+            for p in &peers {
+                assert_eq!(p.channel("ch").unwrap().scan("kv-k").len(), 60);
+            }
+        });
+    }
+
+    /// PBFT loses its primary before anything was ordered. The orderer must
+    /// still make progress: the driver plays the PBFT client and shows the
+    /// waiting batch to the backups, whose request timers then force the
+    /// view change that installs a live primary.
+    #[test]
+    fn pbft_primary_crash_triggers_view_change_and_recovers() {
+        crate::util::check::fault_scenario("pbft-primary-crash", 0x0DD5, |seed| {
+            use std::collections::HashSet;
+            let cfg = OrdererConfig {
+                consensus: ConsensusKind::Pbft,
+                consensus_nodes: 4,
+                consensus_net: crate::consensus::TransportConfig::lan(seed),
+                consensus_faults: Some(FaultPlan::new(seed).at(0.05, Fault::Crash(0))),
+                ..OrdererConfig::default()
+            };
+            let (peers, orderer) = network(2, cfg);
+            let rx = peers[1].subscribe("ch").unwrap();
+            for nonce in 0..8 {
+                orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+            }
+            let mut valid: HashSet<crate::ledger::tx::TxId> = HashSet::new();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while valid.len() < 8 && Instant::now() < deadline {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(ev) if ev.code == ValidationCode::Valid => {
+                        valid.insert(ev.tx_id);
+                    }
+                    Ok(ev) => assert_eq!(ev.code, ValidationCode::DuplicateTxId),
+                    Err(_) => break,
+                }
+            }
+            assert_eq!(valid.len(), 8, "all txs commit after the view change");
+            let stats = orderer.consensus_stats();
+            assert!(stats.epoch >= 1, "view advanced past the dead primary: {stats:?}");
+            assert_eq!(stats.divergence, 0);
+            assert_eq!(stats.driver_lost(), 0);
+            assert_eq!(orderer.bad_batches(), 0);
+        });
+    }
+
+    /// A Byzantine primary equivocates: every backup receives a different
+    /// forged pre-prepare for the same slot. No forged variant can gather a
+    /// prepare quorum, the stall forces a view change, and the honest batch
+    /// (carried in the backups' pending sets) commits under the new primary.
+    /// Forged variants that ride along decode-fail (trailing bytes) and are
+    /// counted as bad batches, never delivered.
+    #[test]
+    fn byzantine_equivocating_primary_is_contained() {
+        crate::util::check::fault_scenario("pbft-equivocating-primary", 0xEB02, |seed| {
+            use std::collections::HashSet;
+            let cfg = OrdererConfig {
+                consensus: ConsensusKind::Pbft,
+                consensus_nodes: 4,
+                consensus_net: crate::consensus::TransportConfig::lan(seed),
+                consensus_faults: Some(FaultPlan::new(seed).at(0.0, Fault::Equivocate(0))),
+                ..OrdererConfig::default()
+            };
+            let (peers, orderer) = network(2, cfg);
+            let rx = peers[0].subscribe("ch").unwrap();
+            for nonce in 0..5 {
+                orderer.submit(endorsed_envelope(&peers, nonce)).unwrap();
+            }
+            let mut valid: HashSet<crate::ledger::tx::TxId> = HashSet::new();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while valid.len() < 5 && Instant::now() < deadline {
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(ev) if ev.code == ValidationCode::Valid => {
+                        valid.insert(ev.tx_id);
+                    }
+                    Ok(ev) => assert_eq!(ev.code, ValidationCode::DuplicateTxId),
+                    Err(_) => break,
+                }
+            }
+            assert_eq!(valid.len(), 5, "honest batch survives the equivocator");
+            let stats = orderer.consensus_stats();
+            assert!(stats.epoch >= 1, "equivocator voted out via view change: {stats:?}");
+            assert_eq!(stats.divergence, 0, "equivocation never splits committed state");
+            assert_eq!(stats.driver_lost(), 0);
+            assert!(
+                orderer.bad_batches() >= 1,
+                "forged pre-prepare variants surface as rejected batches"
+            );
+            drop(orderer);
+            let chains: Vec<Vec<crate::crypto::Digest>> = peers
+                .iter()
+                .map(|p| {
+                    let ch = p.channel("ch").unwrap();
+                    let chain = ch.chain.lock().unwrap();
+                    chain.verify().unwrap();
+                    chain.iter().map(|b| b.hash()).collect()
+                })
+                .collect();
+            assert_eq!(chains[0], chains[1], "peers diverged under equivocation");
+        });
     }
 
     #[test]

@@ -23,12 +23,29 @@
 //!
 //! Every metric is `scalesfl_<subsystem>_<name>`, where `<subsystem>` is
 //! the module that owns the number (`mempool`, `relay`, `validator`,
-//! `orderer`, `trace`, `flight`). Counters end in `_total`; gauges and
-//! summaries end in a unit (`_seconds`, `_bytes`) or a bare noun for
-//! dimensionless levels (`_depth`). Per-shard series carry a
+//! `orderer`, `consensus`, `trace`, `flight`). Counters end in `_total`;
+//! gauges and summaries end in a unit (`_seconds`, `_bytes`) or a bare
+//! noun for dimensionless levels (`_depth`). Per-shard series carry a
 //! `channel="<shard>"` label; alternatives within one number use a
 //! discriminating label (`reason=`, `stage=`) rather than new names.
 //! Example: `scalesfl_mempool_admitted_total{channel="shard0"}`.
+//!
+//! The `scalesfl_consensus_*` family is exported by
+//! [`crate::consensus::ConsensusTelemetry`] (one collector per replica
+//! cluster, registered by the orderer driver) and carries a
+//! `protocol="raft"|"pbft"` label throughout:
+//!
+//! | metric | kind | meaning |
+//! |--------|------|---------|
+//! | `scalesfl_consensus_elections_total` / `_view_changes_total` | counter | epoch changes, named per protocol |
+//! | `scalesfl_consensus_epoch` | gauge | current term / view (max over replicas) |
+//! | `scalesfl_consensus_leader_changes_total` | counter | distinct leader handovers observed |
+//! | `scalesfl_consensus_current_leader` | gauge | leader node id, `-1` while none is reachable |
+//! | `scalesfl_consensus_commits_total` | counter | payloads committed through the cluster |
+//! | `scalesfl_consensus_divergence_total` | counter | same-slot digest mismatches across replicas (must stay 0) |
+//! | `scalesfl_consensus_messages_total{event=}` | counter | transport accounting: `sent`, `delivered`, `fault_dropped`, `in_flight` |
+//! | `scalesfl_consensus_driver_lost_messages` | gauge | sent − delivered − fault_dropped − in_flight (must stay 0) |
+//! | `scalesfl_consensus_commit_seconds{channel=}` | summary | propose→commit latency per channel, across faults |
 //!
 //! # Span stages
 //!

@@ -1,4 +1,5 @@
-//! Tiny randomized property-testing helper (proptest is unavailable offline).
+//! Tiny randomized property-testing helper (proptest is unavailable offline)
+//! plus the seeded fault-scenario harness.
 //!
 //! `check(name, cases, |rng| ...)` runs a property closure against `cases`
 //! independently seeded PRNGs and panics with the failing seed so a failure
@@ -13,15 +14,36 @@
 //!     assert_eq!(a + b, b + a);
 //! });
 //! ```
+//!
+//! [`fault_scenario`] is the single-case variant for consensus fault
+//! injection tests: the scenario runs from one seed (its default, or
+//! `SCALESFL_TEST_SEED` to replay), and a failure panics with the exact
+//! seed — "flaky in CI" becomes a one-command local repro:
+//!
+//! ```text
+//! SCALESFL_TEST_SEED=12345 cargo test -q leader_crash
+//! ```
 
 use super::prng::Prng;
 
+fn seed_from_env(var: &str) -> Option<u64> {
+    std::env::var(var).ok().and_then(|s| s.parse().ok())
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
 /// Run `prop` across `cases` seeded PRNGs; panics name the failing seed.
+/// `SCALESFL_TEST_SEED` (preferred) or `SCALESFL_CHECK_SEED` overrides the
+/// base seed to replay a reported failure.
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Prng) + std::panic::RefUnwindSafe) {
-    // Fixed base seed keeps CI deterministic; override with SCALESFL_CHECK_SEED.
-    let base: u64 = std::env::var("SCALESFL_CHECK_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
+    // Fixed base seed keeps CI deterministic.
+    let base: u64 = seed_from_env("SCALESFL_TEST_SEED")
+        .or_else(|| seed_from_env("SCALESFL_CHECK_SEED"))
         .unwrap_or(0x5CA1E5F1);
     for case in 0..cases {
         let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
@@ -30,13 +52,22 @@ pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Prng) + std::panic::RefU
             prop(&mut rng);
         });
         if let Err(e) = result {
-            let msg = e
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property '{name}' failed on case {case} (SCALESFL_CHECK_SEED={seed}): {msg}");
+            let msg = panic_message(&*e);
+            panic!("property '{name}' failed on case {case} (SCALESFL_TEST_SEED={seed}): {msg}");
         }
+    }
+}
+
+/// Run one seeded fault scenario. `f` receives the scenario seed —
+/// `default_seed`, unless `SCALESFL_TEST_SEED` overrides it for replay —
+/// and must derive *all* randomness (fault plans, link topologies) from
+/// it. On failure the panic names the seed, so a CI log line is a local
+/// repro command.
+pub fn fault_scenario(name: &str, default_seed: u64, f: impl Fn(u64) + std::panic::RefUnwindSafe) {
+    let seed = seed_from_env("SCALESFL_TEST_SEED").unwrap_or(default_seed);
+    if let Err(e) = std::panic::catch_unwind(|| f(seed)) {
+        let msg = panic_message(&*e);
+        panic!("fault scenario '{name}' failed (replay: SCALESFL_TEST_SEED={seed}): {msg}");
     }
 }
 
@@ -57,6 +88,25 @@ mod tests {
     fn failing_property_names_seed() {
         check("fails", 8, |rng| {
             assert!(rng.next_f64() < 0.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn fault_scenario_passes_default_seed() {
+        fault_scenario("uses-seed", 42, |seed| {
+            // Env override only matters when the variable is set; the
+            // harness must otherwise hand through the default.
+            if std::env::var("SCALESFL_TEST_SEED").is_err() {
+                assert_eq!(seed, 42);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "SCALESFL_TEST_SEED=")]
+    fn fault_scenario_failure_names_replay_seed() {
+        fault_scenario("always-fails", 7, |_seed| {
+            panic!("scenario bug");
         });
     }
 }
