@@ -9,7 +9,8 @@
 #   make bench          - full perf baselines (writes BENCH_mempool.json,
 #                         BENCH_gateway.json, BENCH_validation.json,
 #                         BENCH_relay.json, BENCH_telemetry.json,
-#                         BENCH_durability.json, BENCH_consensus.json)
+#                         BENCH_durability.json, BENCH_consensus.json,
+#                         BENCH_wire.json)
 #   make bench-smoke    - fast deterministic bench runs (seconds, fixed
 #                         seeds) into target/smoke/
 #   make bench-baseline - refresh the committed CI baselines in
@@ -40,6 +41,7 @@ bench:
 	cargo bench --bench telemetry
 	cargo bench --bench durability
 	cargo bench --bench consensus
+	cargo bench --bench wire
 
 bench-smoke:
 	rm -rf target/smoke
@@ -50,6 +52,7 @@ bench-smoke:
 	cargo bench --bench telemetry -- --smoke
 	cargo bench --bench durability -- --smoke
 	cargo bench --bench consensus -- --smoke
+	cargo bench --bench wire -- --smoke
 
 bench-baseline: bench-smoke
 	mkdir -p bench-baselines

@@ -28,7 +28,7 @@ cargo test -q
 # configuration (seconds, fixed seeds) into target/smoke/, then
 # bench_check fails the build if a headline metric regressed >20% against
 # the committed bench-baselines/ or the JSON schema drifted.
-echo "==> bench smoke runs (mempool, gateway_pipeline, validation, relay, telemetry, durability, consensus)"
+echo "==> bench smoke runs (mempool, gateway_pipeline, validation, relay, telemetry, durability, consensus, wire)"
 # Stale outputs (e.g. restored from a CI target/ cache, or left by a
 # removed bench) must not reach bench_check.
 rm -rf target/smoke
@@ -39,6 +39,7 @@ cargo bench --bench relay -- --smoke
 cargo bench --bench telemetry -- --smoke
 cargo bench --bench durability -- --smoke
 cargo bench --bench consensus -- --smoke
+cargo bench --bench wire -- --smoke
 
 echo "==> bench_check bench-baselines target/smoke"
 cargo run --quiet --release --bin bench_check -- bench-baselines target/smoke

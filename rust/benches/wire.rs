@@ -1,0 +1,183 @@
+//! Wire/transport bench — the multi-process fabric's regression gate.
+//!
+//! Two layers are measured:
+//!
+//! - **codec**: `encode_frame`/`decode_frame` ns per frame over a
+//!   realistically endorsed `Submit` request (the hot frame on the submit
+//!   path). The hardened decoder validates every length against the
+//!   remaining buffer; this gate catches that validation getting
+//!   accidentally expensive.
+//! - **loopback TCP**: a full orderer-with-peers node served in-process
+//!   over `tcp:127.0.0.1:0`, driven by [`RemoteGateway`] — one closed-loop
+//!   arm for commit latency percentiles, one pipelined arm (submit all,
+//!   then drain the handles) for end-to-end socket throughput. Every
+//!   submitted transaction must come back committed: lost commits are a
+//!   zero-baselined headline, so a demux or framing regression that drops
+//!   events fails CI even if the timing numbers survive.
+//!
+//!     cargo bench --bench wire [-- --smoke]    (or `make bench`)
+
+use std::time::Instant;
+
+use scalesfl::crypto::msp::MemberId;
+use scalesfl::fabric::wire::{decode_frame, encode_frame, Frame, Request};
+use scalesfl::fabric::CommitOutcome;
+use scalesfl::ledger::tx::Proposal;
+use scalesfl::network::node::{bind_and_serve, FabricNode, NodeConfig};
+use scalesfl::network::transport::Endpoint;
+use scalesfl::network::RemoteGateway;
+use scalesfl::util::json::Json;
+
+fn proposal(key: &str, nonce: u64) -> Proposal {
+    Proposal {
+        channel: "ch".into(),
+        chaincode: "kv".into(),
+        function: "Put".into(),
+        args: vec![key.into(), "ab".repeat(32)],
+        creator: MemberId::new("client"),
+        nonce,
+    }
+}
+
+/// Percentile over a sorted copy of `samples` (nearest-rank).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (codec_iters, closed_txs, pipelined_txs) =
+        if smoke { (10_000u64, 24u64, 64u64) } else { (200_000, 200, 1_000) };
+    println!(
+        "# wire bench{} — frame codec + loopback TCP fabric\n",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    // ---- codec arm: one endorsed Submit frame, encoded/decoded in a loop.
+    let node = FabricNode::build(&NodeConfig::default());
+    let envelope = node.gateway.endorse(&proposal("codec", 0)).expect("endorse codec envelope");
+    let frame = Frame::Request(Request::Submit { id: 42, envelope });
+    let bytes = encode_frame(&frame);
+    let frame_bytes = bytes.len();
+
+    // The checksum keeps the optimizer honest: both loops feed an assert.
+    let mut sink = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..codec_iters {
+        sink += encode_frame(&frame).len();
+    }
+    let encode_ns = t0.elapsed().as_secs_f64() * 1e9 / codec_iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..codec_iters {
+        let decoded = decode_frame(&bytes).expect("decode");
+        sink += usize::from(matches!(decoded, Frame::Request(_)));
+    }
+    let decode_ns = t0.elapsed().as_secs_f64() * 1e9 / codec_iters as f64;
+    assert_eq!(sink, codec_iters as usize * (frame_bytes + 1));
+    println!("codec: {frame_bytes} B/frame, encode {encode_ns:.0} ns, decode {decode_ns:.0} ns");
+
+    // ---- loopback arms: a real served node, driven over the socket.
+    let ep = Endpoint::parse("tcp:127.0.0.1:0").expect("loopback endpoint");
+    let (local, _accept) =
+        bind_and_serve(FabricNode::build(&NodeConfig::default()), &ep).expect("bind loopback");
+    let gw = RemoteGateway::connect(&local).expect("connect loopback");
+
+    // Closed loop: one tx in flight, per-commit latency.
+    let mut latencies_ms = Vec::with_capacity(closed_txs as usize);
+    let mut committed = 0u64;
+    for i in 0..closed_txs {
+        let out = gw.submit_and_wait(&proposal(&format!("closed{i}"), i));
+        if let CommitOutcome::Committed { latency, .. } = out {
+            committed += 1;
+            latencies_ms.push(latency.as_secs_f64() * 1e3);
+        }
+    }
+    let p50 = percentile(&latencies_ms, 50.0);
+    let p95 = percentile(&latencies_ms, 95.0);
+    println!("closed loop: {committed}/{closed_txs} committed, p50 {p50:.2} ms, p95 {p95:.2} ms");
+
+    // Pipelined: submit everything, then drain the handles.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..pipelined_txs)
+        .map(|i| gw.submit(&proposal(&format!("pipe{i}"), closed_txs + i)))
+        .collect();
+    let mut pipelined_committed = 0u64;
+    for h in handles {
+        if h.wait().is_valid() {
+            pipelined_committed += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tps = pipelined_committed as f64 / wall_s;
+    println!(
+        "pipelined: {pipelined_committed}/{pipelined_txs} committed in {wall_s:.2} s ({tps:.0} tx/s)"
+    );
+    let lost = (closed_txs - committed) + (pipelined_txs - pipelined_committed);
+
+    let headline = Json::Arr(vec![
+        Json::obj()
+            .set("metric", "frame_encode_ns")
+            .set("value", encode_ns)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "frame_decode_ns")
+            .set("value", decode_ns)
+            .set("higher_is_better", false),
+        Json::obj()
+            .set("metric", "loopback_pipelined_tps")
+            .set("value", tps)
+            .set("higher_is_better", true),
+        Json::obj()
+            .set("metric", "remote_commits_lost")
+            .set("value", lost as f64)
+            .set("higher_is_better", false),
+    ]);
+    let out = Json::obj()
+        .set("bench", "wire")
+        .set("mode", if smoke { "smoke" } else { "full" })
+        .set(
+            "config",
+            Json::obj()
+                .set("codec_iters", codec_iters)
+                .set("closed_txs", closed_txs)
+                .set("pipelined_txs", pipelined_txs),
+        )
+        .set(
+            "codec",
+            Json::obj()
+                .set("frame_bytes", frame_bytes)
+                .set("encode_ns", encode_ns)
+                .set("decode_ns", decode_ns),
+        )
+        .set(
+            "closed_loop",
+            Json::obj()
+                .set("txs", closed_txs)
+                .set("committed", committed)
+                .set("commit_p50_ms", p50)
+                .set("commit_p95_ms", p95),
+        )
+        .set(
+            "pipelined",
+            Json::obj()
+                .set("txs", pipelined_txs)
+                .set("committed", pipelined_committed)
+                .set("wall_s", wall_s)
+                .set("tps", tps),
+        )
+        .set("headline", headline);
+    let path = if smoke {
+        std::fs::create_dir_all("target/smoke").expect("create target/smoke");
+        "target/smoke/BENCH_wire.json"
+    } else {
+        "BENCH_wire.json"
+    };
+    std::fs::write(path, format!("{out}\n")).expect("write BENCH_wire.json");
+    println!("wrote {path}");
+}

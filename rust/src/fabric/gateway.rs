@@ -29,6 +29,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ledger::block::ValidationCode;
+use crate::ledger::envelope::SharedEnvelope;
 use crate::ledger::tx::{Envelope, Proposal, TxId};
 use crate::mempool::Reject;
 use crate::telemetry::{self, Stage};
@@ -95,8 +96,28 @@ pub struct SubmitHandle {
 }
 
 impl SubmitHandle {
-    fn resolved(tx_id: TxId, started: Instant, timeout: Duration, out: CommitOutcome) -> Self {
+    /// An already-decided handle. `pub(crate)` so the remote client library
+    /// can surface submit-time verdicts with the same API.
+    pub(crate) fn resolved(
+        tx_id: TxId,
+        started: Instant,
+        timeout: Duration,
+        out: CommitOutcome,
+    ) -> Self {
         SubmitHandle { tx_id, started, timeout, state: HandleState::Resolved(out) }
+    }
+
+    /// A handle awaiting a [`WaiterEvent`] through `waiter`'s table.
+    /// `pub(crate)` so the remote client library can hand out real
+    /// `SubmitHandle`s whose events are fed by its connection reader.
+    pub(crate) fn pending(
+        tx_id: TxId,
+        started: Instant,
+        timeout: Duration,
+        rx: mpsc::Receiver<WaiterEvent>,
+        waiter: Arc<CommitWaiter>,
+    ) -> Self {
+        SubmitHandle { tx_id, started, timeout, state: HandleState::Pending { rx, waiter } }
     }
 
     pub fn tx_id(&self) -> TxId {
@@ -222,8 +243,11 @@ impl Gateway {
 
     /// Endorse in parallel across peers; require every collected rw-set to
     /// agree (Fabric's determinism requirement — identical model hashes
-    /// evaluate identically, paper §3.3).
-    pub fn endorse(&self, proposal: &Proposal) -> Result<Envelope, String> {
+    /// evaluate identically, paper §3.3). The result is the canonical
+    /// [`SharedEnvelope`], encoded exactly once here at proposal time —
+    /// every later hop (admission, relay, batch splice, a `Submit` frame
+    /// over a socket) reuses the same buffer.
+    pub fn endorse(&self, proposal: &Proposal) -> Result<SharedEnvelope, String> {
         let results: Vec<_> = std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .endorsers
@@ -255,7 +279,9 @@ impl Gateway {
             }
         }
         match rw {
-            Some(rw_set) => Ok(Envelope { proposal: proposal.clone(), rw_set, endorsements }),
+            Some(rw_set) => {
+                Ok(Envelope { proposal: proposal.clone(), rw_set, endorsements }.into())
+            }
             None => Err(format!("all endorsements failed: {}", errors.join("; "))),
         }
     }
@@ -266,7 +292,7 @@ impl Gateway {
     /// an ingress pool and then dropped (home pool full, shutdown, …)
     /// resolves its handle as `Rejected` instead of leaking an
     /// eternally-pending waiter slot until the client's timeout.
-    fn waiter(&self, channel: &str) -> Result<Arc<CommitWaiter>, String> {
+    pub(crate) fn waiter(&self, channel: &str) -> Result<Arc<CommitWaiter>, String> {
         let mut waiters = self.waiters.lock().unwrap();
         if let Some(w) = waiters.get(channel) {
             return Ok(Arc::clone(w));
@@ -294,7 +320,7 @@ impl Gateway {
         &self,
         proposal: &Proposal,
         started: Instant,
-    ) -> Result<(Envelope, Arc<CommitWaiter>), SubmitHandle> {
+    ) -> Result<(SharedEnvelope, Arc<CommitWaiter>), SubmitHandle> {
         let fail = |reason: String| {
             let out = CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() };
             SubmitHandle::resolved(proposal.tx_id(), started, self.timeout, out)
@@ -311,10 +337,11 @@ impl Gateway {
 
     /// The back half: register with the demux, then pass admission control.
     /// Reusable with the same envelope (no re-endorsement) when admission
-    /// bounces it with backpressure.
-    fn order_endorsed(
+    /// bounces it with backpressure. Also the entry point for the node
+    /// server's remotely-submitted envelopes (already canonical bytes).
+    pub(crate) fn order_endorsed(
         &self,
-        envelope: Envelope,
+        envelope: SharedEnvelope,
         waiter: &Arc<CommitWaiter>,
         started: Instant,
     ) -> SubmitHandle {
@@ -385,8 +412,8 @@ impl Gateway {
                 Ok((envelope, waiter)) => {
                     // Endorsement is the expensive half; PoolFull retries
                     // re-order the *same* envelope after waiting out the
-                    // oldest in-flight tx. The clone per attempt is cheap:
-                    // envelopes carry hash+URI metadata, never weights.
+                    // oldest in-flight tx. The clone per attempt is a
+                    // refcount bump on the canonical buffer.
                     let mut h = self.order_endorsed(envelope.clone(), &waiter, started);
                     while matches!(
                         h.outcome(),

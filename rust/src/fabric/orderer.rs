@@ -51,10 +51,9 @@ use crate::consensus::pbft::{self, Pbft, PbftConfig};
 use crate::consensus::raft::{Raft, RaftConfig};
 use crate::consensus::{Cluster, ClusterStats, ConsensusNode, FaultPlan, TransportConfig};
 use crate::crypto::{sha256, Digest};
-use crate::ledger::state::StateView;
 use crate::ledger::envelope::SharedEnvelope;
+use crate::ledger::state::StateView;
 use crate::ledger::store::LedgerConfig;
-use crate::ledger::tx::Envelope;
 use crate::mempool::{MempoolConfig, MempoolRegistry, Reject, Relay, RelayConfig};
 use crate::util::clock::SystemClock;
 use crate::util::prng::Prng;
@@ -328,8 +327,10 @@ impl OrderingService {
 
     /// Submit an endorsed envelope for ordering, routed straight to its
     /// home channel's pool. `Err` is explicit backpressure from admission
-    /// control — the envelope was *not* queued.
-    pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
+    /// control — the envelope was *not* queued. Accepts anything
+    /// convertible to the canonical [`SharedEnvelope`]; callers already
+    /// holding one (gateways, the node server) pay no re-encode.
+    pub fn submit(&self, env: impl Into<SharedEnvelope>) -> Result<(), Reject> {
         self.submit_from(None, env)
     }
 
@@ -337,13 +338,18 @@ impl OrderingService {
     /// `ingress` set, an envelope whose home channel differs from the
     /// ingress is admitted for forwarding and hops home over a simnet
     /// link latency; otherwise this is [`OrderingService::submit`].
-    pub fn submit_from(&self, ingress: Option<&str>, env: Envelope) -> Result<(), Reject> {
+    pub fn submit_from(
+        &self,
+        ingress: Option<&str>,
+        env: impl Into<SharedEnvelope>,
+    ) -> Result<(), Reject> {
         if self.shutdown.load(Ordering::Relaxed) {
             return Err(Reject::Shutdown);
         }
+        let env = env.into();
         match (&self.relay, ingress) {
             (Some(relay), Some(local)) => relay.ingress(local, env),
-            _ => self.mempool.submit(env),
+            _ => self.mempool.submit_shared(env),
         }
     }
 
@@ -618,7 +624,7 @@ mod tests {
     use crate::fabric::chaincode::{Chaincode, TxContext};
     use crate::fabric::endorsement::EndorsementPolicy;
     use crate::ledger::block::ValidationCode;
-    use crate::ledger::tx::Proposal;
+    use crate::ledger::tx::{Envelope, Proposal};
 
     struct PutAs(&'static str);
     impl Chaincode for PutAs {

@@ -19,6 +19,14 @@
 //! door, a handle whose transaction died in the relay would pend until
 //! its timeout with no event ever arriving — the `Subscription` /
 //! `CommitWaiter` slot leak the relay work exposed.
+//!
+//! The multi-process split reuses this table on both sides of the socket:
+//! the node server registers *callbacks* ([`CommitWaiter::register_callback`])
+//! that turn commit events into outbound `Event` frames without a thread
+//! per in-flight transaction, and the remote client holds a thread-less
+//! [`CommitWaiter::external`] table whose events are fed by its connection
+//! reader through [`CommitWaiter::complete`] — so `SubmitHandle` semantics
+//! are identical in-process and across a socket.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -45,10 +53,59 @@ pub enum WaiterEvent {
     Dropped(Reject, Instant),
 }
 
+/// One registered waiter: either a one-shot channel drained by a
+/// `SubmitHandle`, or a callback invoked on the dispatching thread (the
+/// node server's frame writer path).
+enum Slot {
+    Chan(mpsc::Sender<WaiterEvent>),
+    Callback(Box<dyn FnOnce(WaiterEvent) + Send>),
+}
+
+impl Slot {
+    fn resolve(self, ev: WaiterEvent) {
+        match self {
+            Slot::Chan(tx) => {
+                let _ = tx.send(ev);
+            }
+            Slot::Callback(cb) => cb(ev),
+        }
+    }
+}
+
 struct WaiterTable {
-    waiters: Mutex<HashMap<TxId, mpsc::Sender<WaiterEvent>>>,
+    waiters: Mutex<HashMap<TxId, Slot>>,
     high_water: AtomicUsize,
     shutdown: AtomicBool,
+}
+
+impl WaiterTable {
+    fn fresh() -> Arc<WaiterTable> {
+        Arc::new(WaiterTable {
+            waiters: Mutex::new(HashMap::new()),
+            high_water: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Route one commit event to the waiter registered under its tx id
+    /// (events for unknown ids — handle dropped, other gateways' traffic —
+    /// are discarded without cloning further).
+    fn dispatch_commit(&self, ev: CommitEvent) -> bool {
+        // Stamp the commit-event receive time and close the lifecycle
+        // trace. First dispatcher to see the event wins; replica/peer
+        // fan-out makes later calls no-ops.
+        crate::telemetry::global().complete_commit(&ev.tx_id);
+        // Take the slot out before resolving it: callbacks must run with
+        // the table unlocked (a callback is free to register new waiters).
+        let slot = self.waiters.lock().unwrap().remove(&ev.tx_id);
+        match slot {
+            Some(slot) => {
+                slot.resolve(WaiterEvent::Committed(ev, Instant::now()));
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Per-channel commit-event router. Owned by a [`super::Gateway`] (one per
@@ -59,19 +116,17 @@ pub struct CommitWaiter {
     shared: Arc<WaiterTable>,
     /// Detached on drop: the thread notices the shutdown flag within
     /// [`IDLE_TICK`] and exits on its own (joining here would stall
-    /// gateway teardown by up to a tick per channel).
-    _thread: thread::JoinHandle<()>,
+    /// gateway teardown by up to a tick per channel). `None` for
+    /// [`CommitWaiter::external`] tables, whose events arrive from an
+    /// outside dispatcher.
+    _thread: Option<thread::JoinHandle<()>>,
 }
 
 impl CommitWaiter {
     /// Take ownership of `sub` (the channel's single commit-event stream)
     /// and start the demux thread.
     pub fn start(channel: &str, sub: Subscription) -> CommitWaiter {
-        let shared = Arc::new(WaiterTable {
-            waiters: Mutex::new(HashMap::new()),
-            high_water: AtomicUsize::new(0),
-            shutdown: AtomicBool::new(false),
-        });
+        let shared = WaiterTable::fresh();
         let table = Arc::clone(&shared);
         let thread = thread::Builder::new()
             .name(format!("commit-demux-{channel}"))
@@ -81,23 +136,22 @@ impl CommitWaiter {
                 }
                 match sub.recv_timeout(IDLE_TICK) {
                     Ok(ev) => {
-                        // Stamp the commit-event receive time and close the
-                        // lifecycle trace. First demux to see the event wins;
-                        // replica/peer fan-out makes later calls no-ops.
-                        crate::telemetry::global().complete_commit(&ev.tx_id);
-                        // At most one waiter per tx id; events for unknown
-                        // ids (handle dropped, other gateways' traffic) are
-                        // discarded without cloning further.
-                        if let Some(tx) = table.waiters.lock().unwrap().remove(&ev.tx_id) {
-                            let _ = tx.send(WaiterEvent::Committed(ev, Instant::now()));
-                        }
+                        table.dispatch_commit(ev);
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             })
             .expect("spawn commit demux");
-        CommitWaiter { shared, _thread: thread }
+        CommitWaiter { shared, _thread: Some(thread) }
+    }
+
+    /// A waiter table with no subscription and no demux thread: commit
+    /// events arrive from outside through [`CommitWaiter::complete`] /
+    /// [`CommitWaiter::reject`]. The remote client library uses this —
+    /// its connection reader thread *is* the demux.
+    pub fn external() -> CommitWaiter {
+        CommitWaiter { shared: WaiterTable::fresh(), _thread: None }
     }
 
     /// Register a waiter for `tx_id`; must happen before the envelope is
@@ -109,9 +163,29 @@ impl CommitWaiter {
         if waiters.contains_key(&tx_id) {
             return None;
         }
-        waiters.insert(tx_id, tx);
+        waiters.insert(tx_id, Slot::Chan(tx));
         self.shared.high_water.fetch_max(waiters.len(), Ordering::Relaxed);
         Some(rx)
+    }
+
+    /// Register a callback for `tx_id` instead of a drainable channel:
+    /// invoked exactly once, on the dispatching thread, when the commit
+    /// event (or a relay drop) arrives. The node server uses this to turn
+    /// commit events into outbound socket frames without a thread per
+    /// in-flight transaction. Returns `false` (registering nothing) if
+    /// the tx is already awaited.
+    pub fn register_callback(
+        &self,
+        tx_id: TxId,
+        cb: Box<dyn FnOnce(WaiterEvent) + Send>,
+    ) -> bool {
+        let mut waiters = self.shared.waiters.lock().unwrap();
+        if waiters.contains_key(&tx_id) {
+            return false;
+        }
+        waiters.insert(tx_id, Slot::Callback(cb));
+        self.shared.high_water.fetch_max(waiters.len(), Ordering::Relaxed);
+        true
     }
 
     /// Forget a waiter (submission rejected, or its handle was dropped
@@ -120,13 +194,23 @@ impl CommitWaiter {
         self.shared.waiters.lock().unwrap().remove(tx_id);
     }
 
+    /// Route one commit event to its registered waiter. This is the demux
+    /// thread's dispatch path, public so an external dispatcher (the
+    /// remote client's connection reader, turning `Event::Committed`
+    /// frames back into [`CommitEvent`]s) can resolve waiters the same
+    /// way. Returns whether a waiter was registered for the event's tx.
+    pub fn complete(&self, ev: CommitEvent) -> bool {
+        self.shared.dispatch_commit(ev)
+    }
+
     /// Resolve a waiter with a pre-ordering failure (relay drop): the
     /// handle sees `CommitOutcome::Rejected` instead of pending until its
     /// timeout. Returns whether a waiter was registered for `tx_id`.
     pub fn reject(&self, tx_id: &TxId, reject: Reject) -> bool {
-        match self.shared.waiters.lock().unwrap().remove(tx_id) {
-            Some(tx) => {
-                let _ = tx.send(WaiterEvent::Dropped(reject, Instant::now()));
+        let slot = self.shared.waiters.lock().unwrap().remove(tx_id);
+        match slot {
+            Some(slot) => {
+                slot.resolve(WaiterEvent::Dropped(reject, Instant::now()));
                 true
             }
             None => false,

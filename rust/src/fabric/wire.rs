@@ -1,31 +1,80 @@
-//! Binary wire format for envelopes and block payloads — what the ordering
-//! service replicates through consensus, and (block-framed) what the
-//! durable ledger (`crate::ledger::store`) persists per record.
+//! Binary wire format for envelopes, block payloads, and — since the
+//! multi-process split — the request/response/event frames that fabric
+//! processes exchange over TCP/UDS sockets.
 //!
 //! The per-envelope codec lives in `crate::ledger::envelope` (re-exported
 //! here) because the canonical encoding *is* the in-memory representation:
-//! a [`SharedEnvelope`] carries its wire bytes, so batch and block
+//! a [`SharedEnvelope`] carries its wire bytes, so batch, block, and frame
 //! serialization splice those buffers (`Writer::raw`) instead of
 //! re-encoding field by field, and decoding a payload yields
 //! `SharedEnvelope`s whose buffers are sub-slices copied straight out of
 //! the payload with the decoded form pre-seeded.
+//!
+//! # Process topology
+//!
+//! `scalesfl node orderer` hosts an ordering service plus its endorsing
+//! peers for a set of channels; `scalesfl node gateway` fronts one or more
+//! orderer processes and relays each client connection to the upstream
+//! that owns the requested channel. A remote client
+//! ([`crate::network::client::RemoteGateway`]) connects to either, sends
+//! [`Request`] frames and receives correlated [`Response`] frames, while
+//! [`Event`] frames stream back asynchronously on the same connection as
+//! transactions commit — which is what lets the client library rebuild the
+//! in-process `SubmitHandle`/`CommitWaiter` semantics across a socket.
+//!
+//! # Frame grammar
+//!
+//! Every frame travels length-prefixed by the transport
+//! ([`crate::network::transport`]); the payload grammar uses the codec's
+//! little-endian primitives (`bytes` = u32 len + raw, `str` = UTF-8
+//! `bytes`, `bytes32` = `bytes` whose length must be 32):
+//!
+//! ```text
+//! frame    = 0x00 request | 0x01 response | 0x02 event
+//! request  = 0x00 id:u64 proposal                              ; Endorse
+//!          | 0x01 id:u64 envelope:bytes                        ; Submit
+//!          | 0x02 id:u64 channel:str                           ; Status
+//! response = 0x00 id:u64 envelope:bytes                        ; Endorsed
+//!          | 0x01 id:u64 tx_id:bytes32                         ; Accepted
+//!          | 0x02 id:u64 reject:u8                             ; Rejected
+//!          | 0x03 id:u64 reason:str                            ; Failed
+//!          | 0x04 id:u64 height:u64 tip:bytes32 root:bytes32   ; Status
+//! event    = 0x00 channel:str tx_id:bytes32 block:u64 code:u8  ; Committed
+//!          | 0x01 channel:str tx_id:bytes32 reject:u8          ; Dropped
+//! ```
+//!
+//! Decoders here never trust a length or count prefix: every one is
+//! validated against the bytes actually remaining (`Reader::count`, and
+//! bounds-checked reads) before any allocation is sized from it, and all
+//! errors are the typed [`WireError`] — [`WireError::Truncated`] for torn
+//! input a transport may retry, [`WireError::Malformed`] for structurally
+//! invalid frames that warrant closing the connection.
 
 use crate::crypto::Digest;
 use crate::ledger::block::{Block, BlockHeader, ValidationCode};
 use crate::ledger::codec::{Reader, Writer};
 use crate::ledger::envelope::SharedEnvelope;
+use crate::ledger::tx::{Proposal, TxId};
+use crate::mempool::Reject;
 
-pub use crate::ledger::envelope::{decode_envelope, encode_envelope};
+pub use crate::ledger::codec::WireError;
+pub use crate::ledger::envelope::{
+    decode_envelope, decode_proposal, encode_envelope, encode_proposal,
+};
 
 /// Decode one envelope out of a larger payload, carving its canonical
 /// byte span into a fresh [`SharedEnvelope`] (decoded form pre-seeded, so
 /// nothing downstream re-parses).
-fn decode_shared(r: &mut Reader<'_>) -> Result<SharedEnvelope, String> {
+pub fn decode_shared(r: &mut Reader<'_>) -> Result<SharedEnvelope, WireError> {
     let start = r.pos();
     let env = decode_envelope(r)?;
     let bytes = r.underlying()[start..r.pos()].to_vec();
     Ok(SharedEnvelope::from_wire_decoded(bytes, env))
 }
+
+/// Minimum wire size of an envelope: eight length/count prefixes plus the
+/// nonce, all fields empty. Bounds `Reader::count` on envelope sequences.
+const MIN_ENVELOPE: usize = 8 * 4 + 8;
 
 /// A consensus payload: one cut batch for one channel. Envelope buffers
 /// are spliced, not re-encoded.
@@ -39,16 +88,16 @@ pub fn encode_batch(channel: &str, envs: &[SharedEnvelope]) -> Vec<u8> {
 }
 
 /// Decode a consensus payload into (channel, envelopes).
-pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<SharedEnvelope>), String> {
+pub fn decode_batch(buf: &[u8]) -> Result<(String, Vec<SharedEnvelope>), WireError> {
     let mut r = Reader::new(buf);
     let channel = r.str()?;
-    let n = r.u32()? as usize;
-    let mut envs = Vec::with_capacity(n.min(4096));
+    let n = r.count(MIN_ENVELOPE)?;
+    let mut envs = Vec::with_capacity(n);
     for _ in 0..n {
         envs.push(decode_shared(&mut r)?);
     }
     if !r.done() {
-        return Err("trailing bytes in batch".into());
+        return Err(WireError::malformed("trailing bytes in batch"));
     }
     Ok((channel, envs))
 }
@@ -62,19 +111,44 @@ fn code_to_u8(c: ValidationCode) -> u8 {
     }
 }
 
-fn code_from_u8(b: u8) -> Result<ValidationCode, String> {
+fn code_from_u8(b: u8) -> Result<ValidationCode, WireError> {
     match b {
         0 => Ok(ValidationCode::Valid),
         1 => Ok(ValidationCode::MvccConflict),
         2 => Ok(ValidationCode::EndorsementPolicyFailure),
         3 => Ok(ValidationCode::DuplicateTxId),
-        other => Err(format!("unknown validation code {other}")),
+        other => Err(WireError::Malformed(format!("unknown validation code {other}"))),
     }
 }
 
-fn digest(r: &mut Reader<'_>) -> Result<Digest, String> {
+fn reject_to_u8(rej: Reject) -> u8 {
+    match rej {
+        Reject::PoolFull => 0,
+        Reject::RateLimited => 1,
+        Reject::Duplicate => 2,
+        Reject::BadSignature => 3,
+        Reject::PolicyUnsatisfiable => 4,
+        Reject::StaleReadSet => 5,
+        Reject::Shutdown => 6,
+    }
+}
+
+fn reject_from_u8(b: u8) -> Result<Reject, WireError> {
+    match b {
+        0 => Ok(Reject::PoolFull),
+        1 => Ok(Reject::RateLimited),
+        2 => Ok(Reject::Duplicate),
+        3 => Ok(Reject::BadSignature),
+        4 => Ok(Reject::PolicyUnsatisfiable),
+        5 => Ok(Reject::StaleReadSet),
+        6 => Ok(Reject::Shutdown),
+        other => Err(WireError::Malformed(format!("unknown reject code {other}"))),
+    }
+}
+
+fn digest(r: &mut Reader<'_>) -> Result<Digest, WireError> {
     let b: [u8; 32] =
-        r.bytes()?.try_into().map_err(|_| "bad digest length".to_string())?;
+        r.bytes()?.try_into().map_err(|_| WireError::malformed("bad digest length"))?;
     Ok(Digest(b))
 }
 
@@ -98,24 +172,199 @@ pub fn encode_block(b: &Block, w: &mut Writer) {
 }
 
 /// Deserialize one block (inverse of [`encode_block`]).
-pub fn decode_block(r: &mut Reader<'_>) -> Result<Block, String> {
+pub fn decode_block(r: &mut Reader<'_>) -> Result<Block, WireError> {
     let number = r.u64()?;
     let prev_hash = digest(r)?;
     let data_hash = digest(r)?;
-    let ntxs = r.u32()? as usize;
-    let mut txs = Vec::with_capacity(ntxs.min(4096));
+    let ntxs = r.count(MIN_ENVELOPE)?;
+    let mut txs = Vec::with_capacity(ntxs);
     for _ in 0..ntxs {
         txs.push(decode_shared(r)?);
     }
-    let ncodes = r.u32()? as usize;
+    let ncodes = r.count(1)?;
     if ncodes != ntxs {
-        return Err(format!("{ncodes} validation codes for {ntxs} txs"));
+        return Err(WireError::Malformed(format!("{ncodes} validation codes for {ntxs} txs")));
     }
     let mut validation = Vec::with_capacity(ncodes);
     for _ in 0..ncodes {
         validation.push(code_from_u8(r.u8()?)?);
     }
     Ok(Block { header: BlockHeader { number, prev_hash, data_hash }, txs, validation })
+}
+
+/// Correlation id pairing a [`Request`] with its [`Response`] on one
+/// connection. Allocated by the client; echoed verbatim by the server.
+pub type RequestId = u64;
+
+/// Client → server frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Simulate + endorse a proposal; the server answers
+    /// [`Response::Endorsed`] with the canonical envelope bytes (or
+    /// [`Response::Failed`]).
+    Endorse { id: RequestId, proposal: Proposal },
+    /// Submit a canonical envelope for ordering. The server answers
+    /// [`Response::Accepted`] / [`Response::Rejected`]; commit resolution
+    /// streams back later as an [`Event`] on the same connection.
+    Submit { id: RequestId, envelope: SharedEnvelope },
+    /// Query one channel's chain position (height, tip hash, state root).
+    Status { id: RequestId, channel: String },
+}
+
+/// Server → client frames correlated to a [`Request`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Endorsement succeeded; carries the canonical envelope encoding the
+    /// client should submit back verbatim.
+    Endorsed { id: RequestId, envelope: SharedEnvelope },
+    /// Submission admitted to the mempool; an [`Event`] will resolve it.
+    Accepted { id: RequestId, tx_id: TxId },
+    /// Submission refused at admission.
+    Rejected { id: RequestId, reject: Reject },
+    /// The request failed outright (endorsement error, unknown channel).
+    Failed { id: RequestId, reason: String },
+    /// Chain position snapshot for a [`Request::Status`].
+    Status { id: RequestId, height: u64, tip: Digest, state_root: Digest },
+}
+
+/// Server → client frames not correlated to any request: the commit
+/// stream that backs remote `SubmitHandle` resolution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A transaction reached a committed block (the commit-time
+    /// [`ValidationCode`] says whether it validated).
+    Committed { channel: String, tx_id: TxId, block: u64, code: ValidationCode },
+    /// A transaction was dropped before commit (relay loss, shutdown).
+    Dropped { channel: String, tx_id: TxId, reject: Reject },
+}
+
+/// One protocol frame — the unit the transport length-prefixes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(Request),
+    Response(Response),
+    Event(Event),
+}
+
+/// Write an envelope as a length-prefixed field (canonical buffer
+/// spliced, not re-encoded).
+fn put_envelope(w: &mut Writer, env: &SharedEnvelope) {
+    w.u32(env.encoded_len() as u32);
+    env.write_to(w);
+}
+
+/// Read a length-prefixed envelope field, fully decoding it (the frame
+/// boundary is the trust boundary) and carving the canonical bytes into a
+/// [`SharedEnvelope`] with the decoded form pre-seeded.
+fn get_envelope(r: &mut Reader<'_>) -> Result<SharedEnvelope, WireError> {
+    let span = r.bytes()?;
+    let mut er = Reader::new(span);
+    let env = decode_envelope(&mut er)?;
+    if !er.done() {
+        return Err(WireError::malformed("trailing bytes in envelope field"));
+    }
+    Ok(SharedEnvelope::from_wire_decoded(span.to_vec(), env))
+}
+
+/// Serialize one frame (the transport adds the outer length prefix).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut w = Writer::new();
+    match f {
+        Frame::Request(req) => {
+            w.u8(0);
+            match req {
+                Request::Endorse { id, proposal } => {
+                    w.u8(0).u64(*id);
+                    encode_proposal(proposal, &mut w);
+                }
+                Request::Submit { id, envelope } => {
+                    w.u8(1).u64(*id);
+                    put_envelope(&mut w, envelope);
+                }
+                Request::Status { id, channel } => {
+                    w.u8(2).u64(*id).str(channel);
+                }
+            }
+        }
+        Frame::Response(resp) => {
+            w.u8(1);
+            match resp {
+                Response::Endorsed { id, envelope } => {
+                    w.u8(0).u64(*id);
+                    put_envelope(&mut w, envelope);
+                }
+                Response::Accepted { id, tx_id } => {
+                    w.u8(1).u64(*id).bytes(&tx_id.0);
+                }
+                Response::Rejected { id, reject } => {
+                    w.u8(2).u64(*id).u8(reject_to_u8(*reject));
+                }
+                Response::Failed { id, reason } => {
+                    w.u8(3).u64(*id).str(reason);
+                }
+                Response::Status { id, height, tip, state_root } => {
+                    w.u8(4).u64(*id).u64(*height).bytes(&tip.0).bytes(&state_root.0);
+                }
+            }
+        }
+        Frame::Event(ev) => {
+            w.u8(2);
+            match ev {
+                Event::Committed { channel, tx_id, block, code } => {
+                    w.u8(0).str(channel).bytes(&tx_id.0).u64(*block).u8(code_to_u8(*code));
+                }
+                Event::Dropped { channel, tx_id, reject } => {
+                    w.u8(1).str(channel).bytes(&tx_id.0).u8(reject_to_u8(*reject));
+                }
+            }
+        }
+    }
+    w.finish()
+}
+
+/// Deserialize one frame; the buffer must contain exactly one frame.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, WireError> {
+    let mut r = Reader::new(buf);
+    let frame = match r.u8()? {
+        0 => Frame::Request(match r.u8()? {
+            0 => Request::Endorse { id: r.u64()?, proposal: decode_proposal(&mut r)? },
+            1 => Request::Submit { id: r.u64()?, envelope: get_envelope(&mut r)? },
+            2 => Request::Status { id: r.u64()?, channel: r.str()? },
+            t => return Err(WireError::Malformed(format!("unknown request tag {t}"))),
+        }),
+        1 => Frame::Response(match r.u8()? {
+            0 => Response::Endorsed { id: r.u64()?, envelope: get_envelope(&mut r)? },
+            1 => Response::Accepted { id: r.u64()?, tx_id: digest(&mut r)? },
+            2 => Response::Rejected { id: r.u64()?, reject: reject_from_u8(r.u8()?)? },
+            3 => Response::Failed { id: r.u64()?, reason: r.str()? },
+            4 => Response::Status {
+                id: r.u64()?,
+                height: r.u64()?,
+                tip: digest(&mut r)?,
+                state_root: digest(&mut r)?,
+            },
+            t => return Err(WireError::Malformed(format!("unknown response tag {t}"))),
+        }),
+        2 => Frame::Event(match r.u8()? {
+            0 => Event::Committed {
+                channel: r.str()?,
+                tx_id: digest(&mut r)?,
+                block: r.u64()?,
+                code: code_from_u8(r.u8()?)?,
+            },
+            1 => Event::Dropped {
+                channel: r.str()?,
+                tx_id: digest(&mut r)?,
+                reject: reject_from_u8(r.u8()?)?,
+            },
+            t => return Err(WireError::Malformed(format!("unknown event tag {t}"))),
+        }),
+        t => return Err(WireError::Malformed(format!("unknown frame tag {t}"))),
+    };
+    if !r.done() {
+        return Err(WireError::malformed("trailing bytes after frame"));
+    }
+    Ok(frame)
 }
 
 #[cfg(test)]
@@ -175,6 +424,79 @@ mod tests {
         }
     }
 
+    fn random_digest(rng: &mut Prng) -> Digest {
+        let mut d = [0u8; 32];
+        for c in d.chunks_mut(8) {
+            c.copy_from_slice(&rng.next_u64().to_le_bytes()[..c.len()]);
+        }
+        Digest(d)
+    }
+
+    fn random_frame(rng: &mut Prng) -> Frame {
+        let rejects = [
+            Reject::PoolFull,
+            Reject::RateLimited,
+            Reject::Duplicate,
+            Reject::BadSignature,
+            Reject::PolicyUnsatisfiable,
+            Reject::StaleReadSet,
+            Reject::Shutdown,
+        ];
+        let codes = [
+            ValidationCode::Valid,
+            ValidationCode::MvccConflict,
+            ValidationCode::EndorsementPolicyFailure,
+            ValidationCode::DuplicateTxId,
+        ];
+        match rng.below(10) {
+            0 => Frame::Request(Request::Endorse {
+                id: rng.next_u64(),
+                proposal: random_envelope(rng).proposal,
+            }),
+            1 => Frame::Request(Request::Submit {
+                id: rng.next_u64(),
+                envelope: random_envelope(rng).into(),
+            }),
+            2 => Frame::Request(Request::Status {
+                id: rng.next_u64(),
+                channel: format!("shard{}", rng.below(8)),
+            }),
+            3 => Frame::Response(Response::Endorsed {
+                id: rng.next_u64(),
+                envelope: random_envelope(rng).into(),
+            }),
+            4 => Frame::Response(Response::Accepted {
+                id: rng.next_u64(),
+                tx_id: random_digest(rng),
+            }),
+            5 => Frame::Response(Response::Rejected {
+                id: rng.next_u64(),
+                reject: rejects[rng.below(rejects.len() as u64) as usize],
+            }),
+            6 => Frame::Response(Response::Failed {
+                id: rng.next_u64(),
+                reason: format!("err-{}", rng.next_u64()),
+            }),
+            7 => Frame::Response(Response::Status {
+                id: rng.next_u64(),
+                height: rng.next_u64() % 1000,
+                tip: random_digest(rng),
+                state_root: random_digest(rng),
+            }),
+            8 => Frame::Event(Event::Committed {
+                channel: format!("shard{}", rng.below(8)),
+                tx_id: random_digest(rng),
+                block: rng.next_u64() % 1000,
+                code: codes[rng.below(codes.len() as u64) as usize],
+            }),
+            _ => Frame::Event(Event::Dropped {
+                channel: format!("shard{}", rng.below(8)),
+                tx_id: random_digest(rng),
+                reject: rejects[rng.below(rejects.len() as u64) as usize],
+            }),
+        }
+    }
+
     #[test]
     fn property_envelope_roundtrip() {
         check("envelope-roundtrip", 40, |rng| {
@@ -187,6 +509,27 @@ mod tests {
             assert_eq!(back, env);
             assert!(r.done());
         });
+    }
+
+    #[test]
+    fn proposal_codec_is_envelope_prefix() {
+        // A proposal encoded alone must be byte-identical to the prefix of
+        // the full envelope encoding — `parse_views` depends on that
+        // layout identity, and so does the Endorse request frame.
+        let mut rng = Prng::new(17);
+        for _ in 0..16 {
+            let env = random_envelope(&mut rng);
+            let mut pw = Writer::new();
+            encode_proposal(&env.proposal, &mut pw);
+            let pbuf = pw.finish();
+            let mut ew = Writer::new();
+            encode_envelope(&env, &mut ew);
+            let ebuf = ew.finish();
+            assert_eq!(&ebuf[..pbuf.len()], &pbuf[..]);
+            let mut r = Reader::new(&pbuf);
+            assert_eq!(decode_proposal(&mut r).unwrap(), env.proposal);
+            assert!(r.done());
+        }
     }
 
     #[test]
@@ -203,6 +546,11 @@ mod tests {
             assert_eq!(a.as_bytes(), b.as_bytes());
             assert_eq!(a.envelope(), b.envelope());
         }
+        // The degenerate batch (a timeout cut with nothing pending)
+        // roundtrips too.
+        let (ch, back) = decode_batch(&encode_batch("empty", &[])).unwrap();
+        assert_eq!(ch, "empty");
+        assert!(back.is_empty());
     }
 
     fn random_block(rng: &mut Prng, number: u64) -> Block {
@@ -272,5 +620,106 @@ mod tests {
         let mut extra = buf.clone();
         extra.push(0);
         assert!(decode_batch(&extra).is_err());
+    }
+
+    /// Satellite: round-trip for every frame kind, encode → decode
+    /// byte-identical on re-encode.
+    #[test]
+    fn property_frame_roundtrip() {
+        check("frame-roundtrip", 60, |rng| {
+            let f = random_frame(rng);
+            let buf = encode_frame(&f);
+            let back = decode_frame(&buf).unwrap();
+            assert_eq!(back, f);
+            assert_eq!(encode_frame(&back), buf);
+        });
+    }
+
+    /// Satellite: a Submit frame carrying a large (multi-KiB) envelope —
+    /// the batch-bytes ceiling end of the size range — survives intact
+    /// with its canonical buffer carved out verbatim.
+    #[test]
+    fn submit_frame_carries_max_size_envelope() {
+        let mut rng = Prng::new(21);
+        let mut env = random_envelope(&mut rng);
+        env.rw_set.writes.push(("big".into(), Some(vec![0xAB; 512 * 1024])));
+        let se = SharedEnvelope::from(env);
+        let f = Frame::Request(Request::Submit { id: 7, envelope: se.clone() });
+        let buf = encode_frame(&f);
+        let Frame::Request(Request::Submit { id, envelope }) = decode_frame(&buf).unwrap()
+        else {
+            panic!("wrong frame kind");
+        };
+        assert_eq!(id, 7);
+        assert_eq!(envelope.as_bytes(), se.as_bytes());
+        assert_eq!(envelope.tx_id(), se.tx_id());
+    }
+
+    /// Satellite: decoding truncated or bit-flipped frames at every byte
+    /// offset never panics — truncation always errors, and a flipped byte
+    /// either errors or decodes to some (different or equal) valid frame.
+    #[test]
+    fn property_frame_decode_never_panics() {
+        check("frame-decode-hostile", 12, |rng| {
+            let f = random_frame(rng);
+            let buf = encode_frame(&f);
+            for cut in 0..buf.len() {
+                assert!(decode_frame(&buf[..cut]).is_err(), "cut at {cut}");
+            }
+            for i in 0..buf.len() {
+                let mut flipped = buf.clone();
+                flipped[i] ^= 1 << (rng.below(8) as u32);
+                let _ = decode_frame(&flipped);
+            }
+        });
+    }
+
+    /// Satellite: length and count prefixes that lie about the payload
+    /// error out before any allocation is sized from them.
+    #[test]
+    fn hostile_length_prefixes_never_overallocate() {
+        // An envelope whose arg count claims 2^32-1 entries.
+        let mut w = Writer::new();
+        w.str("ch").str("cc").str("fn").u32(u32::MAX);
+        let buf = w.finish();
+        let err = decode_envelope(&mut Reader::new(&buf)).unwrap_err();
+        assert!(!err.is_truncated(), "lying count is malformed: {err:?}");
+        // A batch that claims 2^32-1 envelopes.
+        let mut w = Writer::new();
+        w.str("ch").u32(u32::MAX);
+        assert!(decode_batch(&w.finish()).is_err());
+        // A Submit frame whose envelope length field runs past the frame.
+        let mut w = Writer::new();
+        w.u8(0).u8(1).u64(1).u32(1 << 30);
+        let err = decode_frame(&w.finish()).unwrap_err();
+        assert!(err.is_truncated(), "{err:?}");
+        // A block that declares more validation codes than txs.
+        let mut rng = Prng::new(13);
+        let b = random_block(&mut rng, 1);
+        let mut w = Writer::new();
+        encode_block(&b, &mut w);
+        let mut buf = w.finish();
+        // The codes count sits right before the trailing code bytes.
+        let codes_at = buf.len() - b.validation.len() - 4;
+        buf[codes_at..codes_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_block(&mut Reader::new(&buf)).is_err());
+    }
+
+    /// Torn-vs-malformed classification drives transport behaviour: a cut
+    /// frame reports `Truncated` (retryable), a bad tag reports
+    /// `Malformed` (close the connection).
+    #[test]
+    fn frame_errors_classify_torn_vs_malformed() {
+        let f = Frame::Response(Response::Failed { id: 3, reason: "nope".into() });
+        let buf = encode_frame(&f);
+        let err = decode_frame(&buf[..buf.len() - 1]).unwrap_err();
+        assert!(err.is_truncated(), "{err:?}");
+        let mut bad = buf.clone();
+        bad[0] = 9; // unknown frame tag
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(!err.is_truncated(), "{err:?}");
+        let mut trailing = buf;
+        trailing.push(0);
+        assert!(decode_frame(&trailing).is_err());
     }
 }

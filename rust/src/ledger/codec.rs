@@ -1,6 +1,67 @@
 //! Length-prefixed binary codec for ledger payloads (model metadata,
 //! chaincode values). Hand-rolled because serde's facade crate is not in the
 //! offline vendor set; the format is versionless and internal to this repo.
+//!
+//! Decoding is hardened against hostile input: every read is bounds-checked
+//! against the buffer ([`WireError::Truncated`]), and count prefixes must be
+//! backed by enough remaining bytes ([`Reader::count`]) before any
+//! allocation is sized from them — a frame that lies about its lengths
+//! errors without over-allocating.
+
+use std::fmt;
+
+/// Typed decode error for the wire codec and everything layered on it
+/// (envelopes, batches, blocks, protocol frames).
+///
+/// The split matters to transport code: [`WireError::Truncated`] means the
+/// input ended before the value it promises — a torn frame, retryable once
+/// more bytes arrive — while [`WireError::Malformed`] means the bytes are
+/// structurally invalid and no amount of further input can fix them, so the
+/// connection should be closed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended mid-value: `want` more bytes were needed at offset
+    /// `at`. Retryable at the transport layer (wait for the rest of the
+    /// frame).
+    Truncated { at: usize, want: usize },
+    /// Structurally invalid bytes (bad tag, bad UTF-8, a length or count
+    /// prefix that lies). Not retryable — close the connection.
+    Malformed(String),
+}
+
+impl WireError {
+    pub(crate) fn malformed(why: impl Into<String>) -> WireError {
+        WireError::Malformed(why.into())
+    }
+
+    /// True for torn-frame errors a transport may retry by reading more
+    /// bytes; false for malformed frames that warrant closing the
+    /// connection.
+    pub fn is_truncated(&self) -> bool {
+        matches!(self, WireError::Truncated { .. })
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { at, want } => {
+                write!(f, "truncated at byte {at} (want {want})")
+            }
+            WireError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Legacy boundary: pipeline layers that still report `String` errors can
+/// take a `WireError` through `?`.
+impl From<WireError> for String {
+    fn from(e: WireError) -> String {
+        e.to_string()
+    }
+}
 
 /// Append-only binary writer.
 #[derive(Default)]
@@ -68,39 +129,57 @@ impl<'a> Reader<'a> {
         Reader { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.pos + n > self.buf.len() {
-            return Err(format!("truncated at byte {} (want {n})", self.pos));
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.buf.len() - self.pos {
+            return Err(WireError::Truncated { at: self.pos, want: n });
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    pub fn u8(&mut self) -> Result<u8, String> {
+    pub fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    pub fn u32(&mut self) -> Result<u32, String> {
+    pub fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn u64(&mut self) -> Result<u64, String> {
+    pub fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    pub fn f64(&mut self) -> Result<f64, String> {
+    pub fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    pub fn bytes(&mut self) -> Result<&'a [u8], String> {
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
         let n = self.u32()? as usize;
         self.take(n)
     }
 
-    pub fn str(&mut self) -> Result<String, String> {
+    pub fn str(&mut self) -> Result<String, WireError> {
         let b = self.bytes()?;
-        String::from_utf8(b.to_vec()).map_err(|e| e.to_string())
+        match std::str::from_utf8(b) {
+            Ok(s) => Ok(s.to_owned()),
+            Err(_) => Err(WireError::malformed("invalid utf-8 in string")),
+        }
+    }
+
+    /// Read a u32 element count and validate it against the bytes actually
+    /// remaining: each promised element occupies at least `min_size` bytes
+    /// on the wire, so a lying (or hostile) count fails here before any
+    /// `Vec::with_capacity` sized from it can allocate.
+    pub fn count(&mut self, min_size: usize) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        let left = self.buf.len() - self.pos;
+        if n.saturating_mul(min_size.max(1)) > left {
+            return Err(WireError::Malformed(format!(
+                "count {n} of >={min_size}-byte elements exceeds {left} remaining bytes"
+            )));
+        }
+        Ok(n)
     }
 
     pub fn done(&self) -> bool {
@@ -148,7 +227,45 @@ mod tests {
         w.str("hello");
         let buf = w.finish();
         let mut r = Reader::new(&buf[..3]);
-        assert!(r.str().is_err());
+        let err = r.str().unwrap_err();
+        assert!(err.is_truncated(), "{err:?}");
+    }
+
+    #[test]
+    fn error_classification_and_display() {
+        // Bad UTF-8 is malformed, not truncated: more bytes can't fix it.
+        let mut w = Writer::new();
+        w.bytes(&[0xFF, 0xFE]);
+        let buf = w.finish();
+        let err = Reader::new(&buf).str().unwrap_err();
+        assert!(!err.is_truncated(), "{err:?}");
+        assert!(err.to_string().contains("malformed"));
+        // Truncation reports where and how much.
+        let err = Reader::new(&[1, 2]).u64().unwrap_err();
+        assert_eq!(err, WireError::Truncated { at: 0, want: 8 });
+        // Both convert into the legacy String error shape.
+        let s: String = err.into();
+        assert!(s.contains("truncated at byte 0"));
+    }
+
+    #[test]
+    fn count_guard_rejects_lying_prefixes() {
+        // A count prefix promising far more elements than the buffer can
+        // hold errors before any capacity is sized from it.
+        let mut w = Writer::new();
+        w.u32(u32::MAX).str("x");
+        let buf = w.finish();
+        let err = Reader::new(&buf).count(4).unwrap_err();
+        assert!(!err.is_truncated(), "{err:?}");
+        // An honest count passes and leaves the cursor after the prefix.
+        let mut w = Writer::new();
+        w.u32(2).str("a").str("b");
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.count(4).unwrap(), 2);
+        assert_eq!(r.str().unwrap(), "a");
+        assert_eq!(r.str().unwrap(), "b");
+        assert!(r.done());
     }
 
     #[test]

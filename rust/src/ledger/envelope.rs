@@ -29,19 +29,40 @@ use sha2::{Digest as _, Sha256};
 
 use crate::crypto::msp::{MemberId, Signature};
 use crate::crypto::Digest;
-use crate::ledger::codec::{Reader, Writer};
+use crate::ledger::codec::{Reader, WireError, Writer};
 use crate::ledger::state::Version;
 use crate::ledger::tx::{Endorsement, Envelope, Proposal, RwSet, TxId};
 
-/// Serialize one envelope in canonical wire form.
-pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
-    let p = &env.proposal;
+/// Serialize one proposal — the canonical envelope encoding's prefix, so a
+/// proposal sent alone (e.g. in a remote `Endorse` request frame) is
+/// byte-identical to the same fields inside a full envelope.
+pub fn encode_proposal(p: &Proposal, w: &mut Writer) {
     w.str(&p.channel).str(&p.chaincode).str(&p.function);
     w.u32(p.args.len() as u32);
     for a in &p.args {
         w.str(a);
     }
     w.str(&p.creator.0).u64(p.nonce);
+}
+
+/// Deserialize one proposal (inverse of [`encode_proposal`]).
+pub fn decode_proposal(r: &mut Reader<'_>) -> Result<Proposal, WireError> {
+    let channel = r.str()?;
+    let chaincode = r.str()?;
+    let function = r.str()?;
+    let nargs = r.count(4)?;
+    let mut args = Vec::with_capacity(nargs);
+    for _ in 0..nargs {
+        args.push(r.str()?);
+    }
+    let creator = MemberId::new(r.str()?);
+    let nonce = r.u64()?;
+    Ok(Proposal { channel, chaincode, function, args, creator, nonce })
+}
+
+/// Serialize one envelope in canonical wire form.
+pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
+    encode_proposal(&env.proposal, w);
 
     w.u32(env.rw_set.reads.len() as u32);
     for (k, ver) in &env.rw_set.reads {
@@ -77,54 +98,44 @@ pub fn encode_envelope(env: &Envelope, w: &mut Writer) {
 /// Deserialize one envelope. Rejects non-canonical encodings (unknown
 /// read/write tags, wrong signature length) so that decode acceptance
 /// matches the zero-copy view parser exactly.
-pub fn decode_envelope(r: &mut Reader<'_>) -> Result<Envelope, String> {
-    let channel = r.str()?;
-    let chaincode = r.str()?;
-    let function = r.str()?;
-    let nargs = r.u32()? as usize;
-    let mut args = Vec::with_capacity(nargs.min(64));
-    for _ in 0..nargs {
-        args.push(r.str()?);
-    }
-    let creator = MemberId::new(r.str()?);
-    let nonce = r.u64()?;
+pub fn decode_envelope(r: &mut Reader<'_>) -> Result<Envelope, WireError> {
+    // Count prefixes (here and in `decode_proposal`) are validated against
+    // the remaining buffer (min wire size per element) before any capacity
+    // is sized from them.
+    let proposal = decode_proposal(r)?;
 
-    let nreads = r.u32()? as usize;
-    let mut reads = Vec::with_capacity(nreads.min(64));
+    let nreads = r.count(5)?;
+    let mut reads = Vec::with_capacity(nreads);
     for _ in 0..nreads {
         let k = r.str()?;
         let ver = match r.u8()? {
             1 => Some(Version { block: r.u64()?, tx: r.u32()? }),
             0 => None,
-            t => return Err(format!("bad read-version tag {t}")),
+            t => return Err(WireError::Malformed(format!("bad read-version tag {t}"))),
         };
         reads.push((k, ver));
     }
-    let nwrites = r.u32()? as usize;
-    let mut writes = Vec::with_capacity(nwrites.min(64));
+    let nwrites = r.count(5)?;
+    let mut writes = Vec::with_capacity(nwrites);
     for _ in 0..nwrites {
         let k = r.str()?;
         let val = match r.u8()? {
             1 => Some(r.bytes()?.to_vec()),
             0 => None,
-            t => return Err(format!("bad write-value tag {t}")),
+            t => return Err(WireError::Malformed(format!("bad write-value tag {t}"))),
         };
         writes.push((k, val));
     }
-    let nend = r.u32()? as usize;
-    let mut endorsements = Vec::with_capacity(nend.min(64));
+    let nend = r.count(40)?;
+    let mut endorsements = Vec::with_capacity(nend);
     for _ in 0..nend {
         let endorser = MemberId::new(r.str()?);
         let sig_bytes = r.bytes()?;
         let sig: [u8; 32] =
-            sig_bytes.try_into().map_err(|_| "bad signature length".to_string())?;
+            sig_bytes.try_into().map_err(|_| WireError::malformed("bad signature length"))?;
         endorsements.push(Endorsement { endorser, signature: Signature(sig) });
     }
-    Ok(Envelope {
-        proposal: Proposal { channel, chaincode, function, args, creator, nonce },
-        rw_set: RwSet { reads, writes },
-        endorsements,
-    })
+    Ok(Envelope { proposal, rw_set: RwSet { reads, writes }, endorsements })
 }
 
 /// The hash views over one canonical buffer, computed in a single pass
@@ -140,9 +151,9 @@ struct Views {
 
 /// Read a length-prefixed string field as a borrowed slice, validating
 /// UTF-8 (matching `Reader::str` acceptance) without allocating.
-fn str_slice<'a>(r: &mut Reader<'a>) -> Result<&'a [u8], String> {
+fn str_slice<'a>(r: &mut Reader<'a>) -> Result<&'a [u8], WireError> {
     let b = r.bytes()?;
-    std::str::from_utf8(b).map_err(|e| e.to_string())?;
+    std::str::from_utf8(b).map_err(|_| WireError::malformed("invalid utf-8 in string"))?;
     Ok(b)
 }
 
@@ -162,15 +173,17 @@ fn hash_part(h: &mut Sha256, part: &[u8]) {
 /// precisely the buffers [`decode_envelope`] accepts (plus requiring the
 /// buffer to end where the envelope does), so a corrupt buffer fails
 /// closed at the first view access.
-fn parse_views(bytes: &[u8]) -> Result<Views, String> {
+fn parse_views(bytes: &[u8]) -> Result<Views, WireError> {
     let mut r = Reader::new(bytes);
 
     // Proposal → tx_id (streamed sha256_parts over borrowed slices).
+    // Count guards mirror `decode_envelope` exactly so acceptance stays
+    // identical between the two parsers.
     let mut tx = Sha256::new();
     hash_part(&mut tx, str_slice(&mut r)?); // channel
     hash_part(&mut tx, str_slice(&mut r)?); // chaincode
     hash_part(&mut tx, str_slice(&mut r)?); // function
-    let nargs = r.u32()? as usize;
+    let nargs = r.count(4)?;
     for _ in 0..nargs {
         hash_part(&mut tx, str_slice(&mut r)?);
     }
@@ -182,7 +195,7 @@ fn parse_views(bytes: &[u8]) -> Result<Views, String> {
     let tx_id = Digest(tx.finalize().into());
 
     // Read/write sections → rw-set digest over raw wire slices.
-    let nreads = r.u32()? as usize;
+    let nreads = r.count(5)?;
     let reads_start = r.pos();
     for _ in 0..nreads {
         str_slice(&mut r)?;
@@ -192,11 +205,11 @@ fn parse_views(bytes: &[u8]) -> Result<Views, String> {
                 r.u32()?;
             }
             0 => {}
-            t => return Err(format!("bad read-version tag {t}")),
+            t => return Err(WireError::Malformed(format!("bad read-version tag {t}"))),
         }
     }
     let reads_end = r.pos();
-    let nwrites = r.u32()? as usize;
+    let nwrites = r.count(5)?;
     let writes_start = r.pos();
     for _ in 0..nwrites {
         str_slice(&mut r)?;
@@ -205,7 +218,7 @@ fn parse_views(bytes: &[u8]) -> Result<Views, String> {
                 r.bytes()?;
             }
             0 => {}
-            t => return Err(format!("bad write-value tag {t}")),
+            t => return Err(WireError::Malformed(format!("bad write-value tag {t}"))),
         }
     }
     let writes_end = r.pos();
@@ -218,20 +231,20 @@ fn parse_views(bytes: &[u8]) -> Result<Views, String> {
     let rw_digest = Digest(rw.finalize().into());
 
     // Endorsements → envelope digest.
-    let nend = r.u32()? as usize;
-    let mut ends: Vec<(Range<usize>, Range<usize>)> = Vec::with_capacity(nend.min(64));
+    let nend = r.count(40)?;
+    let mut ends: Vec<(Range<usize>, Range<usize>)> = Vec::with_capacity(nend);
     for _ in 0..nend {
         let endorser = str_slice(&mut r)?;
         let e_range = r.pos() - endorser.len()..r.pos();
         let sig = r.bytes()?;
         if sig.len() != 32 {
-            return Err("bad signature length".to_string());
+            return Err(WireError::malformed("bad signature length"));
         }
         let s_range = r.pos() - 32..r.pos();
         ends.push((e_range, s_range));
     }
     if !r.done() {
-        return Err("trailing bytes after envelope".to_string());
+        return Err(WireError::malformed("trailing bytes after envelope"));
     }
     let total = 64 + ends.iter().map(|(e, s)| e.len() + s.len()).sum::<usize>();
     let mut h = Sha256::new();
@@ -249,8 +262,8 @@ fn parse_views(bytes: &[u8]) -> Result<Views, String> {
 
 struct Inner {
     bytes: Vec<u8>,
-    views: OnceLock<Result<Views, String>>,
-    decoded: OnceLock<Result<Envelope, String>>,
+    views: OnceLock<Result<Views, WireError>>,
+    decoded: OnceLock<Result<Envelope, WireError>>,
 }
 
 /// An envelope as the pipeline actually holds it: one canonical encoded
@@ -312,7 +325,7 @@ impl SharedEnvelope {
             .views
             .get_or_init(|| parse_views(&self.inner.bytes))
             .as_ref()
-            .map_err(|e| e.clone())
+            .map_err(|e| e.to_string())
     }
 
     /// Force both the view pass and the full decode; `Ok` means every
@@ -352,12 +365,12 @@ impl SharedEnvelope {
                 let mut r = Reader::new(&self.inner.bytes);
                 let env = decode_envelope(&mut r)?;
                 if !r.done() {
-                    return Err("trailing bytes after envelope".to_string());
+                    return Err(WireError::malformed("trailing bytes after envelope"));
                 }
                 Ok(env)
             })
             .as_ref()
-            .map_err(|e| e.clone())
+            .map_err(|e| e.to_string())
     }
 
     // Trusted accessors: valid on every envelope built from an in-memory

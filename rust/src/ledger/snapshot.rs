@@ -110,7 +110,10 @@ impl Snapshot {
         let tip_hash = digest(&mut r)?;
         let state_root = digest(&mut r)?;
         let seq = r.u64()?;
-        let nentries = r.u32()? as usize;
+        // Count prefixes are validated against the remaining bytes before
+        // any capacity is sized from them (a corrupt file must not
+        // over-allocate).
+        let nentries = r.count(20)?;
         let mut entries = Vec::with_capacity(nentries);
         for _ in 0..nentries {
             let k = r.str()?;
@@ -118,7 +121,7 @@ impl Snapshot {
             let ver = Version { block: r.u64()?, tx: r.u32()? };
             entries.push((k, v, ver));
         }
-        let nids = r.u32()? as usize;
+        let nids = r.count(36)?;
         let mut committed_ids = Vec::with_capacity(nids);
         for _ in 0..nids {
             committed_ids.push(digest(&mut r)?);

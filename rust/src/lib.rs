@@ -52,6 +52,22 @@
 //! `ledger` module docs for the mode tradeoff table, and
 //! `benches/durability.rs` for the throughput/recovery baselines).
 //!
+//! **Multi-process fabric** (`fabric::wire` + `network::transport` +
+//! `network::node` + `network::client`): the same pipeline split across
+//! real OS processes. `scalesfl node orderer` hosts an orderer-with-peers
+//! stack behind a TCP or Unix-domain socket and `scalesfl node gateway`
+//! fronts several of them, routing by channel; both speak length-prefixed
+//! `fabric::wire` frames whose hardened decoder validates every length
+//! against the remaining buffer before allocating (torn frames are
+//! retryable `WireError::Truncated`, malformed ones close the
+//! connection). `network::RemoteGateway` is the client library: `submit`
+//! still returns a `SubmitHandle` immediately — commit events stream back
+//! over the same connection into the per-channel `CommitWaiter` demux —
+//! so remote submission keeps the non-blocking ingress API, and a child
+//! process driven over the socket commits byte-identical blocks (height,
+//! tip hash, state root) to an in-process run (`tests/multiprocess.rs`;
+//! `benches/wire.rs` gates codec and loopback throughput).
+//!
 //! **Observability** (`telemetry`): one vocabulary for everything the
 //! pipeline measures. Mempool, relay, validator, and orderer register
 //! weak collectors into the process-wide metrics `telemetry::Registry`

@@ -15,6 +15,11 @@
 //!                                           persisted under DIR and the
 //!                                           run recovers whatever a
 //!                                           previous run left there
+//!   scalesfl node orderer|gateway         — run one fabric process
+//!            [--listen tcp:H:P|uds:/PATH]    speaking wire frames over a
+//!            [--channels a,b] [--peers N]    socket; prints `LISTENING
+//!            [--seed N] [--batch-size N]     <endpoint>` once bound and
+//!            [--upstream ch=EP,...]          serves until stdin closes
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -55,6 +60,7 @@ fn main() {
         "figures" => cmd_figures(rest),
         "calibrate" => cmd_calibrate(),
         "telemetry" => cmd_telemetry(rest),
+        "node" => cmd_node(rest),
         _ => {
             print_help();
             0
@@ -75,6 +81,8 @@ USAGE:
   scalesfl figures [fig4|fig5|fig6|fig7|fig8|fig9|ablation|all] [--full]
   scalesfl calibrate
   scalesfl telemetry [--txs N] [--json] [--ledger DIR] [--durability off|group|strict]
+  scalesfl node orderer [--listen EP] [--channels a,b] [--peers N] [--seed N] [--batch-size N]
+  scalesfl node gateway [--listen EP] [--upstream ch=EP,ch2=EP2]
 
 `telemetry` drives a small ingress->relay->order->validate->commit pipeline
 and dumps the process-wide metrics registry (Prometheus text, or JSON with
@@ -84,6 +92,13 @@ With `--ledger DIR` every committed block is persisted to an append-only
 log (plus periodic Merkle-rooted state snapshots) under DIR, and a rerun
 against the same DIR first recovers the previous run's chain by replay —
 so driving it twice demonstrates crash recovery end to end.
+
+`node` runs one fabric process over a real socket (TCP or Unix-domain):
+`orderer` hosts an ordering service plus endorsing peers for its channels,
+`gateway` fronts one or more orderers and relays by channel. Each prints
+`LISTENING <endpoint>` to stdout once bound (port 0 resolves to the
+ephemeral port picked) and serves until stdin reaches EOF — so a parent
+process can spawn, address, and cleanly stop a topology of children.
 
 Run `make artifacts` before anything that touches the model runtime."
     );
@@ -260,6 +275,93 @@ fn cmd_telemetry(args: &[String]) -> i32 {
     eprintln!("{}", t.tracer().stage_snapshot().to_json());
     eprintln!("# flight recorder");
     eprintln!("{}", t.flight().to_json());
+    0
+}
+
+/// `scalesfl node <role>`: one fabric process over a real socket. Prints
+/// `LISTENING <endpoint>` once bound and serves until stdin reaches EOF
+/// (the parent closing the pipe is the shutdown signal — robust even if
+/// the parent dies without killing us).
+fn cmd_node(args: &[String]) -> i32 {
+    use scalesfl::network::node::{bind_and_serve, bind_and_serve_relay, FabricNode, NodeConfig};
+    use scalesfl::network::transport::Endpoint;
+    use std::io::{BufRead, Write};
+
+    let Some(role) = args.first().map(|s| s.as_str()) else {
+        eprintln!("usage: scalesfl node orderer|gateway [flags]");
+        return 2;
+    };
+    let listen = arg_value(args, "--listen").unwrap_or_else(|| "tcp:127.0.0.1:0".into());
+    let ep = match Endpoint::parse(&listen) {
+        Ok(ep) => ep,
+        Err(e) => {
+            eprintln!("--listen: {e}");
+            return 2;
+        }
+    };
+    let bound = match role {
+        "orderer" => {
+            let channels: Vec<String> = arg_value(args, "--channels")
+                .unwrap_or_else(|| "ch".into())
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            let cfg = NodeConfig {
+                channels,
+                peers: parse(args, "--peers", 2usize),
+                seed: parse(args, "--seed", 7u64),
+                batch_size: parse(args, "--batch-size", 1usize),
+                ..NodeConfig::default()
+            };
+            bind_and_serve(FabricNode::build(&cfg), &ep)
+        }
+        "gateway" => {
+            let mut upstreams = std::collections::HashMap::new();
+            for pair in arg_value(args, "--upstream").unwrap_or_default().split(',') {
+                let Some((ch, addr)) = pair.split_once('=') else { continue };
+                match Endpoint::parse(addr) {
+                    Ok(up) => {
+                        upstreams.insert(ch.to_string(), up);
+                    }
+                    Err(e) => {
+                        eprintln!("--upstream {ch}: {e}");
+                        return 2;
+                    }
+                }
+            }
+            if upstreams.is_empty() {
+                eprintln!("gateway needs --upstream ch=tcp:HOST:PORT[,ch2=...]");
+                return 2;
+            }
+            bind_and_serve_relay(upstreams, &ep)
+        }
+        other => {
+            eprintln!("unknown node role {other:?}: expected orderer or gateway");
+            return 2;
+        }
+    };
+    let local = match bound {
+        Ok((local, _accept_thread)) => local,
+        Err(e) => {
+            eprintln!("bind {ep}: {e}");
+            return 1;
+        }
+    };
+    // The parent parses this line to learn the resolved (port-0) address.
+    println!("LISTENING {local}");
+    let _ = std::io::stdout().flush();
+    // Serve until the parent closes our stdin.
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    while matches!(stdin.lock().read_line(&mut line), Ok(n) if n > 0) {
+        line.clear();
+    }
+    // Exiting via return skips the accept thread's destructors, so unlink
+    // the socket file here; `Listener::bind` also clears stale ones.
+    if let Endpoint::Uds(path) = &local {
+        let _ = std::fs::remove_file(path);
+    }
     0
 }
 

@@ -853,8 +853,15 @@ impl MempoolRegistry {
 
     /// Route an envelope to its channel's pool.
     pub fn submit(&self, env: Envelope) -> Result<(), Reject> {
-        let pool = self.pool(&env.proposal.channel);
-        pool.submit(env)
+        self.submit_shared(env.into())
+    }
+
+    /// Route an already-encoded envelope to its channel's pool without
+    /// re-encoding (the orderer's submit path — envelopes arrive here
+    /// carrying their canonical wire bytes from endorsement or a socket).
+    pub fn submit_shared(&self, env: SharedEnvelope) -> Result<(), Reject> {
+        let pool = self.pool(&env.proposal().channel);
+        pool.submit_shared(env)
     }
 
     /// Aggregate counters across every pool.

@@ -1,0 +1,294 @@
+//! Remote gateway client: the in-process submission API, spoken over a
+//! socket.
+//!
+//! [`RemoteGateway`] wraps one [`FramedConn`] to a `scalesfl node` process
+//! (an orderer directly, or a gateway fronting several) and rebuilds the
+//! PR 2 pipelined semantics on the client side of the wire: `submit`
+//! returns a real `SubmitHandle` immediately, and the commit outcome
+//! resolves later without the caller polling the server.
+//!
+//! The mechanics mirror the in-process demux exactly. A single reader
+//! thread owns the receive half of the connection and routes every
+//! inbound frame: `Response`s resolve the RPC waiting under their
+//! correlation id, and `Event`s — the commit stream, uncorrelated —
+//! resolve the per-channel [`CommitWaiter::external`] table through
+//! [`CommitWaiter::complete`] / [`CommitWaiter::reject`], which is the
+//! same table/slot machinery a local `Gateway` uses; the `SubmitHandle`s
+//! handed out here are literally the same type with the same drop and
+//! timeout behaviour. Waiters register *before* the `Submit` frame is
+//! written, so a commit event can never outrun its waiter even though
+//! events and responses share the socket.
+//!
+//! When the connection dies, every blocked RPC fails fast and pending
+//! handles resolve as `TimedOut` when drained (their event source is
+//! gone), rather than anything hanging.
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::crypto::Digest;
+use crate::fabric::peer::CommitEvent;
+use crate::fabric::waiter::CommitWaiter;
+use crate::fabric::wire::{encode_frame, Event, Frame, Request, RequestId, Response};
+use crate::fabric::{CommitOutcome, SubmitHandle};
+use crate::ledger::envelope::SharedEnvelope;
+use crate::ledger::tx::Proposal;
+use crate::mempool::Reject;
+
+use super::transport::{Endpoint, FramedConn};
+
+/// One channel's chain position, as answered by a `Status` request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChannelStatus {
+    pub height: u64,
+    pub tip: Digest,
+    pub state_root: Digest,
+}
+
+/// Shared between the API face and the reader thread.
+struct Demux {
+    /// RPCs awaiting their correlated response.
+    responses: Mutex<HashMap<RequestId, mpsc::Sender<Response>>>,
+    /// Per-channel external waiter tables resolving commit events.
+    waiters: Mutex<HashMap<String, Arc<CommitWaiter>>>,
+    /// Set once the reader thread exits; RPCs fail fast afterwards.
+    dead: AtomicBool,
+}
+
+impl Demux {
+    /// The channel's external waiter table, created on first use.
+    fn waiter(&self, channel: &str) -> Arc<CommitWaiter> {
+        let mut waiters = self.waiters.lock().unwrap();
+        match waiters.get(channel) {
+            Some(w) => Arc::clone(w),
+            None => {
+                let w = Arc::new(CommitWaiter::external());
+                waiters.insert(channel.to_string(), Arc::clone(&w));
+                w
+            }
+        }
+    }
+
+    /// Route one inbound frame. Anything other than a response or event is
+    /// a protocol violation; the reader closes the connection.
+    fn route(&self, frame: Frame) -> Result<(), ()> {
+        match frame {
+            Frame::Response(resp) => {
+                let id = match &resp {
+                    Response::Endorsed { id, .. }
+                    | Response::Accepted { id, .. }
+                    | Response::Rejected { id, .. }
+                    | Response::Failed { id, .. }
+                    | Response::Status { id, .. } => *id,
+                };
+                // An id nobody waits for (RPC timed out already) is dropped.
+                let slot = self.responses.lock().unwrap().remove(&id);
+                if let Some(tx) = slot {
+                    let _ = tx.send(resp);
+                }
+                Ok(())
+            }
+            Frame::Event(Event::Committed { channel, tx_id, block, code }) => {
+                self.waiter(&channel).complete(CommitEvent {
+                    channel: channel.into(),
+                    tx_id,
+                    block,
+                    code,
+                });
+                Ok(())
+            }
+            Frame::Event(Event::Dropped { channel, tx_id, reject }) => {
+                self.waiter(&channel).reject(&tx_id, reject);
+                Ok(())
+            }
+            Frame::Request(_) => Err(()),
+        }
+    }
+
+    /// The connection is gone: fail every blocked RPC immediately (their
+    /// senders drop, so `recv` disconnects). Registered commit waiters are
+    /// left in place — their handles drain as `TimedOut`.
+    fn poison(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.responses.lock().unwrap().clear();
+    }
+}
+
+/// A client connection to a fabric node process, exposing the local
+/// gateway's submission API across the socket.
+pub struct RemoteGateway {
+    writer: Mutex<FramedConn>,
+    demux: Arc<Demux>,
+    next_id: AtomicU64,
+    /// Per-transaction commit timeout (the paper's 30 s), also the RPC
+    /// response deadline.
+    pub timeout: Duration,
+}
+
+impl RemoteGateway {
+    /// Dial `ep` (retrying with bounded backoff while a freshly spawned
+    /// node process is still binding) and start the demux reader.
+    pub fn connect(ep: &Endpoint) -> io::Result<RemoteGateway> {
+        let conn = FramedConn::connect_retry(ep, Duration::from_secs(5))?;
+        let mut reader = conn.try_clone()?;
+        let demux = Arc::new(Demux {
+            responses: Mutex::new(HashMap::new()),
+            waiters: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+        });
+        let routed = Arc::clone(&demux);
+        thread::Builder::new()
+            .name("remote-gw-demux".into())
+            .spawn(move || {
+                loop {
+                    match reader.recv_frame() {
+                        Ok(Some(frame)) => {
+                            if routed.route(frame).is_err() {
+                                break;
+                            }
+                        }
+                        Ok(None) | Err(_) => break,
+                    }
+                }
+                reader.shutdown();
+                routed.poison();
+            })
+            .expect("spawn remote gateway demux");
+        Ok(RemoteGateway {
+            writer: Mutex::new(conn),
+            demux,
+            next_id: AtomicU64::new(1),
+            timeout: Duration::from_secs(30),
+        })
+    }
+
+    /// Send one request and block for its correlated response.
+    fn rpc(&self, build: impl FnOnce(RequestId) -> Request) -> Result<Response, String> {
+        if self.demux.dead.load(Ordering::Relaxed) {
+            return Err("connection lost".into());
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.demux.responses.lock().unwrap().insert(id, tx);
+        let frame = Frame::Request(build(id));
+        let sent = self.writer.lock().unwrap().send(&encode_frame(&frame));
+        if let Err(e) = sent {
+            self.demux.responses.lock().unwrap().remove(&id);
+            return Err(format!("send failed: {e}"));
+        }
+        match rx.recv_timeout(self.timeout) {
+            Ok(resp) => Ok(resp),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err("connection lost awaiting response".into())
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.demux.responses.lock().unwrap().remove(&id);
+                Err("request timed out".into())
+            }
+        }
+    }
+
+    /// Endorse `proposal` on the server's peers; the returned envelope
+    /// carries the exact canonical bytes the server produced, ready to
+    /// [`submit_endorsed`](RemoteGateway::submit_endorsed) verbatim.
+    pub fn endorse(&self, proposal: &Proposal) -> Result<SharedEnvelope, String> {
+        match self.rpc(|id| Request::Endorse { id, proposal: proposal.clone() })? {
+            Response::Endorsed { envelope, .. } => Ok(envelope),
+            Response::Failed { reason, .. } => Err(reason),
+            other => Err(format!("unexpected response: {other:?}")),
+        }
+    }
+
+    /// Submit an endorsed envelope. The returned handle carries the
+    /// admission verdict already; the commit outcome streams back as an
+    /// event and resolves it, exactly like a local submission.
+    pub fn submit_endorsed(&self, envelope: SharedEnvelope) -> SubmitHandle {
+        let started = Instant::now();
+        let tx_id = envelope.tx_id();
+        let channel = envelope.proposal().channel.clone();
+        let waiter = self.demux.waiter(&channel);
+        // Register before the frame leaves: the commit event arrives on
+        // the same socket after the server's Accepted, but ordering with
+        // respect to *this thread* is only guaranteed by registering first.
+        let Some(rx) = waiter.register(tx_id) else {
+            let out = CommitOutcome::Rejected {
+                reject: Reject::Duplicate,
+                latency: started.elapsed(),
+            };
+            return SubmitHandle::resolved(tx_id, started, self.timeout, out);
+        };
+        let resolved =
+            |out: CommitOutcome| SubmitHandle::resolved(tx_id, started, self.timeout, out);
+        match self.rpc(|id| Request::Submit { id, envelope: envelope.clone() }) {
+            Ok(Response::Accepted { .. }) => {
+                SubmitHandle::pending(tx_id, started, self.timeout, rx, waiter)
+            }
+            Ok(Response::Rejected { reject, .. }) => {
+                waiter.deregister(&tx_id);
+                resolved(CommitOutcome::Rejected { reject, latency: started.elapsed() })
+            }
+            Ok(Response::Failed { reason, .. }) => {
+                waiter.deregister(&tx_id);
+                resolved(CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() })
+            }
+            Ok(other) => {
+                waiter.deregister(&tx_id);
+                resolved(CommitOutcome::EndorsementFailed {
+                    reason: format!("unexpected response: {other:?}"),
+                    latency: started.elapsed(),
+                })
+            }
+            Err(reason) => {
+                waiter.deregister(&tx_id);
+                resolved(CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() })
+            }
+        }
+    }
+
+    /// Endorse + submit: the remote mirror of `Gateway::submit`.
+    pub fn submit(&self, proposal: &Proposal) -> SubmitHandle {
+        let started = Instant::now();
+        match self.endorse(proposal) {
+            Ok(envelope) => self.submit_endorsed(envelope),
+            Err(reason) => SubmitHandle::resolved(
+                proposal.tx_id(),
+                started,
+                self.timeout,
+                CommitOutcome::EndorsementFailed { reason, latency: started.elapsed() },
+            ),
+        }
+    }
+
+    /// Closed-loop shim, as `Gateway::submit_and_wait`.
+    pub fn submit_and_wait(&self, proposal: &Proposal) -> CommitOutcome {
+        self.submit(proposal).wait()
+    }
+
+    /// Query a channel's chain position on the server.
+    pub fn status(&self, channel: &str) -> Result<ChannelStatus, String> {
+        match self.rpc(|id| Request::Status { id, channel: channel.to_string() })? {
+            Response::Status { height, tip, state_root, .. } => {
+                Ok(ChannelStatus { height, tip, state_root })
+            }
+            Response::Failed { reason, .. } => Err(reason),
+            other => Err(format!("unexpected response: {other:?}")),
+        }
+    }
+
+    /// Transactions currently awaiting their commit event (all channels).
+    pub fn in_flight(&self) -> usize {
+        self.demux.waiters.lock().unwrap().values().map(|w| w.pending()).sum()
+    }
+}
+
+impl Drop for RemoteGateway {
+    fn drop(&mut self) {
+        // Shut the shared socket down so the demux reader wakes and exits;
+        // it poisons the tables on the way out.
+        self.writer.lock().unwrap().shutdown();
+    }
+}

@@ -1,6 +1,7 @@
-//! Simulated network substrate.
+//! Network substrate: the simulated message fabric and the real-socket
+//! transport for the multi-process split.
 //!
-//! Two layers live here:
+//! Three layers live here:
 //!
 //! - [`simnet::SimNet`] is the message-level transport driving the sans-io
 //!   consensus nodes and the fault-injection tests: scheduled delivery,
@@ -13,7 +14,18 @@
 //!   relaying to the mainchain. The ordering service pumps relayed
 //!   traffic each driver tick, so these latencies shape real batch-pull
 //!   arrival order, not just simulation plots.
+//! - [`transport`] carries `fabric::wire` frames between real OS
+//!   processes over TCP or Unix-domain sockets: [`node`] hosts the
+//!   `scalesfl node` orderer/gateway server roles, and
+//!   [`client::RemoteGateway`] is the client library that rebuilds the
+//!   in-process `SubmitHandle` submission API across a socket.
 
+pub mod client;
+pub mod node;
 pub mod simnet;
+pub mod transport;
 
+pub use client::{ChannelStatus, RemoteGateway};
+pub use node::{FabricNode, NodeConfig};
 pub use simnet::{LinkLatency, SimNet};
+pub use transport::{Endpoint, FramedConn, Listener};

@@ -1,0 +1,531 @@
+//! Process roles for the multi-process fabric: a deterministic topology
+//! builder plus the two `scalesfl node` server loops.
+//!
+//! [`FabricNode::build`] assembles one orderer-with-peers stack — CA,
+//! enrolled endorsing peers joined to every configured channel, ordering
+//! service, in-process [`Gateway`] — entirely from a [`NodeConfig`]. The
+//! same builder backs three callers with byte-identical chains:
+//!
+//! - the `scalesfl node orderer` subcommand ([`serve`]), exposing the
+//!   stack over a socket,
+//! - the in-process reference run in the multi-process integration test,
+//! - the loopback wire bench.
+//!
+//! Determinism is the point: credentials derive from the seeded PRNG in
+//! enrollment order, blocks carry no timestamps, and with `batch_size: 1`
+//! a sequential submission stream cuts one block per transaction — so a
+//! remote client driving a child process over TCP must land the exact
+//! same heights, tip hashes, and state roots as the same proposals
+//! submitted through a local gateway.
+//!
+//! The server loop speaks `fabric::wire` frames over a
+//! [`transport::Listener`]. Each connection gets a reader thread (this
+//! function) and a writer thread draining an outbound queue, so commit
+//! events pushed by waiter callbacks never interleave with responses
+//! mid-frame. A malformed or protocol-violating frame closes the
+//! connection (`WireError::Malformed` semantics); the process and its
+//! other connections keep running, and nothing already committed is lost.
+//!
+//! [`serve_relay`] is the `scalesfl node gateway` role: it fronts several
+//! orderer processes, routing each inbound request to the upstream that
+//! owns its channel (connections are dialed lazily, per client, so
+//! correlation ids never collide across clients) and pumping responses
+//! and events back verbatim — frames transit without re-encoding.
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use crate::crypto::msp::{CertificateAuthority, MemberId};
+use crate::crypto::Digest;
+use crate::fabric::chaincode::{Chaincode, TxContext};
+use crate::fabric::endorsement::EndorsementPolicy;
+use crate::fabric::orderer::{OrdererConfig, OrderingService};
+use crate::fabric::peer::Peer;
+use crate::fabric::waiter::WaiterEvent;
+use crate::fabric::wire::{encode_frame, Event, Frame, Request, Response};
+use crate::fabric::Gateway;
+use crate::util::prng::Prng;
+
+use super::transport::{Endpoint, FramedConn, Listener};
+
+/// Topology for one orderer-with-peers process. Two processes built from
+/// equal configs and fed equal proposal streams produce identical chains.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeConfig {
+    /// Channels (shards) this node orders and its peers join.
+    pub channels: Vec<String>,
+    /// Endorsing peers, enrolled as `org{i}.peer` in index order.
+    pub peers: usize,
+    /// Seeds credential enrollment and the ordering service.
+    pub seed: u64,
+    /// Envelopes per block. The deterministic-comparison setup uses 1.
+    pub batch_size: usize,
+    /// Batch cut timeout.
+    pub batch_timeout: Duration,
+}
+
+impl Default for NodeConfig {
+    fn default() -> NodeConfig {
+        NodeConfig {
+            channels: vec!["ch".into()],
+            peers: 2,
+            seed: 7,
+            batch_size: 1,
+            batch_timeout: Duration::from_millis(10),
+        }
+    }
+}
+
+/// The reference chaincode every node installs: `Put key [value]`.
+/// Deliberately total over hostile remote argument lists — a missing key
+/// is an endorsement error, not a peer panic.
+struct KvPut;
+
+impl Chaincode for KvPut {
+    fn name(&self) -> &str {
+        "kv"
+    }
+
+    fn invoke(
+        &self,
+        ctx: &mut TxContext<'_>,
+        _f: &str,
+        args: &[String],
+    ) -> Result<Vec<u8>, String> {
+        let Some(key) = args.first() else {
+            return Err("kv: missing key argument".into());
+        };
+        let value = args.get(1).map(|v| v.as_bytes().to_vec()).unwrap_or_else(|| b"v".to_vec());
+        ctx.put(key, value);
+        Ok(vec![])
+    }
+}
+
+/// One assembled orderer-with-peers stack.
+pub struct FabricNode {
+    pub peers: Vec<Arc<Peer>>,
+    pub orderer: Arc<OrderingService>,
+    pub gateway: Arc<Gateway>,
+}
+
+impl FabricNode {
+    /// Build the stack from `cfg`. Enrollment order, policy, and seeds are
+    /// all functions of the config — the determinism contract above.
+    pub fn build(cfg: &NodeConfig) -> FabricNode {
+        let ca = CertificateAuthority::new();
+        let mut rng = Prng::new(cfg.seed);
+        let peers: Vec<Arc<Peer>> = (0..cfg.peers.max(1))
+            .map(|i| {
+                let cred = ca.enroll(MemberId::new(format!("org{i}.peer")), &mut rng);
+                Peer::new(cred, ca.clone())
+            })
+            .collect();
+        let members: Vec<MemberId> = peers.iter().map(|p| p.member.clone()).collect();
+        for ch in &cfg.channels {
+            for p in &peers {
+                p.join_channel(ch, EndorsementPolicy::MajorityOf(members.clone()));
+                p.install_chaincode(ch, Arc::new(KvPut)).expect("install chaincode");
+            }
+        }
+        let ocfg = OrdererConfig {
+            batch_size: cfg.batch_size.max(1),
+            batch_timeout: cfg.batch_timeout,
+            tick: Duration::from_millis(1),
+            ..OrdererConfig::default()
+        };
+        let orderer = OrderingService::start(ocfg, peers.clone(), cfg.seed);
+        let gateway = Arc::new(Gateway::new(peers.clone(), Arc::clone(&orderer)));
+        FabricNode { peers, orderer, gateway }
+    }
+
+    /// (height, tip hash, state root) for `channel`, or `None` if no peer
+    /// joined it.
+    pub fn status(&self, channel: &str) -> Option<(u64, Digest, Digest)> {
+        let ch = self.peers.first()?.channel(channel)?;
+        let tip = ch.chain.lock().unwrap().tip_hash();
+        Some((ch.height(), tip, ch.state_root()))
+    }
+}
+
+/// Accept loop for the orderer role: one [`conn_loop`] thread per inbound
+/// connection. Returns when the listener errors (socket closed).
+pub fn serve(node: Arc<FabricNode>, listener: Listener) {
+    while let Ok(conn) = listener.accept() {
+        let node = Arc::clone(&node);
+        thread::Builder::new()
+            .name("node-conn".into())
+            .spawn(move || conn_loop(node, conn))
+            .expect("spawn node connection");
+    }
+}
+
+/// Serve one client connection until it closes or violates the protocol.
+fn conn_loop(node: Arc<FabricNode>, mut reader: FramedConn) {
+    let Ok(writer) = reader.try_clone() else { return };
+    // All outbound traffic — responses and waiter-callback events — funnels
+    // through one writer thread, so frames never interleave.
+    let (out_tx, out_rx) = mpsc::channel::<Frame>();
+    thread::Builder::new()
+        .name("node-conn-writer".into())
+        .spawn(move || {
+            let mut writer = writer;
+            while let Ok(frame) = out_rx.recv() {
+                if writer.send_frame(&frame).is_err() {
+                    return;
+                }
+            }
+        })
+        .expect("spawn node connection writer");
+    loop {
+        match reader.recv_frame() {
+            Ok(Some(Frame::Request(req))) => {
+                if handle_request(&node, &out_tx, req).is_err() {
+                    break; // client gone
+                }
+            }
+            // Clients only send requests; a response/event here, a
+            // malformed frame, or a torn read all close the connection.
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    // Wakes the writer thread's pending sends; callbacks still registered
+    // for in-flight transactions send into a closed socket harmlessly.
+    reader.shutdown();
+}
+
+/// Dispatch one request; the reply (and any later events) go out through
+/// `out`. `Err` means the outbound queue is gone.
+fn handle_request(
+    node: &FabricNode,
+    out: &mpsc::Sender<Frame>,
+    req: Request,
+) -> Result<(), mpsc::SendError<Frame>> {
+    match req {
+        Request::Endorse { id, proposal } => {
+            let resp = match node.gateway.endorse(&proposal) {
+                Ok(envelope) => Response::Endorsed { id, envelope },
+                Err(reason) => Response::Failed { id, reason },
+            };
+            out.send(Frame::Response(resp))
+        }
+        Request::Submit { id, envelope } => {
+            let channel = envelope.proposal().channel.clone();
+            let tx_id = envelope.tx_id();
+            let waiter = match node.gateway.waiter(&channel) {
+                Ok(w) => w,
+                Err(reason) => return out.send(Frame::Response(Response::Failed { id, reason })),
+            };
+            // Register the event-forwarding callback before ordering, so
+            // the commit cannot race past it; the callback runs on the
+            // demux thread and only enqueues a frame.
+            let events = out.clone();
+            let cb_channel = channel.clone();
+            let registered = waiter.register_callback(
+                tx_id,
+                Box::new(move |ev| {
+                    let frame = match ev {
+                        WaiterEvent::Committed(cev, _) => Frame::Event(Event::Committed {
+                            channel: cev.channel.to_string(),
+                            tx_id: cev.tx_id,
+                            block: cev.block,
+                            code: cev.code,
+                        }),
+                        WaiterEvent::Dropped(reject, _) => {
+                            Frame::Event(Event::Dropped { channel: cb_channel, tx_id, reject })
+                        }
+                    };
+                    let _ = events.send(frame);
+                }),
+            );
+            if !registered {
+                let reject = crate::mempool::Reject::Duplicate;
+                return out.send(Frame::Response(Response::Rejected { id, reject }));
+            }
+            let resp = match node.orderer.submit(envelope) {
+                Ok(()) => Response::Accepted { id, tx_id },
+                Err(reject) => {
+                    waiter.deregister(&tx_id);
+                    Response::Rejected { id, reject }
+                }
+            };
+            out.send(Frame::Response(resp))
+        }
+        Request::Status { id, channel } => {
+            let resp = match node.status(&channel) {
+                Some((height, tip, state_root)) => {
+                    Response::Status { id, height, tip, state_root }
+                }
+                None => Response::Failed { id, reason: format!("unknown channel {channel:?}") },
+            };
+            out.send(Frame::Response(resp))
+        }
+    }
+}
+
+/// Accept loop for the gateway role: relay each client to the upstream
+/// orderer processes owning the channels it touches.
+pub fn serve_relay(upstreams: Arc<HashMap<String, Endpoint>>, listener: Listener) {
+    while let Ok(conn) = listener.accept() {
+        let upstreams = Arc::clone(&upstreams);
+        thread::Builder::new()
+            .name("gw-conn".into())
+            .spawn(move || relay_loop(upstreams, conn))
+            .expect("spawn gateway connection");
+    }
+}
+
+/// Relay one client connection. Requests are routed by channel and
+/// forwarded as the raw bytes that arrived (decoded only to validate and
+/// extract the route); per-upstream pump threads copy responses and
+/// events back into the client's writer queue.
+fn relay_loop(upstreams: Arc<HashMap<String, Endpoint>>, mut client: FramedConn) {
+    let Ok(writer) = client.try_clone() else { return };
+    let (out_tx, out_rx) = mpsc::channel::<Vec<u8>>();
+    thread::Builder::new()
+        .name("gw-conn-writer".into())
+        .spawn(move || {
+            let mut writer = writer;
+            while let Ok(buf) = out_rx.recv() {
+                if writer.send(&buf).is_err() {
+                    return;
+                }
+            }
+        })
+        .expect("spawn gateway connection writer");
+    // Upstream write halves, dialed lazily per channel for this client.
+    let mut ups: HashMap<String, FramedConn> = HashMap::new();
+    loop {
+        let buf = match client.recv() {
+            Ok(Some(buf)) => buf,
+            Ok(None) | Err(_) => break,
+        };
+        let (id, channel) = match crate::fabric::wire::decode_frame(&buf) {
+            Ok(Frame::Request(Request::Endorse { id, proposal })) => (id, proposal.channel),
+            Ok(Frame::Request(Request::Submit { id, envelope })) => {
+                (id, envelope.proposal().channel.clone())
+            }
+            Ok(Frame::Request(Request::Status { id, channel })) => (id, channel),
+            // Malformed, or not a request: close, matching the orderer role.
+            _ => break,
+        };
+        if !ups.contains_key(&channel) {
+            if let Some(up) = dial_upstream(&upstreams, &channel, &out_tx) {
+                ups.insert(channel.clone(), up);
+            }
+        }
+        let forwarded = match ups.get_mut(&channel) {
+            Some(up) => up.send(&buf).is_ok(),
+            None => false,
+        };
+        if !forwarded {
+            ups.remove(&channel);
+            let fail = Frame::Response(Response::Failed {
+                id,
+                reason: format!("no upstream for channel {channel:?}"),
+            });
+            if out_tx.send(encode_frame(&fail)).is_err() {
+                break;
+            }
+        }
+    }
+    client.shutdown();
+    for up in ups.values() {
+        up.shutdown();
+    }
+}
+
+/// Dial the upstream owning `channel` and start its client-bound pump.
+fn dial_upstream(
+    upstreams: &HashMap<String, Endpoint>,
+    channel: &str,
+    out_tx: &mpsc::Sender<Vec<u8>>,
+) -> Option<FramedConn> {
+    let ep = upstreams.get(channel)?;
+    let up = FramedConn::connect_retry(ep, Duration::from_secs(5)).ok()?;
+    let mut pump = up.try_clone().ok()?;
+    let back = out_tx.clone();
+    thread::Builder::new()
+        .name("gw-upstream-pump".into())
+        .spawn(move || {
+            // Upstream frames (responses + events) transit verbatim.
+            while let Ok(Some(buf)) = pump.recv() {
+                if back.send(buf).is_err() {
+                    return;
+                }
+            }
+        })
+        .expect("spawn gateway upstream pump");
+    Some(up)
+}
+
+/// Bind, announce, and serve the orderer role until `listener` dies.
+/// Returns the bound endpoint (port 0 resolved) before blocking — callers
+/// print the `LISTENING` line themselves.
+pub fn bind_and_serve(
+    node: FabricNode,
+    ep: &Endpoint,
+) -> io::Result<(Endpoint, thread::JoinHandle<()>)> {
+    let listener = Listener::bind(ep)?;
+    let local = listener.local_endpoint()?;
+    let node = Arc::new(node);
+    let t = thread::Builder::new()
+        .name("node-accept".into())
+        .spawn(move || serve(node, listener))
+        .expect("spawn node accept loop");
+    Ok((local, t))
+}
+
+/// Bind, announce, and serve the gateway-relay role.
+pub fn bind_and_serve_relay(
+    upstreams: HashMap<String, Endpoint>,
+    ep: &Endpoint,
+) -> io::Result<(Endpoint, thread::JoinHandle<()>)> {
+    let listener = Listener::bind(ep)?;
+    let local = listener.local_endpoint()?;
+    let upstreams = Arc::new(upstreams);
+    let t = thread::Builder::new()
+        .name("gw-accept".into())
+        .spawn(move || serve_relay(upstreams, listener))
+        .expect("spawn gateway accept loop");
+    Ok((local, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::CommitOutcome;
+    use crate::ledger::tx::Proposal;
+    use crate::network::client::RemoteGateway;
+
+    fn proposal(channel: &str, key: &str, nonce: u64) -> Proposal {
+        Proposal {
+            channel: channel.into(),
+            chaincode: "kv".into(),
+            function: "Put".into(),
+            args: vec![key.into()],
+            creator: MemberId::new("client"),
+            nonce,
+        }
+    }
+
+    fn loopback() -> Endpoint {
+        Endpoint::parse("tcp:127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn remote_submit_commits_and_matches_local_status() {
+        let cfg = NodeConfig::default();
+        let (ep, _t) = bind_and_serve(FabricNode::build(&cfg), &loopback()).unwrap();
+        let reference = FabricNode::build(&cfg);
+        let gw = RemoteGateway::connect(&ep).unwrap();
+        for i in 0..4u64 {
+            let p = proposal("ch", &format!("k{i}"), i);
+            let out = gw.submit_and_wait(&p);
+            assert!(out.is_valid(), "remote tx {i}: {out:?}");
+            let out = reference.gateway.submit_and_wait(&p);
+            assert!(out.is_valid(), "local tx {i}: {out:?}");
+        }
+        assert_eq!(gw.in_flight(), 0);
+        let remote = gw.status("ch").unwrap();
+        let (height, tip, root) = reference.status("ch").unwrap();
+        assert_eq!(remote.height, height);
+        assert_eq!(remote.tip, tip, "tip hash diverged between socket and in-process runs");
+        assert_eq!(remote.state_root, root);
+    }
+
+    #[test]
+    fn remote_endorse_submit_split_keeps_handle_semantics() {
+        let (ep, _t) =
+            bind_and_serve(FabricNode::build(&NodeConfig::default()), &loopback()).unwrap();
+        let gw = RemoteGateway::connect(&ep).unwrap();
+        let env = gw.endorse(&proposal("ch", "split", 1)).unwrap();
+        assert!(!env.as_bytes().is_empty());
+        let mut h = gw.submit_endorsed(env.clone());
+        assert!(h.wait_timeout(Duration::from_secs(10)).is_valid());
+        // Resubmitting the same envelope is a duplicate: depending on
+        // where the pipeline catches it (admission dedup vs commit-time
+        // DuplicateTxId) it surfaces as Rejected or an invalid commit —
+        // never as a second valid commit.
+        let out = gw.submit_endorsed(env).wait();
+        assert!(!out.is_valid(), "{out:?}");
+    }
+
+    #[test]
+    fn unknown_channel_and_bad_proposal_fail_cleanly() {
+        let (ep, _t) =
+            bind_and_serve(FabricNode::build(&NodeConfig::default()), &loopback()).unwrap();
+        let gw = RemoteGateway::connect(&ep).unwrap();
+        assert!(gw.status("nope").is_err());
+        let out = gw.submit_and_wait(&proposal("nope", "k", 1));
+        assert!(matches!(out, CommitOutcome::EndorsementFailed { .. }), "{out:?}");
+        // A proposal with no args must not kill the peer or the server.
+        let mut p = proposal("ch", "k", 2);
+        p.args.clear();
+        let out = gw.submit_and_wait(&p);
+        assert!(matches!(out, CommitOutcome::EndorsementFailed { .. }), "{out:?}");
+        // The connection survives all of it.
+        assert!(gw.status("ch").is_ok());
+    }
+
+    /// Satellite: a connection killed mid-frame does not lose committed
+    /// events for other connections, and a fresh connection resyncs.
+    #[test]
+    fn torn_client_does_not_disturb_other_connections() {
+        let (ep, _t) =
+            bind_and_serve(FabricNode::build(&NodeConfig::default()), &loopback()).unwrap();
+        let gw = RemoteGateway::connect(&ep).unwrap();
+        assert!(gw.submit_and_wait(&proposal("ch", "before", 1)).is_valid());
+        {
+            // A raw socket that dies inside a frame: the length prefix
+            // promises 100 bytes, 10 arrive, then the connection drops.
+            let Endpoint::Tcp(addr) = &ep else { panic!("loopback is tcp") };
+            let mut raw = std::net::TcpStream::connect(addr.as_str()).unwrap();
+            use std::io::Write as _;
+            raw.write_all(&100u32.to_le_bytes()).unwrap();
+            raw.write_all(&[1u8; 10]).unwrap();
+            drop(raw);
+        }
+        {
+            // A complete transport frame whose payload is a truncated
+            // Submit request — WireError::Truncated inside the trust
+            // boundary; the server closes the connection.
+            let mut torn = FramedConn::connect(&ep).unwrap();
+            torn.send(&[0x00, 0x01]).unwrap();
+            assert_eq!(torn.recv().unwrap(), None, "server closes on torn request");
+        }
+        {
+            // And one that sends a malformed frame; the server closes it.
+            let mut bad = FramedConn::connect(&ep).unwrap();
+            bad.send(&[0xEE, 0xEE, 0xEE]).unwrap();
+            assert_eq!(bad.recv().unwrap(), None, "server closes on malformed frame");
+        }
+        // The original connection still commits and its chain advanced.
+        assert!(gw.submit_and_wait(&proposal("ch", "after", 2)).is_valid());
+        assert_eq!(gw.status("ch").unwrap().height, 2);
+    }
+
+    #[test]
+    fn relay_routes_by_channel_and_reports_unroutable() {
+        let shard = |name: &str, seed: u64| NodeConfig {
+            channels: vec![name.into()],
+            seed,
+            ..NodeConfig::default()
+        };
+        let (ep0, _t0) = bind_and_serve(FabricNode::build(&shard("s0", 7)), &loopback()).unwrap();
+        let (ep1, _t1) = bind_and_serve(FabricNode::build(&shard("s1", 8)), &loopback()).unwrap();
+        let mut up = HashMap::new();
+        up.insert("s0".to_string(), ep0);
+        up.insert("s1".to_string(), ep1);
+        let (gep, _tg) = bind_and_serve_relay(up, &loopback()).unwrap();
+        let gw = RemoteGateway::connect(&gep).unwrap();
+        assert!(gw.submit_and_wait(&proposal("s0", "a", 1)).is_valid());
+        assert!(gw.submit_and_wait(&proposal("s1", "b", 1)).is_valid());
+        assert_eq!(gw.status("s0").unwrap().height, 1);
+        assert_eq!(gw.status("s1").unwrap().height, 1);
+        let err = gw.status("s9").unwrap_err();
+        assert!(err.contains("no upstream"), "{err}");
+    }
+}

@@ -1,0 +1,457 @@
+//! Socket transport for the multi-process fabric: length-prefixed frames
+//! over TCP or Unix-domain sockets.
+//!
+//! The unit of exchange is one `fabric::wire` frame, carried as a `u32`
+//! little-endian length prefix followed by exactly that many payload
+//! bytes. The transport owns the framing only — payload grammar and
+//! validation live in [`crate::fabric::wire`]. Both sides of the split
+//! ([`crate::network::node`] servers and the
+//! [`crate::network::client::RemoteGateway`]) speak through the same
+//! [`FramedConn`], full-duplex: each half is driven by its own thread over
+//! a [`FramedConn::try_clone`] of the connection, so responses and
+//! asynchronous commit events share one socket without interleaving
+//! partial writes (every frame is sent with a single `write_all`).
+//!
+//! Hostile-input posture matches the codec's: the length prefix is
+//! validated against [`MAX_FRAME`] *before* any buffer is sized from it,
+//! a connection that dies mid-frame surfaces as an explicit
+//! `UnexpectedEof` error (torn — the stream cannot be resynchronized, the
+//! connection is closed), and a clean close at a frame boundary is
+//! `Ok(None)`, never an error.
+
+use std::fmt;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::fabric::wire::{decode_frame, encode_frame, Frame};
+
+/// Hard cap on one frame's payload length. Generous against real traffic
+/// (the largest frames carry one consensus batch of envelopes, well under
+/// a MiB) while bounding what a hostile length prefix can make the
+/// receiver allocate.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// A dialable/bindable address: `tcp:HOST:PORT` or `uds:/PATH`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// TCP socket address, e.g. `127.0.0.1:7050` (port 0 binds ephemeral).
+    Tcp(String),
+    /// Unix-domain socket path.
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    /// Parse the textual form used by CLI flags and the `LISTENING` line.
+    pub fn parse(s: &str) -> Result<Endpoint, String> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                return Err("empty tcp address".into());
+            }
+            Ok(Endpoint::Tcp(addr.to_string()))
+        } else if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                return Err("empty uds path".into());
+            }
+            Ok(Endpoint::Uds(PathBuf::from(path)))
+        } else {
+            Err(format!("bad endpoint {s:?}: expected tcp:HOST:PORT or uds:/PATH"))
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(addr) => write!(f, "tcp:{addr}"),
+            Endpoint::Uds(path) => write!(f, "uds:{}", path.display()),
+        }
+    }
+}
+
+/// One bound listening socket. Accepting yields [`FramedConn`]s.
+pub enum Listener {
+    Tcp(TcpListener),
+    /// Keeps the bound path so it can be unlinked on drop.
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind `ep`. A stale UDS path from a crashed previous process is
+    /// removed first (binding over a live one still fails with
+    /// `AddrInUse` on the fresh path only if another process re-creates
+    /// it, which is the caller's configuration error to resolve).
+    pub fn bind(ep: &Endpoint) -> io::Result<Listener> {
+        match ep {
+            Endpoint::Tcp(addr) => Ok(Listener::Tcp(TcpListener::bind(addr.as_str())?)),
+            Endpoint::Uds(path) => {
+                let _ = fs::remove_file(path);
+                Ok(Listener::Uds(UnixListener::bind(path)?, path.clone()))
+            }
+        }
+    }
+
+    /// The endpoint actually bound — resolves `tcp:...:0` to the ephemeral
+    /// port the OS picked, which is what a parent process parses from the
+    /// child's `LISTENING` line.
+    pub fn local_endpoint(&self) -> io::Result<Endpoint> {
+        match self {
+            Listener::Tcp(l) => Ok(Endpoint::Tcp(l.local_addr()?.to_string())),
+            Listener::Uds(_, path) => Ok(Endpoint::Uds(path.clone())),
+        }
+    }
+
+    /// Block for the next inbound connection.
+    pub fn accept(&self) -> io::Result<FramedConn> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(FramedConn { stream: Stream::Tcp(s) })
+            }
+            Listener::Uds(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(FramedConn { stream: Stream::Uds(s) })
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Uds(_, path) = self {
+            let _ = fs::remove_file(path);
+        }
+    }
+}
+
+/// The two stream flavors behind one Read/Write face.
+enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => Ok(Stream::Tcp(s.try_clone()?)),
+            Stream::Uds(s) => Ok(Stream::Uds(s.try_clone()?)),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Stream::Uds(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// Fill `buf`, tolerating a clean EOF: returns how many bytes arrived
+/// before the stream ended (== `buf.len()` on success).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> io::Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        match r.read(&mut buf[n..]) {
+            Ok(0) => return Ok(n),
+            Ok(m) => n += m,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(n)
+}
+
+fn torn(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::UnexpectedEof, format!("connection closed inside a {what}"))
+}
+
+/// One framed, full-duplex connection. Writes are atomic per frame (one
+/// buffered `write_all` of prefix + payload); reads validate the length
+/// prefix before allocating and distinguish a clean close (`Ok(None)`)
+/// from a torn frame (`Err`, kind `UnexpectedEof`).
+pub struct FramedConn {
+    stream: Stream,
+}
+
+impl FramedConn {
+    /// Dial `ep` once.
+    pub fn connect(ep: &Endpoint) -> io::Result<FramedConn> {
+        match ep {
+            Endpoint::Tcp(addr) => {
+                let s = TcpStream::connect(addr.as_str())?;
+                let _ = s.set_nodelay(true);
+                Ok(FramedConn { stream: Stream::Tcp(s) })
+            }
+            Endpoint::Uds(path) => {
+                Ok(FramedConn { stream: Stream::Uds(UnixStream::connect(path)?) })
+            }
+        }
+    }
+
+    /// Dial `ep` with bounded exponential backoff (10 ms doubling to a
+    /// 250 ms cap) until `total` has elapsed — how a parent-spawned
+    /// process is reached while it is still binding its listener. The
+    /// last connect error is returned on timeout.
+    pub fn connect_retry(ep: &Endpoint, total: Duration) -> io::Result<FramedConn> {
+        let start = Instant::now();
+        let mut backoff = Duration::from_millis(10);
+        loop {
+            match FramedConn::connect(ep) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if start.elapsed() + backoff >= total {
+                        return Err(e);
+                    }
+                    thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(250));
+                }
+            }
+        }
+    }
+
+    /// A second handle on the same socket, for driving the read and write
+    /// halves from separate threads. Shutdown through either handle closes
+    /// both directions.
+    pub fn try_clone(&self) -> io::Result<FramedConn> {
+        Ok(FramedConn { stream: self.stream.try_clone()? })
+    }
+
+    /// Close both directions, waking any thread blocked in [`recv`]
+    /// (it observes EOF or a reset) on every clone of this connection.
+    ///
+    /// [`recv`]: FramedConn::recv
+    pub fn shutdown(&self) {
+        self.stream.shutdown();
+    }
+
+    /// Send one frame payload, length-prefixed, as a single write.
+    pub fn send(&mut self, payload: &[u8]) -> io::Result<()> {
+        if payload.len() > MAX_FRAME {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("frame of {} bytes exceeds MAX_FRAME {MAX_FRAME}", payload.len()),
+            ));
+        }
+        let mut buf = Vec::with_capacity(4 + payload.len());
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        self.stream.write_all(&buf)
+    }
+
+    /// Encode and send one protocol frame.
+    pub fn send_frame(&mut self, f: &Frame) -> io::Result<()> {
+        self.send(&encode_frame(f))
+    }
+
+    /// Receive one frame payload. `Ok(None)` is the peer closing cleanly
+    /// at a frame boundary; a close inside the header or payload is a torn
+    /// frame (`UnexpectedEof`), and a length prefix above [`MAX_FRAME`] is
+    /// `InvalidData` — reported before any allocation is sized from it.
+    pub fn recv(&mut self) -> io::Result<Option<Vec<u8>>> {
+        let mut hdr = [0u8; 4];
+        let got = read_full(&mut self.stream, &mut hdr)?;
+        if got == 0 {
+            return Ok(None);
+        }
+        if got < hdr.len() {
+            return Err(torn("frame header"));
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > MAX_FRAME {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}"),
+            ));
+        }
+        let mut payload = vec![0u8; len];
+        let got = read_full(&mut self.stream, &mut payload)?;
+        if got < len {
+            return Err(torn("frame payload"));
+        }
+        Ok(Some(payload))
+    }
+
+    /// Receive and decode one protocol frame. A payload the wire codec
+    /// rejects — torn *inside* a complete transport frame is just as
+    /// unrecoverable as structurally malformed — maps to `InvalidData`:
+    /// the caller should close the connection.
+    pub fn recv_frame(&mut self) -> io::Result<Option<Frame>> {
+        match self.recv()? {
+            None => Ok(None),
+            Some(buf) => decode_frame(&buf)
+                .map(Some)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::wire::{Request, Response};
+    use crate::util::tempdir::TempDir;
+
+    fn tcp_pair() -> (FramedConn, FramedConn) {
+        let l = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+        let ep = l.local_endpoint().unwrap();
+        let t = thread::spawn(move || l.accept().unwrap());
+        let client = FramedConn::connect(&ep).unwrap();
+        (client, t.join().unwrap())
+    }
+
+    #[test]
+    fn endpoint_parse_and_display() {
+        let tcp = Endpoint::parse("tcp:127.0.0.1:7050").unwrap();
+        assert_eq!(tcp, Endpoint::Tcp("127.0.0.1:7050".into()));
+        assert_eq!(Endpoint::parse(&tcp.to_string()).unwrap(), tcp);
+        let uds = Endpoint::parse("uds:/tmp/x.sock").unwrap();
+        assert_eq!(uds, Endpoint::Uds(PathBuf::from("/tmp/x.sock")));
+        assert_eq!(Endpoint::parse(&uds.to_string()).unwrap(), uds);
+        assert!(Endpoint::parse("http:whatever").is_err());
+        assert!(Endpoint::parse("tcp:").is_err());
+        assert!(Endpoint::parse("uds:").is_err());
+    }
+
+    #[test]
+    fn tcp_frames_roundtrip_full_duplex() {
+        let (mut client, mut server) = tcp_pair();
+        let req = Frame::Request(Request::Status { id: 1, channel: "ch".into() });
+        let resp = Frame::Response(Response::Failed { id: 1, reason: "nope".into() });
+        client.send_frame(&req).unwrap();
+        assert_eq!(server.recv_frame().unwrap(), Some(req));
+        server.send_frame(&resp).unwrap();
+        // Several frames queued back to back stay delimited.
+        server.send(b"").unwrap();
+        server.send(&[7u8; 3]).unwrap();
+        assert_eq!(client.recv_frame().unwrap(), Some(resp));
+        assert_eq!(client.recv().unwrap(), Some(vec![]));
+        assert_eq!(client.recv().unwrap(), Some(vec![7, 7, 7]));
+        // Clean close at a frame boundary is None, not an error.
+        drop(server);
+        assert_eq!(client.recv().unwrap(), None);
+    }
+
+    #[test]
+    fn uds_frames_roundtrip() {
+        let dir = TempDir::new("uds");
+        let ep = Endpoint::Uds(dir.join("node.sock"));
+        let l = Listener::bind(&ep).unwrap();
+        assert_eq!(l.local_endpoint().unwrap(), ep);
+        let dial = ep.clone();
+        let t = thread::spawn(move || {
+            let mut c = FramedConn::connect_retry(&dial, Duration::from_secs(2)).unwrap();
+            c.send(b"over uds").unwrap();
+            c.recv().unwrap()
+        });
+        let mut server = l.accept().unwrap();
+        assert_eq!(server.recv().unwrap(), Some(b"over uds".to_vec()));
+        server.send(b"ack").unwrap();
+        assert_eq!(t.join().unwrap(), Some(b"ack".to_vec()));
+        // Dropping the listener unlinks the socket path.
+        drop(l);
+        assert!(!dir.join("node.sock").exists());
+    }
+
+    /// Satellite: a connection killed mid-frame surfaces as a torn-frame
+    /// error — never a panic, never a silent truncation into `Ok`.
+    #[test]
+    fn killed_mid_frame_is_a_torn_error() {
+        // Closed inside the payload: header promises 100 bytes, 10 arrive.
+        let (mut client, mut server) = tcp_pair();
+        client.stream.write_all(&100u32.to_le_bytes()).unwrap();
+        client.stream.write_all(&[1u8; 10]).unwrap();
+        drop(client);
+        let err = server.recv().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "{err}");
+
+        // Closed inside the header itself.
+        let (mut client, mut server) = tcp_pair();
+        client.stream.write_all(&[5u8, 0]).unwrap();
+        drop(client);
+        let err = server.recv().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "{err}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let (mut client, mut server) = tcp_pair();
+        // Claims a 4 GiB - 1 frame; the receiver must refuse without
+        // trying to allocate it.
+        client.stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = server.recv().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+        // And the sender refuses to produce one.
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(client.send(&big).is_err());
+    }
+
+    #[test]
+    fn recv_frame_maps_undecodable_payload_to_invalid_data() {
+        let (mut client, mut server) = tcp_pair();
+        client.send(&[0xEE, 0xEE, 0xEE]).unwrap();
+        let err = server.recv_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "{err}");
+    }
+
+    #[test]
+    fn connect_retry_reaches_a_late_listener() {
+        let probe = Listener::bind(&Endpoint::parse("tcp:127.0.0.1:0").unwrap()).unwrap();
+        let ep = probe.local_endpoint().unwrap();
+        drop(probe); // port reserved a moment ago, nobody listening now
+        let dial = ep.clone();
+        let t = thread::spawn(move || {
+            FramedConn::connect_retry(&dial, Duration::from_secs(5)).map(|_| ())
+        });
+        // Bind the listener after the dialer has (very likely) started
+        // failing; backoff keeps retrying until it lands.
+        thread::sleep(Duration::from_millis(50));
+        let l = Listener::bind(&ep).unwrap();
+        let accepted = l.accept();
+        assert!(accepted.is_ok());
+        assert!(t.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn shutdown_wakes_a_blocked_reader() {
+        let (client, mut server) = tcp_pair();
+        let t = thread::spawn(move || server.recv());
+        thread::sleep(Duration::from_millis(20));
+        client.shutdown();
+        // EOF (clean None) or a reset error — either way the reader wakes.
+        let _ = t.join().unwrap();
+    }
+}

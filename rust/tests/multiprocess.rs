@@ -1,0 +1,173 @@
+//! Multi-process fabric integration: real `scalesfl node` child processes
+//! over real sockets.
+//!
+//! The acceptance test for the multi-process split: a 2-shard topology —
+//! two orderer processes plus a gateway process fronting them — is
+//! spawned as OS children of this test, driven through the remote client
+//! over loopback TCP, and must commit the **exact same blocks** (height,
+//! tip hash, state root) as the same proposals submitted through an
+//! in-process `FabricNode` built from the same config. A second test runs
+//! the whole exchange over a Unix-domain socket.
+//!
+//! Children are guarded: on any panic the `ChildNode` drop kills the
+//! process, so a failing assertion never leaks orphaned servers into the
+//! test host. Graceful shutdown is the production path — closing the
+//! child's stdin — and the tests assert the child actually exits 0 that
+//! way.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use scalesfl::crypto::msp::MemberId;
+use scalesfl::ledger::tx::Proposal;
+use scalesfl::network::node::{FabricNode, NodeConfig};
+use scalesfl::network::transport::Endpoint;
+use scalesfl::network::RemoteGateway;
+use scalesfl::util::tempdir::TempDir;
+
+/// One spawned `scalesfl node` child plus the endpoint it announced.
+/// Dropping it kills the process — cleanup happens even when an assertion
+/// fails mid-test.
+struct ChildNode {
+    child: Child,
+    endpoint: Endpoint,
+}
+
+impl ChildNode {
+    /// Spawn `scalesfl node <args>` and parse the `LISTENING <endpoint>`
+    /// line it prints once bound (port 0 resolves to an ephemeral port).
+    fn spawn(args: &[&str]) -> ChildNode {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_scalesfl"))
+            .arg("node")
+            .args(args)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn scalesfl node child");
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read child banner");
+        let ep = line
+            .trim()
+            .strip_prefix("LISTENING ")
+            .unwrap_or_else(|| panic!("unexpected child banner: {line:?}"))
+            .to_string();
+        let endpoint = Endpoint::parse(&ep).expect("parse child endpoint");
+        ChildNode { child, endpoint }
+    }
+
+    /// The production shutdown path: close the child's stdin and wait for
+    /// it to exit on its own. Panics if it doesn't exit cleanly in time
+    /// (the drop guard then kills it).
+    fn stop(mut self) {
+        drop(self.child.stdin.take());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match self.child.try_wait().expect("poll child") {
+                Some(status) => {
+                    assert!(status.success(), "child exited with {status}");
+                    return;
+                }
+                None if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20))
+                }
+                None => panic!("child did not exit after stdin EOF"),
+            }
+        }
+    }
+}
+
+impl Drop for ChildNode {
+    fn drop(&mut self) {
+        // Already-reaped children make kill a no-op error; ignore it.
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn proposal(channel: &str, key: &str, nonce: u64) -> Proposal {
+    Proposal {
+        channel: channel.into(),
+        chaincode: "kv".into(),
+        function: "Put".into(),
+        args: vec![key.into(), format!("value-{nonce}")],
+        creator: MemberId::new("client"),
+        nonce,
+    }
+}
+
+/// The in-process reference stack matching `scalesfl node orderer
+/// --channels <channel> --seed <seed>` (all other flags at defaults).
+fn reference(channel: &str, seed: u64) -> FabricNode {
+    FabricNode::build(&NodeConfig {
+        channels: vec![channel.to_string()],
+        seed,
+        ..NodeConfig::default()
+    })
+}
+
+/// Drive the same proposal stream through a remote connection and a local
+/// gateway, then assert the chains are byte-identical.
+fn assert_remote_matches_local(gw: &RemoteGateway, local: &FabricNode, channel: &str, txs: u64) {
+    for i in 0..txs {
+        let p = proposal(channel, &format!("{channel}/k{i}"), i);
+        let out = gw.submit_and_wait(&p);
+        assert!(out.is_valid(), "remote tx {i} on {channel}: {out:?}");
+        let out = local.gateway.submit_and_wait(&p);
+        assert!(out.is_valid(), "local tx {i} on {channel}: {out:?}");
+    }
+    let remote = gw.status(channel).expect("remote status");
+    let (height, tip, root) = local.status(channel).expect("local status");
+    assert_eq!(remote.height, height, "height diverged on {channel}");
+    assert_eq!(remote.tip, tip, "tip hash diverged on {channel}");
+    assert_eq!(remote.state_root, root, "state root diverged on {channel}");
+    assert_eq!(remote.height, txs, "batch_size 1 cuts one block per tx");
+}
+
+/// Tentpole acceptance: 2 shards as separate OS processes behind a
+/// gateway process, compared block-for-block against in-process runs.
+#[test]
+fn two_shard_process_topology_matches_in_process_chains() {
+    let s0 = ChildNode::spawn(&["orderer", "--channels", "s0", "--seed", "7"]);
+    let s1 = ChildNode::spawn(&["orderer", "--channels", "s1", "--seed", "8"]);
+    let upstream = format!("s0={},s1={}", s0.endpoint, s1.endpoint);
+    let gw_proc = ChildNode::spawn(&["gateway", "--upstream", &upstream]);
+
+    let gw = RemoteGateway::connect(&gw_proc.endpoint).expect("connect gateway");
+    let (ref0, ref1) = (reference("s0", 7), reference("s1", 8));
+    assert_remote_matches_local(&gw, &ref0, "s0", 3);
+    assert_remote_matches_local(&gw, &ref1, "s1", 3);
+    assert_eq!(gw.in_flight(), 0);
+
+    // A channel no shard owns fails cleanly through the whole topology.
+    let err = gw.status("s9").expect_err("unroutable channel");
+    assert!(err.contains("no upstream"), "{err}");
+
+    drop(gw);
+    gw_proc.stop();
+    s0.stop();
+    s1.stop();
+}
+
+/// The same wire exchange over a Unix-domain socket, straight to one
+/// orderer process (no gateway tier).
+#[test]
+fn uds_orderer_process_matches_in_process_chain() {
+    let dir = TempDir::new("mp-uds");
+    let sock = dir.join("node.sock");
+    let listen = format!("uds:{}", sock.display());
+    let node =
+        ChildNode::spawn(&["orderer", "--listen", &listen, "--channels", "ch", "--seed", "7"]);
+    assert!(matches!(node.endpoint, Endpoint::Uds(_)), "{:?}", node.endpoint);
+
+    let gw = RemoteGateway::connect(&node.endpoint).expect("connect over uds");
+    let local = reference("ch", 7);
+    assert_remote_matches_local(&gw, &local, "ch", 2);
+
+    drop(gw);
+    node.stop();
+    // The listener unlinks its socket file on shutdown.
+    assert!(!sock.exists(), "stale socket file left behind");
+}
